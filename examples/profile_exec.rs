@@ -1,0 +1,29 @@
+//! Dev profiling aid: phase breakdown of one heavy batched execute.
+use bspmm::bench::workload::SpmmWorkload;
+use bspmm::runtime::artifact::SweepSpec;
+use bspmm::runtime::Runtime;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new_default()?;
+    let sw = SweepSpec { key: "p".into(), dim: 50, z: 2, batch: 100, nbs: vec![512], mixed: false };
+    let w = SpmmWorkload::build(&sw, 512)?;
+    let exe = rt.executable("spmm_st_d50_z2_n512_b100")?;
+    let inputs = w.st_batched_inputs();
+    exe.execute(&inputs)?; // warmup
+    let t0 = Instant::now();
+    let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal().unwrap()).collect();
+    println!("literal creation: {:?}", t0.elapsed());
+    drop(lits);
+    let t0 = Instant::now();
+    let out = exe.execute(&inputs)?;
+    println!("full execute: {:?}, out len {}", t0.elapsed(), out[0].len());
+    // gemm comparison
+    let gexe = rt.executable("gemm_d50_n512_b100")?;
+    let ginputs = w.gemm_inputs();
+    gexe.execute(&ginputs)?;
+    let t0 = Instant::now();
+    gexe.execute(&ginputs)?;
+    println!("gemm execute: {:?}", t0.elapsed());
+    Ok(())
+}

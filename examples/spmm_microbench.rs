@@ -1,0 +1,33 @@
+//! SpMM micro-benchmark at a single user-chosen point: all five §V-A
+//! approaches, measured (CPU-PJRT) and simulated (P100 cost model).
+//!
+//!     cargo run --release --example spmm_microbench -- --sweep fig8a --nb 64
+
+use bspmm::bench::figures::FigureRunner;
+use bspmm::runtime::Runtime;
+use bspmm::util::cli::{parse_or_exit, Cli};
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("spmm_microbench", "one-point SpMM comparison")
+        .opt("sweep", "fig8a", "sweep key: fig8a|fig8b|fig9a..fig9f|fig10")
+        .opt("nb", "64", "dense input width n_B (must exist in the sweep)");
+    let args = parse_or_exit(&cli);
+
+    let rt = Runtime::new_default()?;
+    let mut sw = rt.manifest.sweep(args.str("sweep"))?;
+    let nb = args.usize("nb");
+    anyhow::ensure!(
+        sw.nbs.contains(&nb),
+        "n_B {nb} not in sweep {} (available: {:?})",
+        sw.key,
+        sw.nbs
+    );
+    sw.nbs = vec![nb];
+
+    let runner = FigureRunner::new(&rt);
+    let measured = runner.run_measured(&sw)?;
+    println!("{}", measured.render());
+    let sim = runner.run_simulated(&sw)?;
+    println!("{}", sim.render());
+    Ok(())
+}

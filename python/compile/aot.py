@@ -1,0 +1,400 @@
+"""AOT pipeline: lower every executable the rust runtime needs to HLO text.
+
+Run once via ``make artifacts`` (``cd python && python -m compile.aot
+--out ../artifacts``).  Python never runs on the request path; after this
+script finishes, the rust binary is self-contained.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs in --out:
+  <name>.hlo.txt            one per executable (see manifest)
+  <cfg>_params_init.bin     concatenated little-endian f32 initial params
+  manifest.json             the ABI: every artifact's inputs/outputs/meta,
+                            model param layouts, and the benchmark sweep
+                            table shared with the rust bench harness
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import batched_spmm_csr, batched_spmm_st, blocking
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+class Builder:
+    def __init__(self, out_dir: str, only: str | None):
+        self.out_dir = out_dir
+        self.only = re.compile(only) if only else None
+        self.artifacts = []
+        self.n_written = 0
+        self.n_skipped = 0
+
+    def add(self, name, fn, in_specs, meta=None):
+        """Lower fn(*in_specs) -> tuple and write <name>.hlo.txt.
+
+        in_specs: [(arg_name, shape, dtype)]; outputs are recorded from
+        the lowered signature so the manifest is always ABI-accurate.
+        """
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"name": n, "dtype": d, "shape": list(s)} for n, s, d in in_specs
+            ],
+            "meta": meta or {},
+        }
+        if self.only and not self.only.search(name):
+            if os.path.exists(path):
+                # keep stale manifest info for skipped-but-present files
+                entry["outputs"] = _shape_outputs(fn, in_specs)
+                self.artifacts.append(entry)
+                self.n_skipped += 1
+            return
+        lowered = jax.jit(fn).lower(*[spec(s, d) for _, s, d in in_specs])
+        entry["outputs"] = [
+            {"dtype": "i32" if o.dtype == jnp.int32 else "f32", "shape": list(o.shape)}
+            for o in lowered.out_info
+        ]
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        self.artifacts.append(entry)
+        self.n_written += 1
+        print(f"  [{self.n_written:3d}] {name}  ({len(text) // 1024} KiB)", flush=True)
+
+
+def _shape_outputs(fn, in_specs):
+    outs = jax.eval_shape(fn, *[spec(s, d) for _, s, d in in_specs])
+    return [
+        {"dtype": "i32" if o.dtype == jnp.int32 else "f32", "shape": list(o.shape)}
+        for o in outs
+    ]
+
+
+# --------------------------------------------------------------------------
+# Microbench artifacts (figures 8-10 + Table IV)
+# --------------------------------------------------------------------------
+
+# The sweep table: shared with the rust bench harness via the manifest so
+# both sides iterate exactly the same experimental points.
+SWEEPS = {
+    # Preliminary evaluation (§V-A). dims/z follow the GCN application
+    # dataset (Table I: max dim 50, molecular bond nnz/row ~ 2).
+    "fig8a": {"dim": 50, "z": 2, "batch": 50, "nbs": [8, 16, 32, 64]},
+    "fig8b": {"dim": 50, "z": 2, "batch": 100, "nbs": [64, 128, 256, 512]},
+    # Parameter sweeps (Fig. 9): first row dims 32/64/128; (d) batch 50;
+    # (e)/(f) nnz-per-row 1 and 5.
+    "fig9a": {"dim": 32, "z": 2, "batch": 100, "nbs": [32, 128, 512]},
+    "fig9b": {"dim": 64, "z": 2, "batch": 100, "nbs": [32, 128, 512]},
+    "fig9c": {"dim": 128, "z": 2, "batch": 100, "nbs": [32, 128, 512]},
+    "fig9d": {"dim": 64, "z": 2, "batch": 50, "nbs": [32, 128, 512]},
+    "fig9e": {"dim": 64, "z": 1, "batch": 100, "nbs": [32, 128, 512]},
+    "fig9f": {"dim": 64, "z": 5, "batch": 100, "nbs": [32, 128, 512]},
+    # Mixed batch (Fig. 10): dims in [32, 256], z in [1, 5]; everything is
+    # padded to the max (the paper's "redundant threads terminate
+    # immediately" becomes measurable padding overhead here).
+    "fig10": {"dim": 256, "z": 5, "batch": 100, "nbs": [128, 512, 1024],
+              "mixed": True, "dim_range": [32, 256], "z_range": [1, 5]},
+}
+
+
+def st_fn(block_n=None, variant="fused"):
+    def fn(ids, vals, dense):
+        return (batched_spmm_st(ids, vals, dense, block_n=block_n, variant=variant),)
+    return fn
+
+
+def csr_fn(block_n=None, variant="fused"):
+    def fn(rpt, colids, vals, dense):
+        return (batched_spmm_csr(rpt, colids, vals, dense, block_n=block_n, variant=variant),)
+    return fn
+
+
+def gemm_fn(a, dense):
+    return (jnp.einsum("bmk,bkn->bmn", a, dense),)
+
+
+def add_bench_artifacts(b: Builder):
+    batched_pts = set()
+    gemm_pts = set()  # gemm is z-independent: dedup by (dim, nb, batch)
+    single_pts = set()
+    for sw in SWEEPS.values():
+        for nb in sw["nbs"]:
+            batched_pts.add((sw["dim"], sw["z"], nb, sw["batch"]))
+            gemm_pts.add((sw["dim"], nb, sw["batch"]))
+            single_pts.add((sw["dim"], sw["z"], nb))
+
+    for dim, z, nb, batch in sorted(batched_pts):
+        nnz = dim * z
+        meta = {"kind": "spmm_bench", "dim": dim, "z": z, "nb": nb, "batch": batch}
+        b.add(
+            f"spmm_st_d{dim}_z{z}_n{nb}_b{batch}",
+            st_fn(),
+            [("ids", (batch, nnz, 2), "i32"), ("vals", (batch, nnz), "f32"),
+             ("dense", (batch, dim, nb), "f32")],
+            {**meta, "format": "st", "batched": True},
+        )
+        b.add(
+            f"spmm_csr_d{dim}_z{z}_n{nb}_b{batch}",
+            csr_fn(),
+            [("rpt", (batch, dim + 1), "i32"), ("colids", (batch, nnz), "i32"),
+             ("vals", (batch, nnz), "f32"), ("dense", (batch, dim, nb), "f32")],
+            {**meta, "format": "csr", "batched": True},
+        )
+    for dim, nb, batch in sorted(gemm_pts):
+        b.add(
+            f"gemm_d{dim}_n{nb}_b{batch}",
+            gemm_fn,
+            [("a", (batch, dim, dim), "f32"), ("dense", (batch, dim, nb), "f32")],
+            {"kind": "spmm_bench", "dim": dim, "nb": nb, "batch": batch,
+             "format": "gemm", "batched": True},
+        )
+
+    # Perf-ablation artifacts: the "loop" (structurally-literal) and
+    # "vec" (per-matrix grid) kernels at two representative points; the
+    # default sweep artifacts use "fused". EXPERIMENTS.md §Perf records
+    # the loop -> vec -> fused iteration at these points.
+    for (dim, z, nb, batch) in [(50, 2, 64, 50), (50, 2, 512, 100)]:
+        nnz = dim * z
+        for variant in ("loop", "vec"):
+            meta = {"kind": "spmm_perf_ablation", "dim": dim, "z": z, "nb": nb,
+                    "batch": batch, "variant": variant}
+            b.add(
+                f"spmm_st_{variant}_d{dim}_z{z}_n{nb}_b{batch}",
+                st_fn(variant=variant),
+                [("ids", (batch, nnz, 2), "i32"), ("vals", (batch, nnz), "f32"),
+                 ("dense", (batch, dim, nb), "f32")],
+                {**meta, "format": "st", "batched": True},
+            )
+            b.add(
+                f"spmm_csr_{variant}_d{dim}_z{z}_n{nb}_b{batch}",
+                csr_fn(variant=variant),
+                [("rpt", (batch, dim + 1), "i32"), ("colids", (batch, nnz), "i32"),
+                 ("vals", (batch, nnz), "f32"), ("dense", (batch, dim, nb), "f32")],
+                {**meta, "format": "csr", "batched": True},
+            )
+
+    for dim, z, nb in sorted(single_pts):
+        nnz = dim * z
+        meta = {"kind": "spmm_bench", "dim": dim, "z": z, "nb": nb, "batch": 1}
+        b.add(
+            f"spmm_st_d{dim}_z{z}_n{nb}_b1",
+            st_fn(),
+            [("ids", (1, nnz, 2), "i32"), ("vals", (1, nnz), "f32"),
+             ("dense", (1, dim, nb), "f32")],
+            {**meta, "format": "st", "batched": False},
+        )
+        b.add(
+            f"spmm_csr_d{dim}_z{z}_n{nb}_b1",
+            csr_fn(),
+            [("rpt", (1, dim + 1), "i32"), ("colids", (1, nnz), "i32"),
+             ("vals", (1, nnz), "f32"), ("dense", (1, dim, nb), "f32")],
+            {**meta, "format": "csr", "batched": False},
+        )
+
+
+def add_table4_artifacts(b: Builder):
+    """Per-op artifacts at the Tox21 layer-0 geometry (M=50, F=16 -> 64,
+    train batch 50): Table IV times MatMul / Add / SpMM in non-batched
+    (per sample-channel) vs batched (per channel) dispatch; the SpMM rows
+    reuse the fig8a d50 z2 n64 artifacts."""
+    m, f, o, batch = 50, 16, 64, 50
+
+    def matmul(x, w):
+        return (x @ w,)
+
+    def addb(u, bias):
+        return (u + bias,)
+
+    def accum(c0, c1):
+        return (c0 + c1,)
+
+    b.add("op_matmul_single", matmul,
+          [("x", (m, f), "f32"), ("w", (f, o), "f32")],
+          {"kind": "op_bench", "op": "matmul", "batched": False})
+    b.add("op_matmul_batched", matmul,
+          [("x", (m * batch, f), "f32"), ("w", (f, o), "f32")],
+          {"kind": "op_bench", "op": "matmul", "batched": True})
+    b.add("op_add_single", addb,
+          [("u", (m, o), "f32"), ("bias", (o,), "f32")],
+          {"kind": "op_bench", "op": "add", "batched": False})
+    b.add("op_add_batched", addb,
+          [("u", (m * batch, o), "f32"), ("bias", (o,), "f32")],
+          {"kind": "op_bench", "op": "add", "batched": True})
+    b.add("op_accum_single", accum,
+          [("c0", (m, o), "f32"), ("c1", (m, o), "f32")],
+          {"kind": "op_bench", "op": "accum", "batched": False})
+    b.add("op_accum_batched", accum,
+          [("c0", (m * batch, o), "f32"), ("c1", (m * batch, o), "f32")],
+          {"kind": "op_bench", "op": "accum", "batched": True})
+
+
+# --------------------------------------------------------------------------
+# Model artifacts
+# --------------------------------------------------------------------------
+
+
+def model_io_specs(cfg: M.GcnConfig, batch: int, with_labels: bool):
+    io = [
+        ("ell_cols", (batch, cfg.channels, cfg.max_nodes, cfg.ell_width), "i32"),
+        ("ell_vals", (batch, cfg.channels, cfg.max_nodes, cfg.ell_width), "f32"),
+        ("x", (batch, cfg.max_nodes, cfg.feat_dim), "f32"),
+        ("mask", (batch, cfg.max_nodes), "f32"),
+    ]
+    if with_labels:
+        io.append(("labels", (batch, cfg.n_out), "f32"))
+    return io
+
+
+def add_model_artifacts(b: Builder, cfg: M.GcnConfig, out_dir: str, only):
+    specs_ = M.param_specs(cfg)
+    pspecs = [(f"p:{n}", s, "f32") for n, s in specs_]
+
+    def fwd(*args):
+        params = list(args[: len(specs_)])
+        ell_cols, ell_vals, x, mask = args[len(specs_):]
+        return (M.forward(cfg, params, ell_cols, ell_vals, x, mask),)
+
+    def tstep(*args):
+        params = list(args[: len(specs_)])
+        ell_cols, ell_vals, x, mask, labels, lr = args[len(specs_):]
+        return M.train_step(cfg, params, ell_cols, ell_vals, x, mask, labels, lr)
+
+    def gsample(*args):
+        params = list(args[: len(specs_)])
+        ell_cols, ell_vals, x, mask, labels = args[len(specs_):]
+        return M.grad_sample(cfg, params, ell_cols, ell_vals, x, mask, labels)
+
+    def sgd(*args):
+        params = list(args[: len(specs_)])
+        grads = list(args[len(specs_): 2 * len(specs_)])
+        scale = args[-1]
+        return M.apply_sgd(params, grads, scale)
+
+    name = cfg.name
+    meta = {"kind": "model", "model": name}
+    b.add(f"{name}_fwd_b{cfg.infer_batch}", fwd,
+          pspecs + model_io_specs(cfg, cfg.infer_batch, False),
+          {**meta, "role": "fwd", "batch": cfg.infer_batch})
+    b.add(f"{name}_fwd_b{cfg.train_batch}", fwd,
+          pspecs + model_io_specs(cfg, cfg.train_batch, False),
+          {**meta, "role": "fwd", "batch": cfg.train_batch})
+    b.add(f"{name}_fwd_b1", fwd,
+          pspecs + model_io_specs(cfg, 1, False),
+          {**meta, "role": "fwd", "batch": 1})
+    b.add(f"{name}_train_step_b{cfg.train_batch}", tstep,
+          pspecs + model_io_specs(cfg, cfg.train_batch, True) + [("lr", (1,), "f32")],
+          {**meta, "role": "train_step", "batch": cfg.train_batch})
+    b.add(f"{name}_grad_sample", gsample,
+          pspecs + model_io_specs(cfg, 1, True),
+          {**meta, "role": "grad_sample", "batch": 1})
+    b.add(f"{name}_apply_sgd", sgd,
+          pspecs + [(f"g:{n}", s, "f32") for n, s in specs_] + [("scale", (1,), "f32")],
+          {**meta, "role": "apply_sgd", "batch": 0})
+
+    # Initial parameters: one flat little-endian f32 blob.
+    bin_name = f"{name}_params_init.bin"
+    if only is None or re.search(only, bin_name):
+        params = M.init_params(cfg, seed=42)
+        flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+        flat.astype("<f4").tofile(os.path.join(out_dir, bin_name))
+        print(f"  [bin] {bin_name} ({flat.size} f32)")
+
+    layout = []
+    off = 0
+    for n, s in specs_:
+        size = int(np.prod(s))
+        layout.append({"name": n, "shape": list(s), "offset": off, "size": size})
+        off += size
+    return {
+        "name": name,
+        "max_nodes": cfg.max_nodes,
+        "feat_dim": cfg.feat_dim,
+        "channels": cfg.channels,
+        "hidden": list(cfg.hidden),
+        "n_out": cfg.n_out,
+        "loss": cfg.loss,
+        "nnz_cap": cfg.nnz_cap,
+        "ell_width": cfg.ell_width,
+        "train_batch": cfg.train_batch,
+        "infer_batch": cfg.infer_batch,
+        "params": layout,
+        "n_params": off,
+        "init_file": bin_name,
+        "artifact_fwd_infer": f"{name}_fwd_b{cfg.infer_batch}",
+        "artifact_fwd_train": f"{name}_fwd_b{cfg.train_batch}",
+        "artifact_fwd_sample": f"{name}_fwd_b1",
+        "artifact_train_step": f"{name}_train_step_b{cfg.train_batch}",
+        "artifact_grad_sample": f"{name}_grad_sample",
+        "artifact_apply_sgd": f"{name}_apply_sgd",
+    }
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex: lower only matching artifact names (dev aid)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    b = Builder(args.out, args.only)
+    print("== model artifacts ==", flush=True)
+    models = []
+    for cfg in M.CONFIGS.values():
+        models.append(add_model_artifacts(b, cfg, args.out, args.only))
+    print("== bench artifacts (figures) ==", flush=True)
+    add_bench_artifacts(b)
+    print("== op artifacts (Table IV) ==", flush=True)
+    add_table4_artifacts(b)
+
+    manifest = {
+        "version": 1,
+        "artifacts": b.artifacts,
+        "models": models,
+        "sweeps": SWEEPS,
+        "smem_budget_bytes": blocking.DEFAULT_SMEM_BUDGET_BYTES,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {b.n_written} artifacts ({b.n_skipped} skipped) + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels: the paper's batched SpMM algorithms (TPU-adapted).
+
+Exports:
+  batched_spmm_st   — SparseTensor/COO variant (paper Fig. 3 + Fig. 5-a/b)
+  batched_spmm_csr  — CSR variant, atomic-free (paper Fig. 4 + Fig. 5-c/d)
+  blocking          — the cache-blocking / subWarp planner (paper §IV-B/C)
+  ref               — pure-jnp oracles
+"""
+
+from . import blocking, ref
+from .batched_spmm_csr import batched_spmm_csr
+from .batched_spmm_ell import batched_spmm_ell
+from .batched_spmm_st import batched_spmm_st
+
+__all__ = [
+    "batched_spmm_st", "batched_spmm_csr", "batched_spmm_ell",
+    "blocking", "ref",
+]

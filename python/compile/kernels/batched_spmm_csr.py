@@ -1,0 +1,186 @@
+"""Batched SWA SpMM for the CSR format (paper §IV-A, Fig. 4).
+
+The CSR variant is the paper's *atomic-free* algorithm: a subWarp owns a
+whole output row, so no two thread groups write the same output entry.
+On the TPU the same structure becomes: one grid step owns a (matrix,
+column-block) pair, iterates rows, accumulates each row in registers /
+VMEM, and stores it exactly once — a pure streaming write pattern, which
+is why the paper finds CSR keeps winning as ``nnz/row`` grows while the
+SparseTensor variant degrades under atomic contention (Fig. 9-(e)/(f)).
+
+Per Fig. 5-(c)/(d): shared memory only needs ``n_B`` floats per subWarp
+(one output row), so cache blocking is applied *only when n_B itself is
+large*; the planner here blocks on a per-row budget rather than the
+whole-matrix budget the ST variant uses.
+
+Padding: rows beyond a matrix's true row count have ``rpt[r] == rpt[r+1]``
+(empty), so the inner loop body never executes for them — the direct
+analogue of the paper's "redundant threads terminate immediately".
+
+See batched_spmm_st.py for the general GPU->TPU adaptation notes and the
+``interpret=True`` rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blocking
+
+
+def _csr_kernel_vec(rpt_ref, colids_ref, vals_ref, dense_ref, o_ref):
+    """One grid step, vectorized (§Perf-optimized, see the ST kernel's
+    docstring): slot -> row mapping via searchsorted, one gather over
+    the dense block, one masked segment scatter-add, one block store.
+    Still atomic-free in spirit — every output row is produced by
+    exactly one logical owner; the scatter-add here is the lane-parallel
+    expression of the per-row accumulate of Fig. 4.
+    """
+    rpt = rpt_ref[0]                                    # [M+1]
+    colids = colids_ref[0]                              # [NNZ]
+    vals = vals_ref[0]                                  # [NNZ]
+    dense = dense_ref[0]                                # [K, BN]
+    nnz = colids.shape[0]
+    m = o_ref.shape[1]
+    slots = jnp.arange(nnz)
+    rows = jnp.searchsorted(rpt, slots, side="right") - 1
+    valid = slots < rpt[m]
+    v = jnp.where(valid, vals, 0.0)
+    gathered = v[:, None] * dense[jnp.where(valid, colids, 0)]
+    out = jnp.zeros((m, dense.shape[1]), dense.dtype).at[
+        jnp.where(valid, rows, 0)
+    ].add(gathered)
+    o_ref[0] = out
+
+
+def _csr_kernel_fused(rpt_ref, colids_ref, vals_ref, dense_ref, o_ref):
+    """One grid step covering the WHOLE batch (§Perf iteration 2; see
+    the ST kernel's `_st_kernel_fused` docstring): vmapped slot->row
+    mapping, then one flattened gather + masked scatter-add.
+    Block shapes: rpt [B, M+1], colids/vals [B, NNZ],
+    dense [B, K, BN], o [B, M, BN]."""
+    rpt = rpt_ref[...]
+    colids = colids_ref[...]
+    vals = vals_ref[...]
+    dense = dense_ref[...]
+    b, nnz = colids.shape
+    k = dense.shape[1]
+    bn = dense.shape[2]
+    m = o_ref.shape[1]
+    slots = jnp.arange(nnz)
+    rows = jax.vmap(lambda r: jnp.searchsorted(r, slots, side="right") - 1)(rpt)
+    valid = slots[None, :] < rpt[:, -1:]
+    v = jnp.where(valid, vals, 0.0)
+    sample = jnp.arange(b)[:, None]
+    flat_cols = (sample * k + jnp.where(valid, colids, 0)).reshape(-1)
+    flat_rows = (sample * m + jnp.where(valid, rows, 0)).reshape(-1)
+    gathered = v.reshape(-1)[:, None] * dense.reshape(b * k, bn)[flat_cols]
+    out = jnp.zeros((b * m, bn), dense.dtype).at[flat_rows].add(gathered)
+    o_ref[...] = out.reshape(b, m, bn)
+
+
+def _csr_kernel_loop(rpt_ref, colids_ref, vals_ref, dense_ref, o_ref):
+    """One grid step: CSR SpMM of one matrix onto one column block —
+    the structurally-literal Fig. 4 form (row loop, register
+    accumulator, single store per row); kept for the perf ablation.
+
+    Block shapes (leading batch axis of extent 1):
+      rpt [1, M+1], colids [1, NNZ], vals [1, NNZ],
+      dense [1, K, BN], o [1, M, BN].
+    """
+    m = o_ref.shape[1]
+    bn = o_ref.shape[2]
+    dense = dense_ref[0]
+
+    def row_body(r, _):
+        lo = rpt_ref[0, r]
+        hi = rpt_ref[0, r + 1]
+
+        def nz_body(nzid, acc):
+            cid = colids_ref[0, nzid]
+            val = vals_ref[0, nzid]
+            # Fig. 4 lines 6-9: one FMA of B[cid, block] into the row
+            # accumulator; the subWarp-strided j loop is one vector op.
+            return acc + val * jax.lax.dynamic_slice_in_dim(dense, cid, 1, axis=0)
+
+        acc = jax.lax.fori_loop(lo, hi, nz_body, jnp.zeros((1, bn), dense.dtype))
+        # Single store per row: the atomic-free property of the CSR
+        # algorithm (no other grid step touches this row of this block).
+        o_ref[0, pl.dslice(r, 1), :] = acc
+        return 0
+
+    jax.lax.fori_loop(0, m, row_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "variant"))
+def batched_spmm_csr(
+    rpt: jax.Array,
+    colids: jax.Array,
+    vals: jax.Array,
+    dense: jax.Array,
+    *,
+    block_n: int | None = None,
+    variant: str = "fused",
+) -> jax.Array:
+    """Batched SpMM, CSR format.
+
+    Args:
+      rpt:    [B, M+1] int32 row pointers (monotone, rpt[0] == 0).
+      colids: [B, NNZ] int32, zero-padded beyond rpt[-1].
+      vals:   [B, NNZ] f32, zero-padded beyond rpt[-1].
+      dense:  [B, K, N] f32.
+      block_n: column block size; default per the Fig. 5-(d) per-row plan.
+      variant: "fused" (default: whole batch per grid step), "vec"
+        (per-matrix grid steps), or "loop" (literal Fig. 4) — the
+        non-default variants feed the §Perf ablation.
+
+    Returns [B, M, N] f32.
+    """
+    b, m_plus_1 = rpt.shape
+    m = m_plus_1 - 1
+    nnz = colids.shape[1]
+    _, k, n = dense.shape
+    if block_n is None:
+        # CSR stages one row (not the whole output) per subWarp, so the
+        # blocking criterion is per-row: TB/subWarp rows of n floats.
+        # With our grid-step model the practical budget is the dense
+        # input block, so reuse the planner with the K x N staging cost.
+        plan = blocking.plan_blocks(max(k, 1), n)
+        block_n = plan.block_n if plan.staged else n
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    n_blocks = n // block_n
+
+    if variant == "fused":
+        return pl.pallas_call(
+            _csr_kernel_fused,
+            grid=(n_blocks,),
+            in_specs=[
+                pl.BlockSpec((b, m_plus_1), lambda ni: (0, 0)),
+                pl.BlockSpec((b, nnz), lambda ni: (0, 0)),
+                pl.BlockSpec((b, nnz), lambda ni: (0, 0)),
+                pl.BlockSpec((b, k, block_n), lambda ni: (0, 0, ni)),
+            ],
+            out_specs=pl.BlockSpec((b, m, block_n), lambda ni: (0, 0, ni)),
+            out_shape=jax.ShapeDtypeStruct((b, m, n), dense.dtype),
+            interpret=True,
+        )(rpt, colids, vals, dense)
+
+    kernel = {"vec": _csr_kernel_vec, "loop": _csr_kernel_loop}[variant]
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, m_plus_1), lambda bi, ni: (bi, 0)),
+            pl.BlockSpec((1, nnz), lambda bi, ni: (bi, 0)),
+            pl.BlockSpec((1, nnz), lambda bi, ni: (bi, 0)),
+            pl.BlockSpec((1, k, block_n), lambda bi, ni: (bi, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_n), lambda bi, ni: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), dense.dtype),
+        interpret=True,
+    )(rpt, colids, vals, dense)

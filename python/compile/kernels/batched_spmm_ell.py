@@ -1,0 +1,78 @@
+"""Batched SpMM in ELL (padded per-row) format — gather-only.
+
+§Perf iteration 3 (EXPERIMENTS.md §Perf, L1) and the final hardware
+adaptation of the paper's CSR variant: the CSR kernel's row-parallel,
+atomic-free structure, expressed with *no scatter at all*.  Each output
+row gathers its ≤R source rows of the dense input and reduces them —
+the formulation both TPUs (no efficient scatter; gather + VPU reduce is
+native) and the old XLA CPU runtime (whose scatter emitter copies the
+whole output per index) want.  This is also the lineage of the ELLR-T
+SpMM of Vázquez et al. that the paper's related-work section discusses:
+the format conversion the paper avoids on GPU is a one-time, build-side
+cost here (the rust coordinator packs molecules directly into ELL).
+
+Format:  ell_cols [B, M, R] int32, ell_vals [B, M, R] f32 — row m of
+matrix b multiplies dense rows ``ell_cols[b, m, :]`` by
+``ell_vals[b, m, :]`` and sums.  Padding slots have val = 0, col = 0.
+
+The whole batch is one grid step (the fused single-launch formulation);
+column blocking via BlockSpec remains the Fig. 5 cache-blocking analog
+and also caps the gathered intermediate at [B, M, R, BN].
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blocking
+
+
+def _ell_kernel_fused(cols_ref, vals_ref, dense_ref, o_ref):
+    """Block shapes: cols [B, M, R], vals [B, M, R], dense [B, K, BN],
+    o [B, M, BN]."""
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    dense = dense_ref[...]
+    b, m, r = cols.shape
+    k = dense.shape[1]
+    bn = dense.shape[2]
+    flat = dense.reshape(b * k, bn)
+    sample = jnp.arange(b, dtype=cols.dtype)[:, None, None]
+    gathered = flat[(sample * k + cols).reshape(-1)].reshape(b, m, r, bn)
+    o_ref[...] = jnp.sum(vals[..., None] * gathered, axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def batched_spmm_ell(
+    ell_cols: jax.Array,
+    ell_vals: jax.Array,
+    dense: jax.Array,
+    *,
+    block_n: int | None = None,
+) -> jax.Array:
+    """Batched SpMM, ELL format: out [B, M, N]."""
+    b, m, _ = ell_cols.shape
+    _, k, n = dense.shape
+    if block_n is None:
+        plan = blocking.plan_blocks(m, n)
+        block_n = plan.block_n if plan.staged else n
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    n_blocks = n // block_n
+
+    return pl.pallas_call(
+        _ell_kernel_fused,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((b, m, ell_cols.shape[2]), lambda ni: (0, 0, 0)),
+            pl.BlockSpec((b, m, ell_vals.shape[2]), lambda ni: (0, 0, 0)),
+            pl.BlockSpec((b, k, block_n), lambda ni: (0, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((b, m, block_n), lambda ni: (0, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), dense.dtype),
+        interpret=True,
+    )(ell_cols, ell_vals, dense)

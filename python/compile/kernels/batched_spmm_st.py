@@ -1,0 +1,195 @@
+"""Batched SWA SpMM for the SparseTensor/COO format (paper §IV-A, Fig. 3).
+
+GPU -> TPU adaptation (DESIGN.md §3 Hardware-Adaptation):
+
+* The paper assigns one *thread block* per (matrix, column-block) and a
+  ``subWarp`` of threads per non-zero.  Here one *Pallas grid step* is a
+  (matrix, column-block) pair: ``grid = (batch, n_blocks)``.  Inside a
+  grid step the per-non-zero work is a VPU vector op over the column
+  block — the lane dimension plays the subWarp role, so the "assign up
+  to 32 threads per nnz" policy becomes "assign the full lane slice of
+  the block to each nnz", and ``subWarp``/occupancy only survive in the
+  P100 cost model.
+* Shared-memory output staging (Fig. 5-(a)) becomes the VMEM-resident
+  output block owned by the grid step; cache blocking (Fig. 5-(b)) is
+  the ``BlockSpec`` column split chosen by ``blocking.plan_blocks``.
+* The GPU algorithm needs atomics because different subWarps may hit the
+  same output row; a TPU core executes its grid sequentially, so the
+  scatter-accumulate below is race-free while keeping the *same memory
+  traffic pattern* (one output read-modify-write per nnz).
+
+Padding slots carry ``val == 0`` at ``(0, 0)`` and therefore contribute
+nothing — the analogue of the paper's "redundant threads terminate
+immediately" load-imbalance handling, at the cost of one wasted FMA per
+padded slot (measured in the rust ablation bench).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the rust runtime can
+run the artifact.  Real-TPU performance is *estimated* (VMEM footprint +
+MXU/VPU utilization) in DESIGN.md/EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blocking
+
+
+def _st_kernel_vec(ids_ref, vals_ref, dense_ref, o_ref):
+    """One grid step, vectorized: gather all nnz contributions at once
+    and scatter-add them into the output block in a single op.
+
+    This is the §Perf-optimized form (EXPERIMENTS.md §Perf, L1): the
+    per-non-zero loop of Fig. 3 becomes one gather + one segment
+    scatter-add over the whole block — the same memory-traffic pattern
+    (each nnz reads one dense row and updates one output row, staged in
+    VMEM), but expressed as lane-parallel vector ops instead of a
+    sequential read-modify-write chain.  On the interpret/CPU path this
+    removes the dominant per-iteration block-copy overhead; on a real
+    TPU it is the natural VPU formulation.
+
+    Block shapes (leading batch axis of extent 1):
+      ids [1, NNZ, 2], vals [1, NNZ], dense [1, K, BN], o [1, M, BN].
+    """
+    dense = dense_ref[0]                         # [K, BN]
+    ids = ids_ref[0]                             # [NNZ, 2]
+    vals = vals_ref[0]                           # [NNZ]
+    gathered = vals[:, None] * dense[ids[:, 1]]  # [NNZ, BN]
+    m = o_ref.shape[1]
+    out = jnp.zeros((m, dense.shape[1]), dense.dtype).at[ids[:, 0]].add(gathered)
+    o_ref[0] = out
+
+
+def _st_kernel_fused(ids_ref, vals_ref, dense_ref, o_ref):
+    """One grid step covering the WHOLE batch (§Perf iteration 2): the
+    paper's "single kernel launch for tens or hundreds of SpMM
+    operations" taken literally — all matrices' non-zeros are flattened
+    into one gather + one scatter-add over a [B*M, BN] output.
+
+    Rationale: on the interpret/CPU path every grid step pays a fixed
+    interpreter/dispatch cost (the measured analogue of a thread-block
+    wave), so folding the batch axis out of the grid removes B-1 of
+    those costs; the column-block axis remains the only grid dimension
+    (the Fig. 5 cache-blocking structure is preserved).  Padding slots
+    (val = 0 at (0,0)) scatter zeros into row b*M — harmless.
+
+    Block shapes: ids [B, NNZ, 2], vals [B, NNZ], dense [B, K, BN],
+    o [B, M, BN].
+    """
+    b, _, _ = ids_ref.shape
+    k = dense_ref.shape[1]
+    bn = dense_ref.shape[2]
+    m = o_ref.shape[1]
+    ids = ids_ref[...]
+    vals = vals_ref[...]
+    dense = dense_ref[...]
+    sample = jnp.arange(b, dtype=ids.dtype)[:, None]
+    flat_cols = (sample * k + ids[:, :, 1]).reshape(-1)
+    flat_rows = (sample * m + ids[:, :, 0]).reshape(-1)
+    gathered = vals.reshape(-1)[:, None] * dense.reshape(b * k, bn)[flat_cols]
+    out = jnp.zeros((b * m, bn), dense.dtype).at[flat_rows].add(gathered)
+    o_ref[...] = out.reshape(b, m, bn)
+
+
+def _st_kernel_loop(ids_ref, vals_ref, dense_ref, o_ref):
+    """One grid step: full SpMM of one matrix onto one column block.
+
+    The structurally-faithful form of Fig. 3: one scatter-accumulate
+    per non-zero (kept for the perf ablation; the vectorized kernel
+    above is the default hot path).
+
+    Block shapes (leading batch axis of extent 1):
+      ids [1, NNZ, 2], vals [1, NNZ], dense [1, K, BN], o [1, M, BN].
+    """
+    nnz = ids_ref.shape[1]
+    # Stage the dense input block once: every nnz re-reads rows of it, so
+    # keeping it VMEM-resident is the Fig. 5 locality win.
+    dense = dense_ref[0]
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+    def body(i, _):
+        rid = ids_ref[0, i, 0]
+        cid = ids_ref[0, i, 1]
+        val = vals_ref[0, i]
+        # Gather B[cid, :], scale, scatter-add into C[rid, :].  This is
+        # Fig. 3 line 9 with the subWarp strided loop replaced by one
+        # lane-wide vector op; sequential grid => no atomics needed.
+        row = o_ref[0, pl.dslice(rid, 1), :]
+        contrib = val * jax.lax.dynamic_slice_in_dim(dense, cid, 1, axis=0)
+        o_ref[0, pl.dslice(rid, 1), :] = row + contrib
+        return 0
+
+    jax.lax.fori_loop(0, nnz, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_n", "variant"))
+def batched_spmm_st(
+    ids: jax.Array,
+    vals: jax.Array,
+    dense: jax.Array,
+    *,
+    m: int | None = None,
+    block_n: int | None = None,
+    variant: str = "fused",
+) -> jax.Array:
+    """Batched SpMM, SparseTensor format.
+
+    Args:
+      ids:   [B, NNZ, 2] int32 (row, col), zero-padded.
+      vals:  [B, NNZ] f32, zero for padding slots.
+      dense: [B, K, N] f32.
+      m:     output rows per matrix (defaults to K — square adjacency).
+      block_n: column block size; default chosen by the Fig. 5 planner.
+      variant: "fused" (default: whole batch per grid step — the
+        single-launch formulation), "vec" (per-matrix grid steps,
+        vectorized body), or "loop" (the structurally-literal Fig. 3
+        form). The non-default variants feed the §Perf ablation.
+
+    Returns [B, M, N] f32.
+    """
+    b, nnz, _ = ids.shape
+    _, k, n = dense.shape
+    if m is None:
+        m = k
+    if block_n is None:
+        plan = blocking.plan_blocks(m, n)
+        block_n = plan.block_n if plan.staged else n
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    n_blocks = n // block_n
+
+    if variant == "fused":
+        return pl.pallas_call(
+            _st_kernel_fused,
+            grid=(n_blocks,),
+            in_specs=[
+                # Whole batch per grid step; only columns are blocked.
+                pl.BlockSpec((b, nnz, 2), lambda ni: (0, 0, 0)),
+                pl.BlockSpec((b, nnz), lambda ni: (0, 0)),
+                pl.BlockSpec((b, k, block_n), lambda ni: (0, 0, ni)),
+            ],
+            out_specs=pl.BlockSpec((b, m, block_n), lambda ni: (0, 0, ni)),
+            out_shape=jax.ShapeDtypeStruct((b, m, n), dense.dtype),
+            interpret=True,
+        )(ids, vals, dense)
+
+    kernel = {"vec": _st_kernel_vec, "loop": _st_kernel_loop}[variant]
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_blocks),
+        in_specs=[
+            # Whole nnz list per matrix, reused for every column block.
+            pl.BlockSpec((1, nnz, 2), lambda bi, ni: (bi, 0, 0)),
+            pl.BlockSpec((1, nnz), lambda bi, ni: (bi, 0)),
+            # Dense input: only the ni-th column slice is staged.
+            pl.BlockSpec((1, k, block_n), lambda bi, ni: (bi, 0, ni)),
+        ],
+        out_specs=pl.BlockSpec((1, m, block_n), lambda bi, ni: (bi, 0, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), dense.dtype),
+        interpret=True,
+    )(ids, vals, dense)

@@ -1,0 +1,123 @@
+"""Cache-blocking / resource-assignment planning (paper §IV-B, §IV-C).
+
+The paper stages the SpMM output matrix in GPU shared memory (32 KB per
+thread block in their running example) and, when ``m_A * n_B * 4B``
+exceeds that budget, splits the output along the column dimension
+(Fig. 5-(b)/(d)).  On the TPU the analogous scarce resource is VMEM: a
+Pallas grid step owns a VMEM-resident output block, and ``BlockSpec``
+column blocking plays exactly the role of the paper's cache blocking.
+
+This module is the *host-side planner*: given matrix shapes it decides
+the column block size (and therefore the grid), mirroring the three
+cases of §IV-C:
+
+  1. whole output fits               -> one column block
+  2. a column slice fits             -> ``n_blocks`` column blocks
+  3. matrix too large to stage at all -> caller falls back to the
+     unblocked (direct-HBM) kernel; with the paper's 32 KB budget this
+     only happens for ``m_A > 8192``, outside the GCN regime.
+
+It also ports the paper's ``subWarp`` policy (§IV-A) verbatim; on the
+TPU this quantity sizes the *lane slice* assigned to one non-zero /
+row rather than a thread group, and it drives the P100 cost model on
+the rust side (which re-implements the same formula — kept in sync by
+``python/tests/test_blocking.py`` golden values).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# The paper's running example assigns 32 KB of shared memory per thread
+# block ("we assume that the size of shared memory to each SpMM operation
+# in single precision is 32KB").  We use the same default so the planning
+# decisions (and therefore the artifact grids) match the paper's cases.
+DEFAULT_SMEM_BUDGET_BYTES = 32 * 1024
+
+# TPU VMEM is ~16 MB/core; we stage at most this much output per grid
+# step so double buffering of the dense input still fits.
+DEFAULT_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+WARP_SIZE = 32
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (x >= 1)."""
+    if x < 1:
+        raise ValueError(f"next_pow2 requires x >= 1, got {x}")
+    return 1 << (x - 1).bit_length()
+
+
+def subwarp(n_b: int) -> int:
+    """The paper's subWarp policy (§IV-A):
+
+        subWarp = 32                       if n_B > 16
+                  min 2^p s.t. n_B <= 2^p  if n_B <= 16
+    """
+    if n_b > 16:
+        return WARP_SIZE
+    return next_pow2(n_b)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Column-blocking decision for one (batched) SpMM.
+
+    Attributes:
+      m:          output row count (per matrix).
+      n_b:        dense-input column count.
+      block_n:    columns per block (block_n == n_b means case 1).
+      n_blocks:   number of column blocks (grid extent along columns).
+      staged:     False means case 3 — output cannot be staged at all.
+    """
+
+    m: int
+    n_b: int
+    block_n: int
+    n_blocks: int
+    staged: bool
+
+    @property
+    def bytes_per_block(self) -> int:
+        return self.m * self.block_n * 4
+
+
+def plan_blocks(
+    m: int,
+    n_b: int,
+    budget_bytes: int = DEFAULT_SMEM_BUDGET_BYTES,
+    min_block_n: int = 8,
+) -> BlockPlan:
+    """Decide the column block size for an ``m x n_b`` f32 output.
+
+    Case 1: the whole output fits in the budget -> single block.
+    Case 2: halve the column count (powers of two, matching the paper's
+            "divided into two sub matrices ... p sub matrices") until a
+            slice fits, but never below ``min_block_n`` columns (a TPU
+            lane-efficiency floor; the paper's floor is one subWarp).
+    Case 3: even the narrowest slice does not fit -> not staged.
+    """
+    if m <= 0 or n_b <= 0:
+        raise ValueError(f"plan_blocks requires positive dims, got m={m} n_b={n_b}")
+    if m * n_b * 4 <= budget_bytes:
+        return BlockPlan(m=m, n_b=n_b, block_n=n_b, n_blocks=1, staged=True)
+    block_n = next_pow2(n_b) // 2
+    while block_n >= min_block_n:
+        if m * block_n * 4 <= budget_bytes:
+            n_blocks = -(-n_b // block_n)  # ceil div
+            return BlockPlan(m=m, n_b=n_b, block_n=block_n, n_blocks=n_blocks, staged=True)
+        block_n //= 2
+    return BlockPlan(m=m, n_b=n_b, block_n=n_b, n_blocks=1, staged=False)
+
+
+def plan_batch(
+    ms: list[int],
+    n_b: int,
+    budget_bytes: int = DEFAULT_SMEM_BUDGET_BYTES,
+) -> BlockPlan:
+    """Batch-level plan (§IV-C): cache blocking is applied to *all* SpMM
+    operations in the batch if *any* output cannot be staged unblocked —
+    the plan is driven by ``max m_A * n_B`` over the batch."""
+    if not ms:
+        raise ValueError("plan_batch requires a non-empty batch")
+    return plan_blocks(max(ms), n_b, budget_bytes=budget_bytes)

@@ -1,0 +1,138 @@
+"""Pure-jnp correctness oracles for the batched SpMM kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the
+AOT artifacts the rust runtime executes) are validated against.  Each
+oracle consumes the *padded batch* sparse formats described in
+DESIGN.md §3:
+
+  PaddedSparseTensor:  ids  [B, NNZ, 2] int32   (row, col) per non-zero
+                       vals [B, NNZ]    f32     zero for padding slots
+  PaddedCSR:           rpt    [B, M+1]  int32   row pointers
+                       colids [B, NNZ]  int32   zero-padded
+                       vals   [B, NNZ]  f32     zero-padded
+
+Padding convention: an ST padding slot has val == 0 and ids == (0, 0),
+so it contributes nothing; a CSR padding slot lies beyond rpt[-1] and is
+masked out explicitly here (the Pallas kernel never reads it because the
+row loop is bounded by rpt).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_st_ref(ids: jax.Array, vals: jax.Array, dense: jax.Array) -> jax.Array:
+    """Batched SparseTensorDenseMatMul oracle (paper Fig. 2 semantics).
+
+    ids [B,NNZ,2], vals [B,NNZ], dense [B,K,N] -> out [B,M,N].  For the
+    square adjacency matrices of the GCN application M == K, so M is
+    taken from dense; callers needing m != k use spmm_st_ref_m.
+    """
+    return spmm_st_ref_m(ids, vals, dense, dense.shape[1])
+
+
+def spmm_st_ref_m(ids: jax.Array, vals: jax.Array, dense: jax.Array, m: int) -> jax.Array:
+    def one(ids1, vals1, d1):
+        rows = ids1[:, 0]
+        cols = ids1[:, 1]
+        gathered = vals1[:, None] * d1[cols]        # [NNZ, N]
+        out = jnp.zeros((m, d1.shape[1]), d1.dtype)
+        return out.at[rows].add(gathered)
+
+    return jax.vmap(one)(ids, vals, dense)
+
+
+def csr_row_of_slot(rpt1: jax.Array, nnz: int) -> jax.Array:
+    """Map each non-zero slot index to its CSR row: row[i] is r such that
+    rpt[r] <= i < rpt[r+1].  Slots beyond rpt[-1] map past the last row
+    and are masked by the caller."""
+    slots = jnp.arange(nnz)
+    return jnp.searchsorted(rpt1, slots, side="right") - 1
+
+
+def spmm_csr_ref(
+    rpt: jax.Array, colids: jax.Array, vals: jax.Array, dense: jax.Array
+) -> jax.Array:
+    """Batched CSR SpMM oracle. rpt [B,M+1], colids/vals [B,NNZ],
+    dense [B,K,N] -> out [B,M,N]."""
+    m = rpt.shape[1] - 1
+    nnz = colids.shape[1]
+
+    def one(rpt1, colids1, vals1, d1):
+        rows = csr_row_of_slot(rpt1, nnz)
+        valid = jnp.arange(nnz) < rpt1[-1]
+        v = jnp.where(valid, vals1, 0.0)
+        gathered = v[:, None] * d1[jnp.where(valid, colids1, 0)]
+        out = jnp.zeros((m, d1.shape[1]), d1.dtype)
+        return out.at[jnp.where(valid, rows, 0)].add(gathered)
+
+    return jax.vmap(one)(rpt, colids, vals, dense)
+
+
+def spmm_ell_ref(ell_cols: jax.Array, ell_vals: jax.Array, dense: jax.Array) -> jax.Array:
+    """Batched ELL SpMM oracle. ell_cols/ell_vals [B,M,R], dense [B,K,N]
+    -> out [B,M,N]; padding slots have val == 0."""
+
+    def one(cols1, vals1, d1):
+        gathered = d1[cols1]                      # [M, R, N]
+        return jnp.sum(vals1[..., None] * gathered, axis=1)
+
+    return jax.vmap(one)(ell_cols, ell_vals, dense)
+
+
+def st_to_ell(ids: jax.Array, vals: jax.Array, m: int, r: int):
+    """Convert one PaddedSparseTensor matrix (no batch dim) to ELL
+    arrays (numpy-side helper for tests)."""
+    import numpy as np
+
+    cols = np.zeros((m, r), np.int32)
+    evals = np.zeros((m, r), np.float32)
+    fill = np.zeros(m, np.int64)
+    for i in range(vals.shape[0]):
+        v = float(vals[i])
+        if v == 0.0:
+            continue
+        row, col = int(ids[i, 0]), int(ids[i, 1])
+        slot = fill[row]
+        if slot >= r:
+            raise ValueError(f"row {row} exceeds ELL width {r}")
+        cols[row, slot] = col
+        evals[row, slot] = v
+        fill[row] += 1
+    return cols, evals
+
+
+def spmm_dense_ref(adj_dense: jax.Array, dense: jax.Array) -> jax.Array:
+    """Batched GEMM baseline (the paper's cuBLAS gemmBatched stand-in):
+    the sparse matrix densified and multiplied on the MXU path."""
+    return jnp.einsum("bmk,bkn->bmn", adj_dense, dense)
+
+
+def st_to_dense(ids: jax.Array, vals: jax.Array, m: int, k: int) -> jax.Array:
+    """Densify a PaddedSparseTensor batch (for the GEMM baseline and for
+    test cross-checks).  Duplicate (row, col) entries accumulate, which
+    matches SpMM semantics."""
+
+    def one(ids1, vals1):
+        a = jnp.zeros((m, k), vals1.dtype)
+        return a.at[ids1[:, 0], ids1[:, 1]].add(vals1)
+
+    return jax.vmap(one)(ids, vals)
+
+
+def csr_to_dense(rpt: jax.Array, colids: jax.Array, vals: jax.Array, k: int) -> jax.Array:
+    """Densify a PaddedCSR batch."""
+    m = rpt.shape[1] - 1
+    nnz = colids.shape[1]
+
+    def one(rpt1, colids1, vals1):
+        rows = csr_row_of_slot(rpt1, nnz)
+        valid = jnp.arange(nnz) < rpt1[-1]
+        a = jnp.zeros((m, k), vals1.dtype)
+        return a.at[
+            jnp.where(valid, rows, 0), jnp.where(valid, colids1, 0)
+        ].add(jnp.where(valid, vals1, 0.0))
+
+    return jax.vmap(one)(rpt, colids, vals)

@@ -1,0 +1,285 @@
+"""L2: the ChemGCN model (paper §IV-D) in JAX, calling the L1 kernels.
+
+The graph-convolution layer follows Fig. 6 / Fig. 7:
+
+    for ch in channels:                       # O(channel) ops (Fig. 7)
+        U  = MatMul(X, W[ch])                 # one batched einsum
+        B  = Add(bias[ch], U)
+        C += BatchedSpMM(A[:, ch], B)         # L1 Pallas kernel
+    Y = GraphNorm(C); H = ReLU(Y)
+
+Two dispatch formulations share this exact function:
+
+* **batched**  — the whole minibatch in one executable (one PJRT
+  execute per step), the Fig. 7 path;
+* **non-batched** — the same function traced at batch=1; the rust
+  coordinator issues one execute per sample (per-sample grads are
+  averaged host-side), the Fig. 6 path.
+
+Design deviations from the paper (recorded in DESIGN.md §7):
+
+* BatchNorm -> **per-graph masked normalization** ("GraphNorm"): stats
+  are computed over each graph's own (masked) nodes instead of the
+  minibatch.  This makes the model *exactly* decomposable per sample,
+  so batched and non-batched modes compute the same function and the
+  timing comparison (Tables II/III) is apples-to-apples.  The paper
+  itself notes batching "has no effect on the accuracy"; normalization
+  choice is orthogonal to the batching contribution.
+* The backward pass of SpMM is itself a Batched SpMM with the
+  transposed adjacency — molecular adjacency is symmetric (undirected
+  bonds + self loops), so the same arrays serve fwd and bwd ("The
+  Batched SpMM is also applied to backward propagation", §IV-D).
+* Adjacency reaches the model in **ELL** (padded per-row) form and the
+  SpMM runs through the gather-only kernel — the TPU-native expression
+  of the paper's atomic-free CSR variant (see
+  kernels/batched_spmm_ell.py and EXPERIMENTS.md §Perf iteration 3);
+  the paper's ST/CSR kernels remain the subjects of the Fig. 8-10
+  benches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batched_spmm_ell, batched_spmm_st
+
+
+# --------------------------------------------------------------------------
+# Configs (paper §V-B, Table I and the architecture description)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GcnConfig:
+    """ChemGCN architecture + padded-batch geometry."""
+
+    name: str
+    max_nodes: int          # M: padded node count (Table I "Max dim" = 50)
+    feat_dim: int           # F0: input feature width
+    channels: int           # bond-type channels (adjacency per channel)
+    hidden: tuple           # conv layer widths
+    n_out: int              # tasks (tox21: 12) or classes (reaction100: 100)
+    loss: str               # "bce" (multi-task) | "softmax"
+    nnz_cap: int            # padded non-zeros per (sample, channel)
+    ell_width: int          # R: max non-zeros per row (ELL packing)
+    train_batch: int        # Table I "Batch size"
+    infer_batch: int        # §V-B: inference batch = 200
+
+
+# Tox21: 7,862 molecules, max dim 50, 2 conv layers of width 64, 12 tasks.
+TOX21 = GcnConfig(
+    name="tox21", max_nodes=50, feat_dim=16, channels=4, hidden=(64, 64),
+    n_out=12, loss="bce", nnz_cap=128, ell_width=12, train_batch=50,
+    infer_batch=200,
+)
+
+# Reaction100: 75,477 graphs, 3 conv layers of width 512, 100 classes.
+REACTION100 = GcnConfig(
+    name="reaction100", max_nodes=50, feat_dim=16, channels=4,
+    hidden=(512, 512, 512), n_out=100, loss="softmax", nnz_cap=128,
+    ell_width=12, train_batch=100, infer_batch=200,
+)
+
+CONFIGS = {c.name: c for c in (TOX21, REACTION100)}
+
+
+# --------------------------------------------------------------------------
+# Parameters: flat, deterministically-ordered list (the artifact ABI)
+# --------------------------------------------------------------------------
+
+
+def param_specs(cfg: GcnConfig) -> list:
+    """[(name, shape)] in the order the AOT artifacts take/return them."""
+    specs = []
+    fin = cfg.feat_dim
+    for i, fout in enumerate(cfg.hidden):
+        specs.append((f"conv{i}.w", (cfg.channels, fin, fout)))
+        specs.append((f"conv{i}.b", (cfg.channels, fout)))
+        specs.append((f"conv{i}.gamma", (fout,)))
+        specs.append((f"conv{i}.beta", (fout,)))
+        fin = fout
+    specs.append(("readout.w", (cfg.hidden[-1], cfg.n_out)))
+    specs.append(("readout.b", (cfg.n_out,)))
+    return specs
+
+
+def init_params(cfg: GcnConfig, seed: int = 0) -> list:
+    """Glorot-ish init; gamma=1, beta=0, biases=0."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".w"):
+            fan_in = shape[-2]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+        elif name.endswith(".gamma"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# SpMM op with Batched-SpMM backward (custom VJP)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def spmm_st_op(ids: jax.Array, vals: jax.Array, dense: jax.Array) -> jax.Array:
+    """C = A @ B through the L1 Pallas ST kernel; ids/vals are data."""
+    return batched_spmm_st(ids, vals, dense)
+
+
+def _spmm_fwd(ids, vals, dense):
+    return batched_spmm_st(ids, vals, dense), (ids, vals)
+
+
+def _spmm_bwd(res, g):
+    ids, vals = res
+    # dB = A^T dC: for SparseTensor, transposing is swapping id columns —
+    # the backward pass is itself a Batched SpMM (paper §IV-D).
+    ids_t = ids[:, :, ::-1]
+    d_dense = batched_spmm_st(ids_t, vals, g)
+    return (
+        jnp.zeros(ids.shape, dtype=jax.dtypes.float0),
+        jnp.zeros_like(vals),
+        d_dense,
+    )
+
+
+spmm_st_op.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+@jax.custom_vjp
+def spmm_ell_op(cols: jax.Array, vals: jax.Array, dense: jax.Array) -> jax.Array:
+    """C = A @ B through the gather-only ELL kernel (the model hot
+    path; §Perf iteration 3). cols/vals are data."""
+    return batched_spmm_ell(cols, vals, dense)
+
+
+def _spmm_ell_fwd(cols, vals, dense):
+    return batched_spmm_ell(cols, vals, dense), (cols, vals)
+
+
+def _spmm_ell_bwd(res, g):
+    cols, vals = res
+    # dB = A^T dC. Molecular adjacency (undirected bonds + self loops)
+    # is SYMMETRIC, so A^T = A and the same ELL arrays serve the
+    # backward pass — still a single gather-only Batched SpMM ("The
+    # Batched SpMM is also applied to backward propagation", §IV-D).
+    # Directed graphs would pack A^T alongside A at batch-build time.
+    d_dense = batched_spmm_ell(cols, vals, g)
+    return (
+        jnp.zeros(cols.shape, dtype=jax.dtypes.float0),
+        jnp.zeros_like(vals),
+        d_dense,
+    )
+
+
+spmm_ell_op.defvjp(_spmm_ell_fwd, _spmm_ell_bwd)
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+
+def graph_norm(h, mask, gamma, beta, eps=1e-5):
+    """Per-graph masked normalization: per (sample, feature) stats over
+    that sample's real nodes, then affine, then re-mask (padded node rows
+    stay exactly zero so downstream SpMM/readout never see them)."""
+    w = mask[..., None]                                    # [B, M, 1]
+    cnt = jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1.0)
+    mean = jnp.sum(h * w, axis=1, keepdims=True) / cnt     # [B, 1, F]
+    var = jnp.sum(((h - mean) ** 2) * w, axis=1, keepdims=True) / cnt
+    hn = (h - mean) * jax.lax.rsqrt(var + eps)
+    return (gamma * hn + beta) * w
+
+
+def forward(cfg: GcnConfig, params: list, ell_cols, ell_vals, x, mask):
+    """ChemGCN forward.
+
+    Args:
+      params: flat list per param_specs(cfg).
+      ell_cols: [B, CH, M, R] int32 ELL columns per channel.
+      ell_vals: [B, CH, M, R] f32 ELL values (0 = padding slot).
+      x:    [B, M, F0] node features (padded rows zero).
+      mask: [B, M] f32 node validity.
+
+    Returns logits [B, n_out].
+    """
+    p = iter(params)
+    h = x
+    for _ in cfg.hidden:
+        w, b, gamma, beta = next(p), next(p), next(p), next(p)
+        # Fig. 7: one MatMul / Add / BatchedSpMM per *channel* —
+        # O(channel) device ops for the whole minibatch.
+        y = None
+        for ch in range(cfg.channels):
+            u = jnp.einsum("bmf,fo->bmo", h, w[ch])        # MatMul
+            u = u + b[ch]                                  # Add (bias)
+            c = spmm_ell_op(ell_cols[:, ch], ell_vals[:, ch], u)  # BatchedSpMM
+            y = c if y is None else y + c                  # ElementWiseAdd
+        h = jax.nn.relu(graph_norm(y, mask, gamma, beta))
+    w_out, b_out = next(p), next(p)
+    pooled = jnp.sum(h, axis=1)                            # sum readout
+    return pooled @ w_out + b_out
+
+
+def loss_fn(cfg: GcnConfig, params, ell_cols, ell_vals, x, mask, labels):
+    """Mean loss over the batch — exactly (1/B) * sum of per-sample
+    losses, so non-batched per-sample grads average to the batched grad."""
+    logits = forward(cfg, params, ell_cols, ell_vals, x, mask)
+    if cfg.loss == "bce":
+        # Multi-task binary cross-entropy with logits (labels [B, n_out]).
+        z = jax.nn.log_sigmoid(logits)
+        zc = jax.nn.log_sigmoid(-logits)
+        per = -(labels * z + (1.0 - labels) * zc)
+        return jnp.mean(jnp.sum(per, axis=-1))
+    elif cfg.loss == "softmax":
+        # One-hot labels [B, n_out].
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return jnp.mean(-jnp.sum(labels * logp, axis=-1))
+    raise ValueError(f"unknown loss {cfg.loss}")
+
+
+# --------------------------------------------------------------------------
+# Training steps (both dispatch modes)
+# --------------------------------------------------------------------------
+
+
+def train_step(cfg: GcnConfig, params, ell_cols, ell_vals, x, mask, labels, lr):
+    """Batched mode: fwd + bwd + SGD in one executable.
+
+    lr arrives as shape-[1] f32 (rank-0 literals are awkward across the
+    PJRT text boundary). Returns (*new_params, loss[1])."""
+    lr_s = lr[0]
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, ell_cols, ell_vals, x, mask, labels)
+    )(params)
+    new_params = [p - lr_s * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (jnp.reshape(loss, (1,)),)
+
+
+def grad_sample(cfg: GcnConfig, params, ell_cols, ell_vals, x, mask, labels):
+    """Non-batched mode: gradient of ONE sample's loss (inputs carry a
+    leading batch axis of 1). The rust coordinator sums these across the
+    minibatch and calls apply_sgd. Returns (*grads, loss[1])."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, ell_cols, ell_vals, x, mask, labels)
+    )(params)
+    return tuple(grads) + (jnp.reshape(loss, (1,)),)
+
+
+def apply_sgd(params, grad_sums, scale):
+    """params <- params - scale * grad_sums  (scale = lr / batch, shape [1]).
+
+    Separate tiny executable so the non-batched path never needs python."""
+    s = scale[0]
+    return tuple(p - s * g for p, g in zip(params, grad_sums))

@@ -1,0 +1,75 @@
+"""AOT pipeline tests: sweep-table consistency and output-shape
+inference (no lowering here — the heavy path is covered by `make
+artifacts` + the rust integration tests)."""
+
+import jax
+import numpy as np
+
+from compile import aot, model as M
+from compile.kernels import blocking
+
+
+def test_sweeps_reference_paper_parameters():
+    # Table I geometry: the GCN-application proxies use dim 50.
+    assert aot.SWEEPS["fig8a"]["dim"] == 50
+    assert aot.SWEEPS["fig8a"]["batch"] == 50
+    assert aot.SWEEPS["fig8b"]["batch"] == 100
+    # Fig. 9 panels
+    assert [aot.SWEEPS[k]["dim"] for k in ("fig9a", "fig9b", "fig9c")] == [32, 64, 128]
+    assert aot.SWEEPS["fig9d"]["batch"] == 50
+    assert aot.SWEEPS["fig9e"]["z"] == 1
+    assert aot.SWEEPS["fig9f"]["z"] == 5
+    # Fig. 10 mixed ranges
+    assert aot.SWEEPS["fig10"]["mixed"] is True
+    assert aot.SWEEPS["fig10"]["dim_range"] == [32, 256]
+    assert aot.SWEEPS["fig10"]["z_range"] == [1, 5]
+
+
+def test_model_io_specs_match_config():
+    cfg = M.TOX21
+    io = aot.model_io_specs(cfg, 7, with_labels=True)
+    names = [n for n, _, _ in io]
+    assert names == ["ell_cols", "ell_vals", "x", "mask", "labels"]
+    shapes = {n: s for n, s, _ in io}
+    assert shapes["ell_cols"] == (7, cfg.channels, cfg.max_nodes, cfg.ell_width)
+    assert shapes["labels"] == (7, cfg.n_out)
+
+
+def test_spmm_fn_output_shapes():
+    fn = aot.st_fn()
+    out = jax.eval_shape(
+        fn,
+        jax.ShapeDtypeStruct((3, 10, 2), np.int32),
+        jax.ShapeDtypeStruct((3, 10), np.float32),
+        jax.ShapeDtypeStruct((3, 8, 16), np.float32),
+    )
+    assert out[0].shape == (3, 8, 16)
+    fn = aot.csr_fn()
+    out = jax.eval_shape(
+        fn,
+        jax.ShapeDtypeStruct((3, 9), np.int32),
+        jax.ShapeDtypeStruct((3, 10), np.int32),
+        jax.ShapeDtypeStruct((3, 10), np.float32),
+        jax.ShapeDtypeStruct((3, 8, 16), np.float32),
+    )
+    assert out[0].shape == (3, 8, 16)
+
+
+def test_configs_respect_artifact_nnz_budget():
+    """The molecule generator guarantees per-channel nnz <= nnz_cap via
+    MoleculeSpec.max_bonds_per_channel (rust side); the python configs
+    must agree: 2 * max_bonds + max_nodes <= nnz_cap."""
+    for cfg in M.CONFIGS.values():
+        max_bonds = (cfg.nnz_cap - cfg.max_nodes) // 2
+        assert max_bonds >= 30, f"{cfg.name}: budget too tight"
+        assert blocking.plan_blocks(cfg.max_nodes, cfg.hidden[0]).staged
+
+
+def test_sweep_nb_divisible_by_default_blocks():
+    """Every sweep n_B must be compatible with the Fig. 5 planner's
+    block size (the artifact lowering asserts divisibility)."""
+    for key, sw in aot.SWEEPS.items():
+        for nb in sw["nbs"]:
+            plan = blocking.plan_blocks(sw["dim"], nb)
+            bn = plan.block_n if plan.staged else nb
+            assert nb % bn == 0, f"{key}: n_B={nb} block={bn}"

@@ -1,0 +1,84 @@
+"""Planner tests (paper §IV-A/B/C policies).
+
+The golden values here are mirrored by rust unit tests in
+``rust/src/simulator/cost.rs`` — both sides implement the same subWarp
+and cache-blocking formulas, and these tests pin the contract.
+"""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import blocking
+
+
+# ---- subWarp policy (§IV-A) -------------------------------------------------
+
+@pytest.mark.parametrize(
+    "n_b,expect",
+    [
+        (1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (8, 8), (9, 16),
+        (16, 16),           # n_B <= 16: min 2^p >= n_B
+        (17, 32), (32, 32), (64, 32), (512, 32),  # n_B > 16: capped at warp
+    ],
+)
+def test_subwarp_golden(n_b, expect):
+    assert blocking.subwarp(n_b) == expect
+
+
+@given(st.integers(1, 4096))
+def test_subwarp_is_pow2_and_capped(n_b):
+    sw = blocking.subwarp(n_b)
+    assert sw & (sw - 1) == 0
+    assert 1 <= sw <= 32
+    if n_b <= 16:
+        assert sw >= n_b and sw // 2 < n_b
+
+
+# ---- cache blocking (§IV-B/C) ----------------------------------------------
+
+def test_case1_whole_output_fits():
+    # 50 x 64 f32 = 12.5 KB <= 32 KB -> single block (Fig. 5-a)
+    plan = blocking.plan_blocks(50, 64)
+    assert plan.staged and plan.n_blocks == 1 and plan.block_n == 64
+
+
+def test_case2_column_split():
+    # 50 x 512 f32 = 100 KB > 32 KB -> split columns (Fig. 5-b)
+    plan = blocking.plan_blocks(50, 512)
+    assert plan.staged and plan.n_blocks > 1
+    assert plan.m * plan.block_n * 4 <= blocking.DEFAULT_SMEM_BUDGET_BYTES
+
+
+def test_case3_threshold_matches_paper():
+    """Paper §IV-C: with a 32 KB budget 'only the input sparse matrices
+    with m_A > 8192 require the case 3'."""
+    # m = 8192, narrowest useful block (min_block_n=1) is 8192*4 = 32KB: stages.
+    assert blocking.plan_blocks(8192, 512, min_block_n=1).staged
+    assert not blocking.plan_blocks(8193, 512, min_block_n=1).staged
+
+
+@given(
+    m=st.integers(1, 4096),
+    n_b=st.sampled_from([8, 16, 32, 64, 128, 256, 512, 1024]),
+)
+def test_plan_covers_all_columns(m, n_b):
+    plan = blocking.plan_blocks(m, n_b)
+    assert plan.n_blocks * plan.block_n >= plan.n_b
+    if plan.staged and plan.n_blocks > 1:
+        assert plan.bytes_per_block <= blocking.DEFAULT_SMEM_BUDGET_BYTES
+
+
+def test_batch_plan_uses_max_m():
+    """§IV-C: blocking is decided by max m_A in the batch and applied to
+    every operation in the batch."""
+    small_only = blocking.plan_batch([16, 32, 50], 512)
+    with_big = blocking.plan_batch([16, 32, 50, 300], 512)
+    assert small_only.n_blocks <= with_big.n_blocks
+    assert with_big.m == 300
+
+
+def test_next_pow2_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        blocking.next_pow2(0)
+    with pytest.raises(ValueError):
+        blocking.plan_blocks(0, 8)

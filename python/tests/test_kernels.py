@@ -1,0 +1,287 @@
+"""L1 kernel correctness: Pallas batched SpMM vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, sparsity, padding amounts, and block sizes;
+every property here is a behaviour the rust runtime relies on (the AOT
+artifacts embed these kernels verbatim).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import batched_spmm_csr, batched_spmm_st, ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def make_st_batch(rng, b, m, nnz, pad_frac):
+    """Random PaddedSparseTensor batch with ~pad_frac of slots padded."""
+    ids = rng.integers(0, m, size=(b, nnz, 2)).astype(np.int32)
+    vals = rng.normal(size=(b, nnz)).astype(np.float32)
+    n_pad = int(nnz * pad_frac)
+    if n_pad:
+        ids[:, nnz - n_pad:, :] = 0
+        vals[:, nnz - n_pad:] = 0.0
+    return ids, vals
+
+
+def make_csr_batch(rng, b, m, nnz_cap):
+    """Random PaddedCSR batch: per-matrix random row counts and nnz."""
+    rpt = np.zeros((b, m + 1), np.int32)
+    colids = np.zeros((b, nnz_cap), np.int32)
+    vals = np.zeros((b, nnz_cap), np.float32)
+    for i in range(b):
+        true_m = int(rng.integers(1, m + 1))
+        counts = rng.integers(0, 4, size=m)
+        counts[true_m:] = 0
+        cum = np.minimum(np.concatenate([[0], np.cumsum(counts)]), nnz_cap)
+        rpt[i] = cum
+        k = int(cum[-1])
+        colids[i, :k] = rng.integers(0, m, size=k)
+        vals[i, :k] = rng.normal(size=k)
+    return rpt, colids, vals
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    m=st.sampled_from([4, 8, 16, 32]),
+    n=st.sampled_from([8, 16, 32, 64]),
+    nnz_per_row=st.integers(1, 5),
+    pad_frac=st.sampled_from([0.0, 0.25, 0.5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_st_matches_oracle(b, m, n, nnz_per_row, pad_frac, seed):
+    rng = np.random.default_rng(seed)
+    nnz = max(1, m * nnz_per_row)
+    ids, vals = make_st_batch(rng, b, m, nnz, pad_frac)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    out = batched_spmm_st(jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense))
+    expect = ref.spmm_st_ref(jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    m=st.sampled_from([4, 8, 16, 32]),
+    n=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_csr_matches_oracle(b, m, n, seed):
+    rng = np.random.default_rng(seed)
+    rpt, colids, vals = make_csr_batch(rng, b, m, nnz_cap=4 * m)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    out = batched_spmm_csr(
+        jnp.asarray(rpt), jnp.asarray(colids), jnp.asarray(vals), jnp.asarray(dense)
+    )
+    expect = ref.spmm_csr_ref(
+        jnp.asarray(rpt), jnp.asarray(colids), jnp.asarray(vals), jnp.asarray(dense)
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_n=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_st_column_blocking_invariant(block_n, seed):
+    """Cache blocking (Fig. 5-b) must not change results: any block_n
+    dividing n produces the same output."""
+    rng = np.random.default_rng(seed)
+    b, m, n, nnz = 3, 16, 64, 32
+    ids, vals = make_st_batch(rng, b, m, nnz, 0.25)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    full = batched_spmm_st(
+        jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense), block_n=n
+    )
+    blocked = batched_spmm_st(
+        jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense), block_n=block_n
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blocked), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_n=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_csr_column_blocking_invariant(block_n, seed):
+    """Fig. 5-(d): CSR blocking along columns is semantics-preserving."""
+    rng = np.random.default_rng(seed)
+    b, m, n = 3, 16, 64
+    rpt, colids, vals = make_csr_batch(rng, b, m, nnz_cap=3 * m)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    full = batched_spmm_csr(
+        jnp.asarray(rpt), jnp.asarray(colids), jnp.asarray(vals), jnp.asarray(dense),
+        block_n=n,
+    )
+    blocked = batched_spmm_csr(
+        jnp.asarray(rpt), jnp.asarray(colids), jnp.asarray(vals), jnp.asarray(dense),
+        block_n=block_n,
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blocked), rtol=RTOL, atol=ATOL)
+
+
+def test_st_duplicate_entries_accumulate():
+    """Fig. 2/3 semantics: duplicate (row, col) non-zeros add up — the
+    behaviour the atomic add provides on the GPU."""
+    ids = np.array([[[1, 2], [1, 2], [0, 0]]], np.int32)
+    vals = np.array([[2.0, 3.0, 1.0]], np.float32)
+    dense = np.eye(4, dtype=np.float32)[None]
+    out = np.asarray(
+        batched_spmm_st(jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense))
+    )
+    assert out[0, 1, 2] == pytest.approx(5.0)
+    assert out[0, 0, 0] == pytest.approx(1.0)
+
+
+def test_st_padding_is_identity():
+    """Padding slots (val=0 at (0,0)) must contribute nothing."""
+    rng = np.random.default_rng(7)
+    b, m, n, nnz = 2, 8, 16, 10
+    ids, vals = make_st_batch(rng, b, m, nnz, 0.0)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    base = np.asarray(
+        batched_spmm_st(jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense))
+    )
+    ids_pad = np.concatenate([ids, np.zeros((b, 6, 2), np.int32)], axis=1)
+    vals_pad = np.concatenate([vals, np.zeros((b, 6), np.float32)], axis=1)
+    padded = np.asarray(
+        batched_spmm_st(jnp.asarray(ids_pad), jnp.asarray(vals_pad), jnp.asarray(dense))
+    )
+    np.testing.assert_allclose(base, padded, rtol=RTOL, atol=ATOL)
+
+
+def test_csr_empty_rows_and_matrices():
+    """Empty rows (rpt[r] == rpt[r+1]) and fully-empty matrices produce
+    zero rows — the 'threads terminate immediately' case."""
+    rpt = np.array([[0, 0, 2, 2, 3], [0, 0, 0, 0, 0]], np.int32)
+    colids = np.array([[1, 3, 0, 0], [0, 0, 0, 0]], np.int32)
+    vals = np.array([[1.0, 2.0, 4.0, 9.9], [9.9, 9.9, 9.9, 9.9]], np.float32)
+    dense = np.tile(np.eye(4, dtype=np.float32)[None], (2, 1, 1))
+    out = np.asarray(
+        batched_spmm_csr(
+            jnp.asarray(rpt), jnp.asarray(colids), jnp.asarray(vals), jnp.asarray(dense)
+        )
+    )
+    expect0 = np.zeros((4, 4), np.float32)
+    expect0[1, 1] = 1.0
+    expect0[1, 3] = 2.0
+    expect0[3, 0] = 4.0
+    np.testing.assert_allclose(out[0], expect0, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(out[1], np.zeros((4, 4)), rtol=RTOL, atol=ATOL)
+
+
+def test_st_csr_agree_on_same_matrix():
+    """The two formats encode the same matrix -> same product."""
+    rng = np.random.default_rng(11)
+    b, m, n = 2, 12, 32
+    rpt, colids, vals = make_csr_batch(rng, b, m, nnz_cap=3 * m)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    csr_out = np.asarray(
+        batched_spmm_csr(
+            jnp.asarray(rpt), jnp.asarray(colids), jnp.asarray(vals), jnp.asarray(dense)
+        )
+    )
+    # convert CSR -> ST
+    nnz_cap = colids.shape[1]
+    ids = np.zeros((b, nnz_cap, 2), np.int32)
+    st_vals = np.zeros((b, nnz_cap), np.float32)
+    for i in range(b):
+        k = rpt[i, -1]
+        rows = np.asarray(ref.csr_row_of_slot(jnp.asarray(rpt[i]), nnz_cap))[:k]
+        ids[i, :k, 0] = rows
+        ids[i, :k, 1] = colids[i, :k]
+        st_vals[i, :k] = vals[i, :k]
+    st_out = np.asarray(
+        batched_spmm_st(jnp.asarray(ids), jnp.asarray(st_vals), jnp.asarray(dense))
+    )
+    np.testing.assert_allclose(csr_out, st_out, rtol=RTOL, atol=ATOL)
+
+
+def test_dense_baseline_agrees():
+    """The batched-GEMM baseline on the densified matrix equals SpMM."""
+    rng = np.random.default_rng(13)
+    b, m, n, nnz = 2, 8, 16, 20
+    ids, vals = make_st_batch(rng, b, m, nnz, 0.25)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    a_dense = ref.st_to_dense(jnp.asarray(ids), jnp.asarray(vals), m, m)
+    gemm = np.asarray(ref.spmm_dense_ref(a_dense, jnp.asarray(dense)))
+    spmm = np.asarray(
+        batched_spmm_st(jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense))
+    )
+    np.testing.assert_allclose(gemm, spmm, rtol=1e-4, atol=1e-4)
+
+
+# ---- ELL (gather-only) kernel ------------------------------------------------
+
+from compile.kernels import batched_spmm_ell
+
+
+def make_ell_batch(rng, b, m, r, fill_frac=0.7):
+    """Random ELL batch: each row gets a random number of real slots."""
+    cols = rng.integers(0, m, size=(b, m, r)).astype(np.int32)
+    vals = rng.normal(size=(b, m, r)).astype(np.float32)
+    keep = rng.uniform(size=(b, m, r)) < fill_frac
+    vals = np.where(keep, vals, 0.0).astype(np.float32)
+    cols = np.where(keep, cols, 0).astype(np.int32)
+    return cols, vals
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    m=st.sampled_from([4, 8, 16, 32]),
+    r=st.integers(1, 8),
+    n=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ell_matches_oracle(b, m, r, n, seed):
+    rng = np.random.default_rng(seed)
+    cols, vals = make_ell_batch(rng, b, m, r)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    out = batched_spmm_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(dense))
+    expect = ref.spmm_ell_ref(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(dense))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(block_n=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1))
+def test_ell_column_blocking_invariant(block_n, seed):
+    rng = np.random.default_rng(seed)
+    b, m, r, n = 3, 16, 5, 64
+    cols, vals = make_ell_batch(rng, b, m, r)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    full = batched_spmm_ell(
+        jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(dense), block_n=n
+    )
+    blocked = batched_spmm_ell(
+        jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(dense), block_n=block_n
+    )
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blocked), rtol=RTOL, atol=ATOL)
+
+
+def test_ell_agrees_with_st_on_same_matrix():
+    """ELL and ST encode the same matrix -> same product (the contract
+    that lets the model switch formats)."""
+    rng = np.random.default_rng(17)
+    b, m, n, nnz = 2, 12, 32, 24
+    ids, vals = make_st_batch(rng, b, m, nnz, 0.25)
+    dense = rng.normal(size=(b, m, n)).astype(np.float32)
+    st_out = np.asarray(
+        batched_spmm_st(jnp.asarray(ids), jnp.asarray(vals), jnp.asarray(dense))
+    )
+    r = 12
+    cols_b = np.zeros((b, m, r), np.int32)
+    vals_b = np.zeros((b, m, r), np.float32)
+    for bi in range(b):
+        c, v = ref.st_to_ell(ids[bi], vals[bi], m, r)
+        cols_b[bi], vals_b[bi] = c, v
+    ell_out = np.asarray(
+        batched_spmm_ell(jnp.asarray(cols_b), jnp.asarray(vals_b), jnp.asarray(dense))
+    )
+    np.testing.assert_allclose(st_out, ell_out, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,319 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  A1 — padding overhead of the fixed-bucket batched formats on a
+//!       mixed-shape batch (measured: the price of "redundant threads
+//!       terminate immediately" in our padded-slot form).
+//!  A2 — shared-memory/cache-block budget sweep (simulated: how the
+//!       Fig. 5 blocking decision moves with the budget).
+//!  A3 — dynamic-batcher deadline sweep (measured on the serving
+//!       coordinator: throughput vs latency vs occupancy).
+//!  A4 — subWarp policy vs fixed-32 assignment (simulated CSR kernel).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use bspmm::bench::report::{render_comparison, save_json};
+use bspmm::bench::workload::SpmmWorkload;
+use bspmm::bench::BenchOpts;
+use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+use bspmm::runtime::artifact::SweepSpec;
+use bspmm::runtime::Runtime;
+use bspmm::simulator::cost::{plan_col_blocks_with_budget, subwarp, CostModel};
+use bspmm::util::json::{num, obj, Json};
+use bspmm::util::timer;
+
+fn a1_padding_overhead(rt: &Runtime) -> anyhow::Result<Json> {
+    println!("-- A1: padding overhead on mixed-shape batches --");
+    let opts = BenchOpts::from_env();
+    // Uniform batch at dim 64 vs the mixed fig10 batch padded to 256:
+    // compare achieved GFLOPS per *real* non-zero.
+    let uniform = rt.manifest.sweep("fig9b")?;
+    let mixed = rt.manifest.sweep("fig10")?;
+    let nb = 128;
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for sw in [&uniform, &mixed] {
+        let w = SpmmWorkload::build(sw, nb)?;
+        let exe = rt.executable(&sw.st_batched(nb))?;
+        let inputs = w.st_batched_inputs();
+        let s = timer::bench_adaptive(opts.warmup, opts.min_iters, opts.max_iters, opts.min_time_s, || {
+            exe.execute(&inputs).unwrap();
+        });
+        let t = s.iter().sum::<f64>() / s.len() as f64;
+        let pad = w.st.pad_fraction();
+        rows.push(vec![
+            sw.key.clone(),
+            format!("{:.0}%", pad * 100.0),
+            format!("{:.3}", w.gflops(t)),
+            format!("{:.1}ms", t * 1e3),
+        ]);
+        out.push(obj(vec![
+            ("sweep", Json::Str(sw.key.clone())),
+            ("pad_fraction", num(pad)),
+            ("gflops", num(w.gflops(t))),
+            ("secs", num(t)),
+        ]));
+    }
+    println!(
+        "{}",
+        render_comparison(
+            "A1 padded-slot overhead (batched ST, n_B=128)",
+            &["sweep", "pad fraction", "real GFLOPS", "time"],
+            &rows,
+        )
+    );
+    Ok(Json::Arr(out))
+}
+
+fn a2_block_budget() -> Json {
+    println!("-- A2: cache-block budget sweep (simulated, dim=50..256, n_B=512) --");
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    let cm = CostModel::default();
+    for budget_kb in [8usize, 16, 32, 64] {
+        for dim in [50usize, 128, 256] {
+            let (bn, blocks) = plan_col_blocks_with_budget(dim, 512, budget_kb * 1024);
+            // ST kernel time under that plan: nnz re-walked per block.
+            let nnz = dim * 2;
+            let vec_ops = nnz as f64 * (bn as f64 / 32.0).ceil() * blocks as f64;
+            let us = vec_ops * 200.0 / (cm.dev.clock_ghz * 1e3);
+            rows.push(vec![
+                format!("{budget_kb}KB"),
+                dim.to_string(),
+                bn.to_string(),
+                blocks.to_string(),
+                format!("{us:.1}us"),
+            ]);
+            out.push(obj(vec![
+                ("budget_kb", num(budget_kb as f64)),
+                ("dim", num(dim as f64)),
+                ("block_n", num(bn as f64)),
+                ("col_blocks", num(blocks as f64)),
+                ("kernel_us_per_matrix", num(us)),
+            ]));
+        }
+    }
+    println!(
+        "{}",
+        render_comparison(
+            "A2 blocking plan vs budget",
+            &["budget", "dim", "block_n", "col blocks", "ST work/matrix"],
+            &rows,
+        )
+    );
+    Json::Arr(out)
+}
+
+fn a3_batcher_deadline() -> anyhow::Result<Json> {
+    println!("-- A3: batcher deadline sweep (tox21, 300 requests, capacity 50) --");
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for wait_ms in [0u64, 2, 10, 50] {
+        let srv = Server::start(ServerConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "tox21".into(),
+            mode: DispatchMode::Batched,
+            max_batch: 50,
+            max_wait: Duration::from_millis(wait_ms),
+            params_path: None,
+        })?;
+        let data = Dataset::generate(DatasetKind::Tox21, 300, 0xAB);
+        srv.submit(data.samples[0].mol.clone())
+            .recv_timeout(Duration::from_secs(300))
+            .map_err(|_| anyhow::anyhow!("warmup timeout"))?;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = data
+            .samples
+            .iter()
+            .map(|s| srv.submit(s.mol.clone()))
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(300))
+                .map_err(|_| anyhow::anyhow!("response timeout"))?;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let m = srv.shutdown()?;
+        rows.push(vec![
+            format!("{wait_ms}ms"),
+            format!("{:.0}", m.requests as f64 / secs),
+            format!("{:.1}ms", m.mean_latency_us / 1e3),
+            format!("{:.1}ms", m.p95_latency_us as f64 / 1e3),
+            format!("{:.0}%", m.mean_occupancy * 100.0),
+            format!("{}", m.batches),
+        ]);
+        out.push(obj(vec![
+            ("max_wait_ms", num(wait_ms as f64)),
+            ("throughput_rps", num(m.requests as f64 / secs)),
+            ("mean_latency_us", num(m.mean_latency_us)),
+            ("p95_latency_us", num(m.p95_latency_us as f64)),
+            ("occupancy", num(m.mean_occupancy)),
+            ("batches", num(m.batches as f64)),
+        ]));
+    }
+    println!(
+        "{}",
+        render_comparison(
+            "A3 deadline vs throughput/latency/occupancy",
+            &["max_wait", "req/s", "mean lat", "p95 lat", "occupancy", "batches"],
+            &rows,
+        )
+    );
+    Ok(Json::Arr(out))
+}
+
+fn a4_subwarp_policy() -> Json {
+    println!("-- A4: subWarp policy vs fixed-32 (simulated CSR, dim=64, batch=100) --");
+    let cm = CostModel::default();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for nb in [4usize, 8, 16, 32, 128] {
+        // Paper policy: subwarp(nb); naive: always 32 threads per row.
+        let policy = subwarp(nb);
+        let t_policy = csr_kernel_us(&cm, 64, 100, 2, nb, policy);
+        let t_fixed = csr_kernel_us(&cm, 64, 100, 2, nb, 32);
+        rows.push(vec![
+            nb.to_string(),
+            policy.to_string(),
+            format!("{t_policy:.1}us"),
+            format!("{t_fixed:.1}us"),
+            format!("{:.2}x", t_fixed / t_policy),
+        ]);
+        out.push(obj(vec![
+            ("nb", num(nb as f64)),
+            ("subwarp", num(policy as f64)),
+            ("kernel_us_policy", num(t_policy)),
+            ("kernel_us_fixed32", num(t_fixed)),
+        ]));
+    }
+    println!(
+        "{}",
+        render_comparison(
+            "A4 subWarp sizing (kernel time, lower is better)",
+            &["n_B", "subWarp", "policy", "fixed 32", "gain"],
+            &rows,
+        )
+    );
+    Json::Arr(out)
+}
+
+/// CSR kernel time with an explicit subwarp width (the A4 knob): with
+/// sw threads per row, rows-per-block shrinks as sw grows, and lanes
+/// beyond n_B are idle — exactly the §IV-A argument for the policy.
+fn csr_kernel_us(cm: &CostModel, dim: usize, batch: usize, z: usize, nb: usize, sw: usize) -> f64 {
+    let tpb = cm.dev.threads_per_block;
+    let blocks = batch * (dim * sw).div_ceil(tpb).max(1);
+    let rows_per_block = tpb / sw;
+    let vec_ops = rows_per_block as f64 * z as f64 * (nb as f64 / sw as f64).ceil();
+    // idle-lane waste when sw > nb
+    let waste = if sw > nb { sw as f64 / nb as f64 } else { 1.0 };
+    2.0 + cm.dev.waves(blocks) * vec_ops * 175.0 * waste / (cm.dev.clock_ghz * 1e3)
+}
+
+fn a5_kernel_variants(rt: &Runtime) -> anyhow::Result<Json> {
+    println!("-- A5: L1 kernel-variant perf iteration (loop -> vec -> fused), measured --");
+    let opts = BenchOpts::from_env();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for (dim, z, nb, batch) in [(50usize, 2usize, 64usize, 50usize), (50, 2, 512, 100)] {
+        let sw = SweepSpec {
+            key: format!("perf_d{dim}_n{nb}"),
+            dim,
+            z,
+            batch,
+            nbs: vec![nb],
+            mixed: false,
+        };
+        let w = SpmmWorkload::build(&sw, nb)?;
+        for fmt in ["st", "csr"] {
+            let mut point = vec![format!("{fmt} d{dim} n{nb} b{batch}")];
+            let mut o = vec![
+                ("format", Json::Str(fmt.into())),
+                ("dim", num(dim as f64)),
+                ("nb", num(nb as f64)),
+                ("batch", num(batch as f64)),
+            ];
+            for variant in ["loop", "vec", "fused"] {
+                let name = if variant == "fused" {
+                    // default sweep artifacts are fused
+                    format!("spmm_{fmt}_d{dim}_z{z}_n{nb}_b{batch}")
+                } else {
+                    format!("spmm_{fmt}_{variant}_d{dim}_z{z}_n{nb}_b{batch}")
+                };
+                let exe = rt.executable(&name)?;
+                let inputs = if fmt == "st" {
+                    w.st_batched_inputs()
+                } else {
+                    w.csr_batched_inputs()
+                };
+                let s = timer::bench_adaptive(
+                    opts.warmup,
+                    opts.min_iters,
+                    opts.max_iters,
+                    opts.min_time_s,
+                    || {
+                        exe.execute(&inputs).unwrap();
+                    },
+                );
+                let t = s.iter().sum::<f64>() / s.len() as f64;
+                point.push(format!("{:.2}ms", t * 1e3));
+                o.push((
+                    match variant {
+                        "loop" => "loop_secs",
+                        "vec" => "vec_secs",
+                        _ => "fused_secs",
+                    },
+                    num(t),
+                ));
+            }
+            rows.push(point);
+            out.push(Json::Obj(
+                o.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            ));
+        }
+    }
+    println!(
+        "{}",
+        render_comparison(
+            "A5 batched-kernel formulation (execute time, lower is better)",
+            &["point", "loop", "vec", "fused"],
+            &rows,
+        )
+    );
+    Ok(Json::Arr(out))
+}
+
+fn main() {
+    let rt = match Runtime::new_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime unavailable ({e:#}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let mut results = Vec::new();
+    match a1_padding_overhead(&rt) {
+        Ok(j) => results.push(("a1_padding", j)),
+        Err(e) => eprintln!("A1 failed: {e:#}"),
+    }
+    results.push(("a2_block_budget", a2_block_budget()));
+    match a3_batcher_deadline() {
+        Ok(j) => results.push(("a3_batcher_deadline", j)),
+        Err(e) => eprintln!("A3 failed: {e:#}"),
+    }
+    results.push(("a4_subwarp", a4_subwarp_policy()));
+    match a5_kernel_variants(&rt) {
+        Ok(j) => results.push(("a5_kernel_variants", j)),
+        Err(e) => eprintln!("A5 failed: {e:#}"),
+    }
+    let j = Json::Obj(
+        results
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    );
+    match save_json("ablation", &j) {
+        Ok(p) => println!("  -> {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+}

@@ -1,0 +1,16 @@
+//! Fig. 10 reproduction: a batch of 100 matrices with *mixed* shapes —
+//! dims uniform in [32, 256], nnz/row uniform in [1, 5] — everything
+//! padded into the max bucket.
+//!
+//! Paper anchor: "At n_B = 1024, our Batched SpMM achieves up to 3.29x
+//! speedup from the non-batched approaches." cuBLAS is excluded ("the
+//! kernel only processes GEMM operations with same matrix sizes").
+//!
+//! Run: `cargo bench --bench fig10_mixed_batch`.
+
+fn main() {
+    if let Err(e) = bspmm::bench::figures::run_figure_bench(&["fig10"], false) {
+        eprintln!("fig10 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,31 @@
+//! Fig. 8 reproduction: SpMM throughput vs dense-input width `n_B` on
+//! the GCN-application-shaped random dataset.
+//!
+//!   (a) dim=50, nnz/row=2, batch=50  — the Tox21 proxy
+//!   (b) dim=50, nnz/row=2, batch=100 — the Reaction100 proxy
+//!
+//! Paper anchors: up to 9.27x vs the TF baseline at n_B=64 in (a),
+//! 6.09x at n_B=512 in (b); 1.26x / 1.43x vs cuBLAS gemmBatched; nvprof
+//! sm_efficiency 35.51% (non-batched) vs 89.07% / 87.87% (batched).
+//!
+//! Run: `cargo bench --bench fig8_spmm_sweep` (BENCH_QUICK=1 for a fast
+//! pass). Results land in target/bench_results/fig8*.json.
+
+fn main() {
+    // Also report the simulated sm_efficiency contrast the paper quotes.
+    let cm = bspmm::simulator::cost::CostModel::default();
+    let tf = cm.tf_spmm_op(50, 2, 512);
+    let st = cm.batched_spmm_st(100, 50, 2, 512);
+    let csr = cm.batched_spmm_csr(100, 50, 2, 512);
+    println!(
+        "simulated sm_efficiency (dim=50, n_B=512): TF non-batched {:.1}% | \
+         batched ST {:.1}% | batched CSR {:.1}%  (paper: 35.5% / 89.1% / 87.9%)\n",
+        100.0 * tf.sm_efficiency(&cm.dev),
+        100.0 * cm.dev.sm_efficiency(st.blocks),
+        100.0 * cm.dev.sm_efficiency(csr.blocks),
+    );
+    if let Err(e) = bspmm::bench::figures::run_figure_bench(&["fig8a", "fig8b"], true) {
+        eprintln!("fig8 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Fig. 9 reproduction: batched-approach throughput under parameter
+//! sweeps.
+//!
+//!   (a,b,c) dim in {32, 64, 128} at batch=100, nnz/row=2
+//!   (d)     batch=50 (vs (b)'s 100) — the occupancy contrast
+//!   (e,f)   nnz/row in {1, 5} — the ST-atomics vs CSR contrast
+//!
+//! Paper shapes to observe: CSR gains with dim while ST stays flat;
+//! batch 100 beats batch 50; ST wins at nnz/row=1 but CSR is "best
+//! performer on denser input sparse matrices"; cuBLAS relatively
+//! stronger on denser matrices.
+//!
+//! Run: `cargo bench --bench fig9_param_sweep`.
+
+fn main() {
+    let keys = ["fig9a", "fig9b", "fig9c", "fig9d", "fig9e", "fig9f"];
+    if let Err(e) = bspmm::bench::figures::run_figure_bench(&keys, true) {
+        eprintln!("fig9 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Table II reproduction: ChemGCN training time, non-batched vs
+//! batched dispatch, on the synthetic Tox21-like and Reaction100-like
+//! datasets.
+//!
+//! Paper [sec]: Tox21 918.03 (GPU non-batched) -> 723.80 (batched),
+//! 1.18x; Reaction100 3029.13 -> 1905.32, 1.59x.
+//!
+//! Method: measure steady-state per-step time in both modes over a few
+//! minibatches, then extrapolate to the paper's full workload
+//! (epochs x steps/epoch from Table I) — running 50 epochs x 7,862
+//! molecules for every mode is not informative on a 1-core CPU box, and
+//! the ratio is set by the per-step costs. Both the measured per-step
+//! numbers and the extrapolation are reported and saved.
+//!
+//! BENCH_QUICK=1 uses fewer steps; reaction100 can be skipped with
+//! BENCH_SKIP_REACTION=1 (its 512-wide layers are heavy on CPU).
+
+use std::path::Path;
+
+use bspmm::bench::report::{render_comparison, save_json};
+use bspmm::coordinator::trainer::{TrainMode, Trainer};
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+use bspmm::util::json::{num, obj, Json};
+
+struct Row {
+    dataset: &'static str,
+    paper_nonbatched_s: f64,
+    paper_batched_s: f64,
+    per_step_nonbatched_s: f64,
+    per_step_batched_s: f64,
+    steps_total: usize,
+}
+
+fn measure(
+    kind: DatasetKind,
+    epochs_paper: usize,
+    steps_measured: usize,
+) -> anyhow::Result<(f64, f64, usize)> {
+    let dir = Path::new("artifacts");
+    let mut tr = Trainer::new(dir, kind.model_name())?;
+    let b = tr.cfg.train_batch;
+    let n = b * steps_measured;
+    let data = Dataset::generate(kind, n, 0xB00);
+    let idx: Vec<usize> = (0..n).collect();
+
+    // Warm both paths (compilation + first-dispatch costs excluded).
+    let warm = data.pack_batch(&idx[..b], tr.cfg.max_nodes, tr.cfg.ell_width)?;
+    tr.step_batched(&warm, 0.01)?;
+    tr.step_nonbatched(&warm, 0.01)?;
+
+    let t0 = std::time::Instant::now();
+    let stats = tr.train_epoch(TrainMode::Batched, &data, &idx, 0.01, 0)?;
+    let batched_per_step = t0.elapsed().as_secs_f64() / (n / b) as f64;
+    assert!(stats.mean_loss.is_finite());
+
+    let t0 = std::time::Instant::now();
+    let stats = tr.train_epoch(TrainMode::NonBatched, &data, &idx, 0.01, 0)?;
+    let nonbatched_per_step = t0.elapsed().as_secs_f64() / (n / b) as f64;
+    assert!(stats.mean_loss.is_finite());
+
+    // Paper workload: epochs x (dataset_size * 4/5 k-fold train split / b).
+    let steps_total = epochs_paper * (kind.paper_size() * 4 / 5) / b;
+    Ok((nonbatched_per_step, batched_per_step, steps_total))
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let steps = if quick { 2 } else { 4 };
+    let mut rows: Vec<Row> = Vec::new();
+
+    match measure(DatasetKind::Tox21, 50, steps) {
+        Ok((nb, b, total)) => rows.push(Row {
+            dataset: "Tox21",
+            paper_nonbatched_s: 918.03,
+            paper_batched_s: 723.80,
+            per_step_nonbatched_s: nb,
+            per_step_batched_s: b,
+            steps_total: total,
+        }),
+        Err(e) => eprintln!("tox21 failed: {e:#}"),
+    }
+    if std::env::var("BENCH_SKIP_REACTION").is_err() {
+        match measure(DatasetKind::Reaction100, 20, if quick { 1 } else { 2 }) {
+            Ok((nb, b, total)) => rows.push(Row {
+                dataset: "Reaction100",
+                paper_nonbatched_s: 3029.13,
+                paper_batched_s: 1905.32,
+                per_step_nonbatched_s: nb,
+                per_step_batched_s: b,
+                steps_total: total,
+            }),
+            Err(e) => eprintln!("reaction100 failed: {e:#}"),
+        }
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let speedup = r.per_step_nonbatched_s / r.per_step_batched_s;
+            vec![
+                r.dataset.to_string(),
+                format!("{:.2}x", r.paper_nonbatched_s / r.paper_batched_s),
+                format!("{:.1}ms", r.per_step_nonbatched_s * 1e3),
+                format!("{:.1}ms", r.per_step_batched_s * 1e3),
+                format!("{speedup:.2}x"),
+                format!("{:.0}s", r.per_step_nonbatched_s * r.steps_total as f64),
+                format!("{:.0}s", r.per_step_batched_s * r.steps_total as f64),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_comparison(
+            "Table II — training time, non-batched vs batched dispatch (measured CPU-PJRT)",
+            &[
+                "dataset",
+                "paper speedup",
+                "ours NB/step",
+                "ours B/step",
+                "ours speedup",
+                "extrap NB total",
+                "extrap B total",
+            ],
+            &table,
+        )
+    );
+
+    let j = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("dataset", Json::Str(r.dataset.into())),
+                    ("per_step_nonbatched_s", num(r.per_step_nonbatched_s)),
+                    ("per_step_batched_s", num(r.per_step_batched_s)),
+                    ("paper_speedup", num(r.paper_nonbatched_s / r.paper_batched_s)),
+                    (
+                        "our_speedup",
+                        num(r.per_step_nonbatched_s / r.per_step_batched_s),
+                    ),
+                    ("steps_total_paper_workload", num(r.steps_total as f64)),
+                ])
+            })
+            .collect(),
+    );
+    match save_json("table2_training", &j) {
+        Ok(p) => println!("  -> {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+}

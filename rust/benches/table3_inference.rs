@@ -1,0 +1,156 @@
+//! Table III reproduction: ChemGCN inference time, non-batched vs
+//! batched dispatch, through the *serving coordinator* (dynamic batcher
+//! + device thread) — the system-level realization of the paper's
+//! batch-200 inference setting.
+//!
+//! Paper [sec] for the full dataset: Tox21 2.56 -> 1.97 (1.30x),
+//! Reaction100 22.42 -> 16.32 (1.37x).
+//!
+//! Method: push N molecules through the server in both modes and report
+//! wall time, throughput, mean latency, and batch occupancy; then
+//! extrapolate to the paper's dataset sizes.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use bspmm::bench::report::{render_comparison, save_json};
+use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+use bspmm::util::json::{num, obj, Json};
+
+struct Row {
+    dataset: &'static str,
+    paper_speedup: f64,
+    nb_secs: f64,
+    b_secs: f64,
+    n: usize,
+    paper_size: usize,
+    occupancy: f64,
+}
+
+fn run_mode(
+    kind: DatasetKind,
+    mode: DispatchMode,
+    max_batch: usize,
+    n: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let srv = Server::start(ServerConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        model: kind.model_name().into(),
+        mode,
+        max_batch,
+        max_wait: Duration::from_millis(5),
+        params_path: None,
+    })?;
+    let data = Dataset::generate(kind, n, 0xCAFE);
+    // Warm: one request through (compile + first dispatch).
+    srv.submit(data.samples[0].mol.clone())
+        .recv_timeout(Duration::from_secs(300))
+        .map_err(|_| anyhow::anyhow!("warmup timed out"))?;
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = data
+        .samples
+        .iter()
+        .map(|s| srv.submit(s.mol.clone()))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(600))
+            .map_err(|_| anyhow::anyhow!("response timed out"))?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let m = srv.shutdown()?;
+    Ok((secs, m.mean_occupancy))
+}
+
+fn measure(kind: DatasetKind, n: usize) -> anyhow::Result<Row> {
+    // Paper: inference batch size 200 "to increase the throughput since
+    // the batch size does not affect the accuracy".
+    let (b_secs, occupancy) = run_mode(kind, DispatchMode::Batched, 200, n)?;
+    let (nb_secs, _) = run_mode(kind, DispatchMode::PerSample, 1, n)?;
+    Ok(Row {
+        dataset: match kind {
+            DatasetKind::Tox21 => "Tox21",
+            DatasetKind::Reaction100 => "Reaction100",
+        },
+        paper_speedup: match kind {
+            DatasetKind::Tox21 => 2.56 / 1.97,
+            DatasetKind::Reaction100 => 22.42 / 16.32,
+        },
+        nb_secs,
+        b_secs,
+        n,
+        paper_size: kind.paper_size(),
+        occupancy,
+    })
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut rows = Vec::new();
+    match measure(DatasetKind::Tox21, if quick { 400 } else { 1000 }) {
+        Ok(r) => rows.push(r),
+        Err(e) => eprintln!("tox21 failed: {e:#}"),
+    }
+    if std::env::var("BENCH_SKIP_REACTION").is_err() {
+        match measure(DatasetKind::Reaction100, if quick { 200 } else { 400 }) {
+            Ok(r) => rows.push(r),
+            Err(e) => eprintln!("reaction100 failed: {e:#}"),
+        }
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let speedup = r.nb_secs / r.b_secs;
+            let scale = r.paper_size as f64 / r.n as f64;
+            vec![
+                r.dataset.to_string(),
+                format!("{:.2}x", r.paper_speedup),
+                format!("{:.2}s", r.nb_secs),
+                format!("{:.2}s", r.b_secs),
+                format!("{speedup:.2}x"),
+                format!("{:.0}s", r.nb_secs * scale),
+                format!("{:.0}s", r.b_secs * scale),
+                format!("{:.0}%", r.occupancy * 100.0),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_comparison(
+            "Table III — inference time via serving coordinator (measured CPU-PJRT)",
+            &[
+                "dataset",
+                "paper speedup",
+                "ours NB",
+                "ours B",
+                "ours speedup",
+                "extrap NB full",
+                "extrap B full",
+                "occupancy",
+            ],
+            &table,
+        )
+    );
+
+    let j = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("dataset", Json::Str(r.dataset.into())),
+                    ("n", num(r.n as f64)),
+                    ("nonbatched_secs", num(r.nb_secs)),
+                    ("batched_secs", num(r.b_secs)),
+                    ("paper_speedup", num(r.paper_speedup)),
+                    ("our_speedup", num(r.nb_secs / r.b_secs)),
+                    ("occupancy", num(r.occupancy)),
+                ])
+            })
+            .collect(),
+    );
+    match save_json("table3_inference", &j) {
+        Ok(p) => println!("  -> {}", p.display()),
+        Err(e) => eprintln!("save failed: {e}"),
+    }
+}

@@ -1,0 +1,110 @@
+//! Table IV reproduction (measured half): per-op execution time of the
+//! graph-convolution layer's three kernels at the Tox21 layer geometry
+//! (m=50, F=16 -> 64, minibatch 50), non-batched vs batched, on the
+//! real CPU-PJRT runtime.
+//!
+//! The measured columns report the time to process the whole minibatch
+//! through one op class: non-batched = 50 dispatches, batched = 1.
+//! (The simulated-P100 half lives in `fig11_timeline`.)
+
+use bspmm::bench::report::{render_comparison, save_json};
+use bspmm::bench::workload::SpmmWorkload;
+use bspmm::bench::BenchOpts;
+use bspmm::runtime::{Runtime, Tensor};
+use bspmm::util::json::{num, obj};
+use bspmm::util::rng::Rng;
+use bspmm::util::timer;
+
+fn mean_us(opts: &BenchOpts, mut f: impl FnMut()) -> f64 {
+    let s = timer::bench_adaptive(opts.warmup, opts.min_iters, opts.max_iters, opts.min_time_s, &mut f);
+    s.iter().sum::<f64>() / s.len() as f64 * 1e6
+}
+
+fn run() -> anyhow::Result<()> {
+    let rt = Runtime::new_default()?;
+    let opts = BenchOpts::from_env();
+    let mut rng = Rng::new(0xF1F);
+    let (m, f_in, f_out, batch) = (50usize, 16usize, 64usize, 50usize);
+
+    let randf = |rng: &mut Rng, n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal()).collect() };
+
+    // ---- MatMul ---------------------------------------------------------
+    let x1 = Tensor::f32(&[m, f_in], randf(&mut rng, m * f_in));
+    let w = Tensor::f32(&[f_in, f_out], randf(&mut rng, f_in * f_out));
+    let xb = Tensor::f32(&[m * batch, f_in], randf(&mut rng, m * batch * f_in));
+    let mm1 = rt.executable("op_matmul_single")?;
+    let mm_nb = mean_us(&opts, || {
+        for _ in 0..batch {
+            mm1.execute(&[x1.clone(), w.clone()]).unwrap();
+        }
+    });
+    let mmb = rt.executable("op_matmul_batched")?;
+    let mm_b = mean_us(&opts, || {
+        mmb.execute(&[xb.clone(), w.clone()]).unwrap();
+    });
+
+    // ---- Add ------------------------------------------------------------
+    let u1 = Tensor::f32(&[m, f_out], randf(&mut rng, m * f_out));
+    let bias = Tensor::f32(&[f_out], randf(&mut rng, f_out));
+    let ub = Tensor::f32(&[m * batch, f_out], randf(&mut rng, m * batch * f_out));
+    let add1 = rt.executable("op_add_single")?;
+    let add_nb = mean_us(&opts, || {
+        for _ in 0..batch {
+            add1.execute(&[u1.clone(), bias.clone()]).unwrap();
+        }
+    });
+    let addb = rt.executable("op_add_batched")?;
+    let add_b = mean_us(&opts, || {
+        addb.execute(&[ub.clone(), bias.clone()]).unwrap();
+    });
+
+    // ---- SpMM (reuses the fig8a d50/z2/n64 artifacts) ---------------------
+    let sw = rt.manifest.sweep("fig8a")?;
+    let wld = SpmmWorkload::build(&sw, f_out)?;
+    let st1 = rt.executable(&sw.st_single(f_out))?;
+    let spmm_nb = mean_us(&opts, || {
+        for b in 0..batch {
+            st1.execute(&wld.st_single_inputs(b)).unwrap();
+        }
+    });
+    let stb = rt.executable(&sw.st_batched(f_out))?;
+    let st_inputs = wld.st_batched_inputs();
+    let spmm_b = mean_us(&opts, || {
+        stb.execute(&st_inputs).unwrap();
+    });
+
+    let fmt = |v: f64| format!("{v:.0}");
+    let rows = vec![
+        vec!["MatMul".into(), "1571".into(), fmt(mm_nb), "31".into(), fmt(mm_b), format!("{:.1}x", mm_nb / mm_b)],
+        vec!["Add".into(), "1316".into(), fmt(add_nb), "23".into(), fmt(add_b), format!("{:.1}x", add_nb / add_b)],
+        vec!["SpMM".into(), "1981".into(), fmt(spmm_nb), "190".into(), fmt(spmm_b), format!("{:.1}x", spmm_nb / spmm_b)],
+    ];
+    println!(
+        "{}",
+        render_comparison(
+            "Table IV — per-op time per layer per minibatch [us], measured CPU-PJRT",
+            &["op", "paper NB", "ours NB", "paper B", "ours B", "our speedup"],
+            &rows,
+        )
+    );
+    println!(
+        "dispatches per op class: non-batched {batch}, batched 1 (paper: 150 vs 3 launches per layer)"
+    );
+    let j = obj(vec![
+        ("matmul_nonbatched_us", num(mm_nb)),
+        ("matmul_batched_us", num(mm_b)),
+        ("add_nonbatched_us", num(add_nb)),
+        ("add_batched_us", num(add_b)),
+        ("spmm_nonbatched_us", num(spmm_nb)),
+        ("spmm_batched_us", num(spmm_b)),
+    ]);
+    println!("  -> {}", save_json("table4_measured", &j)?.display());
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("table4 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,282 @@
+//! The five-series SpMM comparison behind Figs. 8, 9 and 10.
+//!
+//! Every sweep point is produced twice:
+//! * **measured** — real executions on the CPU-PJRT runtime, where
+//!   per-execute dispatch overhead plays the role CUDA launch overhead
+//!   plays in the paper (DESIGN.md §2);
+//! * **simulated** — the calibrated P100 cost model (DESIGN.md §5),
+//!   which regenerates the paper's absolute GFLOPS landscape.
+
+use crate::bench::report::{FigureResult, Series};
+use crate::bench::workload::SpmmWorkload;
+use crate::bench::BenchOpts;
+use crate::runtime::artifact::SweepSpec;
+use crate::runtime::Runtime;
+use crate::simulator::cost::CostModel;
+use crate::util::timer;
+
+/// Approach names, in the paper's legend order.
+pub const APPROACHES: [&str; 5] = [
+    "TF(non-batched)",
+    "cuSPARSE(non-batched)",
+    "BatchedSpMM(ST)",
+    "BatchedSpMM(CSR)",
+    "BatchedGEMM",
+];
+
+pub struct FigureRunner<'a> {
+    pub rt: &'a Runtime,
+    pub cm: CostModel,
+    pub opts: BenchOpts,
+    /// Skip the (slow) measured non-batched series when false.
+    pub with_non_batched: bool,
+    /// Skip the GEMM series (Fig. 10 excludes cuBLAS: "the kernel only
+    /// processes GEMM operations with same matrix sizes").
+    pub with_gemm: bool,
+}
+
+impl<'a> FigureRunner<'a> {
+    pub fn new(rt: &'a Runtime) -> Self {
+        Self {
+            rt,
+            cm: CostModel::default(),
+            opts: BenchOpts::from_env(),
+            with_non_batched: true,
+            with_gemm: true,
+        }
+    }
+
+    fn mean_secs(&self, mut f: impl FnMut()) -> f64 {
+        // Budget guard: if a single execution already blows the
+        // per-point budget (heavy scatter points on the old XLA CPU
+        // runtime), that one timed run IS the measurement.
+        let budget = std::env::var("BENCH_POINT_BUDGET_S")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(8.0);
+        let (first, _) = timer::time_once(&mut f);
+        if first > budget {
+            return first;
+        }
+        let samples = timer::bench_adaptive(
+            self.opts.warmup.saturating_sub(1),
+            self.opts.min_iters,
+            self.opts.max_iters,
+            self.opts.min_time_s,
+            &mut f,
+        );
+        samples.iter().sum::<f64>() / samples.len() as f64
+    }
+
+    /// Measured series for one sweep; returns a FigureResult keyed
+    /// `<key>_measured`.
+    pub fn run_measured(&self, sw: &SweepSpec) -> anyhow::Result<FigureResult> {
+        let mut series: Vec<Series> = APPROACHES
+            .iter()
+            .map(|n| Series {
+                name: n.to_string(),
+                values: Vec::new(),
+            })
+            .collect();
+        for &nb in &sw.nbs {
+            let w = SpmmWorkload::build(sw, nb)?;
+
+            // Non-batched: one PJRT execute per matrix (launch-overhead
+            // bound, exactly the paper's baseline structure).
+            if self.with_non_batched {
+                let st1 = self.rt.executable(&sw.st_single(nb))?;
+                let t = self.mean_secs(|| {
+                    for b in 0..w.batch {
+                        st1.execute(&w.st_single_inputs(b)).expect("st single");
+                    }
+                });
+                series[0].values.push(w.gflops(t));
+                let csr1 = self.rt.executable(&sw.csr_single(nb))?;
+                let t = self.mean_secs(|| {
+                    for b in 0..w.batch {
+                        csr1.execute(&w.csr_single_inputs(b)).expect("csr single");
+                    }
+                });
+                series[1].values.push(w.gflops(t));
+            } else {
+                series[0].values.push(f64::NAN);
+                series[1].values.push(f64::NAN);
+            }
+
+            // Batched: single execute for the whole batch.
+            let st = self.rt.executable(&sw.st_batched(nb))?;
+            let inputs = w.st_batched_inputs();
+            let t = self.mean_secs(|| {
+                st.execute(&inputs).expect("st batched");
+            });
+            series[2].values.push(w.gflops(t));
+
+            let csr = self.rt.executable(&sw.csr_batched(nb))?;
+            let inputs = w.csr_batched_inputs();
+            let t = self.mean_secs(|| {
+                csr.execute(&inputs).expect("csr batched");
+            });
+            series[3].values.push(w.gflops(t));
+
+            if self.with_gemm {
+                let gemm = self.rt.executable(&sw.gemm_batched(nb))?;
+                let inputs = w.gemm_inputs();
+                let t = self.mean_secs(|| {
+                    gemm.execute(&inputs).expect("gemm batched");
+                });
+                series[4].values.push(w.gflops(t));
+            } else {
+                series[4].values.push(f64::NAN);
+            }
+        }
+        Ok(FigureResult {
+            key: format!("{}_measured", sw.key),
+            title: format!(
+                "SpMM throughput, measured CPU-PJRT (dim={}, nnz/row={}, batch={}{})",
+                sw.dim,
+                sw.z,
+                sw.batch,
+                if sw.mixed { ", mixed" } else { "" }
+            ),
+            x_label: "n_B".into(),
+            xs: sw.nbs.iter().map(|&n| n as f64).collect(),
+            y_label: "GFLOPS (2*nnz*n_B/t)".into(),
+            series,
+        })
+    }
+
+    /// Simulated-P100 series for the same sweep (`<key>_sim_p100`).
+    pub fn run_simulated(&self, sw: &SweepSpec) -> anyhow::Result<FigureResult> {
+        let cm = &self.cm;
+        let mut series: Vec<Series> = APPROACHES
+            .iter()
+            .map(|n| Series {
+                name: n.to_string(),
+                values: Vec::new(),
+            })
+            .collect();
+        for &nb in &sw.nbs {
+            let w = SpmmWorkload::build(sw, nb)?;
+            let gf = |total_us: f64| {
+                2.0 * w.real_nnz as f64 * nb as f64 / (total_us * 1e3)
+            };
+            // Non-batched: per-matrix ops at each matrix's true size
+            // (for mixed batches the per-matrix dims differ).
+            let tf_us: f64 = w
+                .mats
+                .iter()
+                .map(|m| {
+                    cm.tf_spmm_op(m.rows, (m.nnz() / m.rows.max(1)).max(1), nb)
+                        .total_us()
+                })
+                .sum();
+            series[0].values.push(gf(tf_us));
+            let cu_us: f64 = w
+                .mats
+                .iter()
+                .map(|m| {
+                    cm.cusparse_op(m.rows, (m.nnz() / m.rows.max(1)).max(1), nb)
+                        .total_us()
+                })
+                .sum();
+            series[1].values.push(gf(cu_us));
+            // Batched: the padded bucket geometry (what the kernel sees).
+            series[2]
+                .values
+                .push(gf(cm.batched_spmm_st(w.batch, w.dim, w.z, nb).total_us()));
+            series[3]
+                .values
+                .push(gf(cm.batched_spmm_csr(w.batch, w.dim, w.z, nb).total_us()));
+            if self.with_gemm {
+                series[4]
+                    .values
+                    .push(gf(cm.batched_gemm(w.batch, w.dim, nb).total_us()));
+            } else {
+                series[4].values.push(f64::NAN);
+            }
+        }
+        Ok(FigureResult {
+            key: format!("{}_sim_p100", sw.key),
+            title: format!(
+                "SpMM throughput, simulated P100 (dim={}, nnz/row={}, batch={}{})",
+                sw.dim,
+                sw.z,
+                sw.batch,
+                if sw.mixed { ", mixed" } else { "" }
+            ),
+            x_label: "n_B".into(),
+            xs: sw.nbs.iter().map(|&n| n as f64).collect(),
+            y_label: "GFLOPS (2*nnz*n_B/t)".into(),
+            series,
+        })
+    }
+}
+
+/// Shared driver for the fig8/fig9/fig10 bench binaries: run measured
+/// + simulated sweeps for each key, print, and save JSON results.
+pub fn run_figure_bench(keys: &[&str], with_gemm: bool) -> anyhow::Result<()> {
+    let rt = Runtime::new_default()?;
+    let mut runner = FigureRunner::new(&rt);
+    runner.with_gemm = with_gemm;
+    for key in keys {
+        let sw = rt.manifest.sweep(key)?;
+        let measured = runner.run_measured(&sw)?;
+        println!("{}", measured.render());
+        let path = measured.save()?;
+        println!("  -> {}\n", path.display());
+        let sim = runner.run_simulated(&sw)?;
+        println!("{}", sim.render());
+        let path = sim.save()?;
+        println!("  -> {}\n", path.display());
+        // Headline ratio: best batched vs best non-batched, measured.
+        let best_batched = |f: &FigureResult| -> f64 {
+            f.series[2..]
+                .iter()
+                .flat_map(|s| s.values.iter())
+                .cloned()
+                .filter(|v| v.is_finite())
+                .fold(f64::MIN, f64::max)
+        };
+        let best_nonbatched = |f: &FigureResult| -> f64 {
+            f.series[..2]
+                .iter()
+                .flat_map(|s| s.values.iter())
+                .cloned()
+                .filter(|v| v.is_finite())
+                .fold(f64::MIN, f64::max)
+        };
+        let (bb, bn) = (best_batched(&measured), best_nonbatched(&measured));
+        if bb > 0.0 && bn > 0.0 {
+            println!(
+                "  {key}: measured peak batched/non-batched speedup = {:.2}x\n",
+                bb / bn
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::SweepSpec;
+
+    #[test]
+    fn simulated_sweep_runs_without_runtime_artifacts() {
+        // run_simulated only needs workloads + the cost model; build a
+        // fake runner around a sweep to exercise it would need a
+        // Runtime, so we test the underlying pieces directly.
+        let sw = SweepSpec {
+            key: "x".into(),
+            dim: 32,
+            z: 2,
+            batch: 10,
+            nbs: vec![16, 32],
+            mixed: false,
+        };
+        let w = SpmmWorkload::build(&sw, 16).unwrap();
+        let cm = CostModel::default();
+        let t = cm.batched_spmm_st(w.batch, w.dim, w.z, 16).total_us();
+        assert!(t > 0.0);
+    }
+}

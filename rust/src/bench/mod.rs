@@ -1,0 +1,46 @@
+//! Bench harness (S8 in DESIGN.md): everything the figure/table
+//! reproductions share.
+//!
+//! Each `rust/benches/*.rs` binary (all `harness = false`: criterion is
+//! not in the vendored crate set, so [`crate::util::timer`] provides the
+//! warmup/iterate/summarize driver) builds on:
+//!
+//! * [`workload`] — deterministic packed inputs for a sweep point,
+//! * [`figures`] — the five-series SpMM comparison (measured CPU-PJRT
+//!   *and* simulated P100) for Figs. 8/9/10,
+//! * [`report`] — human-readable tables + JSON result dumps under
+//!   `target/bench_results/` (EXPERIMENTS.md is assembled from these).
+
+pub mod figures;
+pub mod report;
+pub mod workload;
+
+/// Iteration counts: quick mode for CI-ish runs (`BENCH_QUICK=1`),
+/// fuller sampling otherwise.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time_s: f64,
+}
+
+impl BenchOpts {
+    pub fn from_env() -> Self {
+        if std::env::var("BENCH_QUICK").is_ok() {
+            BenchOpts {
+                warmup: 1,
+                min_iters: 2,
+                max_iters: 3,
+                min_time_s: 0.0,
+            }
+        } else {
+            BenchOpts {
+                warmup: 1,
+                min_iters: 3,
+                max_iters: 8,
+                min_time_s: 0.3,
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Bench output: aligned console tables + JSON dumps under
+//! `target/bench_results/` (EXPERIMENTS.md cites these files).
+
+use std::path::PathBuf;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One approach's y-values over a shared x-axis.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub values: Vec<f64>,
+}
+
+/// A figure-style result: x-axis + several series, with units.
+#[derive(Clone, Debug)]
+pub struct FigureResult {
+    pub key: String,
+    pub title: String,
+    pub x_label: String,
+    pub xs: Vec<f64>,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl FigureResult {
+    /// Render an aligned console table (x down, series across).
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.key, self.title);
+        out.push_str(&format!("{:>10}", self.x_label));
+        for sr in &self.series {
+            out.push_str(&format!(" {:>16}", sr.name));
+        }
+        out.push_str(&format!("   [{}]\n", self.y_label));
+        for (i, x) in self.xs.iter().enumerate() {
+            out.push_str(&format!("{x:>10}"));
+            for sr in &self.series {
+                match sr.values.get(i) {
+                    Some(v) => out.push_str(&format!(" {v:>16.3}")),
+                    None => out.push_str(&format!(" {:>16}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("key", s(&self.key)),
+            ("title", s(&self.title)),
+            ("x_label", s(&self.x_label)),
+            ("y_label", s(&self.y_label)),
+            ("xs", arr(self.xs.iter().map(|&x| num(x)).collect())),
+            (
+                "series",
+                arr(self
+                    .series
+                    .iter()
+                    .map(|sr| {
+                        obj(vec![
+                            ("name", s(&sr.name)),
+                            ("values", arr(sr.values.iter().map(|&v| num(v)).collect())),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    /// Write `target/bench_results/<key>.json`; returns the path.
+    pub fn save(&self) -> anyhow::Result<PathBuf> {
+        save_json(&self.key, &self.to_json())
+    }
+}
+
+/// Write any bench result blob to `target/bench_results/<key>.json`.
+pub fn save_json(key: &str, j: &Json) -> anyhow::Result<PathBuf> {
+    let dir = PathBuf::from("target/bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{key}.json"));
+    std::fs::write(&path, j.to_string())?;
+    Ok(path)
+}
+
+/// Simple two-column "paper vs ours" comparison row set (tables II-IV).
+pub fn render_comparison(
+    title: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    for (i, h) in header.iter().enumerate() {
+        out.push_str(&format!("{:>w$}  ", h, w = widths[i]));
+    }
+    out.push('\n');
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", cell, w = widths[i]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_renders_and_roundtrips() {
+        let f = FigureResult {
+            key: "figtest".into(),
+            title: "t".into(),
+            x_label: "n_B".into(),
+            xs: vec![8.0, 16.0],
+            y_label: "GFLOPS".into(),
+            series: vec![Series {
+                name: "A".into(),
+                values: vec![1.0, 2.0],
+            }],
+        };
+        let r = f.render();
+        assert!(r.contains("figtest") && r.contains("GFLOPS") && r.contains("2.000"));
+        let j = f.to_json();
+        assert_eq!(j.at(&["series"]).as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn comparison_aligns() {
+        let out = render_comparison(
+            "Table II",
+            &["dataset", "paper", "ours"],
+            &[vec!["Tox21".into(), "1.18x".into(), "1.3x".into()]],
+        );
+        assert!(out.contains("Tox21"));
+        assert!(out.lines().count() == 3);
+    }
+}

@@ -1,0 +1,185 @@
+//! Deterministic benchmark workloads: one packed input set per sweep
+//! point, identical across all five approaches (the §V-A methodology:
+//! same matrices, different algorithms).
+
+use crate::runtime::artifact::SweepSpec;
+use crate::runtime::Tensor;
+use crate::sparse::batch::{
+    densify_batch, random_dense_batch, PaddedCsrBatch, PaddedStBatch,
+};
+use crate::sparse::coo::Coo;
+use crate::sparse::random::{random_batch, random_mixed_batch, RandomSpec};
+use crate::util::rng::Rng;
+
+/// All tensor sets one sweep point needs, for every approach.
+pub struct SpmmWorkload {
+    pub dim: usize,
+    pub z: usize,
+    pub batch: usize,
+    pub nb: usize,
+    pub nnz_cap: usize,
+    /// Total *real* non-zeros across the batch (the FLOP numerator; for
+    /// mixed batches this is less than batch * nnz_cap).
+    pub real_nnz: usize,
+    pub mats: Vec<Coo>,
+    pub st: PaddedStBatch,
+    pub csr: PaddedCsrBatch,
+    pub dense: Vec<f32>,
+    pub a_dense: Vec<f32>,
+}
+
+impl SpmmWorkload {
+    /// Build the workload for one (sweep, n_b) point. Seeds derive from
+    /// the sweep key so every approach sees identical matrices and
+    /// repeated runs are reproducible.
+    pub fn build(sw: &SweepSpec, nb: usize) -> anyhow::Result<SpmmWorkload> {
+        let seed = 0x5EED ^ (sw.dim as u64) << 32 ^ (sw.z as u64) << 16 ^ nb as u64;
+        let mut rng = Rng::new(seed);
+        let mats = if sw.mixed {
+            // Fig. 10: dims in [32, 256], nnz/row in [1, 5].
+            random_mixed_batch(&mut rng, (32, sw.dim), (1, sw.z), sw.batch)
+        } else {
+            random_batch(&mut rng, &RandomSpec::new(sw.dim, sw.z), sw.batch)
+        };
+        let nnz_cap = sw.nnz_cap();
+        let real_nnz = mats.iter().map(Coo::nnz).sum();
+        let st = PaddedStBatch::pack(&mats, sw.dim, nnz_cap)?;
+        let csr = PaddedCsrBatch::pack(&mats, sw.dim, nnz_cap)?;
+        let dense = random_dense_batch(&mut rng, sw.batch, sw.dim, nb);
+        let a_dense = densify_batch(&mats, sw.dim);
+        Ok(SpmmWorkload {
+            dim: sw.dim,
+            z: sw.z,
+            batch: sw.batch,
+            nb,
+            nnz_cap,
+            real_nnz,
+            mats,
+            st,
+            csr,
+            dense,
+            a_dense,
+        })
+    }
+
+    /// Inputs for the batched ST artifact.
+    pub fn st_batched_inputs(&self) -> Vec<Tensor> {
+        vec![
+            Tensor::i32(&[self.batch, self.nnz_cap, 2], self.st.ids.clone()),
+            Tensor::f32(&[self.batch, self.nnz_cap], self.st.vals.clone()),
+            Tensor::f32(&[self.batch, self.dim, self.nb], self.dense.clone()),
+        ]
+    }
+
+    /// Inputs for the batched CSR artifact.
+    pub fn csr_batched_inputs(&self) -> Vec<Tensor> {
+        vec![
+            Tensor::i32(&[self.batch, self.dim + 1], self.csr.rpt.clone()),
+            Tensor::i32(&[self.batch, self.nnz_cap], self.csr.col_ids.clone()),
+            Tensor::f32(&[self.batch, self.nnz_cap], self.csr.vals.clone()),
+            Tensor::f32(&[self.batch, self.dim, self.nb], self.dense.clone()),
+        ]
+    }
+
+    /// Inputs for the batched GEMM artifact.
+    pub fn gemm_inputs(&self) -> Vec<Tensor> {
+        vec![
+            Tensor::f32(&[self.batch, self.dim, self.dim], self.a_dense.clone()),
+            Tensor::f32(&[self.batch, self.dim, self.nb], self.dense.clone()),
+        ]
+    }
+
+    /// Per-matrix inputs for the non-batched (single) ST artifact.
+    pub fn st_single_inputs(&self, b: usize) -> Vec<Tensor> {
+        let one = self.st.single(b);
+        vec![
+            Tensor::i32(&[1, self.nnz_cap, 2], one.ids),
+            Tensor::f32(&[1, self.nnz_cap], one.vals),
+            Tensor::f32(
+                &[1, self.dim, self.nb],
+                self.dense[b * self.dim * self.nb..(b + 1) * self.dim * self.nb].to_vec(),
+            ),
+        ]
+    }
+
+    /// Per-matrix inputs for the non-batched (single) CSR artifact.
+    pub fn csr_single_inputs(&self, b: usize) -> Vec<Tensor> {
+        let one = self.csr.single(b);
+        vec![
+            Tensor::i32(&[1, self.dim + 1], one.rpt),
+            Tensor::i32(&[1, self.nnz_cap], one.col_ids),
+            Tensor::f32(&[1, self.nnz_cap], one.vals),
+            Tensor::f32(
+                &[1, self.dim, self.nb],
+                self.dense[b * self.dim * self.nb..(b + 1) * self.dim * self.nb].to_vec(),
+            ),
+        ]
+    }
+
+    /// Paper GFLOPS metric: `2 * real_nnz * n_B / t`.
+    pub fn gflops(&self, seconds: f64) -> f64 {
+        2.0 * self.real_nnz as f64 * self.nb as f64 / seconds / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::SweepSpec;
+
+    fn sweep() -> SweepSpec {
+        SweepSpec {
+            key: "t".into(),
+            dim: 16,
+            z: 2,
+            batch: 4,
+            nbs: vec![8],
+            mixed: false,
+        }
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let a = SpmmWorkload::build(&sweep(), 8).unwrap();
+        let b = SpmmWorkload::build(&sweep(), 8).unwrap();
+        assert_eq!(a.st.vals, b.st.vals);
+        assert_eq!(a.dense, b.dense);
+        assert_eq!(a.real_nnz, 4 * 32);
+    }
+
+    #[test]
+    fn st_and_csr_encode_same_matrices() {
+        let w = SpmmWorkload::build(&sweep(), 8).unwrap();
+        for (i, m) in w.mats.iter().enumerate() {
+            let d = m.to_dense();
+            // spot check densified batch agrees
+            for r in 0..w.dim {
+                for c in 0..w.dim {
+                    assert_eq!(w.a_dense[i * w.dim * w.dim + r * w.dim + c], d.at(r, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_workload_has_padding() {
+        let sw = SweepSpec {
+            key: "mix".into(),
+            dim: 64,
+            z: 3,
+            batch: 10,
+            nbs: vec![16],
+            mixed: true,
+        };
+        let w = SpmmWorkload::build(&sw, 16).unwrap();
+        assert!(w.real_nnz < w.batch * w.nnz_cap);
+        assert!(w.mats.iter().all(|m| m.rows <= 64));
+    }
+
+    #[test]
+    fn gflops_uses_real_nnz() {
+        let w = SpmmWorkload::build(&sweep(), 8).unwrap();
+        let g = w.gflops(1e-3);
+        assert!((g - 2.0 * 128.0 * 8.0 / 1e-3 / 1e9).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,265 @@
+//! Dynamic batch assembly: the size-or-deadline policy every batched
+//! serving system uses (and the lever the paper pulls: batch 200 at
+//! inference "to increase the throughput since the batch size does not
+//! affect the accuracy", §V-B).
+//!
+//! `BatchAssembler` is a pure data structure (no threads, no clocks of
+//! its own) so its invariants are property-testable:
+//!   * no request is lost or duplicated,
+//!   * FIFO order within and across batches,
+//!   * batches never exceed `max_batch`,
+//!   * a non-empty queue is flushed no later than `max_wait` after its
+//!     oldest entry arrived.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued (the artifact's
+    /// batch capacity).
+    pub max_batch: usize,
+    /// Flush a non-empty queue once its oldest request has waited this
+    /// long.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self {
+            max_batch,
+            max_wait,
+        }
+    }
+}
+
+/// Queue entry: the item plus its arrival time.
+struct Entry<T> {
+    item: T,
+    arrived: Instant,
+}
+
+pub struct BatchAssembler<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Entry<T>>,
+    /// Counters for occupancy reporting.
+    pub batches_emitted: u64,
+    pub items_emitted: u64,
+    pub full_batches: u64,
+}
+
+impl<T> BatchAssembler<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            queue: VecDeque::new(),
+            batches_emitted: 0,
+            items_emitted: 0,
+            full_batches: 0,
+        }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back(Entry { item, arrived: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Time until the deadline flush would fire (None if queue empty).
+    /// The server uses this as its `recv_timeout`.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|e| {
+            let elapsed = now.saturating_duration_since(e.arrived);
+            self.policy.max_wait.saturating_sub(elapsed)
+        })
+    }
+
+    /// Emit a batch if the policy says so.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.policy.max_batch;
+        let expired = self
+            .queue
+            .front()
+            .map(|e| now.saturating_duration_since(e.arrived) >= self.policy.max_wait)
+            .unwrap_or(false);
+        if !(full || expired) {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<T> = self.queue.drain(..n).map(|e| e.item).collect();
+        self.batches_emitted += 1;
+        self.items_emitted += batch.len() as u64;
+        if batch.len() == self.policy.max_batch {
+            self.full_batches += 1;
+        }
+        Some(batch)
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        let batch: Vec<T> = self.queue.drain(..).map(|e| e.item).collect();
+        if !batch.is_empty() {
+            self.batches_emitted += 1;
+            self.items_emitted += batch.len() as u64;
+        }
+        batch
+    }
+
+    /// Mean emitted batch occupancy (fraction of max_batch).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches_emitted == 0 {
+            0.0
+        } else {
+            self.items_emitted as f64
+                / (self.batches_emitted as f64 * self.policy.max_batch as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::prop_assert;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = BatchAssembler::new(BatchPolicy::new(3, Duration::from_secs(60)));
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now);
+        assert!(b.poll(now).is_none());
+        b.push(3, now);
+        assert_eq!(b.poll(now), Some(vec![1, 2, 3]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = BatchAssembler::new(BatchPolicy::new(100, Duration::from_millis(5)));
+        let now = t0();
+        b.push(7, now);
+        assert!(b.poll(now).is_none());
+        let later = now + Duration::from_millis(6);
+        assert_eq!(b.poll(later), Some(vec![7]));
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b = BatchAssembler::new(BatchPolicy::new(100, Duration::from_millis(10)));
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now + Duration::from_millis(9));
+        // oldest is 10ms old -> flush both
+        let batch = b.poll(now + Duration::from_millis(10)).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+
+    #[test]
+    fn oversize_queue_emits_capped_batches() {
+        let mut b = BatchAssembler::new(BatchPolicy::new(4, Duration::from_millis(0)));
+        let now = t0();
+        for i in 0..10 {
+            b.push(i, now);
+        }
+        assert_eq!(b.poll(now).unwrap().len(), 4);
+        assert_eq!(b.poll(now).unwrap().len(), 4);
+        assert_eq!(b.poll(now).unwrap().len(), 2);
+        assert!(b.poll(now).is_none());
+    }
+
+    #[test]
+    fn prop_no_loss_no_dup_fifo() {
+        prop::run(200, |rng| {
+            let max_batch = rng.range(1, 16);
+            let wait_ms = rng.range(0, 20) as u64;
+            let mut b = BatchAssembler::new(BatchPolicy::new(
+                max_batch,
+                Duration::from_millis(wait_ms),
+            ));
+            let start = t0();
+            let n = rng.range(0, 100);
+            let mut out = Vec::new();
+            let mut clock = start;
+            let mut next_id = 0u64;
+            while next_id < n as u64 || !b.is_empty() {
+                // random interleaving of arrivals, time passage and polls
+                match rng.below(3) {
+                    0 if next_id < n as u64 => {
+                        b.push(next_id, clock);
+                        next_id += 1;
+                    }
+                    1 => clock += Duration::from_millis(rng.range(0, 30) as u64),
+                    _ => {
+                        if let Some(batch) = b.poll(clock) {
+                            prop_assert!(
+                                batch.len() <= max_batch,
+                                "batch {} > max {max_batch}",
+                                batch.len()
+                            );
+                            out.extend(batch);
+                        }
+                    }
+                }
+                // liveness: if stuck with everything pushed, advance time
+                if next_id >= n as u64 {
+                    clock += Duration::from_millis(wait_ms + 1);
+                    if let Some(batch) = b.poll(clock) {
+                        out.extend(batch);
+                    }
+                }
+            }
+            prop_assert!(out.len() == n, "lost items: {} != {n}", out.len());
+            for (i, &v) in out.iter().enumerate() {
+                prop_assert!(v == i as u64, "order violated at {i}: {v}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_deadline_bound() {
+        // A poll at (arrival of oldest + max_wait) always emits.
+        prop::run(100, |rng| {
+            let max_batch = rng.range(2, 32);
+            let wait = Duration::from_millis(rng.range(1, 50) as u64);
+            let mut b = BatchAssembler::new(BatchPolicy::new(max_batch, wait));
+            let now = t0();
+            let k = rng.range(1, max_batch - 1); // strictly below size trigger
+            for i in 0..k {
+                b.push(i, now);
+            }
+            prop_assert!(b.poll(now + wait).is_some(), "deadline flush missed");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let mut b = BatchAssembler::new(BatchPolicy::new(4, Duration::from_millis(0)));
+        let now = t0();
+        for i in 0..6 {
+            b.push(i, now);
+        }
+        b.poll(now);
+        b.poll(now);
+        assert_eq!(b.batches_emitted, 2);
+        assert_eq!(b.items_emitted, 6);
+        assert_eq!(b.full_batches, 1);
+        assert!((b.mean_occupancy() - 0.75).abs() < 1e-12);
+    }
+}

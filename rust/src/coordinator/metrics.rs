@@ -1,0 +1,140 @@
+//! Serving/training metrics: latency histograms, throughput, batch
+//! occupancy, and per-op dispatch accounting (the data behind our
+//! Table III/IV reproductions).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latency: LatencyHistogram,
+    queue_wait: LatencyHistogram,
+    requests: u64,
+    batches: u64,
+    batch_slots: u64,
+    batch_capacity: u64,
+    device_busy_us: u64,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// Thread-safe metrics sink shared between client and server threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_latency_us: f64,
+    pub p95_latency_us: u64,
+    pub max_latency_us: u64,
+    pub mean_queue_wait_us: f64,
+    pub mean_batch_size: f64,
+    pub mean_occupancy: f64,
+    pub device_busy_us: u64,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_start(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        g.started.get_or_insert(now);
+        g.finished = None;
+    }
+
+    pub fn mark_finish(&self) {
+        self.inner.lock().unwrap().finished = Some(Instant::now());
+    }
+
+    pub fn record_request(&self, latency_us: u64, queue_wait_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latency.record_us(latency_us);
+        g.queue_wait.record_us(queue_wait_us);
+        g.requests += 1;
+    }
+
+    pub fn record_batch(&self, size: usize, capacity: usize, device_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_slots += size as u64;
+        g.batch_capacity += capacity as u64;
+        g.device_busy_us += device_us;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let wall = match (g.started, g.finished) {
+            (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
+            (Some(s), None) => s.elapsed().as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            mean_latency_us: g.latency.mean_us(),
+            p95_latency_us: g.latency.quantile_us(0.95),
+            max_latency_us: g.latency.max_us(),
+            mean_queue_wait_us: g.queue_wait.mean_us(),
+            mean_batch_size: if g.batches == 0 {
+                0.0
+            } else {
+                g.batch_slots as f64 / g.batches as f64
+            },
+            mean_occupancy: if g.batch_capacity == 0 {
+                0.0
+            } else {
+                g.batch_slots as f64 / g.batch_capacity as f64
+            },
+            device_busy_us: g.device_busy_us,
+            wall_secs: wall,
+            throughput_rps: if wall > 0.0 {
+                g.requests as f64 / wall
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.mark_start();
+        m.record_request(1000, 200);
+        m.record_request(3000, 600);
+        m.record_batch(2, 4, 1500);
+        m.mark_finish();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_latency_us - 2000.0).abs() < 1.0);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
+        assert!((s.mean_occupancy - 0.5).abs() < 1e-12);
+        assert!(s.throughput_rps > 0.0);
+        assert_eq!(s.device_busy_us, 1500);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.throughput_rps, 0.0);
+    }
+}

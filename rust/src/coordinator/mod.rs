@@ -1,0 +1,22 @@
+//! The coordinator (S6 in DESIGN.md): the system-level realization of
+//! the paper's batching contribution.
+//!
+//! * [`request`] — inference request/response types.
+//! * [`batcher`] — the dynamic batch assembler (size + deadline policy);
+//!   pure data structure, property-tested.
+//! * [`server`] — the serving runtime: a device thread owning the PJRT
+//!   `Runtime`, assembling batches and dispatching either one batched
+//!   execute (Fig. 7) or per-sample executes (Fig. 6).
+//! * [`trainer`] — the training loop in both dispatch modes (Table II).
+//! * [`metrics`] — latency/throughput/occupancy accounting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod trainer;
+
+pub use batcher::{BatchAssembler, BatchPolicy};
+pub use request::{InferRequest, InferResponse};
+pub use server::{DispatchMode, Server, ServerConfig};
+pub use trainer::{TrainMode, Trainer};

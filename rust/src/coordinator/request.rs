@@ -1,0 +1,32 @@
+//! Inference request/response types.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::graph::molecule::Molecule;
+
+/// A unique, monotonically-assigned request id.
+pub type RequestId = u64;
+
+/// One inference request: a molecule to classify.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: RequestId,
+    pub mol: Molecule,
+    pub submitted: Instant,
+    /// Where the server sends the answer.
+    pub reply: mpsc::Sender<InferResponse>,
+}
+
+/// The server's answer.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: RequestId,
+    /// Model logits for this molecule.
+    pub logits: Vec<f32>,
+    /// End-to-end latency (enqueue -> response ready).
+    pub latency_us: u64,
+    /// Size of the device batch this request rode in (1 in non-batched
+    /// mode) — the occupancy signal for the Table III analysis.
+    pub batch_size: usize,
+}

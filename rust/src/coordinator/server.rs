@@ -1,0 +1,270 @@
+//! The serving runtime: a dedicated device thread that owns the PJRT
+//! `Runtime`, assembles dynamic batches, and dispatches inference.
+//!
+//! Two dispatch modes realize the paper's comparison at system level:
+//! * [`DispatchMode::Batched`] — requests ride a padded batch through
+//!   the batched fwd artifact: one device dispatch per *batch* (Fig. 7).
+//! * [`DispatchMode::PerSample`] — each request is its own dispatch on
+//!   the batch-1 artifact (Fig. 6 / TF-session style).
+//!
+//! The device thread structure (everything PJRT-facing on one thread,
+//! clients talking over channels) is forced by the `xla` crate's
+//! `Rc`-based client, and is also how real GPU serving stacks arrange
+//! their dispatch thread.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatchAssembler, BatchPolicy};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::trainer::{batch_tensors, param_tensors};
+use crate::gcn::params::ParamSet;
+use crate::graph::dataset::pack_molecules;
+use crate::graph::molecule::Molecule;
+use crate::runtime::Runtime;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// One device dispatch per assembled batch (padded to capacity).
+    Batched,
+    /// One device dispatch per request (the non-batched baseline).
+    PerSample,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub mode: DispatchMode,
+    /// Batch capacity; must be one of the model's AOT'd fwd batch sizes
+    /// (infer_batch / train_batch / 1). Ignored (forced 1) in PerSample.
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Optional trained parameter blob (defaults to the init params).
+    pub params_path: Option<PathBuf>,
+}
+
+enum Msg {
+    Infer(InferRequest),
+    Shutdown,
+}
+
+/// Handle owned by clients; the device thread runs until `shutdown`.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<anyhow::Result<()>>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn start(cfg: ServerConfig) -> anyhow::Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        // Startup errors (bad artifacts dir, unknown model) must surface
+        // to the caller, so the device thread reports readiness first.
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("device".into())
+            .spawn(move || device_thread(cfg, rx, m2, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("device thread died during startup"))??;
+        Ok(Server {
+            tx,
+            handle: Some(handle),
+            metrics,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit one molecule; returns the channel the response arrives on.
+    pub fn submit(&self, mol: Molecule) -> mpsc::Receiver<InferResponse> {
+        let (reply, rx) = mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            mol,
+            submitted: Instant::now(),
+            reply,
+        };
+        // A send failure means the device thread is gone; the caller
+        // notices via the closed response channel.
+        let _ = self.tx.send(Msg::Infer(req));
+        rx
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain + stop the device thread, returning final metrics.
+    pub fn shutdown(mut self) -> anyhow::Result<MetricsSnapshot> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("device thread panicked"))??;
+        }
+        Ok(self.metrics.snapshot())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn device_thread(
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) -> anyhow::Result<()> {
+    // ---- startup: runtime + params + artifact selection ----------------
+    let init = (|| -> anyhow::Result<(Runtime, ParamSet, String, usize)> {
+        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        let model = rt.manifest.model(&cfg.model)?.clone();
+        let params = match &cfg.params_path {
+            Some(p) => load_params_blob(&model, p)?,
+            None => ParamSet::load_init(&model, &rt.manifest.dir)?,
+        };
+        let capacity = match cfg.mode {
+            DispatchMode::PerSample => 1,
+            DispatchMode::Batched => cfg.max_batch,
+        };
+        let artifact = if capacity == model.infer_batch {
+            model.artifact_fwd_infer.clone()
+        } else if capacity == model.train_batch {
+            model.artifact_fwd_train.clone()
+        } else if capacity == 1 {
+            model.artifact_fwd_sample.clone()
+        } else {
+            anyhow::bail!(
+                "no fwd artifact for batch {capacity} (model has {}, {}, 1)",
+                model.infer_batch,
+                model.train_batch
+            )
+        };
+        // Pre-compile so steady-state latencies exclude compilation.
+        rt.executable(&artifact)?;
+        Ok((rt, params, artifact, capacity))
+    })();
+    let (rt, params, artifact, capacity) = match init {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(());
+        }
+    };
+    let model = rt.manifest.model(&cfg.model)?.clone();
+    let ptensors = param_tensors(&model, &params);
+    let policy = BatchPolicy::new(capacity, cfg.max_wait);
+    let mut assembler: BatchAssembler<InferRequest> = BatchAssembler::new(policy);
+    metrics.mark_start();
+
+    // ---- serve loop ------------------------------------------------------
+    let mut running = true;
+    while running {
+        let timeout = assembler
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(100));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Infer(req)) => assembler.push(req, Instant::now()),
+            Ok(Msg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                running = false;
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        loop {
+            let batch = if running {
+                assembler.poll(Instant::now())
+            } else {
+                let rest = assembler.drain_all();
+                if rest.is_empty() {
+                    None
+                } else {
+                    Some(rest)
+                }
+            };
+            let Some(batch) = batch else { break };
+            // PerSample capacity is 1, so each "batch" is one request.
+            for chunk in batch.chunks(capacity) {
+                serve_chunk(&rt, &model, &ptensors, &artifact, capacity, chunk, &metrics)?;
+            }
+        }
+    }
+    metrics.mark_finish();
+    Ok(())
+}
+
+fn serve_chunk(
+    rt: &Runtime,
+    model: &crate::gcn::config::ModelConfig,
+    ptensors: &[crate::runtime::Tensor],
+    artifact: &str,
+    capacity: usize,
+    chunk: &[InferRequest],
+    metrics: &Arc<Metrics>,
+) -> anyhow::Result<()> {
+    let mols: Vec<&Molecule> = chunk.iter().map(|r| &r.mol).collect();
+    let mb = pack_molecules(&mols, capacity, model.max_nodes, model.ell_width, model.n_out)?;
+    let mut inputs = ptensors.to_vec();
+    inputs.extend(batch_tensors(&mb, false));
+    let t0 = Instant::now();
+    let out = rt.run(artifact, &inputs)?;
+    let device_us = t0.elapsed().as_micros() as u64;
+    let logits = out[0].as_f32()?;
+    metrics.record_batch(chunk.len(), capacity, device_us);
+    let done = Instant::now();
+    for (bi, req) in chunk.iter().enumerate() {
+        let latency_us = done.duration_since(req.submitted).as_micros() as u64;
+        let queue_us = latency_us.saturating_sub(device_us);
+        metrics.record_request(latency_us, queue_us);
+        let _ = req.reply.send(InferResponse {
+            id: req.id,
+            logits: logits[bi * model.n_out..(bi + 1) * model.n_out].to_vec(),
+            latency_us,
+            batch_size: chunk.len(),
+        });
+    }
+    Ok(())
+}
+
+/// Load a raw little-endian f32 parameter blob (same format as the AOT
+/// init file; `examples/train_chemgcn.rs` writes one after training).
+pub fn load_params_blob(
+    cfg: &crate::gcn::config::ModelConfig,
+    path: &std::path::Path,
+) -> anyhow::Result<ParamSet> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(
+        bytes.len() == cfg.n_params * 4,
+        "params blob {} has {} bytes, expected {}",
+        path.display(),
+        bytes.len(),
+        cfg.n_params * 4
+    );
+    Ok(ParamSet {
+        data: bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    })
+}
+
+/// Save parameters in the same blob format.
+pub fn save_params_blob(ps: &ParamSet, path: &std::path::Path) -> anyhow::Result<()> {
+    let bytes: Vec<u8> = ps.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(path, bytes)?;
+    Ok(())
+}

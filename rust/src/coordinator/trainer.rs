@@ -1,0 +1,214 @@
+//! Training loop in both dispatch modes (the Table II experiment).
+//!
+//! * **Batched** (Fig. 7): one `train_step` execute per minibatch — the
+//!   whole fwd+bwd+SGD is a single device dispatch.
+//! * **NonBatched** (Fig. 6): one `grad_sample` execute per *sample*
+//!   (B dispatches), gradients accumulated host-side, then one
+//!   `apply_sgd` execute. Identical mathematics (the model is exactly
+//!   per-sample decomposable — see python/compile/model.py), so the
+//!   timing comparison isolates dispatch overhead + device occupancy,
+//!   which is precisely the paper's claim.
+
+use std::path::Path;
+
+use crate::gcn::config::ModelConfig;
+use crate::gcn::params::ParamSet;
+use crate::gcn::reference;
+use crate::graph::dataset::{Dataset, ModelBatch};
+use crate::runtime::{Runtime, Tensor};
+use crate::sparse::ops::axpy;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    Batched,
+    NonBatched,
+}
+
+/// Build the artifact input tensors for one packed batch.
+pub fn batch_tensors(mb: &ModelBatch, with_labels: bool) -> Vec<Tensor> {
+    let mut v = vec![
+        Tensor::i32(
+            &[mb.batch, mb.channels, mb.max_nodes, mb.ell_width],
+            mb.ell_cols.clone(),
+        ),
+        Tensor::f32(
+            &[mb.batch, mb.channels, mb.max_nodes, mb.ell_width],
+            mb.ell_vals.clone(),
+        ),
+        Tensor::f32(&[mb.batch, mb.max_nodes, mb.feat_dim], mb.x.clone()),
+        Tensor::f32(&[mb.batch, mb.max_nodes], mb.mask.clone()),
+    ];
+    if with_labels {
+        v.push(Tensor::f32(&[mb.batch, mb.n_out], mb.labels.clone()));
+    }
+    v
+}
+
+/// Parameter tensors in artifact order.
+pub fn param_tensors(cfg: &ModelConfig, ps: &ParamSet) -> Vec<Tensor> {
+    cfg.params
+        .iter()
+        .zip(ps.views(cfg))
+        .map(|(p, view)| Tensor::f32(&p.shape, view.to_vec()))
+        .collect()
+}
+
+/// Epoch-level training statistics.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub secs: f64,
+    pub dispatches: u64,
+}
+
+pub struct Trainer {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    pub params: ParamSet,
+    /// Device dispatch counter (executes issued) — the Fig. 11 signal.
+    pub dispatches: u64,
+}
+
+impl Trainer {
+    pub fn new(artifacts_dir: &Path, model: &str) -> anyhow::Result<Trainer> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let cfg = rt.manifest.model(model)?.clone();
+        let params = ParamSet::load_init(&cfg, &rt.manifest.dir)?;
+        Ok(Trainer {
+            rt,
+            cfg,
+            params,
+            dispatches: 0,
+        })
+    }
+
+    /// One batched train step; returns the minibatch loss.
+    pub fn step_batched(&mut self, mb: &ModelBatch, lr: f32) -> anyhow::Result<f32> {
+        anyhow::ensure!(mb.batch == self.cfg.train_batch, "batch size mismatch");
+        let mut inputs = param_tensors(&self.cfg, &self.params);
+        inputs.extend(batch_tensors(mb, true));
+        inputs.push(Tensor::scalar_f32(lr));
+        let out = self.rt.run(&self.cfg.artifact_train_step, &inputs)?;
+        self.dispatches += 1;
+        anyhow::ensure!(out.len() == self.cfg.params.len() + 1, "bad output arity");
+        for (p, t) in self.cfg.params.iter().zip(&out) {
+            self.params.data[p.offset..p.offset + p.size]
+                .copy_from_slice(t.as_f32()?);
+        }
+        Ok(out.last().unwrap().as_f32()?[0])
+    }
+
+    /// One non-batched train step: B grad dispatches + host-side
+    /// accumulation + one apply_sgd dispatch.
+    pub fn step_nonbatched(&mut self, mb: &ModelBatch, lr: f32) -> anyhow::Result<f32> {
+        let b = mb.batch;
+        let mut grad_sum = vec![0f32; self.cfg.n_params];
+        let mut loss_sum = 0f64;
+        let exe = self.rt.executable(&self.cfg.artifact_grad_sample)?;
+        for bi in 0..b {
+            let one = mb.single(bi);
+            let mut inputs = param_tensors(&self.cfg, &self.params);
+            inputs.extend(batch_tensors(&one, true));
+            let out = exe.execute(&inputs)?;
+            self.dispatches += 1;
+            for (p, t) in self.cfg.params.iter().zip(&out) {
+                axpy(1.0, t.as_f32()?, &mut grad_sum[p.offset..p.offset + p.size]);
+            }
+            loss_sum += out.last().unwrap().as_f32()?[0] as f64;
+        }
+        // params <- params - (lr / B) * grad_sum, on device.
+        let mut inputs = param_tensors(&self.cfg, &self.params);
+        for p in &self.cfg.params {
+            inputs.push(Tensor::f32(
+                &p.shape,
+                grad_sum[p.offset..p.offset + p.size].to_vec(),
+            ));
+        }
+        inputs.push(Tensor::scalar_f32(lr / b as f32));
+        let out = self.rt.run(&self.cfg.artifact_apply_sgd, &inputs)?;
+        self.dispatches += 1;
+        for (p, t) in self.cfg.params.iter().zip(&out) {
+            self.params.data[p.offset..p.offset + p.size]
+                .copy_from_slice(t.as_f32()?);
+        }
+        Ok((loss_sum / b as f64) as f32)
+    }
+
+    /// Train over `idx` (shuffled by the caller) for one epoch;
+    /// incomplete trailing minibatches are dropped (paper-style).
+    pub fn train_epoch(
+        &mut self,
+        mode: TrainMode,
+        data: &Dataset,
+        idx: &[usize],
+        lr: f32,
+        epoch: usize,
+    ) -> anyhow::Result<EpochStats> {
+        let b = self.cfg.train_batch;
+        let d0 = self.dispatches;
+        let t0 = std::time::Instant::now();
+        let mut losses = Vec::new();
+        for chunk in idx.chunks_exact(b) {
+            let mb = data.pack_batch(chunk, self.cfg.max_nodes, self.cfg.ell_width)?;
+            let loss = match mode {
+                TrainMode::Batched => self.step_batched(&mb, lr)?,
+                TrainMode::NonBatched => self.step_nonbatched(&mb, lr)?,
+            };
+            losses.push(loss as f64);
+        }
+        anyhow::ensure!(!losses.is_empty(), "epoch with no full minibatch");
+        Ok(EpochStats {
+            epoch,
+            mean_loss: losses.iter().sum::<f64>() / losses.len() as f64,
+            secs: t0.elapsed().as_secs_f64(),
+            dispatches: self.dispatches - d0,
+        })
+    }
+
+    /// Forward a packed batch through the matching fwd artifact.
+    pub fn forward(&mut self, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
+        let name = if mb.batch == self.cfg.infer_batch {
+            &self.cfg.artifact_fwd_infer
+        } else if mb.batch == self.cfg.train_batch {
+            &self.cfg.artifact_fwd_train
+        } else if mb.batch == 1 {
+            &self.cfg.artifact_fwd_sample
+        } else {
+            anyhow::bail!("no fwd artifact for batch {}", mb.batch)
+        };
+        let mut inputs = param_tensors(&self.cfg, &self.params);
+        inputs.extend(batch_tensors(mb, false));
+        let out = self.rt.run(name, &inputs)?;
+        self.dispatches += 1;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Loss + accuracy over `idx`: full train-batch-sized fwd dispatches
+    /// plus per-sample dispatches for the remainder (sample-weighted).
+    pub fn evaluate(&mut self, data: &Dataset, idx: &[usize]) -> anyhow::Result<(f64, f64)> {
+        anyhow::ensure!(!idx.is_empty(), "evaluate on empty index set");
+        let b = self.cfg.train_batch;
+        let mut loss_sum = 0f64;
+        let mut acc_sum = 0f64;
+        let mut n = 0usize;
+        for chunk in idx.chunks(b) {
+            let mb = data.pack_batch(chunk, self.cfg.max_nodes, self.cfg.ell_width)?;
+            if chunk.len() == b {
+                let logits = self.forward(&mb)?;
+                loss_sum +=
+                    reference::loss(&self.cfg, &logits, &mb.labels, b) as f64 * b as f64;
+                acc_sum += reference::accuracy(&self.cfg, &logits, &mb.labels, b) * b as f64;
+            } else {
+                for bi in 0..chunk.len() {
+                    let one = mb.single(bi);
+                    let logits = self.forward(&one)?;
+                    loss_sum += reference::loss(&self.cfg, &logits, &one.labels, 1) as f64;
+                    acc_sum += reference::accuracy(&self.cfg, &logits, &one.labels, 1);
+                }
+            }
+            n += chunk.len();
+        }
+        Ok((loss_sum / n as f64, acc_sum / n as f64))
+    }
+}

@@ -1,0 +1,176 @@
+//! Model geometry and parameter layout, parsed from the manifest.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// Multi-task binary cross-entropy (Tox21: 12 tasks).
+    Bce,
+    /// Softmax cross-entropy over one-hot labels (Reaction100).
+    Softmax,
+}
+
+/// One entry of the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Geometry + artifact names for one model (one `models[]` manifest
+/// entry). Field meanings follow `python/compile/model.py::GcnConfig`.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub max_nodes: usize,
+    pub feat_dim: usize,
+    pub channels: usize,
+    pub hidden: Vec<usize>,
+    pub n_out: usize,
+    pub loss: LossKind,
+    pub nnz_cap: usize,
+    pub ell_width: usize,
+    pub train_batch: usize,
+    pub infer_batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub n_params: usize,
+    pub init_file: String,
+    pub artifact_fwd_infer: String,
+    pub artifact_fwd_train: String,
+    pub artifact_fwd_sample: String,
+    pub artifact_train_step: String,
+    pub artifact_grad_sample: String,
+    pub artifact_apply_sgd: String,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        let loss = match j.req_str("loss")? {
+            "bce" => LossKind::Bce,
+            "softmax" => LossKind::Softmax,
+            other => anyhow::bail!("unknown loss kind '{other}'"),
+        };
+        let params = j
+            .req_arr("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.req_usize("offset")?,
+                    size: p.req_usize("size")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let hidden = j
+            .req_arr("hidden")?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            max_nodes: j.req_usize("max_nodes")?,
+            feat_dim: j.req_usize("feat_dim")?,
+            channels: j.req_usize("channels")?,
+            hidden,
+            n_out: j.req_usize("n_out")?,
+            loss,
+            nnz_cap: j.req_usize("nnz_cap")?,
+            ell_width: j.req_usize("ell_width")?,
+            train_batch: j.req_usize("train_batch")?,
+            infer_batch: j.req_usize("infer_batch")?,
+            params,
+            n_params: j.req_usize("n_params")?,
+            init_file: j.req_str("init_file")?.to_string(),
+            artifact_fwd_infer: j.req_str("artifact_fwd_infer")?.to_string(),
+            artifact_fwd_train: j.req_str("artifact_fwd_train")?.to_string(),
+            artifact_fwd_sample: j.req_str("artifact_fwd_sample")?.to_string(),
+            artifact_train_step: j.req_str("artifact_train_step")?.to_string(),
+            artifact_grad_sample: j.req_str("artifact_grad_sample")?.to_string(),
+            artifact_apply_sgd: j.req_str("artifact_apply_sgd")?.to_string(),
+        })
+    }
+
+    /// Validate the layout is contiguous and ordered (the artifact ABI
+    /// depends on it).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut off = 0;
+        for p in &self.params {
+            anyhow::ensure!(
+                p.offset == off,
+                "param {} offset {} != expected {off}",
+                p.name,
+                p.offset
+            );
+            anyhow::ensure!(
+                p.size == p.shape.iter().product::<usize>(),
+                "param {} size/shape mismatch",
+                p.name
+            );
+            off += p.size;
+        }
+        anyhow::ensure!(off == self.n_params, "n_params {} != sum {off}", self.n_params);
+        Ok(())
+    }
+
+    pub fn param(&self, name: &str) -> anyhow::Result<&ParamSpec> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no param '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample_json() -> Json {
+        parse(
+            r#"{
+ "name": "t", "max_nodes": 8, "feat_dim": 4, "channels": 2,
+ "hidden": [8], "n_out": 3, "loss": "softmax", "nnz_cap": 16, "ell_width": 6,
+ "train_batch": 4, "infer_batch": 4, "n_params": 107,
+ "params": [
+   {"name": "conv0.w", "shape": [2, 4, 8], "offset": 0, "size": 64},
+   {"name": "conv0.b", "shape": [2, 8], "offset": 64, "size": 16},
+   {"name": "conv0.gamma", "shape": [8], "offset": 80, "size": 8},
+   {"name": "conv0.beta", "shape": [8], "offset": 88, "size": 8},
+   {"name": "readout.w", "shape": [8, 3], "offset": 96, "size": 24},
+   {"name": "readout.b", "shape": [3], "offset": 120, "size": 3}
+ ],
+ "init_file": "t.bin",
+ "artifact_fwd_infer": "a", "artifact_fwd_train": "b",
+ "artifact_fwd_sample": "c", "artifact_train_step": "d",
+ "artifact_grad_sample": "e", "artifact_apply_sgd": "f"
+}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let c = ModelConfig::from_json(&sample_json()).unwrap();
+        assert_eq!(c.hidden, vec![8]);
+        assert_eq!(c.loss, LossKind::Softmax);
+        assert_eq!(c.param("conv0.b").unwrap().offset, 64);
+    }
+
+    #[test]
+    fn validate_catches_gap() {
+        let mut c = ModelConfig::from_json(&sample_json()).unwrap();
+        // n_params in the fixture is deliberately wrong (107 != 123)
+        assert!(c.validate().is_err());
+        c.n_params = 123;
+        c.validate().unwrap();
+        c.params[1].offset = 65;
+        assert!(c.validate().is_err());
+    }
+}

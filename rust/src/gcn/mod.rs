@@ -1,0 +1,16 @@
+//! ChemGCN model definition on the rust side (S4 in DESIGN.md).
+//!
+//! [`config`] parses the model geometry + parameter layout from
+//! `artifacts/manifest.json` (the ABI produced by `python -m
+//! compile.aot`); [`params`] holds the flat parameter vector and loads
+//! the AOT-dumped initial values; [`reference`] is a pure-rust forward
+//! + loss that mirrors `python/compile/model.py` *exactly* — it is the
+//! cross-language oracle the integration tests compare PJRT artifact
+//! executions against.
+
+pub mod config;
+pub mod params;
+pub mod reference;
+
+pub use config::{LossKind, ModelConfig, ParamSpec};
+pub use params::ParamSet;

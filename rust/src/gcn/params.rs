@@ -1,0 +1,110 @@
+//! Flat parameter vector + loading the AOT-dumped initial values.
+
+use std::io::Read;
+use std::path::Path;
+
+use super::config::ModelConfig;
+
+/// All model parameters as one contiguous f32 vector, sliced per the
+/// manifest layout. This is exactly the order the artifacts take the
+/// parameter literals in.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub data: Vec<f32>,
+}
+
+impl ParamSet {
+    pub fn zeros(cfg: &ModelConfig) -> Self {
+        Self {
+            data: vec![0.0; cfg.n_params],
+        }
+    }
+
+    /// Load `<artifacts>/<init_file>` (little-endian f32 blob dumped by
+    /// aot.py).
+    pub fn load_init(cfg: &ModelConfig, artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let path = artifacts_dir.join(&cfg.init_file);
+        let mut bytes = Vec::new();
+        std::fs::File::open(&path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        anyhow::ensure!(
+            bytes.len() == cfg.n_params * 4,
+            "param file {} has {} bytes, expected {}",
+            path.display(),
+            bytes.len(),
+            cfg.n_params * 4
+        );
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { data })
+    }
+
+    pub fn slice<'a>(&'a self, cfg: &ModelConfig, name: &str) -> anyhow::Result<&'a [f32]> {
+        let p = cfg.param(name)?;
+        Ok(&self.data[p.offset..p.offset + p.size])
+    }
+
+    /// Views in layout order — what gets marshalled into literals.
+    pub fn views<'a>(&'a self, cfg: &ModelConfig) -> Vec<&'a [f32]> {
+        cfg.params
+            .iter()
+            .map(|p| &self.data[p.offset..p.offset + p.size])
+            .collect()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn tiny_cfg() -> ModelConfig {
+        let j = parse(
+            r#"{
+ "name": "t", "max_nodes": 4, "feat_dim": 2, "channels": 1,
+ "hidden": [2], "n_out": 2, "loss": "bce", "nnz_cap": 4, "ell_width": 3,
+ "train_batch": 2, "infer_batch": 2, "n_params": 6,
+ "params": [
+   {"name": "a", "shape": [1, 2, 2], "offset": 0, "size": 4},
+   {"name": "b", "shape": [2], "offset": 4, "size": 2}
+ ],
+ "init_file": "t.bin",
+ "artifact_fwd_infer": "x", "artifact_fwd_train": "x",
+ "artifact_fwd_sample": "x", "artifact_train_step": "x",
+ "artifact_grad_sample": "x", "artifact_apply_sgd": "x"
+}"#,
+        )
+        .unwrap();
+        ModelConfig::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn load_init_roundtrip() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir().join("bspmm_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = vec![1.0, -2.0, 3.5, 0.0, 9.0, -9.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.bin"), &bytes).unwrap();
+        let ps = ParamSet::load_init(&cfg, &dir).unwrap();
+        assert_eq!(ps.data, vals);
+        assert_eq!(ps.slice(&cfg, "b").unwrap(), &[9.0, -9.0]);
+        assert_eq!(ps.views(&cfg).len(), 2);
+    }
+
+    #[test]
+    fn load_init_rejects_wrong_size() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir().join("bspmm_params_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.bin"), [0u8; 8]).unwrap();
+        assert!(ParamSet::load_init(&cfg, &dir).is_err());
+    }
+}

@@ -1,0 +1,329 @@
+//! Pure-rust ChemGCN forward + loss — mirrors `python/compile/model.py`
+//! operation-for-operation. Used by the integration tests as the
+//! cross-language oracle for the PJRT artifact executions, and by the
+//! examples to report accuracy without a device round-trip.
+
+use super::config::{LossKind, ModelConfig};
+use super::params::ParamSet;
+use crate::graph::dataset::ModelBatch;
+
+const EPS: f32 = 1e-5;
+
+/// Forward pass: returns logits `[B, n_out]` (row-major).
+pub fn forward(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(mb.max_nodes == cfg.max_nodes, "node bucket mismatch");
+    anyhow::ensure!(mb.feat_dim == cfg.feat_dim, "feature width mismatch");
+    anyhow::ensure!(mb.channels == cfg.channels, "channel count mismatch");
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+
+    let mut h = mb.x.clone(); // [B, M, fin]
+    let mut fin = cfg.feat_dim;
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        let w = ps.slice(cfg, &format!("conv{li}.w"))?; // [CH, fin, fout]
+        let bias = ps.slice(cfg, &format!("conv{li}.b"))?; // [CH, fout]
+        let gamma = ps.slice(cfg, &format!("conv{li}.gamma"))?;
+        let beta = ps.slice(cfg, &format!("conv{li}.beta"))?;
+
+        // y[b,m,o] = sum_ch SpMM(A[b,ch], X[b] @ W[ch] + bias[ch])
+        let mut y = vec![0f32; b * m * fout];
+        let mut u = vec![0f32; m * fout]; // per (sample, channel) scratch
+        for bi in 0..b {
+            let x_s = &h[bi * m * fin..(bi + 1) * m * fin];
+            for ch in 0..cfg.channels {
+                let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
+                let b_ch = &bias[ch * fout..(ch + 1) * fout];
+                // U = X @ W[ch] + bias[ch]   (MatMul + Add, Fig. 6)
+                for r in 0..m {
+                    let dst = &mut u[r * fout..(r + 1) * fout];
+                    dst.copy_from_slice(b_ch);
+                    let src = &x_s[r * fin..(r + 1) * fin];
+                    for (k, &xv) in src.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w_ch[k * fout..(k + 1) * fout];
+                        for j in 0..fout {
+                            dst[j] += xv * wrow[j];
+                        }
+                    }
+                }
+                // C += A[ch] @ U              (SpMM + ElementWiseAdd)
+                // ELL layout: row rid's sources are slots [rid*R, rid*R+R).
+                let r = mb.ell_width;
+                let base = (bi * cfg.channels + ch) * m * r;
+                let y_s = &mut y[bi * m * fout..(bi + 1) * m * fout];
+                for rid in 0..m {
+                    let dst = &mut y_s[rid * fout..(rid + 1) * fout];
+                    for slot in 0..r {
+                        let val = mb.ell_vals[base + rid * r + slot];
+                        if val == 0.0 {
+                            continue; // padding slot
+                        }
+                        let cid = mb.ell_cols[base + rid * r + slot] as usize;
+                        let src = &u[cid * fout..(cid + 1) * fout];
+                        for j in 0..fout {
+                            dst[j] += val * src[j];
+                        }
+                    }
+                }
+            }
+        }
+        // GraphNorm + ReLU (+ re-mask).
+        graph_norm_relu(&mut y, &mb.mask, gamma, beta, b, m, fout);
+        h = y;
+        fin = fout;
+    }
+
+    // Sum-pool readout + dense head.
+    let w_out = ps.slice(cfg, "readout.w")?; // [fin, n_out]
+    let b_out = ps.slice(cfg, "readout.b")?;
+    let mut logits = vec![0f32; b * cfg.n_out];
+    for bi in 0..b {
+        let dst = &mut logits[bi * cfg.n_out..(bi + 1) * cfg.n_out];
+        dst.copy_from_slice(b_out);
+        for r in 0..m {
+            let src = &h[(bi * m + r) * fin..(bi * m + r + 1) * fin];
+            for (k, &hv) in src.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = &w_out[k * cfg.n_out..(k + 1) * cfg.n_out];
+                for j in 0..cfg.n_out {
+                    dst[j] += hv * wrow[j];
+                }
+            }
+        }
+    }
+    Ok(logits)
+}
+
+/// In-place per-graph masked normalization + affine + ReLU + re-mask —
+/// matches `model.graph_norm` followed by `jax.nn.relu`.
+fn graph_norm_relu(
+    y: &mut [f32],
+    mask: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    b: usize,
+    m: usize,
+    f: usize,
+) {
+    for bi in 0..b {
+        let msk = &mask[bi * m..(bi + 1) * m];
+        let cnt = msk.iter().sum::<f32>().max(1.0);
+        let rows = &mut y[bi * m * f..(bi + 1) * m * f];
+        for j in 0..f {
+            let mut mean = 0f32;
+            for r in 0..m {
+                mean += rows[r * f + j] * msk[r];
+            }
+            mean /= cnt;
+            let mut var = 0f32;
+            for r in 0..m {
+                let d = rows[r * f + j] - mean;
+                var += d * d * msk[r];
+            }
+            var /= cnt;
+            let inv = 1.0 / (var + EPS).sqrt();
+            for r in 0..m {
+                let hn = (rows[r * f + j] - mean) * inv;
+                let v = (gamma[j] * hn + beta[j]) * msk[r];
+                rows[r * f + j] = v.max(0.0);
+            }
+        }
+    }
+}
+
+/// Mean loss over the batch — matches `model.loss_fn`.
+pub fn loss(cfg: &ModelConfig, logits: &[f32], labels: &[f32], batch: usize) -> f32 {
+    let n = cfg.n_out;
+    assert_eq!(logits.len(), batch * n);
+    assert_eq!(labels.len(), batch * n);
+    let mut total = 0f64;
+    match cfg.loss {
+        LossKind::Bce => {
+            for i in 0..batch * n {
+                let (x, y) = (logits[i], labels[i]);
+                // -(y*logsig(x) + (1-y)*logsig(-x)), stable.
+                total += (-(y * log_sigmoid(x) + (1.0 - y) * log_sigmoid(-x))) as f64;
+            }
+        }
+        LossKind::Softmax => {
+            for bi in 0..batch {
+                let row = &logits[bi * n..(bi + 1) * n];
+                let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse = max + row.iter().map(|&v| (v - max).exp()).sum::<f32>().ln();
+                for j in 0..n {
+                    total += (labels[bi * n + j] * (lse - row[j])) as f64;
+                }
+            }
+        }
+    }
+    (total / batch as f64) as f32
+}
+
+fn log_sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        -(-x).exp().ln_1p()
+    } else {
+        x - x.exp().ln_1p()
+    }
+}
+
+/// Prediction accuracy (argmax for softmax; 0.5-threshold per task for
+/// BCE, averaged over tasks).
+pub fn accuracy(cfg: &ModelConfig, logits: &[f32], labels: &[f32], batch: usize) -> f64 {
+    let n = cfg.n_out;
+    match cfg.loss {
+        LossKind::Softmax => {
+            let mut correct = 0usize;
+            for bi in 0..batch {
+                let row = &logits[bi * n..(bi + 1) * n];
+                let pred = argmax(row);
+                let truth = argmax(&labels[bi * n..(bi + 1) * n]);
+                if pred == truth {
+                    correct += 1;
+                }
+            }
+            correct as f64 / batch as f64
+        }
+        LossKind::Bce => {
+            let mut correct = 0usize;
+            for i in 0..batch * n {
+                let pred = logits[i] > 0.0;
+                if pred == (labels[i] > 0.5) {
+                    correct += 1;
+                }
+            }
+            correct as f64 / (batch * n) as f64
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset::{Dataset, DatasetKind};
+    use crate::util::json::parse;
+    use crate::util::rng::Rng;
+
+    fn tox_like_cfg() -> ModelConfig {
+        // Geometry matching graph::dataset Tox21 packing (CH=4, F0=16).
+        let j = parse(
+            r#"{
+ "name": "toxtest", "max_nodes": 50, "feat_dim": 16, "channels": 4,
+ "hidden": [8, 8], "n_out": 12, "loss": "bce", "nnz_cap": 128, "ell_width": 12,
+ "train_batch": 4, "infer_batch": 4, "n_params": 1030,
+ "params": [
+  {"name": "conv0.w", "shape": [4, 16, 8], "offset": 0, "size": 512},
+  {"name": "conv0.b", "shape": [4, 8], "offset": 512, "size": 32},
+  {"name": "conv0.gamma", "shape": [8], "offset": 544, "size": 8},
+  {"name": "conv0.beta", "shape": [8], "offset": 552, "size": 8},
+  {"name": "conv1.w", "shape": [4, 8, 8], "offset": 560, "size": 256},
+  {"name": "conv1.b", "shape": [4, 8], "offset": 816, "size": 32},
+  {"name": "conv1.gamma", "shape": [8], "offset": 848, "size": 8},
+  {"name": "conv1.beta", "shape": [8], "offset": 856, "size": 8},
+  {"name": "readout.w", "shape": [8, 12], "offset": 864, "size": 96},
+  {"name": "readout.b", "shape": [12], "offset": 960, "size": 12}
+ ],
+ "init_file": "none.bin",
+ "artifact_fwd_infer": "x", "artifact_fwd_train": "x",
+ "artifact_fwd_sample": "x", "artifact_train_step": "x",
+ "artifact_grad_sample": "x", "artifact_apply_sgd": "x"
+}"#,
+        )
+        .unwrap();
+        let mut c = ModelConfig::from_json(&j).unwrap();
+        c.n_params = 972;
+        c.validate().unwrap();
+        c
+    }
+
+    fn random_params(cfg: &ModelConfig, seed: u64) -> ParamSet {
+        let mut rng = Rng::new(seed);
+        let mut ps = ParamSet::zeros(cfg);
+        for p in &cfg.params {
+            for i in 0..p.size {
+                ps.data[p.offset + i] = if p.name.ends_with(".gamma") {
+                    1.0
+                } else if p.name.ends_with(".w") {
+                    rng.normal() * 0.3
+                } else {
+                    0.0
+                };
+            }
+        }
+        ps
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let cfg = tox_like_cfg();
+        let ps = random_params(&cfg, 1);
+        let d = Dataset::generate(DatasetKind::Tox21, 8, 1);
+        let mb = d.pack_batch(&[0, 1, 2, 3], 50, 12).unwrap();
+        let logits = forward(&cfg, &ps, &mb).unwrap();
+        assert_eq!(logits.len(), 4 * 12);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let l = loss(&cfg, &logits, &mb.labels, 4);
+        assert!(l.is_finite() && l > 0.0);
+    }
+
+    #[test]
+    fn batched_equals_per_sample() {
+        // The decomposability property the non-batched dispatch relies on.
+        let cfg = tox_like_cfg();
+        let ps = random_params(&cfg, 2);
+        let d = Dataset::generate(DatasetKind::Tox21, 6, 2);
+        let mb = d.pack_batch(&[0, 2, 4], 50, 12).unwrap();
+        let batched = forward(&cfg, &ps, &mb).unwrap();
+        for bi in 0..3 {
+            let one = forward(&cfg, &ps, &mb.single(bi)).unwrap();
+            for j in 0..12 {
+                let (a, b) = (batched[bi * 12 + j], one[j]);
+                assert!(
+                    (a - b).abs() <= 1e-5 + 1e-5 * b.abs(),
+                    "sample {bi} logit {j}: batched {a} vs single {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_params_give_uniform_logits() {
+        let cfg = tox_like_cfg();
+        let ps = ParamSet::zeros(&cfg);
+        let d = Dataset::generate(DatasetKind::Tox21, 4, 3);
+        let mb = d.pack_batch(&[0, 1], 50, 12).unwrap();
+        let logits = forward(&cfg, &ps, &mb).unwrap();
+        assert!(logits.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn softmax_loss_of_uniform_is_ln_classes() {
+        let j = r#"{
+ "name": "r", "max_nodes": 4, "feat_dim": 2, "channels": 1, "hidden": [2],
+ "n_out": 100, "loss": "softmax", "nnz_cap": 4, "ell_width": 3, "train_batch": 2,
+ "infer_batch": 2, "n_params": 0, "params": [], "init_file": "x",
+ "artifact_fwd_infer": "x", "artifact_fwd_train": "x",
+ "artifact_fwd_sample": "x", "artifact_train_step": "x",
+ "artifact_grad_sample": "x", "artifact_apply_sgd": "x"}"#;
+        let cfg = ModelConfig::from_json(&parse(j).unwrap()).unwrap();
+        let logits = vec![0f32; 2 * 100];
+        let mut labels = vec![0f32; 2 * 100];
+        labels[3] = 1.0;
+        labels[100 + 77] = 1.0;
+        let l = loss(&cfg, &logits, &labels, 2);
+        assert!((l - (100f32).ln()).abs() < 1e-4, "loss {l}");
+        assert!(accuracy(&cfg, &logits, &labels, 2) <= 1.0);
+    }
+}

@@ -1,0 +1,401 @@
+//! Synthetic datasets matched to Table I, with learnable labels,
+//! k-fold splits, and packing into the model artifacts' input tensors.
+
+use super::featurize::{featurize, FEAT_DIM};
+use super::molecule::{Molecule, MoleculeSpec, N_BOND_TYPES, N_ELEMENTS};
+use crate::sparse::coo::Coo;
+use crate::util::rng::Rng;
+
+/// Which paper dataset this synthetic set stands in for (Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 7,862 molecules, 12 binary toxicity tasks, train batch 50.
+    Tox21,
+    /// 75,477 molecules, 100 reaction classes, train batch 100.
+    Reaction100,
+}
+
+impl DatasetKind {
+    pub fn paper_size(&self) -> usize {
+        match self {
+            DatasetKind::Tox21 => 7_862,
+            DatasetKind::Reaction100 => 75_477,
+        }
+    }
+
+    pub fn n_out(&self) -> usize {
+        match self {
+            DatasetKind::Tox21 => 12,
+            DatasetKind::Reaction100 => 100,
+        }
+    }
+
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            DatasetKind::Tox21 => "tox21",
+            DatasetKind::Reaction100 => "reaction100",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub mol: Molecule,
+    /// Tox21: 12 bits; Reaction100: one-hot over 100 classes.
+    pub label: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    /// Generate `n` samples (use `kind.paper_size()` for full fidelity;
+    /// tests and quick benches use smaller n).
+    pub fn generate(kind: DatasetKind, n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let spec = MoleculeSpec::default();
+        let samples = (0..n)
+            .map(|_| {
+                let mol = Molecule::random(&mut rng, &spec);
+                let label = match kind {
+                    DatasetKind::Tox21 => tox21_label(&mol, &mut rng),
+                    DatasetKind::Reaction100 => reaction_label(&mol),
+                };
+                Sample { mol, label }
+            })
+            .collect();
+        Dataset { kind, samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// K-fold split (paper §V-B: k = 5): returns (train, test) index sets
+    /// for the given fold.
+    pub fn kfold(&self, k: usize, fold: usize) -> (Vec<usize>, Vec<usize>) {
+        assert!(k >= 2 && fold < k);
+        let n = self.len();
+        let lo = n * fold / k;
+        let hi = n * (fold + 1) / k;
+        let test: Vec<usize> = (lo..hi).collect();
+        let train: Vec<usize> = (0..lo).chain(hi..n).collect();
+        (train, test)
+    }
+
+    /// Pack samples[idx] into one model-artifact input batch.
+    /// `max_nodes`/`ell_width` come from the model geometry (manifest).
+    pub fn pack_batch(
+        &self,
+        idx: &[usize],
+        max_nodes: usize,
+        ell_width: usize,
+    ) -> anyhow::Result<ModelBatch> {
+        let b = idx.len();
+        let n_out = self.kind.n_out();
+        let ch = N_BOND_TYPES;
+        let mut mb = ModelBatch::zeros(b, ch, max_nodes, ell_width, n_out);
+        for (bi, &si) in idx.iter().enumerate() {
+            let sample = &self.samples[si];
+            mb.fill_sample(bi, &sample.mol, Some(&sample.label))?;
+        }
+        Ok(mb)
+    }
+}
+
+/// Fill one ELL (row-major padded) adjacency channel from a COO matrix.
+/// Slot layout per row: entries in insertion order; val 0 = padding.
+fn coo_to_ell(
+    a: &Coo,
+    cols: &mut [i32],
+    vals: &mut [f32],
+    max_nodes: usize,
+    r: usize,
+) -> anyhow::Result<()> {
+    let mut fill = vec![0usize; max_nodes];
+    for i in 0..a.nnz() {
+        let row = a.row_ids[i] as usize;
+        let slot = fill[row];
+        anyhow::ensure!(
+            slot < r,
+            "row {row} has more than ell_width={r} non-zeros"
+        );
+        cols[row * r + slot] = a.col_ids[i] as i32;
+        vals[row * r + slot] = a.vals[i];
+        fill[row] += 1;
+    }
+    Ok(())
+}
+
+/// Pack bare molecules (no labels) for serving-path inference.
+/// Slots beyond `mols.len()` are padding: empty adjacency, zero
+/// features, zero mask — inert through the whole model.
+pub fn pack_molecules(
+    mols: &[&Molecule],
+    capacity: usize,
+    max_nodes: usize,
+    ell_width: usize,
+    n_out: usize,
+) -> anyhow::Result<ModelBatch> {
+    anyhow::ensure!(mols.len() <= capacity, "batch overflow");
+    let mut mb = ModelBatch::zeros(capacity, N_BOND_TYPES, max_nodes, ell_width, n_out);
+    for (bi, mol) in mols.iter().enumerate() {
+        mb.fill_sample(bi, mol, None)?;
+    }
+    Ok(mb)
+}
+
+/// One packed minibatch in the model artifacts' ABI:
+/// ell_cols [B,CH,M,R] i32, ell_vals [B,CH,M,R] f32, x [B,M,F],
+/// mask [B,M], labels [B,n_out] (all row-major flat).
+///
+/// ELL (padded per-row) adjacency is the model's hot-path format
+/// (gather-only SpMM — EXPERIMENTS.md §Perf iteration 3); the figure
+/// benches keep the paper's ST/CSR formats.
+#[derive(Clone, Debug)]
+pub struct ModelBatch {
+    pub batch: usize,
+    pub channels: usize,
+    pub ell_width: usize,
+    pub max_nodes: usize,
+    pub feat_dim: usize,
+    pub n_out: usize,
+    pub ell_cols: Vec<i32>,
+    pub ell_vals: Vec<f32>,
+    pub x: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub labels: Vec<f32>,
+}
+
+impl ModelBatch {
+    pub fn zeros(
+        batch: usize,
+        channels: usize,
+        max_nodes: usize,
+        ell_width: usize,
+        n_out: usize,
+    ) -> ModelBatch {
+        ModelBatch {
+            batch,
+            channels,
+            ell_width,
+            max_nodes,
+            feat_dim: FEAT_DIM,
+            n_out,
+            ell_cols: vec![0i32; batch * channels * max_nodes * ell_width],
+            ell_vals: vec![0f32; batch * channels * max_nodes * ell_width],
+            x: vec![0f32; batch * max_nodes * FEAT_DIM],
+            mask: vec![0f32; batch * max_nodes],
+            labels: vec![0f32; batch * n_out],
+        }
+    }
+
+    /// Pack one molecule (and optional label) into slot `bi`.
+    pub fn fill_sample(
+        &mut self,
+        bi: usize,
+        mol: &Molecule,
+        label: Option<&[f32]>,
+    ) -> anyhow::Result<()> {
+        assert!(bi < self.batch);
+        anyhow::ensure!(mol.n_atoms <= self.max_nodes, "molecule too large");
+        let (m, r) = (self.max_nodes, self.ell_width);
+        for (ci, a) in mol.adjacency().iter().enumerate() {
+            let base = (bi * self.channels + ci) * m * r;
+            coo_to_ell(
+                a,
+                &mut self.ell_cols[base..base + m * r],
+                &mut self.ell_vals[base..base + m * r],
+                m,
+                r,
+            )?;
+        }
+        let (fx, fm) = featurize(mol, m);
+        self.x[bi * m * FEAT_DIM..(bi + 1) * m * FEAT_DIM].copy_from_slice(&fx);
+        self.mask[bi * m..(bi + 1) * m].copy_from_slice(&fm);
+        if let Some(l) = label {
+            self.labels[bi * self.n_out..(bi + 1) * self.n_out].copy_from_slice(l);
+        }
+        Ok(())
+    }
+
+    /// Slice out sample `b` as a batch of 1 (the non-batched dispatch
+    /// mode's unit of work).
+    pub fn single(&self, b: usize) -> ModelBatch {
+        assert!(b < self.batch);
+        let sl = |v: &[f32], per: usize| v[b * per..(b + 1) * per].to_vec();
+        let per_adj = self.channels * self.max_nodes * self.ell_width;
+        ModelBatch {
+            batch: 1,
+            channels: self.channels,
+            ell_width: self.ell_width,
+            max_nodes: self.max_nodes,
+            feat_dim: self.feat_dim,
+            n_out: self.n_out,
+            ell_cols: self.ell_cols[b * per_adj..(b + 1) * per_adj].to_vec(),
+            ell_vals: sl(&self.ell_vals, per_adj),
+            x: sl(&self.x, self.max_nodes * self.feat_dim),
+            mask: sl(&self.mask, self.max_nodes),
+            labels: sl(&self.labels, self.n_out),
+        }
+    }
+}
+
+/// Tox21-like labels: 12 binary tasks, each a threshold on a structural
+/// statistic, with 5% label noise. Learnable from features.
+fn tox21_label(mol: &Molecule, rng: &mut Rng) -> Vec<f32> {
+    let n = mol.n_atoms as f32;
+    let rings = mol.bonds.len().saturating_sub(mol.n_atoms - 1) as f32;
+    let mean_deg =
+        mol.bonds.len() as f32 * 2.0 / n.max(1.0);
+    let mut out = Vec::with_capacity(12);
+    for task in 0..12 {
+        let raw = match task % 4 {
+            0 => mol.element_count(1 + task / 4) as f32 / n - 0.08,
+            1 => rings - 1.5,
+            2 => mean_deg - 2.1,
+            _ => n - 25.0,
+        };
+        let mut bit = raw > 0.0;
+        if rng.bool(0.05) {
+            bit = !bit;
+        }
+        out.push(if bit { 1.0 } else { 0.0 });
+    }
+    out
+}
+
+/// Reaction100-like labels: class index from the dominant bonded element
+/// pair — a deterministic structural function, one-hot over 100 classes.
+fn reaction_label(mol: &Molecule) -> Vec<f32> {
+    let (a, b) = mol.dominant_bond_pair();
+    let class = (a * N_ELEMENTS + b) % 100;
+    let mut out = vec![0f32; 100];
+    out[class] = 1.0;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_deterministic() {
+        let a = Dataset::generate(DatasetKind::Tox21, 20, 7);
+        let b = Dataset::generate(DatasetKind::Tox21, 20, 7);
+        assert_eq!(a.samples[5].label, b.samples[5].label);
+        assert_eq!(a.samples[5].mol.n_atoms, b.samples[5].mol.n_atoms);
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let d = Dataset::generate(DatasetKind::Tox21, 103, 1);
+        let mut seen = vec![0usize; d.len()];
+        for fold in 0..5 {
+            let (train, test) = d.kfold(5, fold);
+            assert_eq!(train.len() + test.len(), d.len());
+            for &i in &test {
+                seen[i] += 1;
+            }
+            let tset: std::collections::HashSet<_> = test.iter().collect();
+            assert!(train.iter().all(|i| !tset.contains(i)));
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each sample in exactly one test fold");
+    }
+
+    #[test]
+    fn labels_have_both_classes() {
+        let d = Dataset::generate(DatasetKind::Tox21, 200, 2);
+        for task in 0..12 {
+            let pos: usize = d
+                .samples
+                .iter()
+                .map(|s| s.label[task] as usize)
+                .sum();
+            assert!(pos > 0 && pos < 200, "task {task} degenerate: {pos}/200");
+        }
+    }
+
+    #[test]
+    fn reaction_labels_one_hot_and_varied() {
+        let d = Dataset::generate(DatasetKind::Reaction100, 300, 3);
+        let mut classes = std::collections::HashSet::new();
+        for s in &d.samples {
+            assert_eq!(s.label.iter().sum::<f32>(), 1.0);
+            classes.insert(s.label.iter().position(|&v| v == 1.0).unwrap());
+        }
+        assert!(classes.len() > 5, "only {} classes", classes.len());
+    }
+
+    #[test]
+    fn pack_batch_shapes_and_padding() {
+        let d = Dataset::generate(DatasetKind::Tox21, 10, 4);
+        let mb = d.pack_batch(&[0, 3, 7], 50, 12).unwrap();
+        assert_eq!(mb.batch, 3);
+        assert_eq!(mb.ell_cols.len(), 3 * 4 * 50 * 12);
+        assert_eq!(mb.ell_vals.len(), 3 * 4 * 50 * 12);
+        assert_eq!(mb.x.len(), 3 * 50 * FEAT_DIM);
+        assert_eq!(mb.labels.len(), 3 * 12);
+        // mask matches molecule sizes
+        for (bi, &si) in [0usize, 3, 7].iter().enumerate() {
+            let n = d.samples[si].mol.n_atoms;
+            let m = &mb.mask[bi * 50..(bi + 1) * 50];
+            assert_eq!(m.iter().filter(|&&v| v == 1.0).count(), n);
+        }
+    }
+
+    #[test]
+    fn ell_encodes_adjacency_exactly() {
+        // Round-trip: unpack the ELL arrays back into a dense adjacency
+        // and compare against the molecule's per-channel dense form.
+        let d = Dataset::generate(DatasetKind::Tox21, 4, 6);
+        let mb = d.pack_batch(&[2], 50, 12).unwrap();
+        let adj = d.samples[2].mol.adjacency();
+        let (m, r) = (50usize, 12usize);
+        for (ci, a) in adj.iter().enumerate() {
+            let dense = a.to_dense();
+            let base = ci * m * r;
+            let mut recon = vec![0f32; m * m];
+            for row in 0..m {
+                for slot in 0..r {
+                    let v = mb.ell_vals[base + row * r + slot];
+                    if v != 0.0 {
+                        let c = mb.ell_cols[base + row * r + slot] as usize;
+                        recon[row * m + c] += v;
+                    }
+                }
+            }
+            for row in 0..a.rows {
+                for c in 0..a.cols {
+                    assert_eq!(recon[row * m + c], dense.at(row, c), "ch {ci} ({row},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ell_width_overflow_rejected() {
+        let d = Dataset::generate(DatasetKind::Tox21, 4, 6);
+        // width 1 cannot hold self loop + any bond
+        assert!(d.pack_batch(&[0], 50, 1).is_err());
+    }
+
+    #[test]
+    fn single_slices_match_batch() {
+        let d = Dataset::generate(DatasetKind::Reaction100, 6, 5);
+        let mb = d.pack_batch(&[1, 2, 4], 50, 12).unwrap();
+        let s = mb.single(1);
+        assert_eq!(s.batch, 1);
+        assert_eq!(s.labels, mb.labels[100..200].to_vec());
+        assert_eq!(s.x, mb.x[50 * FEAT_DIM..2 * 50 * FEAT_DIM].to_vec());
+        let per_adj = 4 * 50 * 12;
+        assert_eq!(s.ell_vals, mb.ell_vals[per_adj..2 * per_adj].to_vec());
+    }
+}

@@ -1,0 +1,67 @@
+//! Node featurization: molecule -> the model's `x [M, F0]` input.
+//!
+//! F0 = 16: one-hot element (10) + degree one-hot capped at 5 (5) + a
+//! constant 1 bias channel. Padded node rows are all-zero (the model's
+//! mask keeps them inert).
+
+use super::molecule::{Molecule, N_ELEMENTS};
+
+pub const FEAT_DIM: usize = 16;
+const DEGREE_CAP: usize = 5;
+
+/// Features for one molecule, zero-padded to `max_nodes` rows.
+/// Returns (x flat [max_nodes * FEAT_DIM], mask [max_nodes]).
+pub fn featurize(mol: &Molecule, max_nodes: usize) -> (Vec<f32>, Vec<f32>) {
+    assert!(mol.n_atoms <= max_nodes, "molecule larger than bucket");
+    let mut x = vec![0f32; max_nodes * FEAT_DIM];
+    let mut mask = vec![0f32; max_nodes];
+    for v in 0..mol.n_atoms {
+        let row = &mut x[v * FEAT_DIM..(v + 1) * FEAT_DIM];
+        row[mol.elements[v]] = 1.0;
+        let deg = mol.degree(v).min(DEGREE_CAP - 1);
+        row[N_ELEMENTS + deg] = 1.0;
+        row[N_ELEMENTS + DEGREE_CAP] = 1.0; // bias channel
+        mask[v] = 1.0;
+    }
+    (x, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::molecule::MoleculeSpec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn feature_layout() {
+        assert_eq!(FEAT_DIM, N_ELEMENTS + DEGREE_CAP + 1);
+    }
+
+    #[test]
+    fn one_hot_rows_and_padding() {
+        let mut rng = Rng::new(1);
+        let mol = Molecule::random(&mut rng, &MoleculeSpec::default());
+        let (x, mask) = featurize(&mol, 50);
+        for v in 0..mol.n_atoms {
+            let row = &x[v * FEAT_DIM..(v + 1) * FEAT_DIM];
+            let elem_sum: f32 = row[..N_ELEMENTS].iter().sum();
+            let deg_sum: f32 = row[N_ELEMENTS..N_ELEMENTS + DEGREE_CAP].iter().sum();
+            assert_eq!(elem_sum, 1.0);
+            assert_eq!(deg_sum, 1.0);
+            assert_eq!(row[FEAT_DIM - 1], 1.0);
+            assert_eq!(mask[v], 1.0);
+        }
+        for v in mol.n_atoms..50 {
+            assert!(x[v * FEAT_DIM..(v + 1) * FEAT_DIM].iter().all(|&f| f == 0.0));
+            assert_eq!(mask[v], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversize_molecule_rejected() {
+        let mut rng = Rng::new(2);
+        let mol = Molecule::random(&mut rng, &MoleculeSpec::default());
+        featurize(&mol, 3);
+    }
+}

@@ -1,0 +1,18 @@
+//! Molecular-graph substrate (S3 in DESIGN.md).
+//!
+//! The paper evaluates on Tox21 (downloadable, but this environment is
+//! offline) and Reaction100 (derived from the proprietary Reaxys
+//! database).  Both are replaced by synthetic molecule generators whose
+//! *shape statistics* match Table I — graph count, max dim 50, bond
+//! (nnz/row ~ 2) sparsity — because the kernels, batcher, and benches
+//! only observe (shape, sparsity, batch) distributions.  Labels are
+//! deterministic functions of graph structure plus noise, so the E2E
+//! training example has a real learnable signal and a falling loss
+//! curve.
+
+pub mod dataset;
+pub mod featurize;
+pub mod molecule;
+
+pub use dataset::{Dataset, DatasetKind, ModelBatch, Sample};
+pub use molecule::{Molecule, MoleculeSpec};

@@ -1,0 +1,28 @@
+//! # batched-spmm-gcn
+//!
+//! Reproduction of *"Batched Sparse Matrix Multiplication for Accelerating
+//! Graph Convolutional Networks"* (Nagasaka, Nukada, Kojima, Matsuoka —
+//! CCGRID 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build-time python)** — the batched SpMM kernels
+//!   (SparseTensor/COO and CSR variants) re-thought for the TPU memory
+//!   hierarchy: BlockSpec column blocking plays the role the paper's
+//!   shared-memory cache blocking plays on the GPU.
+//! * **Layer 2 (JAX, build-time python)** — the ChemGCN model: graph
+//!   convolution layers in both the paper's *non-batched* (per-sample
+//!   kernel launches) and *batched* (single fused launch) formulations,
+//!   plus the training step (loss + grad + SGD). AOT-lowered to HLO text.
+//! * **Layer 3 (this crate)** — the coordinator: a dataset/graph substrate,
+//!   a dynamic batcher and serving runtime, the training loop, a PJRT
+//!   runtime that loads the AOT artifacts, and a P100 GPU cost-model
+//!   simulator that regenerates the paper's figures where real-GPU
+//!   measurements are gated (see DESIGN.md §Substitutions).
+
+pub mod util;
+pub mod sparse;
+pub mod graph;
+pub mod gcn;
+pub mod runtime;
+pub mod coordinator;
+pub mod simulator;
+pub mod bench;

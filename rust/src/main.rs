@@ -1,0 +1,242 @@
+//! `chemgcn` — leader entrypoint for the batched-spmm-gcn reproduction.
+//!
+//! Subcommands:
+//!   info       — manifest / artifact / model summary
+//!   gen-data   — generate + describe the synthetic datasets (Table I)
+//!   train      — train a model (batched or non-batched dispatch)
+//!   serve      — run the serving coordinator over a synthetic workload
+//!   timeline   — print the Fig. 11 simulated layer timeline
+//!   sim        — print the simulated-P100 five-series sweep for a figure
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::coordinator::trainer::{TrainMode, Trainer};
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+use bspmm::runtime::Runtime;
+use bspmm::simulator::cost::CostModel;
+use bspmm::simulator::timeline::{render_timeline, simulate_layer};
+use bspmm::util::cli::{Args, Cli};
+use bspmm::util::rng::Rng;
+
+const USAGE: &str = "chemgcn <info|gen-data|train|serve|timeline|sim> [options]
+  run `chemgcn <cmd> --help` for per-command options";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "info" => cmd_info(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "timeline" => cmd_timeline(rest),
+        "sim" => cmd_sim(rest),
+        "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse(cli: &Cli, rest: &[String]) -> anyhow::Result<Args> {
+    cli.parse(rest).map_err(|msg| anyhow::anyhow!("{msg}"))
+}
+
+fn cmd_info(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chemgcn info", "manifest summary")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let args = parse(&cli, rest)?;
+    let rt = Runtime::new(Path::new(args.str("artifacts")))?;
+    println!(
+        "platform: {} ({} devices)",
+        rt.client.platform_name(),
+        rt.client.device_count()
+    );
+    println!("artifacts: {}", rt.manifest.artifacts.len());
+    for (name, cfg) in &rt.manifest.models {
+        println!(
+            "model {name}: {} params, layers {:?}, channels {}, nnz_cap {}, \
+             train batch {}, infer batch {}",
+            cfg.n_params, cfg.hidden, cfg.channels, cfg.nnz_cap,
+            cfg.train_batch, cfg.infer_batch
+        );
+    }
+    for key in ["fig8a", "fig8b", "fig9a", "fig9b", "fig9c", "fig9d", "fig9e", "fig9f", "fig10"] {
+        if let Ok(sw) = rt.manifest.sweep(key) {
+            println!(
+                "sweep {key}: dim {}, nnz/row {}, batch {}, n_B {:?}{}",
+                sw.dim, sw.z, sw.batch, sw.nbs,
+                if sw.mixed { " (mixed)" } else { "" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chemgcn gen-data", "describe the synthetic Table I datasets")
+        .opt("samples", "2000", "samples to generate per dataset")
+        .opt("seed", "0", "generator seed");
+    let args = parse(&cli, rest)?;
+    let n = args.usize("samples");
+    println!("Table I (synthetic stand-ins; see DESIGN.md §7 Substitutions)\n");
+    println!("{:<13} {:>9} {:>8} {:>9} {:>10} {:>9}", "dataset", "#matrices", "max dim", "mean dim", "mean bonds", "nnz/row");
+    for kind in [DatasetKind::Tox21, DatasetKind::Reaction100] {
+        let d = Dataset::generate(kind, n, args.u64("seed"));
+        let mean_dim: f64 =
+            d.samples.iter().map(|s| s.mol.n_atoms as f64).sum::<f64>() / n as f64;
+        let mean_bonds: f64 =
+            d.samples.iter().map(|s| s.mol.bonds.len() as f64).sum::<f64>() / n as f64;
+        let max_dim = d.samples.iter().map(|s| s.mol.n_atoms).max().unwrap_or(0);
+        // nnz/row of channel-summed adjacency: (m self loops + 2 bonds)/m
+        let nnz_per_row = (mean_dim + 2.0 * mean_bonds) / mean_dim;
+        println!(
+            "{:<13} {:>9} {:>8} {:>9.1} {:>10.1} {:>9.2}",
+            format!("{:?}", kind),
+            kind.paper_size(),
+            max_dim,
+            mean_dim,
+            mean_bonds,
+            nnz_per_row
+        );
+    }
+    println!("\n(paper: Tox21 7,862 / Reaction100 75,477 matrices, max dim 50)");
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chemgcn train", "train a model")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("model", "tox21", "tox21 | reaction100")
+        .opt("samples", "500", "dataset size")
+        .opt("epochs", "5", "epochs")
+        .opt("lr", "0.02", "learning rate")
+        .opt("mode", "batched", "batched | nonbatched")
+        .opt("seed", "0", "dataset seed");
+    let args = parse(&cli, rest)?;
+    let mode = match args.str("mode") {
+        "batched" => TrainMode::Batched,
+        "nonbatched" => TrainMode::NonBatched,
+        other => anyhow::bail!("unknown mode {other}"),
+    };
+    let mut tr = Trainer::new(Path::new(args.str("artifacts")), args.str("model"))?;
+    let kind = match args.str("model") {
+        "tox21" => DatasetKind::Tox21,
+        _ => DatasetKind::Reaction100,
+    };
+    let data = Dataset::generate(kind, args.usize("samples"), args.u64("seed"));
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    let mut rng = Rng::new(1);
+    for epoch in 0..args.usize("epochs") {
+        rng.shuffle(&mut idx);
+        let st = tr.train_epoch(mode, &data, &idx, args.f64("lr") as f32, epoch)?;
+        println!(
+            "epoch {epoch}: loss {:.4} ({:.2}s, {} dispatches)",
+            st.mean_loss, st.secs, st.dispatches
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chemgcn serve", "serve synthetic molecules")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("model", "tox21", "model")
+        .opt("requests", "400", "request count")
+        .opt("batch", "200", "batch capacity")
+        .opt("wait-ms", "5", "batcher deadline")
+        .opt("mode", "batched", "batched | per-sample");
+    let args = parse(&cli, rest)?;
+    let mode = match args.str("mode") {
+        "batched" => DispatchMode::Batched,
+        "per-sample" => DispatchMode::PerSample,
+        other => anyhow::bail!("unknown mode {other}"),
+    };
+    let srv = Server::start(ServerConfig {
+        artifacts_dir: PathBuf::from(args.str("artifacts")),
+        model: args.str("model").into(),
+        mode,
+        max_batch: args.usize("batch"),
+        max_wait: Duration::from_millis(args.u64("wait-ms")),
+        params_path: None,
+    })?;
+    let kind = match args.str("model") {
+        "tox21" => DatasetKind::Tox21,
+        _ => DatasetKind::Reaction100,
+    };
+    let data = Dataset::generate(kind, args.usize("requests"), 3);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = data.samples.iter().map(|s| srv.submit(s.mol.clone())).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(600))
+            .map_err(|_| anyhow::anyhow!("response timeout"))?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let m = srv.shutdown()?;
+    println!(
+        "{} requests in {secs:.2}s = {:.1} req/s | latency mean {:.2}ms p95 {:.2}ms | \
+         {} batches, occupancy {:.0}%",
+        m.requests,
+        m.requests as f64 / secs,
+        m.mean_latency_us / 1e3,
+        m.p95_latency_us as f64 / 1e3,
+        m.batches,
+        m.mean_occupancy * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_timeline(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chemgcn timeline", "Fig. 11 simulated layer timeline")
+        .opt("batch", "50", "minibatch size")
+        .opt("m", "50", "nodes per graph")
+        .opt("fin", "16", "input feature width")
+        .opt("fout", "64", "output feature width")
+        .opt("z", "2", "nnz per row");
+    let args = parse(&cli, rest)?;
+    let cm = CostModel::default();
+    let (b, m, fi, fo, z) = (
+        args.usize("batch"),
+        args.usize("m"),
+        args.usize("fin"),
+        args.usize("fout"),
+        args.usize("z"),
+    );
+    for (label, batched) in [("non-batched", false), ("batched", true)] {
+        let sim = simulate_layer(&cm, b, m, fi, fo, z, batched);
+        println!(
+            "{label} ({} framework ops, {} launches):",
+            sim.events.len(),
+            sim.launches
+        );
+        println!("{}", render_timeline(&sim, 64));
+    }
+    Ok(())
+}
+
+fn cmd_sim(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chemgcn sim", "simulated-P100 sweep for one figure")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("sweep", "fig8a", "sweep key");
+    let args = parse(&cli, rest)?;
+    let rt = Runtime::new(Path::new(args.str("artifacts")))?;
+    let sw = rt.manifest.sweep(args.str("sweep"))?;
+    let runner = bspmm::bench::figures::FigureRunner::new(&rt);
+    let sim = runner.run_simulated(&sw)?;
+    println!("{}", sim.render());
+    Ok(())
+}

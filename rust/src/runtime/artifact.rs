@@ -1,0 +1,250 @@
+//! `artifacts/manifest.json` — the ABI between `python -m compile.aot`
+//! and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::gcn::config::ModelConfig;
+use crate::runtime::tensor::DType;
+use crate::util::json::{parse, Json};
+
+/// Declared shape/dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            dtype: DType::parse(j.req_str("dtype")?)?,
+            shape: j
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Convenience accessors for the spmm-bench metadata fields.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+}
+
+/// Parsed manifest: artifact map, model configs, and the benchmark
+/// sweep table (shared with aot.py so both sides iterate identical
+/// experimental points).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelConfig>,
+    pub sweeps: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            )
+        })?;
+        Self::parse_str(&text, dir)
+    }
+
+    /// Default artifacts directory: $BSPMM_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> anyhow::Result<Manifest> {
+        let dir = std::env::var("BSPMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn parse_str(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let j = parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for a in j.req_arr("artifacts")? {
+            let spec = ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                inputs: a
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<anyhow::Result<_>>()?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<anyhow::Result<_>>()?,
+                meta: a.get("meta").cloned().unwrap_or(Json::Null),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        let mut models = BTreeMap::new();
+        for m in j.req_arr("models")? {
+            let cfg = ModelConfig::from_json(m)?;
+            cfg.validate()?;
+            models.insert(cfg.name.clone(), cfg);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            models,
+            sweeps: j.get("sweeps").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelConfig> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Sweep parameters for a figure key ("fig8a", ..., "fig10").
+    pub fn sweep(&self, key: &str) -> anyhow::Result<SweepSpec> {
+        let s = self.sweeps.get(key).ok_or_else(|| {
+            anyhow::anyhow!("sweep '{key}' not in manifest")
+        })?;
+        Ok(SweepSpec {
+            key: key.to_string(),
+            dim: s.req_usize("dim")?,
+            z: s.req_usize("z")?,
+            batch: s.req_usize("batch")?,
+            nbs: s
+                .req_arr("nbs")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            mixed: s.get("mixed").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// One row of the SWEEPS table.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub key: String,
+    pub dim: usize,
+    pub z: usize,
+    pub batch: usize,
+    pub nbs: Vec<usize>,
+    pub mixed: bool,
+}
+
+impl SweepSpec {
+    pub fn nnz_cap(&self) -> usize {
+        self.dim * self.z
+    }
+
+    /// Artifact names for one (n_b) point of this sweep.
+    pub fn st_batched(&self, nb: usize) -> String {
+        format!(
+            "spmm_st_d{}_z{}_n{nb}_b{}",
+            self.dim, self.z, self.batch
+        )
+    }
+
+    pub fn csr_batched(&self, nb: usize) -> String {
+        format!(
+            "spmm_csr_d{}_z{}_n{nb}_b{}",
+            self.dim, self.z, self.batch
+        )
+    }
+
+    pub fn gemm_batched(&self, nb: usize) -> String {
+        format!("gemm_d{}_n{nb}_b{}", self.dim, self.batch)
+    }
+
+    pub fn st_single(&self, nb: usize) -> String {
+        format!("spmm_st_d{}_z{}_n{nb}_b1", self.dim, self.z)
+    }
+
+    pub fn csr_single(&self, nb: usize) -> String {
+        format!("spmm_csr_d{}_z{}_n{nb}_b1", self.dim, self.z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Integration-style: if `make artifacts` has run, the real
+        // manifest must parse and contain both models + all sweeps.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("tox21"));
+        assert!(m.models.contains_key("reaction100"));
+        for key in ["fig8a", "fig8b", "fig9a", "fig9f", "fig10"] {
+            let sw = m.sweep(key).unwrap();
+            assert!(!sw.nbs.is_empty());
+            // every referenced artifact must exist
+            for &nb in &sw.nbs {
+                m.artifact(&sw.st_batched(nb)).unwrap();
+                m.artifact(&sw.csr_batched(nb)).unwrap();
+                m.artifact(&sw.gemm_batched(nb)).unwrap();
+                m.artifact(&sw.st_single(nb)).unwrap();
+                m.artifact(&sw.csr_single(nb)).unwrap();
+            }
+        }
+        let t = m.model("tox21").unwrap();
+        assert_eq!(t.max_nodes, 50);
+        assert!(dir.join(&t.init_file).exists());
+    }
+
+    #[test]
+    fn sweep_names_match_aot_convention() {
+        let sw = SweepSpec {
+            key: "fig8a".into(),
+            dim: 50,
+            z: 2,
+            batch: 50,
+            nbs: vec![8],
+            mixed: false,
+        };
+        assert_eq!(sw.st_batched(8), "spmm_st_d50_z2_n8_b50");
+        assert_eq!(sw.csr_single(8), "spmm_csr_d50_z2_n8_b1");
+        assert_eq!(sw.gemm_batched(8), "gemm_d50_n8_b50");
+        assert_eq!(sw.nnz_cap(), 100);
+    }
+}

@@ -1,0 +1,81 @@
+//! The `Runtime`: PJRT client + manifest + lazy executable pool.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::executable::Executable;
+use crate::runtime::tensor::Tensor;
+
+/// Owns the PJRT CPU client and a compile-once cache of executables.
+/// Not `Send` (the underlying client is `Rc`-based): lives on the
+/// coordinator's device thread.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pool: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative compile time (reported by benches: artifact compile is
+    /// a one-time cost, kept out of the steady-state measurements).
+    pub compile_secs: std::cell::Cell<f64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            pool: RefCell::new(HashMap::new()),
+            compile_secs: std::cell::Cell::new(0.0),
+        })
+    }
+
+    /// $BSPMM_ARTIFACTS or ./artifacts.
+    pub fn new_default() -> anyhow::Result<Runtime> {
+        let dir = std::env::var("BSPMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(Path::new(&dir))
+    }
+
+    /// Get (compiling on first use) the named artifact's executable.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.pool.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let exe = Rc::new(Executable::compile(&self.client, &spec, &path)?);
+        self.compile_secs
+            .set(self.compile_secs.get() + t0.elapsed().as_secs_f64());
+        self.pool.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// One-shot convenience: execute artifact `name` on `inputs`.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.executable(name)?.execute(inputs)
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn to_device(&self, t: &Tensor) -> anyhow::Result<xla::PjRtBuffer> {
+        let lit = t.to_literal()?;
+        Ok(self.client.buffer_from_host_literal(None, &lit)?)
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.pool.borrow().len()
+    }
+
+    /// Per-executable dispatch stats: (name, calls, total_secs).
+    pub fn dispatch_stats(&self) -> Vec<(String, u64, f64)> {
+        self.pool
+            .borrow()
+            .iter()
+            .map(|(n, e)| (n.clone(), e.calls.get(), e.total_secs.get()))
+            .collect()
+    }
+}

@@ -1,0 +1,130 @@
+//! One compiled artifact: HLO text -> PJRT executable + typed execute.
+
+use std::time::Instant;
+
+use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::tensor::Tensor;
+
+/// A compiled artifact. Execution validates inputs against the manifest
+/// spec so ABI drift fails loudly instead of producing garbage.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative dispatch statistics (per-executable; the coordinator
+    /// aggregates these into Table IV-style per-op reports).
+    pub calls: std::cell::Cell<u64>,
+    pub total_secs: std::cell::Cell<f64>,
+}
+
+impl Executable {
+    /// Load `<dir>/<file>` HLO text and compile it on `client`.
+    pub fn compile(
+        client: &xla::PjRtClient,
+        spec: &ArtifactSpec,
+        path: &std::path::Path,
+    ) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", spec.name))?;
+        Ok(Executable {
+            spec: spec.clone(),
+            exe,
+            calls: std::cell::Cell::new(0),
+            total_secs: std::cell::Cell::new(0.0),
+        })
+    }
+
+    /// Execute with host tensors; returns the decomposed output tuple.
+    ///
+    /// This is the *non-resident* path: inputs are transferred host ->
+    /// device every call, which is exactly the per-dispatch overhead the
+    /// paper's non-batched baseline pays per kernel launch.
+    pub fn execute(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = Self::collect_outputs(result)?;
+        self.calls.set(self.calls.get() + 1);
+        self.total_secs
+            .set(self.total_secs.get() + t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    /// Execute with device-resident buffers (the optimized hot path for
+    /// iterated calls like training steps: parameters stay on device).
+    /// Returns raw output buffers so the caller can feed them back in.
+    pub fn execute_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+        let t0 = Instant::now();
+        let mut result = self.exe.execute_b(inputs)?;
+        anyhow::ensure!(!result.is_empty(), "no replica output");
+        let outs = result.swap_remove(0);
+        self.calls.set(self.calls.get() + 1);
+        self.total_secs
+            .set(self.total_secs.get() + t0.elapsed().as_secs_f64());
+        Ok(outs)
+    }
+
+    fn collect_outputs(
+        mut result: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(!result.is_empty(), "no replica output");
+        let bufs = result.swap_remove(0);
+        anyhow::ensure!(!bufs.is_empty(), "empty output buffer list");
+        // aot.py lowers with return_tuple=True: one buffer holding the
+        // output tuple.
+        let lit = bufs[0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    fn check_inputs(&self, inputs: &[Tensor]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, expected {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape() == s.shape.as_slice(),
+                "{}: input {i} ('{}') shape {:?} != expected {:?}",
+                self.spec.name,
+                s.name,
+                t.shape(),
+                s.shape
+            );
+            anyhow::ensure!(
+                t.dtype() == s.dtype,
+                "{}: input {i} ('{}') dtype {:?} != expected {:?}",
+                self.spec.name,
+                s.name,
+                t.dtype(),
+                s.dtype
+            );
+        }
+        Ok(())
+    }
+
+    pub fn mean_dispatch_secs(&self) -> f64 {
+        let c = self.calls.get();
+        if c == 0 {
+            0.0
+        } else {
+            self.total_secs.get() / c as f64
+        }
+    }
+}

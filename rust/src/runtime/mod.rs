@@ -1,0 +1,23 @@
+//! PJRT runtime (S5 in DESIGN.md): loads the AOT artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client.
+//!
+//! * [`artifact`] — the manifest (artifact ABI) parser.
+//! * [`tensor`] — host-side tensors and literal marshalling.
+//! * [`executable`] — one compiled artifact + typed execute.
+//! * [`client`] — the `Runtime`: client + lazy executable pool.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`),
+//! so a `Runtime` lives on one thread. The coordinator runs a dedicated
+//! *device thread* that owns the `Runtime` and receives work over
+//! channels — the same structure a real GPU serving stack uses for its
+//! dispatch thread.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod tensor;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::Runtime;
+pub use executable::Executable;
+pub use tensor::Tensor;

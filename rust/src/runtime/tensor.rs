@@ -1,0 +1,147 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+
+/// Data type of an artifact input/output (the manifest only uses these
+/// two; the L2 models are single-precision like the paper's evaluation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// A host tensor: shape + typed flat data (row-major).
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(&[1], vec![v])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to an `xla::Literal` with the right shape.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(&dims, lit.to_vec::<i32>()?)),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        Tensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn accessors_enforce_type() {
+        let t = Tensor::i32(&[2], vec![1, 2]);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Device + software-stack constants for the cost model.
+
+/// Hardware spec plus the framework-overhead constants the paper's
+/// analysis hinges on. Defaults model TSUBAME3.0's Tesla P100-SXM2 with
+//  TensorFlow 1.8 / CUDA 9 (paper §V).
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub sms: usize,
+    pub fp32_cores_per_sm: usize,
+    pub clock_ghz: f64,
+    pub mem_bw_gbs: f64,
+    pub smem_per_sm_kb: usize,
+    /// Max thread blocks resident per SM (occupancy ceiling for the
+    /// small blocks these kernels use).
+    pub max_blocks_per_sm: usize,
+    pub threads_per_block: usize,
+
+    // ---- software-stack constants (calibrated; see cost.rs tests) ----
+    /// TF-1.8 per-op dispatch overhead (session graph executor), us.
+    pub framework_op_us: f64,
+    /// CUDA kernel launch overhead, us.
+    pub launch_us: f64,
+    /// PCIe H2D transfer latency per distinct transfer, us (the paper:
+    /// "our evaluation for batched approaches includes memory transfer
+    /// of pointer arrays from host to device").
+    pub h2d_latency_us: f64,
+    /// Host-side cost to accumulate one matrix's pointers into the
+    /// batched argument arrays, us per matrix.
+    pub host_ptr_us: f64,
+}
+
+impl DeviceSpec {
+    pub fn p100() -> Self {
+        DeviceSpec {
+            name: "Tesla P100-SXM2",
+            sms: 56,
+            fp32_cores_per_sm: 64,
+            clock_ghz: 1.48,
+            mem_bw_gbs: 732.0,
+            smem_per_sm_kb: 64,
+            max_blocks_per_sm: 2, // 32 KB smem per block -> 2 resident
+            threads_per_block: 256,
+            framework_op_us: 16.0,
+            launch_us: 6.0,
+            h2d_latency_us: 9.0,
+            host_ptr_us: 2.0,
+        }
+    }
+
+    /// Peak FP32 throughput in GFLOPS (FMA counts as 2).
+    pub fn peak_gflops(&self) -> f64 {
+        self.sms as f64 * self.fp32_cores_per_sm as f64 * 2.0 * self.clock_ghz
+    }
+
+    /// sm_efficiency for a kernel with `blocks` thread blocks — the
+    /// nvprof metric the paper reports (% of SMs with >= 1 active
+    /// block, time-averaged; for these short kernels one wave
+    /// dominates, so it is blocks/sms capped at 1).
+    pub fn sm_efficiency(&self, blocks: usize) -> f64 {
+        (blocks as f64 / self.sms as f64).min(1.0)
+    }
+
+    /// Number of sequential block waves for `blocks` thread blocks.
+    pub fn waves(&self, blocks: usize) -> f64 {
+        let concurrent = (self.sms * self.max_blocks_per_sm) as f64;
+        (blocks as f64 / concurrent).ceil().max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p100_headline_numbers() {
+        let d = DeviceSpec::p100();
+        // 56 SMs x 64 cores x 2 x 1.48 GHz = 10.6 TFLOPS (P100 spec ~10.6)
+        assert!((d.peak_gflops() - 10_608.6).abs() < 1.0);
+        assert_eq!(d.sms, 56);
+    }
+
+    #[test]
+    fn sm_efficiency_caps_at_one() {
+        let d = DeviceSpec::p100();
+        assert!((d.sm_efficiency(28) - 0.5).abs() < 1e-12);
+        assert_eq!(d.sm_efficiency(500), 1.0);
+    }
+
+    #[test]
+    fn waves_monotone() {
+        let d = DeviceSpec::p100();
+        assert_eq!(d.waves(1), 1.0);
+        assert_eq!(d.waves(112), 1.0);
+        assert_eq!(d.waves(113), 2.0);
+        assert!(d.waves(1000) >= d.waves(500));
+    }
+}

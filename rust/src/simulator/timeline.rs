@@ -1,0 +1,199 @@
+//! Fig. 11 / Table IV: the per-op timeline of one graph-convolution
+//! layer over one minibatch, in both dispatch modes.
+//!
+//! Non-batched (Fig. 6): `batchsize * 3` op dispatches (MatMul, Add,
+//! SpMM per sample, per channel — we follow the paper's figure, which
+//! shows the three ops per sample for one channel).
+//! Batched (Fig. 7): exactly 3 dispatches for the whole minibatch.
+
+use super::cost::{CostModel, OpCost};
+
+/// One op execution in the simulated timeline.
+#[derive(Clone, Debug)]
+pub struct OpEvent {
+    pub op: &'static str,
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+impl OpEvent {
+    pub fn dur_us(&self) -> f64 {
+        self.end_us - self.start_us
+    }
+}
+
+/// Simulated layer execution: events plus per-op aggregates.
+#[derive(Clone, Debug)]
+pub struct LayerSim {
+    pub events: Vec<OpEvent>,
+    pub matmul_us: f64,
+    pub add_us: f64,
+    pub spmm_us: f64,
+    pub launches: usize,
+}
+
+impl LayerSim {
+    pub fn total_us(&self) -> f64 {
+        self.events.last().map(|e| e.end_us).unwrap_or(0.0)
+    }
+}
+
+/// Simulate one graph-convolution layer (Tox21 geometry by default:
+/// m=50, f_in=16, f_out=64, z~2) over a minibatch.
+pub fn simulate_layer(
+    cm: &CostModel,
+    batch: usize,
+    m: usize,
+    f_in: usize,
+    f_out: usize,
+    z: usize,
+    batched: bool,
+) -> LayerSim {
+    let mut events = Vec::new();
+    let mut t = 0.0;
+    let push = |events: &mut Vec<OpEvent>, op: &'static str, cost: &OpCost, t: &mut f64| {
+        let dur = cost.total_us();
+        events.push(OpEvent {
+            op,
+            start_us: *t,
+            end_us: *t + dur,
+        });
+        *t += dur;
+    };
+
+    let mut launches = 0;
+    if batched {
+        // Fig. 7: three device ops for the whole minibatch.
+        let mm = cm.matmul(m * batch, f_in, f_out);
+        push(&mut events, "MatMul", &mm, &mut t);
+        launches += mm.launches;
+        let add = cm.elementwise(m * batch, f_out);
+        push(&mut events, "Add", &add, &mut t);
+        launches += add.launches;
+        let spmm = cm.batched_spmm_st(batch, m, z, f_out);
+        push(&mut events, "SpMM", &spmm, &mut t);
+        launches += spmm.launches;
+    } else {
+        // Fig. 6: per-sample MatMul / Add / SpMM sequences.
+        for _ in 0..batch {
+            let mm = cm.matmul(m, f_in, f_out);
+            push(&mut events, "MatMul", &mm, &mut t);
+            launches += mm.launches;
+            let add = cm.elementwise(m, f_out);
+            push(&mut events, "Add", &add, &mut t);
+            launches += add.launches;
+            let spmm = cm.tf_spmm_op(m, z, f_out);
+            push(&mut events, "SpMM", &spmm, &mut t);
+            launches += spmm.launches;
+        }
+    }
+
+    let sum = |name: &str| -> f64 {
+        events
+            .iter()
+            .filter(|e| e.op == name)
+            .map(OpEvent::dur_us)
+            .sum()
+    };
+    LayerSim {
+        matmul_us: sum("MatMul"),
+        add_us: sum("Add"),
+        spmm_us: sum("SpMM"),
+        launches,
+        events,
+    }
+}
+
+/// Render a Fig. 11-style ASCII timeline (one lane per op kind).
+pub fn render_timeline(sim: &LayerSim, width: usize) -> String {
+    let total = sim.total_us().max(1e-9);
+    let mut out = String::new();
+    for lane in ["MatMul", "Add", "SpMM"] {
+        let mut row = vec![b' '; width];
+        for e in sim.events.iter().filter(|e| e.op == lane) {
+            let s = ((e.start_us / total) * width as f64) as usize;
+            let t = (((e.end_us / total) * width as f64).ceil() as usize).min(width);
+            for c in row.iter_mut().take(t).skip(s.min(width.saturating_sub(1))) {
+                *c = b'#';
+            }
+        }
+        out.push_str(&format!(
+            "{lane:>7} |{}| {:9.1} us\n",
+            String::from_utf8(row).unwrap(),
+            match lane {
+                "MatMul" => sim.matmul_us,
+                "Add" => sim.add_us,
+                _ => sim.spmm_us,
+            }
+        ));
+    }
+    out.push_str(&format!(
+        "  total {:.1} us, {} kernel launches\n",
+        sim.total_us(),
+        sim.launches
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tox21_layer(batched: bool) -> LayerSim {
+        simulate_layer(&CostModel::default(), 50, 50, 16, 64, 2, batched)
+    }
+
+    #[test]
+    fn launch_counts_match_fig11() {
+        // "the non-batched approach requires batchsize*3 = 150 times of
+        // CUDA kernel launches while the batched approach requires only
+        // three" — our TF SpMM op counts its extra init launch, so the
+        // non-batched side is batch*(1+1+2) = 200 raw launches over 150
+        // framework ops; the framework-op count is the Fig. 11 claim.
+        let nb = tox21_layer(false);
+        let b = tox21_layer(true);
+        assert_eq!(nb.events.len(), 150);
+        assert_eq!(b.events.len(), 3);
+        assert!(nb.launches > b.launches * 30);
+    }
+
+    #[test]
+    fn per_op_totals_anchor_table4() {
+        // Paper Table IV [us]: MatMul 1571 -> 31, Add 1316 -> 23,
+        // SpMM 1981 -> 190. Bands are generous: this is a model.
+        let nb = tox21_layer(false);
+        assert!((900.0..2500.0).contains(&nb.matmul_us), "mm {}", nb.matmul_us);
+        assert!((800.0..2200.0).contains(&nb.add_us), "add {}", nb.add_us);
+        assert!((1200.0..2800.0).contains(&nb.spmm_us), "spmm {}", nb.spmm_us);
+        let b = tox21_layer(true);
+        assert!((15.0..60.0).contains(&b.matmul_us), "mm_b {}", b.matmul_us);
+        assert!((15.0..50.0).contains(&b.add_us), "add_b {}", b.add_us);
+        assert!((130.0..260.0).contains(&b.spmm_us), "spmm_b {}", b.spmm_us);
+    }
+
+    #[test]
+    fn batched_layer_much_faster() {
+        let nb = tox21_layer(false);
+        let b = tox21_layer(true);
+        let speedup = nb.total_us() / b.total_us();
+        assert!(speedup > 5.0, "layer speedup only {speedup}");
+    }
+
+    #[test]
+    fn timeline_renders() {
+        let b = tox21_layer(true);
+        let s = render_timeline(&b, 60);
+        assert!(s.contains("MatMul"));
+        assert!(s.contains("launches"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn events_are_contiguous_and_ordered() {
+        let nb = tox21_layer(false);
+        for w in nb.events.windows(2) {
+            assert!(w[0].end_us <= w[1].start_us + 1e-9);
+        }
+        assert!(nb.events.iter().all(|e| e.dur_us() > 0.0));
+    }
+}

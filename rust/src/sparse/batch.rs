@@ -1,0 +1,246 @@
+//! Zero-padded batch layouts — the ABI between the rust coordinator and
+//! the AOT artifacts (DESIGN.md §3).
+//!
+//! JAX artifacts have static shapes, so a batch of variable-shape graphs
+//! is packed into fixed `[B, ...]` buffers:
+//!
+//! * ST padding slots: `val = 0` at `(0, 0)` — contribute nothing.
+//! * CSR padding: `rpt` repeats its final value for rows beyond the true
+//!   row count (empty rows), and slots beyond `rpt[M]` are never read.
+//!
+//! This padding is the measurable analogue of the paper's "redundant
+//! threads terminate immediately" load-imbalance handling; the ablation
+//! bench quantifies its cost.
+
+use super::coo::Coo;
+use crate::util::rng::Rng;
+
+/// Batched, padded SparseTensor: matches artifact inputs
+/// `ids [B, NNZ, 2] i32` and `vals [B, NNZ] f32` (row-major flattening).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PaddedStBatch {
+    pub batch: usize,
+    pub dim: usize,
+    pub nnz_cap: usize,
+    pub ids: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+impl PaddedStBatch {
+    pub fn pack(mats: &[Coo], dim: usize, nnz_cap: usize) -> anyhow::Result<Self> {
+        let batch = mats.len();
+        let mut ids = vec![0i32; batch * nnz_cap * 2];
+        let mut vals = vec![0f32; batch * nnz_cap];
+        for (b, m) in mats.iter().enumerate() {
+            anyhow::ensure!(
+                m.rows <= dim && m.cols <= dim,
+                "matrix {b} is {}x{}, bucket dim {dim}",
+                m.rows,
+                m.cols
+            );
+            anyhow::ensure!(
+                m.nnz() <= nnz_cap,
+                "matrix {b} has nnz {} > cap {nnz_cap}",
+                m.nnz()
+            );
+            for i in 0..m.nnz() {
+                ids[(b * nnz_cap + i) * 2] = m.row_ids[i] as i32;
+                ids[(b * nnz_cap + i) * 2 + 1] = m.col_ids[i] as i32;
+                vals[b * nnz_cap + i] = m.vals[i];
+            }
+        }
+        Ok(Self {
+            batch,
+            dim,
+            nnz_cap,
+            ids,
+            vals,
+        })
+    }
+
+    /// Total *real* non-zeros (excludes padding) — the paper's FLOP
+    /// numerator counts only these.
+    pub fn real_nnz(&self) -> usize {
+        self.vals.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Padding fraction of nnz slots (ablation metric).
+    pub fn pad_fraction(&self) -> f64 {
+        1.0 - self.real_nnz() as f64 / (self.batch * self.nnz_cap) as f64
+    }
+
+    /// Slice one matrix back out (b < batch) for single-dispatch mode.
+    pub fn single(&self, b: usize) -> PaddedStBatch {
+        assert!(b < self.batch);
+        PaddedStBatch {
+            batch: 1,
+            dim: self.dim,
+            nnz_cap: self.nnz_cap,
+            ids: self.ids[b * self.nnz_cap * 2..(b + 1) * self.nnz_cap * 2].to_vec(),
+            vals: self.vals[b * self.nnz_cap..(b + 1) * self.nnz_cap].to_vec(),
+        }
+    }
+}
+
+/// Batched, padded CSR: matches artifact inputs `rpt [B, M+1] i32`,
+/// `colids [B, NNZ] i32`, `vals [B, NNZ] f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PaddedCsrBatch {
+    pub batch: usize,
+    pub dim: usize,
+    pub nnz_cap: usize,
+    pub rpt: Vec<i32>,
+    pub col_ids: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+impl PaddedCsrBatch {
+    pub fn pack(mats: &[Coo], dim: usize, nnz_cap: usize) -> anyhow::Result<Self> {
+        let batch = mats.len();
+        let m1 = dim + 1;
+        let mut rpt = vec![0i32; batch * m1];
+        let mut col_ids = vec![0i32; batch * nnz_cap];
+        let mut vals = vec![0f32; batch * nnz_cap];
+        for (b, m) in mats.iter().enumerate() {
+            anyhow::ensure!(
+                m.rows <= dim && m.cols <= dim,
+                "matrix {b} is {}x{}, bucket dim {dim}",
+                m.rows,
+                m.cols
+            );
+            anyhow::ensure!(
+                m.nnz() <= nnz_cap,
+                "matrix {b} has nnz {} > cap {nnz_cap}",
+                m.nnz()
+            );
+            let csr = m.to_csr();
+            for r in 0..=dim {
+                // Rows past the true row count repeat the final pointer
+                // (empty rows; the kernel's inner loop never runs).
+                rpt[b * m1 + r] = csr.rpt[r.min(m.rows)] as i32;
+            }
+            for i in 0..csr.nnz() {
+                col_ids[b * nnz_cap + i] = csr.col_ids[i] as i32;
+                vals[b * nnz_cap + i] = csr.vals[i];
+            }
+        }
+        Ok(Self {
+            batch,
+            dim,
+            nnz_cap,
+            rpt,
+            col_ids,
+            vals,
+        })
+    }
+
+    pub fn single(&self, b: usize) -> PaddedCsrBatch {
+        assert!(b < self.batch);
+        let m1 = self.dim + 1;
+        PaddedCsrBatch {
+            batch: 1,
+            dim: self.dim,
+            nnz_cap: self.nnz_cap,
+            rpt: self.rpt[b * m1..(b + 1) * m1].to_vec(),
+            col_ids: self.col_ids[b * self.nnz_cap..(b + 1) * self.nnz_cap].to_vec(),
+            vals: self.vals[b * self.nnz_cap..(b + 1) * self.nnz_cap].to_vec(),
+        }
+    }
+}
+
+/// Densified adjacency batch `[B, dim, dim]` — the GEMM baseline input.
+pub fn densify_batch(mats: &[Coo], dim: usize) -> Vec<f32> {
+    let mut out = vec![0f32; mats.len() * dim * dim];
+    for (b, m) in mats.iter().enumerate() {
+        let base = b * dim * dim;
+        for i in 0..m.nnz() {
+            out[base + m.row_ids[i] as usize * dim + m.col_ids[i] as usize] += m.vals[i];
+        }
+    }
+    out
+}
+
+/// Random dense operand batch `[B, dim, n_b]` for the SpMM benches.
+pub fn random_dense_batch(rng: &mut Rng, batch: usize, dim: usize, n_b: usize) -> Vec<f32> {
+    (0..batch * dim * n_b).map(|_| rng.normal()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::random::{random_batch, random_mixed_batch, RandomSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn st_pack_layout() {
+        let mut m = Coo::new(2, 2);
+        m.push(1, 0, 5.0);
+        let b = PaddedStBatch::pack(&[m], 4, 3).unwrap();
+        assert_eq!(b.ids[0], 1);
+        assert_eq!(b.ids[1], 0);
+        assert_eq!(b.vals[0], 5.0);
+        assert_eq!(b.vals[1], 0.0); // padding
+        assert_eq!(b.real_nnz(), 1);
+        assert!((b.pad_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csr_pack_pads_rows_as_empty() {
+        let mut m = Coo::new(2, 2);
+        m.push(0, 1, 1.0);
+        m.push(1, 0, 2.0);
+        let b = PaddedCsrBatch::pack(&[m], 4, 4).unwrap();
+        // rpt = [0,1,2,2,2]: rows 2..4 empty
+        assert_eq!(&b.rpt[..5], &[0, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn pack_rejects_oversize() {
+        let mut m = Coo::new(8, 8);
+        m.push(0, 0, 1.0);
+        assert!(PaddedStBatch::pack(&[m.clone()], 4, 16).is_err()); // dim
+        let mut m2 = Coo::new(2, 2);
+        for _ in 0..5 {
+            m2.push(0, 0, 1.0);
+        }
+        assert!(PaddedStBatch::pack(&[m2], 4, 4).is_err()); // nnz
+    }
+
+    #[test]
+    fn single_extracts_matrix() {
+        let mut rng = Rng::new(6);
+        let mats = random_batch(&mut rng, &RandomSpec::new(8, 2), 5);
+        let st = PaddedStBatch::pack(&mats, 8, 16).unwrap();
+        let one = st.single(3);
+        assert_eq!(one.batch, 1);
+        assert_eq!(one.vals, &st.vals[3 * 16..4 * 16]);
+        let csr = PaddedCsrBatch::pack(&mats, 8, 16).unwrap();
+        let onec = csr.single(2);
+        assert_eq!(onec.rpt, &csr.rpt[2 * 9..3 * 9]);
+    }
+
+    #[test]
+    fn densify_matches_coo_dense() {
+        let mut rng = Rng::new(7);
+        let mats = random_batch(&mut rng, &RandomSpec::new(6, 2), 3);
+        let flat = densify_batch(&mats, 6);
+        for (b, m) in mats.iter().enumerate() {
+            let d = m.to_dense();
+            for r in 0..6 {
+                for c in 0..6 {
+                    assert_eq!(flat[b * 36 + r * 6 + c], d.at(r, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_batch_packs_into_max_bucket() {
+        let mut rng = Rng::new(8);
+        let mats = random_mixed_batch(&mut rng, (4, 16), (1, 3), 20);
+        let st = PaddedStBatch::pack(&mats, 16, 16 * 3).unwrap();
+        assert!(st.pad_fraction() > 0.0);
+        let csr = PaddedCsrBatch::pack(&mats, 16, 16 * 3).unwrap();
+        assert_eq!(csr.rpt.len(), 20 * 17);
+    }
+}

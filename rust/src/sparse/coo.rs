@@ -1,0 +1,159 @@
+//! COO (coordinate) format: `(row, col, val)` triples (paper Fig. 1).
+
+use super::csr::Csr;
+use super::dense::Dense;
+use super::sparse_tensor::SparseTensor;
+
+/// COO sparse matrix. Entries need not be sorted; duplicates accumulate
+/// on multiplication (matching the paper's atomic-add semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ids: Vec<u32>,
+    pub col_ids: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row_ids: Vec::new(),
+            col_ids: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        assert!(r < self.rows && c < self.cols, "({r},{c}) out of bounds");
+        self.row_ids.push(r as u32);
+        self.col_ids.push(c as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Convert to CSR (counting sort by row; stable within a row).
+    pub fn to_csr(&self) -> Csr {
+        let mut counts = vec![0u32; self.rows + 1];
+        for &r in &self.row_ids {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            counts[i + 1] += counts[i];
+        }
+        let rpt = counts.clone();
+        let mut col_ids = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut cursor = rpt.clone();
+        for i in 0..self.nnz() {
+            let r = self.row_ids[i] as usize;
+            let dst = cursor[r] as usize;
+            col_ids[dst] = self.col_ids[i];
+            vals[dst] = self.vals[i];
+            cursor[r] += 1;
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            rpt,
+            col_ids,
+            vals,
+        }
+    }
+
+    /// Convert to the TF-style SparseTensor (interleaved id pairs).
+    pub fn to_sparse_tensor(&self) -> SparseTensor {
+        let mut ids = Vec::with_capacity(self.nnz() * 2);
+        for i in 0..self.nnz() {
+            ids.push(self.row_ids[i]);
+            ids.push(self.col_ids[i]);
+        }
+        SparseTensor {
+            rows: self.rows,
+            cols: self.cols,
+            ids,
+            vals: self.vals.clone(),
+        }
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for i in 0..self.nnz() {
+            *d.at_mut(self.row_ids[i] as usize, self.col_ids[i] as usize) += self.vals[i];
+        }
+        d
+    }
+
+    /// Transpose (swap row/col ids) — the SpMM backward pass operand.
+    pub fn transposed(&self) -> Coo {
+        Coo {
+            rows: self.cols,
+            cols: self.rows,
+            row_ids: self.col_ids.clone(),
+            col_ids: self.row_ids.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        // [[0, 1, 0],
+        //  [2, 0, 3],
+        //  [0, 0, 0]]  (one duplicate on (1,2): 1+2)
+        let mut m = Coo::new(3, 3);
+        m.push(1, 2, 1.0);
+        m.push(0, 1, 1.0);
+        m.push(1, 0, 2.0);
+        m.push(1, 2, 2.0);
+        m
+    }
+
+    #[test]
+    fn to_dense_accumulates_duplicates() {
+        let d = sample().to_dense();
+        assert_eq!(d.at(1, 2), 3.0);
+        assert_eq!(d.at(0, 1), 1.0);
+        assert_eq!(d.at(2, 2), 0.0);
+    }
+
+    #[test]
+    fn csr_roundtrip_same_dense() {
+        let coo = sample();
+        let csr = coo.to_csr();
+        assert_eq!(csr.rpt, vec![0, 1, 4, 4]);
+        assert_eq!(coo.to_dense(), csr.to_dense());
+    }
+
+    #[test]
+    fn sparse_tensor_roundtrip_same_dense() {
+        let coo = sample();
+        assert_eq!(coo.to_dense(), coo.to_sparse_tensor().to_dense());
+    }
+
+    #[test]
+    fn transpose_is_dense_transpose() {
+        let coo = sample();
+        let t = coo.transposed().to_dense();
+        let d = coo.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d.at(r, c), t.at(c, r));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_rejected() {
+        Coo::new(2, 2).push(2, 0, 1.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! CSR (compressed sparse row) format (paper Fig. 1).
+
+use super::coo::Coo;
+use super::dense::Dense;
+
+/// CSR sparse matrix: `rpt[r]..rpt[r+1]` indexes row r's non-zeros.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub rpt: Vec<u32>,
+    pub col_ids: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Validate structural invariants (used by property tests and when
+    /// ingesting external data).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.rpt.len() == self.rows + 1,
+            "rpt length {} != rows+1 {}",
+            self.rpt.len(),
+            self.rows + 1
+        );
+        anyhow::ensure!(self.rpt[0] == 0, "rpt[0] != 0");
+        anyhow::ensure!(
+            self.rpt.windows(2).all(|w| w[0] <= w[1]),
+            "rpt not monotone"
+        );
+        anyhow::ensure!(
+            *self.rpt.last().unwrap() as usize == self.nnz(),
+            "rpt[-1] {} != nnz {}",
+            self.rpt.last().unwrap(),
+            self.nnz()
+        );
+        anyhow::ensure!(self.col_ids.len() == self.vals.len(), "ids/vals mismatch");
+        anyhow::ensure!(
+            self.col_ids.iter().all(|&c| (c as usize) < self.cols),
+            "col id out of range"
+        );
+        Ok(())
+    }
+
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.rpt[r] as usize..self.rpt[r + 1] as usize
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_range(r) {
+                coo.push(r, self.col_ids[i] as usize, self.vals[i]);
+            }
+        }
+        coo
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        self.to_coo().to_dense()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr {
+            rows: 3,
+            cols: 4,
+            rpt: vec![0, 2, 2, 3],
+            col_ids: vec![1, 3, 0],
+            vals: vec![5.0, 6.0, 7.0],
+        }
+    }
+
+    #[test]
+    fn validates_good_matrix() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_rpt() {
+        let mut m = sample();
+        m.rpt[1] = 9;
+        assert!(m.validate().is_err());
+        let mut m2 = sample();
+        m2.rpt = vec![0, 2, 1, 3];
+        assert!(m2.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_col_out_of_range() {
+        let mut m = sample();
+        m.col_ids[0] = 4;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let csr = sample();
+        let back = csr.to_coo().to_csr();
+        assert_eq!(csr, back);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let m = sample();
+        assert_eq!(m.row_range(1), 2..2);
+        assert_eq!(m.to_dense().at(1, 0), 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Row-major dense matrix (the `B`/`C` operands of SpMM).
+
+/// Row-major `rows x cols` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, Vec::len);
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Self {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Zero-pad (or keep) to a larger shape; used when bucketing
+    /// variable-size graphs into fixed artifact shapes.
+    pub fn padded(&self, rows: usize, cols: usize) -> Dense {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut out = Dense::zeros(rows, cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative allclose in the numpy sense.
+    pub fn allclose(&self, other: &Dense, rtol: f32, atol: f32) -> bool {
+        if (self.rows, self.cols) != (other.rows, other.cols) {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_diagonal() {
+        let m = Dense::eye(3);
+        assert_eq!(m.at(1, 1), 1.0);
+        assert_eq!(m.at(0, 2), 0.0);
+    }
+
+    #[test]
+    fn padding_preserves_content() {
+        let m = Dense::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let p = m.padded(3, 4);
+        assert_eq!(p.at(1, 1), 4.0);
+        assert_eq!(p.at(2, 3), 0.0);
+        assert_eq!(p.rows, 3);
+        assert_eq!(p.cols, 4);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Dense::from_rows(vec![vec![1.0, 2.0]]);
+        let mut b = a.clone();
+        b.data[0] += 1e-6;
+        assert!(a.allclose(&b, 1e-4, 1e-4));
+        b.data[0] += 1.0;
+        assert!(!a.allclose(&b, 1e-4, 1e-4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_rejected() {
+        Dense::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Sparse-matrix substrate (paper §II-B/C).
+//!
+//! Formats: [`coo::Coo`], [`csr::Csr`], [`sparse_tensor::SparseTensor`]
+//! (the TensorFlow-style structure the paper's baseline uses), and
+//! [`dense::Dense`] row-major dense matrices. [`batch`] packs many small
+//! matrices into the zero-padded batch layouts the AOT artifacts expect;
+//! [`random`] generates the §V-A randomly-generated workloads; [`ops`]
+//! provides CPU reference multiplications (the correctness oracle on the
+//! rust side, mirroring `python/compile/kernels/ref.py`).
+
+pub mod batch;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod ops;
+pub mod random;
+pub mod sparse_tensor;
+
+pub use batch::{PaddedCsrBatch, PaddedStBatch};
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use sparse_tensor::SparseTensor;

@@ -1,0 +1,129 @@
+//! CPU reference multiplications — the rust-side correctness oracle.
+//!
+//! These follow the paper's pseudocode directly:
+//! * [`spmm_st`] — Fig. 2 `SPARSETENSORDENSEMATMUL` (nnz-major loop,
+//!   accumulate into C; the atomic add is a plain add on one thread).
+//! * [`spmm_csr`] — Fig. 4 row-major CSR SpMM (atomic-free).
+//! * [`gemm`] — the dense baseline (cuBLAS stand-in).
+//!
+//! Every artifact execution in the integration tests is cross-checked
+//! against these.
+
+use super::csr::Csr;
+use super::dense::Dense;
+use super::sparse_tensor::SparseTensor;
+
+/// Fig. 2: C = A @ B with A as SparseTensor.
+pub fn spmm_st(a: &SparseTensor, b: &Dense) -> Dense {
+    assert_eq!(a.cols, b.rows, "inner dim mismatch");
+    let mut c = Dense::zeros(a.rows, b.cols);
+    for i in 0..a.nnz() {
+        let (rid, cid, val) = a.entry(i);
+        let src = b.row(cid);
+        let dst = c.row_mut(rid);
+        for j in 0..src.len() {
+            dst[j] += val * src[j];
+        }
+    }
+    c
+}
+
+/// Fig. 4: C = A @ B with A as CSR (row-major, no races by construction).
+pub fn spmm_csr(a: &Csr, b: &Dense) -> Dense {
+    assert_eq!(a.cols, b.rows, "inner dim mismatch");
+    let mut c = Dense::zeros(a.rows, b.cols);
+    for r in 0..a.rows {
+        let dst = &mut c.data[r * b.cols..(r + 1) * b.cols];
+        for i in a.rpt[r] as usize..a.rpt[r + 1] as usize {
+            let val = a.vals[i];
+            let src = &b.data[a.col_ids[i] as usize * b.cols..][..b.cols];
+            for j in 0..b.cols {
+                dst[j] += val * src[j];
+            }
+        }
+    }
+    c
+}
+
+/// Dense GEMM: C = A @ B (the batched-GEMM baseline, one matrix).
+pub fn gemm(a: &Dense, b: &Dense) -> Dense {
+    assert_eq!(a.cols, b.rows, "inner dim mismatch");
+    let mut c = Dense::zeros(a.rows, b.cols);
+    for r in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(r, k);
+            if av == 0.0 {
+                continue;
+            }
+            let src = b.row(k);
+            let dst = c.row_mut(r);
+            for j in 0..b.cols {
+                dst[j] += av * src[j];
+            }
+        }
+    }
+    c
+}
+
+/// `alpha * x + y` in place over flat f32 buffers (gradient accumulation
+/// in the non-batched training path).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::random::{random_coo, RandomSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn spmm_st_known_values() {
+        // A = [[0,2],[3,0]]; B = [[1,2],[3,4]] => C = [[6,8],[3,6]]
+        let st = SparseTensor {
+            rows: 2,
+            cols: 2,
+            ids: vec![0, 1, 1, 0],
+            vals: vec![2.0, 3.0],
+        };
+        let b = Dense::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let c = spmm_st(&st, &b);
+        assert_eq!(c.data, vec![6.0, 8.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn st_csr_gemm_agree_randomized() {
+        let mut rng = Rng::new(99);
+        for _ in 0..30 {
+            let dim = rng.range(1, 40);
+            let spec = RandomSpec {
+                dim,
+                nnz_per_row: rng.range(1, 5.min(dim)),
+                val_lo: -1.0,
+                val_hi: 1.0,
+            };
+            let coo = random_coo(&mut rng, &spec);
+            let n_b = rng.range(1, 24);
+            let mut b = Dense::zeros(spec.dim, n_b);
+            for v in &mut b.data {
+                *v = rng.normal();
+            }
+            let via_st = spmm_st(&coo.to_sparse_tensor(), &b);
+            let via_csr = spmm_csr(&coo.to_csr(), &b);
+            let via_gemm = gemm(&coo.to_dense(), &b);
+            assert!(via_st.allclose(&via_csr, 1e-5, 1e-5));
+            assert!(via_st.allclose(&via_gemm, 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, vec![10.5, 21.0]);
+    }
+}

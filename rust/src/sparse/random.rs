@@ -1,0 +1,127 @@
+//! Randomly-generated sparse workloads (paper §V-A).
+//!
+//! "Since our target is graph data, the randomly generated sparse
+//! matrices are square. The row size (dim) and nnz/row are parameterized
+//! in generating matrix, and the non-zero pattern is different from each
+//! other."  We reproduce exactly that: square `dim x dim`, `nnz_per_row`
+//! distinct column picks per row, values uniform, every matrix drawn
+//! from a fresh PRNG stream.
+
+use super::coo::Coo;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RandomSpec {
+    pub dim: usize,
+    pub nnz_per_row: usize,
+    pub val_lo: f32,
+    pub val_hi: f32,
+}
+
+impl RandomSpec {
+    pub fn new(dim: usize, nnz_per_row: usize) -> Self {
+        Self {
+            dim,
+            nnz_per_row,
+            val_lo: 0.1,
+            val_hi: 1.0,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.dim * self.nnz_per_row
+    }
+}
+
+/// One random square matrix: every row gets `nnz_per_row` *distinct*
+/// columns (so nnz is exactly `dim * nnz_per_row`, matching the paper's
+/// FLOP accounting `2 * nnz_A * n_B`).
+pub fn random_coo(rng: &mut Rng, spec: &RandomSpec) -> Coo {
+    assert!(spec.nnz_per_row <= spec.dim, "nnz/row > dim");
+    let mut coo = Coo::new(spec.dim, spec.dim);
+    for r in 0..spec.dim {
+        for c in rng.sample_distinct(spec.dim, spec.nnz_per_row) {
+            coo.push(r, c, rng.f32_range(spec.val_lo, spec.val_hi));
+        }
+    }
+    coo
+}
+
+/// A batch of matrices with identical spec but independent patterns
+/// (§V-A preliminary evaluation).
+pub fn random_batch(rng: &mut Rng, spec: &RandomSpec, batch: usize) -> Vec<Coo> {
+    (0..batch).map(|_| random_coo(rng, spec)).collect()
+}
+
+/// Fig. 10's mixed batch: dims uniform in `dims`, nnz/row uniform in
+/// `zs`, independent per matrix.
+pub fn random_mixed_batch(
+    rng: &mut Rng,
+    dims: (usize, usize),
+    zs: (usize, usize),
+    batch: usize,
+) -> Vec<Coo> {
+    (0..batch)
+        .map(|_| {
+            let dim = rng.range(dims.0, dims.1);
+            let z = rng.range(zs.0, zs.1).min(dim);
+            random_coo(rng, &RandomSpec::new(dim, z))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_nnz_and_bounds() {
+        let mut rng = Rng::new(1);
+        let spec = RandomSpec::new(50, 2);
+        let m = random_coo(&mut rng, &spec);
+        assert_eq!(m.nnz(), 100);
+        assert_eq!(m.rows, 50);
+        m.to_sparse_tensor().validate().unwrap();
+        m.to_csr().validate().unwrap();
+    }
+
+    #[test]
+    fn rows_have_distinct_cols() {
+        let mut rng = Rng::new(2);
+        let m = random_coo(&mut rng, &RandomSpec::new(20, 5));
+        let csr = m.to_csr();
+        for r in 0..20 {
+            let mut cols: Vec<u32> = csr.col_ids[csr.row_range(r)].to_vec();
+            let n = cols.len();
+            cols.sort_unstable();
+            cols.dedup();
+            assert_eq!(cols.len(), n, "row {r} has duplicate cols");
+        }
+    }
+
+    #[test]
+    fn patterns_differ_across_batch() {
+        let mut rng = Rng::new(3);
+        let batch = random_batch(&mut rng, &RandomSpec::new(32, 2), 10);
+        assert_eq!(batch.len(), 10);
+        let distinct: std::collections::HashSet<Vec<u32>> =
+            batch.iter().map(|m| m.col_ids.clone()).collect();
+        assert!(distinct.len() > 1, "all patterns identical");
+    }
+
+    #[test]
+    fn mixed_batch_ranges() {
+        let mut rng = Rng::new(4);
+        let batch = random_mixed_batch(&mut rng, (32, 256), (1, 5), 100);
+        assert!(batch.iter().all(|m| (32..=256).contains(&m.rows)));
+        let dims: std::collections::HashSet<usize> = batch.iter().map(|m| m.rows).collect();
+        assert!(dims.len() > 10, "dims not actually mixed");
+    }
+
+    #[test]
+    #[should_panic]
+    fn nnz_per_row_cannot_exceed_dim() {
+        let mut rng = Rng::new(5);
+        random_coo(&mut rng, &RandomSpec::new(3, 4));
+    }
+}

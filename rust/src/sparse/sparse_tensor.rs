@@ -1,0 +1,133 @@
+//! TensorFlow-style `SparseTensor` (paper Fig. 1, §II-B): non-zeros as
+//! an interleaved `[row, col]` id array plus a value array.  The paper
+//! assumes non-zeros are *not* sorted by row or column (§IV) — nothing
+//! here relies on ordering.
+
+use super::coo::Coo;
+use super::dense::Dense;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensor {
+    pub rows: usize,
+    pub cols: usize,
+    /// Interleaved: `ids[2*i]` = row of nnz i, `ids[2*i+1]` = col.
+    pub ids: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl SparseTensor {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.ids.len() == 2 * self.vals.len(),
+            "ids length {} != 2*nnz {}",
+            self.ids.len(),
+            2 * self.vals.len()
+        );
+        for i in 0..self.nnz() {
+            let (r, c) = (self.ids[2 * i] as usize, self.ids[2 * i + 1] as usize);
+            anyhow::ensure!(
+                r < self.rows && c < self.cols,
+                "nnz {i} at ({r},{c}) out of {}x{}",
+                self.rows,
+                self.cols
+            );
+        }
+        Ok(())
+    }
+
+    #[inline]
+    pub fn entry(&self, i: usize) -> (usize, usize, f32) {
+        (
+            self.ids[2 * i] as usize,
+            self.ids[2 * i + 1] as usize,
+            self.vals[i],
+        )
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for i in 0..self.nnz() {
+            let (r, c, v) = self.entry(i);
+            coo.push(r, c, v);
+        }
+        coo
+    }
+
+    pub fn to_dense(&self) -> Dense {
+        self.to_coo().to_dense()
+    }
+
+    /// Transpose = swap each id pair (the SpMM backward operand; this is
+    /// why the ST format makes the fused fwd/bwd batching cheap).
+    pub fn transposed(&self) -> SparseTensor {
+        let mut ids = Vec::with_capacity(self.ids.len());
+        for i in 0..self.nnz() {
+            ids.push(self.ids[2 * i + 1]);
+            ids.push(self.ids[2 * i]);
+        }
+        SparseTensor {
+            rows: self.cols,
+            cols: self.rows,
+            ids,
+            vals: self.vals.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SparseTensor {
+        SparseTensor {
+            rows: 3,
+            cols: 3,
+            ids: vec![1, 2, 0, 1, 1, 0],
+            vals: vec![3.0, 1.0, 2.0],
+        }
+    }
+
+    #[test]
+    fn validate_and_entries() {
+        let st = sample();
+        st.validate().unwrap();
+        assert_eq!(st.entry(0), (1, 2, 3.0));
+        assert_eq!(st.nnz(), 3);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let mut st = sample();
+        st.ids[0] = 3;
+        assert!(st.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_odd_ids() {
+        let mut st = sample();
+        st.ids.pop();
+        assert!(st.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let st = sample();
+        let t = st.transposed().to_dense();
+        let d = st.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d.at(r, c), t.at(c, r));
+            }
+        }
+    }
+
+    #[test]
+    fn coo_roundtrip_dense_equal() {
+        let st = sample();
+        assert_eq!(st.to_dense(), st.to_coo().to_sparse_tensor().to_dense());
+    }
+}

@@ -1,0 +1,230 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed accessors and a generated usage
+//! string. Each binary declares its options up front so `--help` is
+//! accurate.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let d = match (spec.is_flag, spec.default) {
+                (true, _) => String::new(),
+                (false, Some(d)) => format!(" (default: {d})"),
+                (false, None) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse; on `--help` or error, returns Err with a printable message.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // seed defaults
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?
+                            .clone(),
+                    };
+                    args.opts.insert(key, v);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        for spec in &self.specs {
+            if !spec.is_flag && spec.default.is_none() && !args.opts.contains_key(spec.name) {
+                return Err(format!("missing required --{}\n\n{}", spec.name, self.usage()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> &str {
+        self.get(key).unwrap_or_else(|| panic!("option --{key} not declared"))
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: {e}"))
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: {e}"))
+    }
+
+    pub fn f64(&self, key: &str) -> f64 {
+        self.str(key)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{key}: {e}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// Parse `std::env::args` (skipping argv[0]); print-and-exit on --help.
+pub fn parse_or_exit(cli: &Cli) -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("count", "5", "how many")
+            .opt_req("path", "a path")
+            .flag("verbose", "talk more")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        cli().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&["--path", "/x"]).unwrap();
+        assert_eq!(a.usize("count"), 5);
+        assert_eq!(a.str("path"), "/x");
+        assert!(!a.flag("verbose"));
+
+        let a = parse(&["--path=/y", "--count=9", "--verbose"]).unwrap();
+        assert_eq!(a.usize("count"), 9);
+        assert_eq!(a.str("path"), "/y");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn required_enforced() {
+        assert!(parse(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--path", "/x", "--nope", "1"]).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["--path", "/x", "pos1", "pos2"]).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = parse(&["--help"]).unwrap_err();
+        assert!(e.contains("--count"));
+        assert!(e.contains("--path"));
+    }
+}

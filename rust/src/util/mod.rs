@@ -1,0 +1,15 @@
+//! Small self-contained substrates (S11/S12 in DESIGN.md).
+//!
+//! The build environment is offline and the vendored crate set has no
+//! serde/clap/criterion/proptest/rand, so this module provides the
+//! minimal equivalents the rest of the crate needs: a deterministic
+//! PRNG, a JSON parser/writer, descriptive statistics, wall-clock
+//! timing helpers, a CLI argument parser, and a tiny property-testing
+//! harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,82 @@
+//! Wall-clock measurement helpers used by the bench harness.
+
+use std::time::Instant;
+
+/// Time one closure invocation in seconds.
+pub fn time_once<F: FnOnce() -> R, R>(f: F) -> (f64, R) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `iters` measured
+/// runs; returns per-iteration seconds.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Adaptive benchmark: run until `min_time_s` total measured time or
+/// `max_iters`, whichever first (with `warmup` unmeasured runs). This is
+/// the criterion-equivalent driver for our `harness = false` benches.
+pub fn bench_adaptive<F: FnMut()>(
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    min_time_s: f64,
+    mut f: F,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::new();
+    let mut total = 0.0;
+    while out.len() < max_iters && (out.len() < min_iters || total < min_time_s) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        out.push(dt);
+        total += dt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_value() {
+        let (dt, v) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_exact_iters() {
+        let mut n = 0;
+        let samples = bench(2, 5, || n += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(n, 7); // 2 warmup + 5 measured
+    }
+
+    #[test]
+    fn adaptive_respects_bounds() {
+        let samples = bench_adaptive(0, 3, 10, 0.0, || {});
+        assert!(samples.len() >= 3 && samples.len() <= 10);
+        let many = bench_adaptive(0, 1, 10_000, 0.01, || {
+            std::thread::sleep(std::time::Duration::from_micros(100))
+        });
+        assert!(many.len() <= 10_000);
+        let total: f64 = many.iter().sum();
+        assert!(total >= 0.009, "total {total}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration: the serving coordinator end-to-end over real artifacts.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn server(mode: DispatchMode, max_batch: usize, wait_ms: u64) -> Option<Server> {
+    let dir = artifacts_dir()?;
+    Some(
+        Server::start(ServerConfig {
+            artifacts_dir: dir,
+            model: "tox21".into(),
+            mode,
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            params_path: None,
+        })
+        .expect("server start"),
+    )
+}
+
+#[test]
+fn batched_server_answers_all_requests() {
+    let Some(srv) = server(DispatchMode::Batched, 50, 20) else { return };
+    let data = Dataset::generate(DatasetKind::Tox21, 75, 11);
+    let rxs: Vec<_> = data
+        .samples
+        .iter()
+        .map(|s| srv.submit(s.mol.clone()))
+        .collect();
+    let mut ids = std::collections::HashSet::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.logits.len(), 12);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        assert!(ids.insert(resp.id), "duplicate response id");
+    }
+    let m = srv.shutdown().unwrap();
+    assert_eq!(m.requests, 75);
+    // 75 requests into batch-50 buckets: one full + one deadline flush.
+    assert!(m.batches >= 2, "batches {}", m.batches);
+    assert!(m.mean_batch_size > 1.0, "batching never engaged");
+}
+
+#[test]
+fn per_sample_server_matches_batched_logits() {
+    let Some(srv_b) = server(DispatchMode::Batched, 50, 10) else { return };
+    let Some(srv_s) = server(DispatchMode::PerSample, 1, 0) else { return };
+    let data = Dataset::generate(DatasetKind::Tox21, 8, 12);
+
+    let collect = |srv: &Server| -> Vec<Vec<f32>> {
+        let rxs: Vec<_> = data
+            .samples
+            .iter()
+            .map(|s| srv.submit(s.mol.clone()))
+            .collect();
+        rxs.into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap().logits)
+            .collect()
+    };
+    let batched = collect(&srv_b);
+    let single = collect(&srv_s);
+    for (i, (a, b)) in batched.iter().zip(&single).enumerate() {
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-3 + 1e-3 * y.abs(),
+                "request {i} logit {j}: batched {x} vs per-sample {y}"
+            );
+        }
+    }
+    let mb = srv_b.shutdown().unwrap();
+    let ms = srv_s.shutdown().unwrap();
+    // The structural contrast: same work, far fewer device dispatches.
+    assert!(mb.batches < ms.batches, "batched {} !< single {}", mb.batches, ms.batches);
+}
+
+#[test]
+fn server_rejects_unknown_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let err = Server::start(ServerConfig {
+        artifacts_dir: dir,
+        model: "nope".into(),
+        mode: DispatchMode::Batched,
+        max_batch: 50,
+        max_wait: Duration::from_millis(1),
+        params_path: None,
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn server_rejects_unsupported_batch_capacity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let err = Server::start(ServerConfig {
+        artifacts_dir: dir,
+        model: "tox21".into(),
+        mode: DispatchMode::Batched,
+        max_batch: 33, // no fwd artifact with this capacity
+        max_wait: Duration::from_millis(1),
+        params_path: None,
+    });
+    assert!(err.is_err());
+}
+
+#[test]
+fn shutdown_drains_pending_requests() {
+    let Some(srv) = server(DispatchMode::Batched, 50, 10_000) else { return };
+    // Long deadline: requests sit in the queue; shutdown must flush them.
+    let data = Dataset::generate(DatasetKind::Tox21, 5, 13);
+    let rxs: Vec<_> = data
+        .samples
+        .iter()
+        .map(|s| srv.submit(s.mol.clone()))
+        .collect();
+    std::thread::sleep(Duration::from_millis(50));
+    let m = srv.shutdown().unwrap();
+    assert_eq!(m.requests, 5);
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+    }
+}

@@ -1,0 +1,282 @@
+//! Integration: AOT artifacts executed via PJRT must agree with the
+//! pure-rust oracles — the cross-language correctness contract.
+//!
+//! Requires `make artifacts`; every test skips gracefully when the
+//! artifacts are absent so `cargo test` still passes pre-build.
+
+use std::path::Path;
+
+use bspmm::gcn::{params::ParamSet, reference};
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+use bspmm::runtime::{Runtime, Tensor};
+use bspmm::sparse::batch::{densify_batch, random_dense_batch, PaddedCsrBatch, PaddedStBatch};
+use bspmm::sparse::ops;
+use bspmm::sparse::random::{random_batch, RandomSpec};
+use bspmm::sparse::Dense;
+use bspmm::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime init"))
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol + tol * w.abs(),
+            "{what}: index {i}: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn spmm_st_artifact_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(42);
+    let sw = rt.manifest.sweep("fig8a").unwrap();
+    let nb = sw.nbs[0];
+    let mats = random_batch(&mut rng, &RandomSpec::new(sw.dim, sw.z), sw.batch);
+    let st = PaddedStBatch::pack(&mats, sw.dim, sw.nnz_cap()).unwrap();
+    let dense = random_dense_batch(&mut rng, sw.batch, sw.dim, nb);
+
+    let out = rt
+        .run(
+            &sw.st_batched(nb),
+            &[
+                Tensor::i32(&[sw.batch, sw.nnz_cap(), 2], st.ids.clone()),
+                Tensor::f32(&[sw.batch, sw.nnz_cap()], st.vals.clone()),
+                Tensor::f32(&[sw.batch, sw.dim, nb], dense.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    for (bi, m) in mats.iter().enumerate() {
+        let b = Dense {
+            rows: sw.dim,
+            cols: nb,
+            data: dense[bi * sw.dim * nb..(bi + 1) * sw.dim * nb].to_vec(),
+        };
+        let expect = ops::spmm_st(&m.to_sparse_tensor(), &b);
+        assert_close(
+            &got[bi * sw.dim * nb..(bi + 1) * sw.dim * nb],
+            &expect.data,
+            1e-4,
+            &format!("st batch {bi}"),
+        );
+    }
+}
+
+#[test]
+fn spmm_csr_artifact_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(43);
+    let sw = rt.manifest.sweep("fig9e").unwrap();
+    let nb = *sw.nbs.last().unwrap();
+    let mats = random_batch(&mut rng, &RandomSpec::new(sw.dim, sw.z), sw.batch);
+    let csr = PaddedCsrBatch::pack(&mats, sw.dim, sw.nnz_cap()).unwrap();
+    let dense = random_dense_batch(&mut rng, sw.batch, sw.dim, nb);
+
+    let out = rt
+        .run(
+            &sw.csr_batched(nb),
+            &[
+                Tensor::i32(&[sw.batch, sw.dim + 1], csr.rpt.clone()),
+                Tensor::i32(&[sw.batch, sw.nnz_cap()], csr.col_ids.clone()),
+                Tensor::f32(&[sw.batch, sw.nnz_cap()], csr.vals.clone()),
+                Tensor::f32(&[sw.batch, sw.dim, nb], dense.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    for (bi, m) in mats.iter().enumerate() {
+        let b = Dense {
+            rows: sw.dim,
+            cols: nb,
+            data: dense[bi * sw.dim * nb..(bi + 1) * sw.dim * nb].to_vec(),
+        };
+        let expect = ops::spmm_csr(&m.to_csr(), &b);
+        assert_close(
+            &got[bi * sw.dim * nb..(bi + 1) * sw.dim * nb],
+            &expect.data,
+            1e-4,
+            &format!("csr batch {bi}"),
+        );
+    }
+}
+
+#[test]
+fn gemm_artifact_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(44);
+    let sw = rt.manifest.sweep("fig8a").unwrap();
+    let nb = sw.nbs[1];
+    let mats = random_batch(&mut rng, &RandomSpec::new(sw.dim, sw.z), sw.batch);
+    let a = densify_batch(&mats, sw.dim);
+    let dense = random_dense_batch(&mut rng, sw.batch, sw.dim, nb);
+
+    let out = rt
+        .run(
+            &sw.gemm_batched(nb),
+            &[
+                Tensor::f32(&[sw.batch, sw.dim, sw.dim], a),
+                Tensor::f32(&[sw.batch, sw.dim, nb], dense.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for (bi, m) in mats.iter().enumerate() {
+        let b = Dense {
+            rows: sw.dim,
+            cols: nb,
+            data: dense[bi * sw.dim * nb..(bi + 1) * sw.dim * nb].to_vec(),
+        };
+        let expect = ops::gemm(&m.to_dense(), &b);
+        assert_close(
+            &got[bi * sw.dim * nb..(bi + 1) * sw.dim * nb],
+            &expect.data,
+            1e-3,
+            &format!("gemm batch {bi}"),
+        );
+    }
+}
+
+#[test]
+fn single_artifacts_match_batched_slices() {
+    // The non-batched dispatch path must produce the same numbers as the
+    // batched one — the semantics-preservation claim of §IV-C.
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(45);
+    let sw = rt.manifest.sweep("fig8a").unwrap();
+    let nb = sw.nbs[0];
+    let mats = random_batch(&mut rng, &RandomSpec::new(sw.dim, sw.z), 4);
+    let st = PaddedStBatch::pack(&mats, sw.dim, sw.nnz_cap()).unwrap();
+    let dense = random_dense_batch(&mut rng, 4, sw.dim, nb);
+
+    for bi in 0..4 {
+        let one = st.single(bi);
+        let out = rt
+            .run(
+                &sw.st_single(nb),
+                &[
+                    Tensor::i32(&[1, sw.nnz_cap(), 2], one.ids.clone()),
+                    Tensor::f32(&[1, sw.nnz_cap()], one.vals.clone()),
+                    Tensor::f32(
+                        &[1, sw.dim, nb],
+                        dense[bi * sw.dim * nb..(bi + 1) * sw.dim * nb].to_vec(),
+                    ),
+                ],
+            )
+            .unwrap();
+        let got = out[0].as_f32().unwrap();
+        let b = Dense {
+            rows: sw.dim,
+            cols: nb,
+            data: dense[bi * sw.dim * nb..(bi + 1) * sw.dim * nb].to_vec(),
+        };
+        let expect = ops::spmm_st(&mats[bi].to_sparse_tensor(), &b);
+        assert_close(got, &expect.data, 1e-4, &format!("single {bi}"));
+    }
+}
+
+#[test]
+fn model_fwd_artifact_matches_rust_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = rt.manifest.model("tox21").unwrap().clone();
+    let ps = ParamSet::load_init(&cfg, &rt.manifest.dir).unwrap();
+    let data = Dataset::generate(DatasetKind::Tox21, cfg.train_batch, 7);
+    let idx: Vec<usize> = (0..cfg.train_batch).collect();
+    let mb = data.pack_batch(&idx, cfg.max_nodes, cfg.ell_width).unwrap();
+
+    let mut inputs: Vec<Tensor> = Vec::new();
+    for (p, view) in cfg.params.iter().zip(ps.views(&cfg)) {
+        inputs.push(Tensor::f32(&p.shape, view.to_vec()));
+    }
+    inputs.push(Tensor::i32(
+        &[mb.batch, mb.channels, mb.max_nodes, mb.ell_width],
+        mb.ell_cols.clone(),
+    ));
+    inputs.push(Tensor::f32(
+        &[mb.batch, mb.channels, mb.max_nodes, mb.ell_width],
+        mb.ell_vals.clone(),
+    ));
+    inputs.push(Tensor::f32(&[mb.batch, mb.max_nodes, mb.feat_dim], mb.x.clone()));
+    inputs.push(Tensor::f32(&[mb.batch, mb.max_nodes], mb.mask.clone()));
+
+    let out = rt.run(&cfg.artifact_fwd_train, &inputs).unwrap();
+    let got = out[0].as_f32().unwrap();
+    let want = reference::forward(&cfg, &ps, &mb).unwrap();
+    assert_close(got, &want, 2e-3, "tox21 logits");
+}
+
+#[test]
+fn executable_rejects_abi_mismatch() {
+    // Shape/dtype/arity drift between the manifest and caller must fail
+    // loudly, not produce garbage.
+    let Some(rt) = runtime_or_skip() else { return };
+    let sw = rt.manifest.sweep("fig8a").unwrap();
+    let nb = sw.nbs[0];
+    let exe = rt.executable(&sw.st_single(nb)).unwrap();
+    // wrong arity
+    assert!(exe.execute(&[]).is_err());
+    // wrong shape
+    let bad = vec![
+        Tensor::i32(&[1, sw.nnz_cap(), 2], vec![0; sw.nnz_cap() * 2]),
+        Tensor::f32(&[1, sw.nnz_cap()], vec![0.0; sw.nnz_cap()]),
+        Tensor::f32(&[1, sw.dim, nb + 1], vec![0.0; sw.dim * (nb + 1)]),
+    ];
+    assert!(exe.execute(&bad).is_err());
+    // wrong dtype (ids as f32)
+    let bad = vec![
+        Tensor::f32(&[1, sw.nnz_cap(), 2], vec![0.0; sw.nnz_cap() * 2]),
+        Tensor::f32(&[1, sw.nnz_cap()], vec![0.0; sw.nnz_cap()]),
+        Tensor::f32(&[1, sw.dim, nb], vec![0.0; sw.dim * nb]),
+    ];
+    assert!(exe.execute(&bad).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.executable("no_such_artifact").is_err());
+}
+
+#[test]
+fn perf_ablation_variants_agree_numerically() {
+    // loop / vec / fused formulations of the same kernel must produce
+    // identical numbers (the §Perf iterations are perf-only changes).
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(77);
+    let (dim, z, nb, batch) = (50usize, 2usize, 64usize, 50usize);
+    let mats = random_batch(&mut rng, &RandomSpec::new(dim, z), batch);
+    let st = PaddedStBatch::pack(&mats, dim, dim * z).unwrap();
+    let dense = random_dense_batch(&mut rng, batch, dim, nb);
+    let inputs = vec![
+        Tensor::i32(&[batch, dim * z, 2], st.ids.clone()),
+        Tensor::f32(&[batch, dim * z], st.vals.clone()),
+        Tensor::f32(&[batch, dim, nb], dense.clone()),
+    ];
+    let fused = rt
+        .run(&format!("spmm_st_d{dim}_z{z}_n{nb}_b{batch}"), &inputs)
+        .unwrap();
+    for variant in ["loop", "vec"] {
+        let out = rt
+            .run(
+                &format!("spmm_st_{variant}_d{dim}_z{z}_n{nb}_b{batch}"),
+                &inputs,
+            )
+            .unwrap();
+        assert_close(
+            out[0].as_f32().unwrap(),
+            fused[0].as_f32().unwrap(),
+            1e-4,
+            &format!("variant {variant} vs fused"),
+        );
+    }
+}

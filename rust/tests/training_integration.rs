@@ -1,0 +1,112 @@
+//! Integration: training in both dispatch modes over real artifacts.
+
+use std::path::{Path, PathBuf};
+
+use bspmm::coordinator::trainer::{TrainMode, Trainer};
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+use bspmm::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn batched_training_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut tr = Trainer::new(&dir, "tox21").unwrap();
+    let data = Dataset::generate(DatasetKind::Tox21, 200, 21);
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    let mut rng = Rng::new(1);
+
+    let mut first = None;
+    let mut last = 0.0;
+    for epoch in 0..6 {
+        rng.shuffle(&mut idx);
+        let stats = tr
+            .train_epoch(TrainMode::Batched, &data, &idx, 0.02, epoch)
+            .unwrap();
+        first.get_or_insert(stats.mean_loss);
+        last = stats.mean_loss;
+        assert!(stats.mean_loss.is_finite());
+        assert_eq!(stats.dispatches, (200 / tr.cfg.train_batch) as u64);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.9,
+        "loss did not fall: {first} -> {last}"
+    );
+}
+
+#[test]
+fn nonbatched_step_matches_batched_step() {
+    // Identical initial params + identical minibatch => identical new
+    // params (up to accumulation-order rounding). This is the exact
+    // decomposability contract that makes Table II apples-to-apples.
+    let Some(dir) = artifacts_dir() else { return };
+    let data = Dataset::generate(DatasetKind::Tox21, 64, 22);
+    let idx: Vec<usize> = (0..50).collect();
+    let mb = {
+        let tr = Trainer::new(&dir, "tox21").unwrap();
+        data.pack_batch(&idx, tr.cfg.max_nodes, tr.cfg.ell_width).unwrap()
+    };
+
+    let mut tr_b = Trainer::new(&dir, "tox21").unwrap();
+    let loss_b = tr_b.step_batched(&mb, 0.05).unwrap();
+
+    let mut tr_s = Trainer::new(&dir, "tox21").unwrap();
+    let loss_s = tr_s.step_nonbatched(&mb, 0.05).unwrap();
+
+    assert!(
+        (loss_b - loss_s).abs() <= 1e-3 + 1e-3 * loss_b.abs(),
+        "losses diverge: batched {loss_b} vs non-batched {loss_s}"
+    );
+    let max_diff = tr_b
+        .params
+        .data
+        .iter()
+        .zip(&tr_s.params.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 5e-4, "params diverge: max |diff| = {max_diff}");
+    // Dispatch counts tell the Fig. 11 story: 1 vs B+1.
+    assert_eq!(tr_b.dispatches, 1);
+    assert_eq!(tr_s.dispatches, 51);
+}
+
+#[test]
+fn evaluate_reports_sane_metrics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut tr = Trainer::new(&dir, "tox21").unwrap();
+    let data = Dataset::generate(DatasetKind::Tox21, 100, 23);
+    let idx: Vec<usize> = (0..100).collect();
+    let (loss, acc) = tr.evaluate(&data, &idx).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn kfold_training_improves_heldout_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut tr = Trainer::new(&dir, "tox21").unwrap();
+    let data = Dataset::generate(DatasetKind::Tox21, 250, 24);
+    let (train, test) = data.kfold(5, 0);
+    let (_, acc_before) = tr.evaluate(&data, &test).unwrap();
+    let mut idx = train.clone();
+    let mut rng = Rng::new(2);
+    for epoch in 0..5 {
+        rng.shuffle(&mut idx);
+        tr.train_epoch(TrainMode::Batched, &data, &idx, 0.02, epoch)
+            .unwrap();
+    }
+    let (_, acc_after) = tr.evaluate(&data, &test).unwrap();
+    assert!(
+        acc_after > acc_before - 0.02,
+        "held-out accuracy regressed: {acc_before} -> {acc_after}"
+    );
+}
