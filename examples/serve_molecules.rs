@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::util::cli::{parse_or_exit, Cli};
 
@@ -31,6 +31,7 @@ fn run_mode(
         artifacts_dir: PathBuf::from("artifacts"),
         model: "tox21".into(),
         mode,
+        backend: ServeBackend::Pjrt,
         max_batch,
         max_wait: Duration::from_millis(wait_ms),
         params_path: params,

@@ -1,20 +1,39 @@
-//! SpMM micro-benchmark at a single user-chosen point: all five §V-A
-//! approaches, measured (CPU-PJRT) and simulated (P100 cost model).
+//! SpMM micro-benchmark at a single user-chosen point, engine-first:
+//! the four batched-SpMM engine backends (ST / CSR / ELL / dense-GEMM),
+//! serial fallback vs the sample-parallel executor — plus, when the AOT
+//! artifacts exist, the five measured + simulated §V-A series.
 //!
-//!     cargo run --release --example spmm_microbench -- --sweep fig8a --nb 64
+//!     cargo run --release --example spmm_microbench -- --sweep fig8b --nb 64
+//!     cargo run --release --example spmm_microbench -- --threads 4
+//!
+//! No artifacts are required for the engine series: sweep geometry
+//! falls back to the built-in copy of the aot.py table.
 
-use bspmm::bench::figures::FigureRunner;
+use bspmm::bench::figures::{engine_speedup_summary, run_engine_bench, FigureRunner};
+use bspmm::bench::BenchOpts;
+use bspmm::runtime::artifact::SweepSpec;
 use bspmm::runtime::Runtime;
 use bspmm::util::cli::{parse_or_exit, Cli};
 
 fn main() -> anyhow::Result<()> {
     let cli = Cli::new("spmm_microbench", "one-point SpMM comparison")
-        .opt("sweep", "fig8a", "sweep key: fig8a|fig8b|fig9a..fig9f|fig10")
-        .opt("nb", "64", "dense input width n_B (must exist in the sweep)");
+        .opt("sweep", "fig8b", "sweep key: fig8a|fig8b|fig9a..fig9f|fig10")
+        .opt("nb", "64", "dense input width n_B (must exist in the sweep)")
+        .opt("threads", "0", "parallel executor threads (0 = one per core)");
     let args = parse_or_exit(&cli);
 
-    let rt = Runtime::new_default()?;
-    let mut sw = rt.manifest.sweep(args.str("sweep"))?;
+    let rt = match Runtime::new_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            println!("note: PJRT runtime unavailable — engine series only ({e:#})\n");
+            None
+        }
+    };
+    let key = args.str("sweep");
+    let mut sw = match &rt {
+        Some(rt) => rt.manifest.sweep(key)?,
+        None => SweepSpec::builtin(key)?,
+    };
     let nb = args.usize("nb");
     anyhow::ensure!(
         sw.nbs.contains(&nb),
@@ -24,10 +43,19 @@ fn main() -> anyhow::Result<()> {
     );
     sw.nbs = vec![nb];
 
-    let runner = FigureRunner::new(&rt);
-    let measured = runner.run_measured(&sw)?;
-    println!("{}", measured.render());
-    let sim = runner.run_simulated(&sw)?;
-    println!("{}", sim.render());
+    // Engine backends: one dispatch per whole batch, serial vs parallel.
+    let opts = BenchOpts::from_env();
+    let engine = run_engine_bench(&sw, args.usize("threads"), &opts)?;
+    println!("{}", engine.render());
+    print!("{}", engine_speedup_summary(&engine));
+    println!();
+
+    if let Some(rt) = &rt {
+        let runner = FigureRunner::new(rt);
+        let measured = runner.run_measured(&sw)?;
+        println!("{}", measured.render());
+        let sim = runner.run_simulated(&sw)?;
+        println!("{}", sim.render());
+    }
     Ok(())
 }

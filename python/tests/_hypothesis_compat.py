@@ -1,0 +1,64 @@
+"""Deterministic stand-in for `hypothesis` (gate, don't install).
+
+The offline image carries no `hypothesis`, which used to fail the whole
+suite at *collection* time. This shim re-exports the real library when
+it is installed; otherwise it provides the tiny subset the suite uses
+(`given`, `settings`, `strategies.integers`, `strategies.sampled_from`)
+backed by a seeded random sweep, so the property tests still execute a
+meaningful number of deterministic examples.
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies
+except ModuleNotFoundError:
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 15
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # No functools.wraps: pytest must see a zero-arg signature,
+            # not the property's drawn parameters (it would treat them
+            # as fixtures).
+            def wrapper():
+                # `@settings` sits above `@given`, so it annotates this
+                # wrapper; read the budget at call time.
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(0xB5F3 ^ len(fn.__qualname__))
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(*drawn, **drawn_kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+st = strategies

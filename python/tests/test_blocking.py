@@ -6,7 +6,7 @@ and cache-blocking formulas, and these tests pin the contract.
 """
 
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, strategies as st
 
 from compile.kernels import blocking
 

@@ -8,7 +8,7 @@ artifacts embed these kernels verbatim).
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from compile.kernels import batched_spmm_csr, batched_spmm_st, ref
 

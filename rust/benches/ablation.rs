@@ -15,7 +15,7 @@ use std::time::Duration;
 use bspmm::bench::report::{render_comparison, save_json};
 use bspmm::bench::workload::SpmmWorkload;
 use bspmm::bench::BenchOpts;
-use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::runtime::artifact::SweepSpec;
 use bspmm::runtime::Runtime;
@@ -114,6 +114,7 @@ fn a3_batcher_deadline() -> anyhow::Result<Json> {
             artifacts_dir: PathBuf::from("artifacts"),
             model: "tox21".into(),
             mode: DispatchMode::Batched,
+            backend: ServeBackend::Pjrt,
             max_batch: 50,
             max_wait: Duration::from_millis(wait_ms),
             params_path: None,

@@ -14,7 +14,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use bspmm::bench::report::{render_comparison, save_json};
-use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::util::json::{num, obj, Json};
 
@@ -38,6 +38,7 @@ fn run_mode(
         artifacts_dir: PathBuf::from("artifacts"),
         model: kind.model_name().into(),
         mode,
+        backend: ServeBackend::Pjrt,
         max_batch,
         max_wait: Duration::from_millis(5),
         params_path: None,

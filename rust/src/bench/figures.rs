@@ -1,6 +1,10 @@
 //! The five-series SpMM comparison behind Figs. 8, 9 and 10.
 //!
-//! Every sweep point is produced twice:
+//! Every sweep point is produced up to three ways:
+//! * **engine** — the in-process batched-SpMM engine
+//!   (`sparse::engine`): all four backends, serial fallback vs the
+//!   sample-parallel executor. Needs no artifacts, so this series runs
+//!   everywhere;
 //! * **measured** — real executions on the CPU-PJRT runtime, where
 //!   per-execute dispatch overhead plays the role CUDA launch overhead
 //!   plays in the paper (DESIGN.md §2);
@@ -13,6 +17,7 @@ use crate::bench::BenchOpts;
 use crate::runtime::artifact::SweepSpec;
 use crate::runtime::Runtime;
 use crate::simulator::cost::CostModel;
+use crate::sparse::engine::{BatchedSpmm, Executor, Rhs};
 use crate::util::timer;
 
 /// Approach names, in the paper's legend order.
@@ -23,6 +28,112 @@ pub const APPROACHES: [&str; 5] = [
     "BatchedSpMM(CSR)",
     "BatchedGEMM",
 ];
+
+/// Engine backend names, in `SpmmWorkload` accessor order.
+pub const ENGINE_BACKENDS: [&str; 4] = ["Engine-ST", "Engine-CSR", "Engine-ELL", "Engine-GEMM"];
+
+/// Benchmark the four engine backends at every sweep point, serial
+/// executor vs `threads`-wide parallel executor (`0` = one per core).
+/// Series come in (serial, parallel) pairs per backend; no runtime or
+/// artifacts are needed.
+pub fn run_engine_bench(
+    sw: &SweepSpec,
+    threads: usize,
+    opts: &BenchOpts,
+) -> anyhow::Result<FigureResult> {
+    let par = Executor::auto(threads);
+    let execs = [Executor::serial(), par];
+    let labels = ["serial".to_string(), format!("{}t", par.threads())];
+    let mut series: Vec<Series> = Vec::new();
+    for backend in ENGINE_BACKENDS {
+        for label in &labels {
+            series.push(Series {
+                name: format!("{backend}({label})"),
+                values: Vec::new(),
+            });
+        }
+    }
+    for &nb in &sw.nbs {
+        let w = SpmmWorkload::build(sw, nb)?;
+        let stk = w.st_kernel();
+        let csrk = w.csr_kernel();
+        let ellk = w.ell_kernel();
+        let gemk = w.gemm_kernel();
+        let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+        for (ki, kernel) in kernels.iter().enumerate() {
+            for (ei, exec) in execs.iter().enumerate() {
+                let mut out = vec![0f32; kernel.batch() * kernel.out_rows() * nb];
+                // The zero-fill resets the += accumulation and must stay
+                // outside the timed window (at large n_B it is a serial
+                // memset that would otherwise dominate the measurement).
+                let mut sample_once = || {
+                    out.fill(0.0);
+                    let t0 = std::time::Instant::now();
+                    exec.dispatch(*kernel, Rhs::PerSample(&w.dense), nb, &mut out)
+                        .expect("engine dispatch");
+                    t0.elapsed().as_secs_f64()
+                };
+                for _ in 0..opts.warmup {
+                    sample_once();
+                }
+                let mut samples: Vec<f64> = Vec::new();
+                let mut total = 0.0;
+                while samples.len() < opts.max_iters.max(1)
+                    && (samples.len() < opts.min_iters || total < opts.min_time_s)
+                {
+                    let dt = sample_once();
+                    samples.push(dt);
+                    total += dt;
+                }
+                let t = samples.iter().sum::<f64>() / samples.len() as f64;
+                series[ki * execs.len() + ei].values.push(w.gflops(t));
+            }
+        }
+    }
+    Ok(FigureResult {
+        key: format!("{}_engine", sw.key),
+        title: format!(
+            "Batched-SpMM engine, CPU (dim={}, nnz/row={}, batch={}{})",
+            sw.dim,
+            sw.z,
+            sw.batch,
+            if sw.mixed { ", mixed" } else { "" }
+        ),
+        x_label: "n_B".into(),
+        xs: sw.nbs.iter().map(|&n| n as f64).collect(),
+        y_label: "GFLOPS (2*nnz*n_B/t)".into(),
+        series,
+    })
+}
+
+/// Per-backend serial -> parallel speedup lines for an engine figure
+/// (series arranged in (serial, parallel) pairs, as `run_engine_bench`
+/// emits them).
+pub fn engine_speedup_summary(f: &FigureResult) -> String {
+    let best = |s: &Series| {
+        s.values
+            .iter()
+            .cloned()
+            .filter(|v| v.is_finite())
+            .fold(f64::MIN, f64::max)
+    };
+    let mut out = String::new();
+    for pair in f.series.chunks(2) {
+        if pair.len() != 2 {
+            continue;
+        }
+        let (s, p) = (best(&pair[0]), best(&pair[1]));
+        if s > 0.0 && p > 0.0 {
+            out.push_str(&format!(
+                "  {} {s:.3} -> {} {p:.3} GFLOPS: {:.2}x parallel speedup\n",
+                pair[0].name,
+                pair[1].name,
+                p / s
+            ));
+        }
+    }
+    out
+}
 
 pub struct FigureRunner<'a> {
     pub rt: &'a Runtime,
@@ -147,110 +258,147 @@ impl<'a> FigureRunner<'a> {
 
     /// Simulated-P100 series for the same sweep (`<key>_sim_p100`).
     pub fn run_simulated(&self, sw: &SweepSpec) -> anyhow::Result<FigureResult> {
-        let cm = &self.cm;
-        let mut series: Vec<Series> = APPROACHES
-            .iter()
-            .map(|n| Series {
-                name: n.to_string(),
-                values: Vec::new(),
-            })
-            .collect();
-        for &nb in &sw.nbs {
-            let w = SpmmWorkload::build(sw, nb)?;
-            let gf = |total_us: f64| {
-                2.0 * w.real_nnz as f64 * nb as f64 / (total_us * 1e3)
-            };
-            // Non-batched: per-matrix ops at each matrix's true size
-            // (for mixed batches the per-matrix dims differ).
-            let tf_us: f64 = w
-                .mats
-                .iter()
-                .map(|m| {
-                    cm.tf_spmm_op(m.rows, (m.nnz() / m.rows.max(1)).max(1), nb)
-                        .total_us()
-                })
-                .sum();
-            series[0].values.push(gf(tf_us));
-            let cu_us: f64 = w
-                .mats
-                .iter()
-                .map(|m| {
-                    cm.cusparse_op(m.rows, (m.nnz() / m.rows.max(1)).max(1), nb)
-                        .total_us()
-                })
-                .sum();
-            series[1].values.push(gf(cu_us));
-            // Batched: the padded bucket geometry (what the kernel sees).
-            series[2]
-                .values
-                .push(gf(cm.batched_spmm_st(w.batch, w.dim, w.z, nb).total_us()));
-            series[3]
-                .values
-                .push(gf(cm.batched_spmm_csr(w.batch, w.dim, w.z, nb).total_us()));
-            if self.with_gemm {
-                series[4]
-                    .values
-                    .push(gf(cm.batched_gemm(w.batch, w.dim, nb).total_us()));
-            } else {
-                series[4].values.push(f64::NAN);
-            }
-        }
-        Ok(FigureResult {
-            key: format!("{}_sim_p100", sw.key),
-            title: format!(
-                "SpMM throughput, simulated P100 (dim={}, nnz/row={}, batch={}{})",
-                sw.dim,
-                sw.z,
-                sw.batch,
-                if sw.mixed { ", mixed" } else { "" }
-            ),
-            x_label: "n_B".into(),
-            xs: sw.nbs.iter().map(|&n| n as f64).collect(),
-            y_label: "GFLOPS (2*nnz*n_B/t)".into(),
-            series,
-        })
+        run_simulated_sweep(&self.cm, sw, self.with_gemm)
     }
 }
 
-/// Shared driver for the fig8/fig9/fig10 bench binaries: run measured
-/// + simulated sweeps for each key, print, and save JSON results.
+/// Simulated-P100 series for a sweep — needs only the cost model, so it
+/// runs without artifacts or a runtime.
+pub fn run_simulated_sweep(
+    cm: &CostModel,
+    sw: &SweepSpec,
+    with_gemm: bool,
+) -> anyhow::Result<FigureResult> {
+    let mut series: Vec<Series> = APPROACHES
+        .iter()
+        .map(|n| Series {
+            name: n.to_string(),
+            values: Vec::new(),
+        })
+        .collect();
+    for &nb in &sw.nbs {
+        let w = SpmmWorkload::build(sw, nb)?;
+        let gf = |total_us: f64| 2.0 * w.real_nnz as f64 * nb as f64 / (total_us * 1e3);
+        // Non-batched: per-matrix ops at each matrix's true size
+        // (for mixed batches the per-matrix dims differ).
+        let tf_us: f64 = w
+            .mats
+            .iter()
+            .map(|m| {
+                cm.tf_spmm_op(m.rows, (m.nnz() / m.rows.max(1)).max(1), nb)
+                    .total_us()
+            })
+            .sum();
+        series[0].values.push(gf(tf_us));
+        let cu_us: f64 = w
+            .mats
+            .iter()
+            .map(|m| {
+                cm.cusparse_op(m.rows, (m.nnz() / m.rows.max(1)).max(1), nb)
+                    .total_us()
+            })
+            .sum();
+        series[1].values.push(gf(cu_us));
+        // Batched: the padded bucket geometry (what the kernel sees).
+        series[2]
+            .values
+            .push(gf(cm.batched_spmm_st(w.batch, w.dim, w.z, nb).total_us()));
+        series[3]
+            .values
+            .push(gf(cm.batched_spmm_csr(w.batch, w.dim, w.z, nb).total_us()));
+        if with_gemm {
+            series[4]
+                .values
+                .push(gf(cm.batched_gemm(w.batch, w.dim, nb).total_us()));
+        } else {
+            series[4].values.push(f64::NAN);
+        }
+    }
+    Ok(FigureResult {
+        key: format!("{}_sim_p100", sw.key),
+        title: format!(
+            "SpMM throughput, simulated P100 (dim={}, nnz/row={}, batch={}{})",
+            sw.dim,
+            sw.z,
+            sw.batch,
+            if sw.mixed { ", mixed" } else { "" }
+        ),
+        x_label: "n_B".into(),
+        xs: sw.nbs.iter().map(|&n| n as f64).collect(),
+        y_label: "GFLOPS (2*nnz*n_B/t)".into(),
+        series,
+    })
+}
+
+/// Shared driver for the fig8/fig9/fig10 bench binaries: run the engine
+/// series (always), plus measured CPU-PJRT series when artifacts exist,
+/// plus the simulated-P100 series; print and save JSON results. Without
+/// artifacts the sweep geometry comes from `SweepSpec::builtin`.
 pub fn run_figure_bench(keys: &[&str], with_gemm: bool) -> anyhow::Result<()> {
-    let rt = Runtime::new_default()?;
-    let mut runner = FigureRunner::new(&rt);
-    runner.with_gemm = with_gemm;
+    let opts = BenchOpts::from_env();
+    let rt = match Runtime::new_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            // Don't conflate "not built" with a broken manifest — print
+            // the real reason the measured series is being skipped.
+            println!("(PJRT runtime unavailable — engine + simulated series only: {e:#})\n");
+            None
+        }
+    };
     for key in keys {
-        let sw = rt.manifest.sweep(key)?;
-        let measured = runner.run_measured(&sw)?;
-        println!("{}", measured.render());
-        let path = measured.save()?;
-        println!("  -> {}\n", path.display());
-        let sim = runner.run_simulated(&sw)?;
-        println!("{}", sim.render());
-        let path = sim.save()?;
-        println!("  -> {}\n", path.display());
-        // Headline ratio: best batched vs best non-batched, measured.
-        let best_batched = |f: &FigureResult| -> f64 {
-            f.series[2..]
-                .iter()
-                .flat_map(|s| s.values.iter())
-                .cloned()
-                .filter(|v| v.is_finite())
-                .fold(f64::MIN, f64::max)
+        let sw = match &rt {
+            Some(rt) => rt.manifest.sweep(key)?,
+            None => SweepSpec::builtin(key)?,
         };
-        let best_nonbatched = |f: &FigureResult| -> f64 {
-            f.series[..2]
-                .iter()
-                .flat_map(|s| s.values.iter())
-                .cloned()
-                .filter(|v| v.is_finite())
-                .fold(f64::MIN, f64::max)
-        };
-        let (bb, bn) = (best_batched(&measured), best_nonbatched(&measured));
-        if bb > 0.0 && bn > 0.0 {
-            println!(
-                "  {key}: measured peak batched/non-batched speedup = {:.2}x\n",
-                bb / bn
-            );
+
+        // Engine series: every backend, serial vs parallel executor.
+        let engine = run_engine_bench(&sw, 0, &opts)?;
+        println!("{}", engine.render());
+        let path = engine.save()?;
+        println!("  -> {}\n", path.display());
+        print!("{}", engine_speedup_summary(&engine));
+        println!();
+
+        if let Some(rt) = &rt {
+            let mut runner = FigureRunner::new(rt);
+            runner.with_gemm = with_gemm;
+            let measured = runner.run_measured(&sw)?;
+            println!("{}", measured.render());
+            let path = measured.save()?;
+            println!("  -> {}\n", path.display());
+            let sim = runner.run_simulated(&sw)?;
+            println!("{}", sim.render());
+            let path = sim.save()?;
+            println!("  -> {}\n", path.display());
+            // Headline ratio: best batched vs best non-batched, measured.
+            let best_batched = |f: &FigureResult| -> f64 {
+                f.series[2..]
+                    .iter()
+                    .flat_map(|s| s.values.iter())
+                    .cloned()
+                    .filter(|v| v.is_finite())
+                    .fold(f64::MIN, f64::max)
+            };
+            let best_nonbatched = |f: &FigureResult| -> f64 {
+                f.series[..2]
+                    .iter()
+                    .flat_map(|s| s.values.iter())
+                    .cloned()
+                    .filter(|v| v.is_finite())
+                    .fold(f64::MIN, f64::max)
+            };
+            let (bb, bn) = (best_batched(&measured), best_nonbatched(&measured));
+            if bb > 0.0 && bn > 0.0 {
+                println!(
+                    "  {key}: measured peak batched/non-batched speedup = {:.2}x\n",
+                    bb / bn
+                );
+            }
+        } else {
+            let sim = run_simulated_sweep(&CostModel::default(), &sw, with_gemm)?;
+            println!("{}", sim.render());
+            let path = sim.save()?;
+            println!("  -> {}\n", path.display());
         }
     }
     Ok(())
@@ -278,5 +426,29 @@ mod tests {
         let cm = CostModel::default();
         let t = cm.batched_spmm_st(w.batch, w.dim, w.z, 16).total_us();
         assert!(t > 0.0);
+        let f = run_simulated_sweep(&cm, &sw, true).unwrap();
+        assert_eq!(f.series.len(), 5);
+        assert!(f.series[2].values.iter().all(|v| *v > 0.0));
+    }
+
+    #[test]
+    fn engine_bench_runs_without_artifacts() {
+        let mut sw = SweepSpec::builtin("fig8a").unwrap();
+        // Keep the test fast: one tiny point, one iteration.
+        sw.batch = 8;
+        sw.nbs = vec![8];
+        let opts = BenchOpts {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time_s: 0.0,
+        };
+        let f = run_engine_bench(&sw, 2, &opts).unwrap();
+        assert_eq!(f.series.len(), ENGINE_BACKENDS.len() * 2);
+        assert!(f
+            .series
+            .iter()
+            .all(|s| s.values.len() == 1 && s.values[0] > 0.0));
+        assert!(!engine_speedup_summary(&f).is_empty());
     }
 }

@@ -5,9 +5,10 @@
 use crate::runtime::artifact::SweepSpec;
 use crate::runtime::Tensor;
 use crate::sparse::batch::{
-    densify_batch, random_dense_batch, PaddedCsrBatch, PaddedStBatch,
+    densify_batch, random_dense_batch, PaddedCsrBatch, PaddedEllBatch, PaddedStBatch,
 };
 use crate::sparse::coo::Coo;
+use crate::sparse::engine::{CsrKernel, EllKernel, GemmKernel, StKernel};
 use crate::sparse::random::{random_batch, random_mixed_batch, RandomSpec};
 use crate::util::rng::Rng;
 
@@ -24,6 +25,7 @@ pub struct SpmmWorkload {
     pub mats: Vec<Coo>,
     pub st: PaddedStBatch,
     pub csr: PaddedCsrBatch,
+    pub ell: PaddedEllBatch,
     pub dense: Vec<f32>,
     pub a_dense: Vec<f32>,
 }
@@ -45,6 +47,7 @@ impl SpmmWorkload {
         let real_nnz = mats.iter().map(Coo::nnz).sum();
         let st = PaddedStBatch::pack(&mats, sw.dim, nnz_cap)?;
         let csr = PaddedCsrBatch::pack(&mats, sw.dim, nnz_cap)?;
+        let ell = PaddedEllBatch::pack_auto(&mats, sw.dim)?;
         let dense = random_dense_batch(&mut rng, sw.batch, sw.dim, nb);
         let a_dense = densify_batch(&mats, sw.dim);
         Ok(SpmmWorkload {
@@ -57,9 +60,30 @@ impl SpmmWorkload {
             mats,
             st,
             csr,
+            ell,
             dense,
             a_dense,
         })
+    }
+
+    /// Engine backend over the ST batch (whole workload, one dispatch).
+    pub fn st_kernel(&self) -> StKernel<'_> {
+        StKernel::new(&self.st)
+    }
+
+    /// Engine backend over the CSR batch.
+    pub fn csr_kernel(&self) -> CsrKernel<'_> {
+        CsrKernel::new(&self.csr)
+    }
+
+    /// Engine backend over the ELL batch.
+    pub fn ell_kernel(&self) -> EllKernel<'_> {
+        EllKernel::from_padded(&self.ell)
+    }
+
+    /// Engine dense-GEMM baseline over the densified batch.
+    pub fn gemm_kernel(&self) -> GemmKernel<'_> {
+        GemmKernel::new(&self.a_dense, self.batch, self.dim, self.dim)
     }
 
     /// Inputs for the batched ST artifact.
@@ -174,6 +198,30 @@ mod tests {
         let w = SpmmWorkload::build(&sw, 16).unwrap();
         assert!(w.real_nnz < w.batch * w.nnz_cap);
         assert!(w.mats.iter().all(|m| m.rows <= 64));
+    }
+
+    #[test]
+    fn engine_kernels_see_identical_matrices() {
+        use crate::sparse::engine::{BatchedSpmm, Executor, Rhs};
+        let w = SpmmWorkload::build(&sweep(), 8).unwrap();
+        let exec = Executor::serial();
+        let stk = w.st_kernel();
+        let reference = exec.spmm(&stk, Rhs::PerSample(&w.dense), w.nb).unwrap();
+        let csrk = w.csr_kernel();
+        let ellk = w.ell_kernel();
+        let gemk = w.gemm_kernel();
+        let others: [&dyn BatchedSpmm; 3] = [&csrk, &ellk, &gemk];
+        for k in others {
+            let got = exec.spmm(k, Rhs::PerSample(&w.dense), w.nb).unwrap();
+            for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert!(
+                    (g - r).abs() <= 1e-5 + 1e-5 * r.abs(),
+                    "{} elem {i}: {g} vs {r}",
+                    k.name()
+                );
+            }
+            assert_eq!(k.real_nnz(), w.real_nnz, "{}", k.name());
+        }
     }
 
     #[test]

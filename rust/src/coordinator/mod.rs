@@ -4,19 +4,25 @@
 //! * [`request`] — inference request/response types.
 //! * [`batcher`] — the dynamic batch assembler (size + deadline policy);
 //!   pure data structure, property-tested.
-//! * [`server`] — the serving runtime: a device thread owning the PJRT
-//!   `Runtime`, assembling batches and dispatching either one batched
-//!   execute (Fig. 7) or per-sample executes (Fig. 6).
-//! * [`trainer`] — the training loop in both dispatch modes (Table II).
+//! * [`dispatch`] — the host-engine forward path: model execution over
+//!   the batched-SpMM engine (`sparse::engine`), no artifacts needed.
+//! * [`server`] — the serving runtime: a device thread owning the
+//!   execution backend (PJRT artifacts or host engine), assembling
+//!   batches and dispatching either one batched execute (Fig. 7) or
+//!   per-sample executes (Fig. 6).
+//! * [`trainer`] — the training loop in both dispatch modes (Table II);
+//!   forward/evaluate also run on the host engine.
 //! * [`metrics`] — latency/throughput/occupancy accounting.
 
 pub mod batcher;
+pub mod dispatch;
 pub mod metrics;
 pub mod request;
 pub mod server;
 pub mod trainer;
 
 pub use batcher::{BatchAssembler, BatchPolicy};
+pub use dispatch::HostDispatcher;
 pub use request::{InferRequest, InferResponse};
-pub use server::{DispatchMode, Server, ServerConfig};
+pub use server::{DispatchMode, ServeBackend, Server, ServerConfig};
 pub use trainer::{TrainMode, Trainer};

@@ -1,16 +1,24 @@
-//! The serving runtime: a dedicated device thread that owns the PJRT
-//! `Runtime`, assembles dynamic batches, and dispatches inference.
+//! The serving runtime: a dedicated device thread that owns the
+//! execution backend, assembles dynamic batches, and dispatches
+//! inference.
 //!
 //! Two dispatch modes realize the paper's comparison at system level:
 //! * [`DispatchMode::Batched`] — requests ride a padded batch through
-//!   the batched fwd artifact: one device dispatch per *batch* (Fig. 7).
-//! * [`DispatchMode::PerSample`] — each request is its own dispatch on
-//!   the batch-1 artifact (Fig. 6 / TF-session style).
+//!   one batched execute: one dispatch per *batch* (Fig. 7).
+//! * [`DispatchMode::PerSample`] — each request is its own dispatch
+//!   (Fig. 6 / TF-session style).
 //!
-//! The device thread structure (everything PJRT-facing on one thread,
-//! clients talking over channels) is forced by the `xla` crate's
-//! `Rc`-based client, and is also how real GPU serving stacks arrange
-//! their dispatch thread.
+//! Orthogonally, [`ServeBackend`] selects *where* the batch executes:
+//! * [`ServeBackend::Pjrt`] — the AOT artifacts on the PJRT runtime
+//!   (requires `make artifacts`);
+//! * [`ServeBackend::HostEngine`] — the in-process batched-SpMM engine
+//!   (`sparse::engine`), needing no artifacts; its executor thread
+//!   count is the CPU speedup knob.
+//!
+//! The device thread structure (everything backend-facing on one
+//! thread, clients talking over channels) is forced by the `xla`
+//! crate's `Rc`-based client, and is also how real GPU serving stacks
+//! arrange their dispatch thread.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -19,13 +27,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::{BatchAssembler, BatchPolicy};
+use crate::coordinator::dispatch::HostDispatcher;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::trainer::{batch_tensors, param_tensors};
+use crate::gcn::config::ModelConfig;
 use crate::gcn::params::ParamSet;
 use crate::graph::dataset::pack_molecules;
 use crate::graph::molecule::Molecule;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, Tensor};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DispatchMode {
@@ -35,16 +45,29 @@ pub enum DispatchMode {
     PerSample,
 }
 
+/// Which execution backend the device thread drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// AOT artifacts on the PJRT runtime.
+    Pjrt,
+    /// In-process batched-SpMM engine; `threads = 0` means one per core.
+    HostEngine { threads: usize },
+}
+
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub artifacts_dir: PathBuf,
     pub model: String,
     pub mode: DispatchMode,
-    /// Batch capacity; must be one of the model's AOT'd fwd batch sizes
-    /// (infer_batch / train_batch / 1). Ignored (forced 1) in PerSample.
+    pub backend: ServeBackend,
+    /// Batch capacity. For the PJRT backend it must be one of the
+    /// model's AOT'd fwd batch sizes (infer_batch / train_batch / 1);
+    /// the host engine accepts any capacity >= 1. Forced to 1 in
+    /// PerSample mode.
     pub max_batch: usize,
     pub max_wait: Duration,
-    /// Optional trained parameter blob (defaults to the init params).
+    /// Optional trained parameter blob (defaults to the init params on
+    /// PJRT, to a deterministic random init on the host engine).
     pub params_path: Option<PathBuf>,
 }
 
@@ -121,42 +144,78 @@ impl Drop for Server {
     }
 }
 
+/// The execution backend state the device thread owns.
+enum Engine {
+    Pjrt {
+        rt: Runtime,
+        model: ModelConfig,
+        ptensors: Vec<Tensor>,
+        artifact: String,
+    },
+    Host(HostDispatcher),
+}
+
 fn device_thread(
     cfg: ServerConfig,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<anyhow::Result<()>>,
 ) -> anyhow::Result<()> {
-    // ---- startup: runtime + params + artifact selection ----------------
-    let init = (|| -> anyhow::Result<(Runtime, ParamSet, String, usize)> {
-        let rt = Runtime::new(&cfg.artifacts_dir)?;
-        let model = rt.manifest.model(&cfg.model)?.clone();
-        let params = match &cfg.params_path {
-            Some(p) => load_params_blob(&model, p)?,
-            None => ParamSet::load_init(&model, &rt.manifest.dir)?,
-        };
+    // ---- startup: backend + params + capacity selection ----------------
+    let init = (|| -> anyhow::Result<(Engine, usize)> {
         let capacity = match cfg.mode {
             DispatchMode::PerSample => 1,
             DispatchMode::Batched => cfg.max_batch,
         };
-        let artifact = if capacity == model.infer_batch {
-            model.artifact_fwd_infer.clone()
-        } else if capacity == model.train_batch {
-            model.artifact_fwd_train.clone()
-        } else if capacity == 1 {
-            model.artifact_fwd_sample.clone()
-        } else {
-            anyhow::bail!(
-                "no fwd artifact for batch {capacity} (model has {}, {}, 1)",
-                model.infer_batch,
-                model.train_batch
-            )
-        };
-        // Pre-compile so steady-state latencies exclude compilation.
-        rt.executable(&artifact)?;
-        Ok((rt, params, artifact, capacity))
+        anyhow::ensure!(capacity >= 1, "batch capacity must be >= 1");
+        match cfg.backend {
+            ServeBackend::Pjrt => {
+                let rt = Runtime::new(&cfg.artifacts_dir)?;
+                let model = rt.manifest.model(&cfg.model)?.clone();
+                let params = match &cfg.params_path {
+                    Some(p) => load_params_blob(&model, p)?,
+                    None => ParamSet::load_init(&model, &rt.manifest.dir)?,
+                };
+                let artifact = if capacity == model.infer_batch {
+                    model.artifact_fwd_infer.clone()
+                } else if capacity == model.train_batch {
+                    model.artifact_fwd_train.clone()
+                } else if capacity == 1 {
+                    model.artifact_fwd_sample.clone()
+                } else {
+                    anyhow::bail!(
+                        "no fwd artifact for batch {capacity} (model has {}, {}, 1)",
+                        model.infer_batch,
+                        model.train_batch
+                    )
+                };
+                // Pre-compile so steady-state latencies exclude compilation.
+                rt.executable(&artifact)?;
+                let ptensors = param_tensors(&model, &params);
+                Ok((
+                    Engine::Pjrt {
+                        rt,
+                        model,
+                        ptensors,
+                        artifact,
+                    },
+                    capacity,
+                ))
+            }
+            ServeBackend::HostEngine { threads } => {
+                let model = ModelConfig::synthetic(&cfg.model)?;
+                let params = match &cfg.params_path {
+                    Some(p) => load_params_blob(&model, p)?,
+                    None => ParamSet::random_init(&model, 0x5EED),
+                };
+                Ok((
+                    Engine::Host(HostDispatcher::new(model, params, threads)),
+                    capacity,
+                ))
+            }
+        }
     })();
-    let (rt, params, artifact, capacity) = match init {
+    let (mut engine, capacity) = match init {
         Ok(v) => {
             let _ = ready.send(Ok(()));
             v
@@ -166,8 +225,6 @@ fn device_thread(
             return Ok(());
         }
     };
-    let model = rt.manifest.model(&cfg.model)?.clone();
-    let ptensors = param_tensors(&model, &params);
     let policy = BatchPolicy::new(capacity, cfg.max_wait);
     let mut assembler: BatchAssembler<InferRequest> = BatchAssembler::new(policy);
     metrics.mark_start();
@@ -199,7 +256,7 @@ fn device_thread(
             let Some(batch) = batch else { break };
             // PerSample capacity is 1, so each "batch" is one request.
             for chunk in batch.chunks(capacity) {
-                serve_chunk(&rt, &model, &ptensors, &artifact, capacity, chunk, &metrics)?;
+                serve_chunk(&mut engine, cfg.mode, capacity, chunk, &metrics)?;
             }
         }
     }
@@ -208,22 +265,43 @@ fn device_thread(
 }
 
 fn serve_chunk(
-    rt: &Runtime,
-    model: &crate::gcn::config::ModelConfig,
-    ptensors: &[crate::runtime::Tensor],
-    artifact: &str,
+    engine: &mut Engine,
+    mode: DispatchMode,
     capacity: usize,
     chunk: &[InferRequest],
     metrics: &Arc<Metrics>,
 ) -> anyhow::Result<()> {
     let mols: Vec<&Molecule> = chunk.iter().map(|r| &r.mol).collect();
-    let mb = pack_molecules(&mols, capacity, model.max_nodes, model.ell_width, model.n_out)?;
-    let mut inputs = ptensors.to_vec();
-    inputs.extend(batch_tensors(&mb, false));
-    let t0 = Instant::now();
-    let out = rt.run(artifact, &inputs)?;
-    let device_us = t0.elapsed().as_micros() as u64;
-    let logits = out[0].as_f32()?;
+    let (n_out, logits, device_us) = match engine {
+        Engine::Pjrt {
+            rt,
+            model,
+            ptensors,
+            artifact,
+        } => {
+            let mb =
+                pack_molecules(&mols, capacity, model.max_nodes, model.ell_width, model.n_out)?;
+            let mut inputs = ptensors.to_vec();
+            inputs.extend(batch_tensors(&mb, false));
+            let t0 = Instant::now();
+            let out = rt.run(artifact, &inputs)?;
+            let device_us = t0.elapsed().as_micros() as u64;
+            (model.n_out, out[0].as_f32()?.to_vec(), device_us)
+        }
+        Engine::Host(hd) => {
+            let mb = pack_molecules(
+                &mols,
+                capacity,
+                hd.cfg.max_nodes,
+                hd.cfg.ell_width,
+                hd.cfg.n_out,
+            )?;
+            let t0 = Instant::now();
+            let logits = hd.forward(mode, &mb)?;
+            let device_us = t0.elapsed().as_micros() as u64;
+            (hd.cfg.n_out, logits, device_us)
+        }
+    };
     metrics.record_batch(chunk.len(), capacity, device_us);
     let done = Instant::now();
     for (bi, req) in chunk.iter().enumerate() {
@@ -232,7 +310,7 @@ fn serve_chunk(
         metrics.record_request(latency_us, queue_us);
         let _ = req.reply.send(InferResponse {
             id: req.id,
-            logits: logits[bi * model.n_out..(bi + 1) * model.n_out].to_vec(),
+            logits: logits[bi * n_out..(bi + 1) * n_out].to_vec(),
             latency_us,
             batch_size: chunk.len(),
         });

@@ -8,6 +8,11 @@
 //!   per-sample decomposable — see python/compile/model.py), so the
 //!   timing comparison isolates dispatch overhead + device occupancy,
 //!   which is precisely the paper's claim.
+//!
+//! Forward/evaluation additionally run on the host batched-SpMM engine
+//! ([`Trainer::new_host`]): same `BatchedSpmm`-routed math, no
+//! artifacts. Training steps need the AOT gradient artifacts and stay
+//! PJRT-only.
 
 use std::path::Path;
 
@@ -16,6 +21,7 @@ use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
 use crate::graph::dataset::{Dataset, ModelBatch};
 use crate::runtime::{Runtime, Tensor};
+use crate::sparse::engine::Executor;
 use crate::sparse::ops::axpy;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,7 +69,10 @@ pub struct EpochStats {
 }
 
 pub struct Trainer {
-    pub rt: Runtime,
+    /// PJRT runtime; `None` on the host-engine backend.
+    pub rt: Option<Runtime>,
+    /// Host engine executor; `None` on the PJRT backend.
+    host_exec: Option<Executor>,
     pub cfg: ModelConfig,
     pub params: ParamSet,
     /// Device dispatch counter (executes issued) — the Fig. 11 signal.
@@ -76,10 +85,36 @@ impl Trainer {
         let cfg = rt.manifest.model(model)?.clone();
         let params = ParamSet::load_init(&cfg, &rt.manifest.dir)?;
         Ok(Trainer {
-            rt,
+            rt: Some(rt),
+            host_exec: None,
             cfg,
             params,
             dispatches: 0,
+        })
+    }
+
+    /// Host-engine trainer (no artifacts): forward/evaluate route
+    /// through the batched-SpMM engine; training steps, which need the
+    /// AOT gradient artifacts, return an error. `threads = 0` means one
+    /// thread per core.
+    pub fn new_host(model: &str, threads: usize) -> anyhow::Result<Trainer> {
+        let cfg = ModelConfig::synthetic(model)?;
+        let params = ParamSet::random_init(&cfg, 0x5EED);
+        Ok(Trainer {
+            rt: None,
+            host_exec: Some(Executor::auto(threads)),
+            cfg,
+            params,
+            dispatches: 0,
+        })
+    }
+
+    fn pjrt(&self) -> anyhow::Result<&Runtime> {
+        self.rt.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "training requires the PJRT artifacts; the host-engine backend is \
+                 forward/evaluate-only"
+            )
         })
     }
 
@@ -89,7 +124,7 @@ impl Trainer {
         let mut inputs = param_tensors(&self.cfg, &self.params);
         inputs.extend(batch_tensors(mb, true));
         inputs.push(Tensor::scalar_f32(lr));
-        let out = self.rt.run(&self.cfg.artifact_train_step, &inputs)?;
+        let out = self.pjrt()?.run(&self.cfg.artifact_train_step, &inputs)?;
         self.dispatches += 1;
         anyhow::ensure!(out.len() == self.cfg.params.len() + 1, "bad output arity");
         for (p, t) in self.cfg.params.iter().zip(&out) {
@@ -105,7 +140,7 @@ impl Trainer {
         let b = mb.batch;
         let mut grad_sum = vec![0f32; self.cfg.n_params];
         let mut loss_sum = 0f64;
-        let exe = self.rt.executable(&self.cfg.artifact_grad_sample)?;
+        let exe = self.pjrt()?.executable(&self.cfg.artifact_grad_sample)?;
         for bi in 0..b {
             let one = mb.single(bi);
             let mut inputs = param_tensors(&self.cfg, &self.params);
@@ -126,7 +161,7 @@ impl Trainer {
             ));
         }
         inputs.push(Tensor::scalar_f32(lr / b as f32));
-        let out = self.rt.run(&self.cfg.artifact_apply_sgd, &inputs)?;
+        let out = self.pjrt()?.run(&self.cfg.artifact_apply_sgd, &inputs)?;
         self.dispatches += 1;
         for (p, t) in self.cfg.params.iter().zip(&out) {
             self.params.data[p.offset..p.offset + p.size]
@@ -166,8 +201,13 @@ impl Trainer {
         })
     }
 
-    /// Forward a packed batch through the matching fwd artifact.
+    /// Forward a packed batch: one engine dispatch on the host backend,
+    /// or the matching fwd artifact on PJRT.
     pub fn forward(&mut self, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
+        if let Some(exec) = self.host_exec {
+            self.dispatches += 1;
+            return reference::forward_with(&self.cfg, &self.params, mb, &exec);
+        }
         let name = if mb.batch == self.cfg.infer_batch {
             &self.cfg.artifact_fwd_infer
         } else if mb.batch == self.cfg.train_batch {
@@ -179,7 +219,7 @@ impl Trainer {
         };
         let mut inputs = param_tensors(&self.cfg, &self.params);
         inputs.extend(batch_tensors(mb, false));
-        let out = self.rt.run(name, &inputs)?;
+        let out = self.pjrt()?.run(name, &inputs)?;
         self.dispatches += 1;
         Ok(out[0].as_f32()?.to_vec())
     }

@@ -97,6 +97,70 @@ impl ModelConfig {
         })
     }
 
+    /// Manifest-free config for the named model, with the geometry
+    /// `python/compile/model.py` bakes into the AOT artifacts. This is
+    /// what the coordinator's host-engine dispatch path runs on when no
+    /// artifacts directory exists (DESIGN.md §Substitutions): same
+    /// model, parameters initialized in-process instead of loaded from
+    /// the AOT init blob.
+    pub fn synthetic(name: &str) -> anyhow::Result<ModelConfig> {
+        let (hidden, n_out, loss, train_batch): (Vec<usize>, usize, LossKind, usize) =
+            match name {
+                "tox21" => (vec![64, 64], 12, LossKind::Bce, 50),
+                "reaction100" => (vec![512, 512, 512], 100, LossKind::Softmax, 100),
+                other => anyhow::bail!("no synthetic model config for '{other}'"),
+            };
+        let (max_nodes, feat_dim, channels, n_outs) = (50usize, 16usize, 4usize, n_out);
+        // Parameter layout mirrors model.py::param_specs exactly.
+        let mut params = Vec::new();
+        let mut off = 0usize;
+        let mut push = |params: &mut Vec<ParamSpec>, name: String, shape: Vec<usize>| {
+            let size = shape.iter().product::<usize>();
+            params.push(ParamSpec {
+                name,
+                shape,
+                offset: off,
+                size,
+            });
+            off += size;
+        };
+        let mut fin = feat_dim;
+        for (i, &fout) in hidden.iter().enumerate() {
+            push(&mut params, format!("conv{i}.w"), vec![channels, fin, fout]);
+            push(&mut params, format!("conv{i}.b"), vec![channels, fout]);
+            push(&mut params, format!("conv{i}.gamma"), vec![fout]);
+            push(&mut params, format!("conv{i}.beta"), vec![fout]);
+            fin = fout;
+        }
+        push(&mut params, "readout.w".to_string(), vec![fin, n_outs]);
+        push(&mut params, "readout.b".to_string(), vec![n_outs]);
+        let n_params = off;
+        let cfg = ModelConfig {
+            name: name.to_string(),
+            max_nodes,
+            feat_dim,
+            channels,
+            hidden,
+            n_out: n_outs,
+            loss,
+            nnz_cap: 128,
+            ell_width: 12,
+            train_batch,
+            infer_batch: 200,
+            params,
+            n_params,
+            init_file: String::new(),
+            artifact_fwd_infer: String::new(),
+            artifact_fwd_train: String::new(),
+            artifact_fwd_sample: String::new(),
+            artifact_train_step: String::new(),
+            artifact_grad_sample: String::new(),
+            artifact_apply_sgd: String::new(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     /// Validate the layout is contiguous and ordered (the artifact ABI
     /// depends on it).
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -161,6 +225,20 @@ mod tests {
         assert_eq!(c.hidden, vec![8]);
         assert_eq!(c.loss, LossKind::Softmax);
         assert_eq!(c.param("conv0.b").unwrap().offset, 64);
+    }
+
+    #[test]
+    fn synthetic_configs_validate() {
+        let t = ModelConfig::synthetic("tox21").unwrap();
+        assert_eq!(t.hidden, vec![64, 64]);
+        assert_eq!(t.loss, LossKind::Bce);
+        assert_eq!(t.feat_dim, 16);
+        assert_eq!(t.param("conv0.w").unwrap().shape, vec![4, 16, 64]);
+        assert_eq!(t.param("readout.w").unwrap().shape, vec![64, 12]);
+        let r = ModelConfig::synthetic("reaction100").unwrap();
+        assert_eq!(r.hidden.len(), 3);
+        assert_eq!(r.loss, LossKind::Softmax);
+        assert!(ModelConfig::synthetic("nope").is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@ use std::io::Read;
 use std::path::Path;
 
 use super::config::ModelConfig;
+use crate::util::rng::Rng;
 
 /// All model parameters as one contiguous f32 vector, sliced per the
 /// manifest layout. This is exactly the order the artifacts take the
@@ -40,6 +41,28 @@ impl ParamSet {
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         Ok(Self { data })
+    }
+
+    /// Deterministic in-process initialization for manifest-free runs
+    /// (the host-engine dispatch path): Glorot-style normal weights,
+    /// unit norm scales, zero biases — the same shape of init aot.py
+    /// uses, without the artifact dependency.
+    pub fn random_init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut ps = Self::zeros(cfg);
+        for p in &cfg.params {
+            if p.name.ends_with(".gamma") {
+                ps.data[p.offset..p.offset + p.size].fill(1.0);
+            } else if p.name.ends_with(".w") {
+                let d = p.shape.len();
+                let (fan_in, fan_out) = (p.shape[d - 2], p.shape[d - 1]);
+                let scale = (2.0 / (fan_in + fan_out) as f32).sqrt();
+                for v in &mut ps.data[p.offset..p.offset + p.size] {
+                    *v = rng.normal() * scale;
+                }
+            }
+        }
+        ps
     }
 
     pub fn slice<'a>(&'a self, cfg: &ModelConfig, name: &str) -> anyhow::Result<&'a [f32]> {
@@ -97,6 +120,20 @@ mod tests {
         assert_eq!(ps.data, vals);
         assert_eq!(ps.slice(&cfg, "b").unwrap(), &[9.0, -9.0]);
         assert_eq!(ps.views(&cfg).len(), 2);
+    }
+
+    #[test]
+    fn random_init_is_deterministic_and_shaped() {
+        let cfg = ModelConfig::synthetic("tox21").unwrap();
+        let a = ParamSet::random_init(&cfg, 9);
+        let b = ParamSet::random_init(&cfg, 9);
+        assert_eq!(a.data, b.data);
+        assert!(a.slice(&cfg, "conv0.gamma").unwrap().iter().all(|&v| v == 1.0));
+        assert!(a.slice(&cfg, "conv0.beta").unwrap().iter().all(|&v| v == 0.0));
+        assert!(a.slice(&cfg, "conv0.w").unwrap().iter().any(|&v| v != 0.0));
+        assert!(a.l2_norm() > 0.0);
+        let c = ParamSet::random_init(&cfg, 10);
+        assert_ne!(a.data, c.data);
     }
 
     #[test]

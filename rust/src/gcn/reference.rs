@@ -2,15 +2,37 @@
 //! operation-for-operation. Used by the integration tests as the
 //! cross-language oracle for the PJRT artifact executions, and by the
 //! examples to report accuracy without a device round-trip.
+//!
+//! All multiplication routes through the batched-SpMM engine
+//! ([`crate::sparse::engine`]): the per-channel `X @ W` feature
+//! transform and the readout head dispatch [`GemmKernel`]s, the
+//! adjacency SpMM dispatches an [`EllKernel`] channel view — so one
+//! engine dispatch covers the whole batch where the pre-engine code
+//! iterated (sample, channel) pairs inline. Iteration order inside the
+//! kernels matches the old inlined loops, so logits are bit-identical.
 
 use super::config::{LossKind, ModelConfig};
 use super::params::ParamSet;
 use crate::graph::dataset::ModelBatch;
+use crate::sparse::engine::{EllKernel, Executor, GemmKernel, Rhs};
 
 const EPS: f32 = 1e-5;
 
-/// Forward pass: returns logits `[B, n_out]` (row-major).
+/// Forward pass on the serial executor: returns logits `[B, n_out]`
+/// (row-major).
 pub fn forward(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
+    forward_with(cfg, ps, mb, &Executor::serial())
+}
+
+/// Forward pass with an explicit engine executor (the coordinator's
+/// host dispatch paths pass a parallel one). Results are identical for
+/// every thread count — samples are independent.
+pub fn forward_with(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+) -> anyhow::Result<Vec<f32>> {
     anyhow::ensure!(mb.max_nodes == cfg.max_nodes, "node bucket mismatch");
     anyhow::ensure!(mb.feat_dim == cfg.feat_dim, "feature width mismatch");
     anyhow::ensure!(mb.channels == cfg.channels, "channel count mismatch");
@@ -25,49 +47,24 @@ pub fn forward(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch) -> anyhow::Res
         let gamma = ps.slice(cfg, &format!("conv{li}.gamma"))?;
         let beta = ps.slice(cfg, &format!("conv{li}.beta"))?;
 
-        // y[b,m,o] = sum_ch SpMM(A[b,ch], X[b] @ W[ch] + bias[ch])
+        // y[b,m,o] = sum_ch SpMM(A[b,ch], X[b] @ W[ch] + bias[ch]).
+        // Two engine dispatches per channel, each covering the whole
+        // batch (vs one pair of inlined loops per (sample, channel)).
         let mut y = vec![0f32; b * m * fout];
-        let mut u = vec![0f32; m * fout]; // per (sample, channel) scratch
-        for bi in 0..b {
-            let x_s = &h[bi * m * fin..(bi + 1) * m * fin];
-            for ch in 0..cfg.channels {
-                let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
-                let b_ch = &bias[ch * fout..(ch + 1) * fout];
-                // U = X @ W[ch] + bias[ch]   (MatMul + Add, Fig. 6)
-                for r in 0..m {
-                    let dst = &mut u[r * fout..(r + 1) * fout];
-                    dst.copy_from_slice(b_ch);
-                    let src = &x_s[r * fin..(r + 1) * fin];
-                    for (k, &xv) in src.iter().enumerate() {
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        let wrow = &w_ch[k * fout..(k + 1) * fout];
-                        for j in 0..fout {
-                            dst[j] += xv * wrow[j];
-                        }
-                    }
-                }
-                // C += A[ch] @ U              (SpMM + ElementWiseAdd)
-                // ELL layout: row rid's sources are slots [rid*R, rid*R+R).
-                let r = mb.ell_width;
-                let base = (bi * cfg.channels + ch) * m * r;
-                let y_s = &mut y[bi * m * fout..(bi + 1) * m * fout];
-                for rid in 0..m {
-                    let dst = &mut y_s[rid * fout..(rid + 1) * fout];
-                    for slot in 0..r {
-                        let val = mb.ell_vals[base + rid * r + slot];
-                        if val == 0.0 {
-                            continue; // padding slot
-                        }
-                        let cid = mb.ell_cols[base + rid * r + slot] as usize;
-                        let src = &u[cid * fout..(cid + 1) * fout];
-                        for j in 0..fout {
-                            dst[j] += val * src[j];
-                        }
-                    }
-                }
+        let mut u = vec![0f32; b * m * fout];
+        for ch in 0..cfg.channels {
+            let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
+            let b_ch = &bias[ch * fout..(ch + 1) * fout];
+            // U = X @ W[ch] + bias[ch]   (MatMul + Add, Fig. 6):
+            // bias-prefill, then accumulate through the dense backend.
+            for row in u.chunks_mut(fout) {
+                row.copy_from_slice(b_ch);
             }
+            let xw = GemmKernel::new(&h, b, m, fin);
+            exec.dispatch(&xw, Rhs::Shared(w_ch), fout, &mut u)?;
+            // y += A[ch] @ U             (SpMM + ElementWiseAdd).
+            let adj = EllKernel::channel(mb, ch);
+            exec.dispatch(&adj, Rhs::PerSample(&u), fout, &mut y)?;
         }
         // GraphNorm + ReLU (+ re-mask).
         graph_norm_relu(&mut y, &mb.mask, gamma, beta, b, m, fout);
@@ -75,26 +72,23 @@ pub fn forward(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch) -> anyhow::Res
         fin = fout;
     }
 
-    // Sum-pool readout + dense head.
+    // Sum-pool readout + dense head: logits[b] = b_out + Σ_r h[b,r,:] @
+    // W. Viewing h[b] as [1, m*fin] against W tiled m times keeps the
+    // original (r, k) accumulation order while routing through the
+    // engine.
     let w_out = ps.slice(cfg, "readout.w")?; // [fin, n_out]
     let b_out = ps.slice(cfg, "readout.b")?;
-    let mut logits = vec![0f32; b * cfg.n_out];
-    for bi in 0..b {
-        let dst = &mut logits[bi * cfg.n_out..(bi + 1) * cfg.n_out];
-        dst.copy_from_slice(b_out);
-        for r in 0..m {
-            let src = &h[(bi * m + r) * fin..(bi * m + r + 1) * fin];
-            for (k, &hv) in src.iter().enumerate() {
-                if hv == 0.0 {
-                    continue;
-                }
-                let wrow = &w_out[k * cfg.n_out..(k + 1) * cfg.n_out];
-                for j in 0..cfg.n_out {
-                    dst[j] += hv * wrow[j];
-                }
-            }
-        }
+    let n_out = cfg.n_out;
+    let mut w_rep = vec![0f32; m * fin * n_out];
+    for row in w_rep.chunks_mut(fin * n_out) {
+        row.copy_from_slice(w_out);
     }
+    let mut logits = vec![0f32; b * n_out];
+    for row in logits.chunks_mut(n_out) {
+        row.copy_from_slice(b_out);
+    }
+    let readout = GemmKernel::new(&h, b, 1, m * fin);
+    exec.dispatch(&readout, Rhs::Shared(&w_rep), n_out, &mut logits)?;
     Ok(logits)
 }
 
@@ -295,6 +289,22 @@ mod tests {
                     "sample {bi} logit {j}: batched {a} vs single {b}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn forward_parallel_matches_serial_bitwise() {
+        // Samples are independent, so the executor's thread count must
+        // not change a single bit of the output.
+        let cfg = tox_like_cfg();
+        let ps = random_params(&cfg, 5);
+        let d = Dataset::generate(DatasetKind::Tox21, 12, 4);
+        let idx: Vec<usize> = (0..12).collect();
+        let mb = d.pack_batch(&idx, 50, 12).unwrap();
+        let serial = forward(&cfg, &ps, &mb).unwrap();
+        for threads in [2, 8] {
+            let par = forward_with(&cfg, &ps, &mb, &Executor::new(threads)).unwrap();
+            assert_eq!(serial, par, "threads={threads}");
         }
     }
 

@@ -13,10 +13,19 @@
 //!   kernel launches) and *batched* (single fused launch) formulations,
 //!   plus the training step (loss + grad + SGD). AOT-lowered to HLO text.
 //! * **Layer 3 (this crate)** — the coordinator: a dataset/graph substrate,
-//!   a dynamic batcher and serving runtime, the training loop, a PJRT
-//!   runtime that loads the AOT artifacts, and a P100 GPU cost-model
-//!   simulator that regenerates the paper's figures where real-GPU
-//!   measurements are gated (see DESIGN.md §Substitutions).
+//!   the unified batched-SpMM execution engine (`sparse::engine` — one
+//!   `BatchedSpmm` trait, four backends, a sample-parallel CPU executor
+//!   that every multiplying layer dispatches through), a dynamic batcher
+//!   and serving runtime, the training loop, a PJRT runtime that loads
+//!   the AOT artifacts, and a P100 GPU cost-model simulator that
+//!   regenerates the paper's figures where real-GPU measurements are
+//!   gated (see DESIGN.md §Substitutions).
+//!
+//! Execution backends compose at the coordinator level: the server and
+//! trainer dispatch either through the PJRT artifacts or through the
+//! host engine (`ServeBackend` / `Trainer::new_host`), so the full
+//! serving stack — and the batched-vs-per-sample contrast the paper
+//! measures — runs even where no artifacts or XLA toolchain exist.
 
 pub mod util;
 pub mod sparse;

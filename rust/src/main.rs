@@ -11,7 +11,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use bspmm::coordinator::server::{DispatchMode, Server, ServerConfig};
+use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::coordinator::trainer::{TrainMode, Trainer};
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::runtime::Runtime;
@@ -159,17 +159,27 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("requests", "400", "request count")
         .opt("batch", "200", "batch capacity")
         .opt("wait-ms", "5", "batcher deadline")
-        .opt("mode", "batched", "batched | per-sample");
+        .opt("mode", "batched", "batched | per-sample")
+        .opt("backend", "pjrt", "pjrt | host (in-process batched-SpMM engine)")
+        .opt("threads", "0", "host-engine threads (0 = one per core)");
     let args = parse(&cli, rest)?;
     let mode = match args.str("mode") {
         "batched" => DispatchMode::Batched,
         "per-sample" => DispatchMode::PerSample,
         other => anyhow::bail!("unknown mode {other}"),
     };
+    let backend = match args.str("backend") {
+        "pjrt" => ServeBackend::Pjrt,
+        "host" => ServeBackend::HostEngine {
+            threads: args.usize("threads"),
+        },
+        other => anyhow::bail!("unknown backend {other}"),
+    };
     let srv = Server::start(ServerConfig {
         artifacts_dir: PathBuf::from(args.str("artifacts")),
         model: args.str("model").into(),
         mode,
+        backend,
         max_batch: args.usize("batch"),
         max_wait: Duration::from_millis(args.u64("wait-ms")),
         params_path: None,

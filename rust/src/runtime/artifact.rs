@@ -167,6 +167,33 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
+    /// Built-in copy of `python/compile/aot.py`'s SWEEPS table, for
+    /// artifact-less runs (engine benches, simulated figures). The
+    /// manifest remains authoritative when artifacts exist; keep the
+    /// two tables in sync.
+    pub fn builtin(key: &str) -> anyhow::Result<SweepSpec> {
+        let (dim, z, batch, nbs, mixed): (usize, usize, usize, Vec<usize>, bool) = match key {
+            "fig8a" => (50, 2, 50, vec![8, 16, 32, 64], false),
+            "fig8b" => (50, 2, 100, vec![64, 128, 256, 512], false),
+            "fig9a" => (32, 2, 100, vec![32, 128, 512], false),
+            "fig9b" => (64, 2, 100, vec![32, 128, 512], false),
+            "fig9c" => (128, 2, 100, vec![32, 128, 512], false),
+            "fig9d" => (64, 2, 50, vec![32, 128, 512], false),
+            "fig9e" => (64, 1, 100, vec![32, 128, 512], false),
+            "fig9f" => (64, 5, 100, vec![32, 128, 512], false),
+            "fig10" => (256, 5, 100, vec![128, 512, 1024], true),
+            other => anyhow::bail!("no builtin sweep '{other}'"),
+        };
+        Ok(SweepSpec {
+            key: key.to_string(),
+            dim,
+            z,
+            batch,
+            nbs,
+            mixed,
+        })
+    }
+
     pub fn nnz_cap(&self) -> usize {
         self.dim * self.z
     }
@@ -230,6 +257,18 @@ mod tests {
         let t = m.model("tox21").unwrap();
         assert_eq!(t.max_nodes, 50);
         assert!(dir.join(&t.init_file).exists());
+    }
+
+    #[test]
+    fn builtin_sweeps_cover_all_figures() {
+        for key in [
+            "fig8a", "fig8b", "fig9a", "fig9b", "fig9c", "fig9d", "fig9e", "fig9f", "fig10",
+        ] {
+            let sw = SweepSpec::builtin(key).unwrap();
+            assert!(!sw.nbs.is_empty());
+            assert!(sw.dim >= 32 && sw.batch >= 50, "{key}");
+        }
+        assert!(SweepSpec::builtin("fig99").is_err());
     }
 
     #[test]

@@ -148,6 +148,83 @@ impl PaddedCsrBatch {
     }
 }
 
+/// Batched, padded ELL: `cols`/`vals` laid out `[B, dim, width]` with
+/// per-row slots in insertion order and `val == 0` marking padding —
+/// the same per-channel layout `graph::dataset::ModelBatch` packs
+/// adjacency into, promoted to a first-class batch format so the
+/// engine's ELL backend can run over figure-bench workloads too.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PaddedEllBatch {
+    pub batch: usize,
+    pub dim: usize,
+    pub width: usize,
+    pub cols: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+impl PaddedEllBatch {
+    pub fn pack(mats: &[Coo], dim: usize, width: usize) -> anyhow::Result<Self> {
+        let batch = mats.len();
+        let mut cols = vec![0i32; batch * dim * width];
+        let mut vals = vec![0f32; batch * dim * width];
+        for (b, m) in mats.iter().enumerate() {
+            anyhow::ensure!(
+                m.rows <= dim && m.cols <= dim,
+                "matrix {b} is {}x{}, bucket dim {dim}",
+                m.rows,
+                m.cols
+            );
+            let base = b * dim * width;
+            let mut fill = vec![0usize; dim];
+            for i in 0..m.nnz() {
+                let row = m.row_ids[i] as usize;
+                let slot = fill[row];
+                anyhow::ensure!(
+                    slot < width,
+                    "matrix {b} row {row} has more than width={width} non-zeros"
+                );
+                cols[base + row * width + slot] = m.col_ids[i] as i32;
+                vals[base + row * width + slot] = m.vals[i];
+                fill[row] += 1;
+            }
+        }
+        Ok(Self {
+            batch,
+            dim,
+            width,
+            cols,
+            vals,
+        })
+    }
+
+    /// Pack with the tightest width that fits every row of the batch.
+    pub fn pack_auto(mats: &[Coo], dim: usize) -> anyhow::Result<Self> {
+        let width = mats
+            .iter()
+            .map(|m| {
+                let mut fill = vec![0usize; m.rows];
+                for &r in &m.row_ids {
+                    fill[r as usize] += 1;
+                }
+                fill.into_iter().max().unwrap_or(0)
+            })
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        Self::pack(mats, dim, width)
+    }
+
+    /// Total *real* non-zeros (excludes padding).
+    pub fn real_nnz(&self) -> usize {
+        self.vals.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Padding fraction of slots (ablation metric).
+    pub fn pad_fraction(&self) -> f64 {
+        1.0 - self.real_nnz() as f64 / (self.batch * self.dim * self.width) as f64
+    }
+}
+
 /// Densified adjacency batch `[B, dim, dim]` — the GEMM baseline input.
 pub fn densify_batch(mats: &[Coo], dim: usize) -> Vec<f32> {
     let mut out = vec![0f32; mats.len() * dim * dim];
@@ -217,6 +294,25 @@ mod tests {
         let csr = PaddedCsrBatch::pack(&mats, 8, 16).unwrap();
         let onec = csr.single(2);
         assert_eq!(onec.rpt, &csr.rpt[2 * 9..3 * 9]);
+    }
+
+    #[test]
+    fn ell_pack_layout_and_auto_width() {
+        let mut m = Coo::new(3, 3);
+        m.push(0, 2, 1.0);
+        m.push(0, 1, 2.0);
+        m.push(2, 0, 3.0);
+        let e = PaddedEllBatch::pack(&[m.clone()], 4, 2).unwrap();
+        // row 0 slots in insertion order, rows 1/3 empty (padding)
+        assert_eq!(&e.cols[..2], &[2, 1]);
+        assert_eq!(&e.vals[..2], &[1.0, 2.0]);
+        assert_eq!(e.vals[2 * 2], 3.0);
+        assert_eq!(e.real_nnz(), 3);
+        // width 1 cannot hold row 0's two entries
+        assert!(PaddedEllBatch::pack(&[m.clone()], 4, 1).is_err());
+        let auto = PaddedEllBatch::pack_auto(&[m], 4).unwrap();
+        assert_eq!(auto.width, 2);
+        assert!(auto.pad_fraction() > 0.0);
     }
 
     #[test]

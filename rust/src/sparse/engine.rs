@@ -1,0 +1,105 @@
+//! The unified batched-SpMM execution engine.
+//!
+//! The paper's core move is replacing per-sample SpMM kernel launches
+//! with one batched launch that processes many small sparse matrices at
+//! once. This module is the CPU realization of that idea as an actual
+//! execution subsystem rather than a padding format: a [`BatchedSpmm`]
+//! trait describing "multiply sample `b` of a packed batch against a
+//! dense operand", four backends over the crate's batch layouts, and a
+//! sample-parallel [`Executor`] whose `dispatch` processes the whole
+//! batch in one call (the CPU analogue of the single fused CUDA launch;
+//! `threads = 1` is the serial fallback standing in for the per-sample
+//! launch regime).
+//!
+//! Backends ([`kernels`]):
+//! * [`StKernel`] — SparseTensor batches (paper Fig. 2, `PaddedStBatch`);
+//! * [`CsrKernel`] — CSR batches (paper Fig. 4, `PaddedCsrBatch`);
+//! * [`EllKernel`] — ELL batches (`PaddedEllBatch`, and per-channel
+//!   views of the `ModelBatch` adjacency the GCN hot path uses);
+//! * [`GemmKernel`] — dense batches (the batched-GEMM / cuBLAS
+//!   baseline, also the `X @ W` feature transform in the model).
+//!
+//! Every caller that multiplies routes through this trait:
+//! `gcn::reference::forward`, the coordinator's host dispatch paths,
+//! and the bench harness. `sparse::ops` stays the single-matrix oracle
+//! the engine is property-tested against (`tests/engine_parity.rs`).
+
+pub mod exec;
+pub mod kernels;
+
+pub use exec::Executor;
+pub use kernels::{CsrKernel, EllKernel, GemmKernel, StKernel};
+
+/// Right-hand-side operand layout for one engine dispatch.
+#[derive(Clone, Copy, Debug)]
+pub enum Rhs<'a> {
+    /// One dense `[inner_dim, n]` operand shared by every sample
+    /// (e.g. a weight matrix).
+    Shared(&'a [f32]),
+    /// Independent dense operands, flat `[batch, inner_dim, n]`.
+    PerSample(&'a [f32]),
+}
+
+impl<'a> Rhs<'a> {
+    /// The `[inner_dim, n]` slice sample `b` multiplies against.
+    #[inline]
+    pub fn sample(&self, b: usize, inner: usize, n: usize) -> &'a [f32] {
+        match *self {
+            Rhs::Shared(s) => &s[..inner * n],
+            Rhs::PerSample(s) => &s[b * inner * n..(b + 1) * inner * n],
+        }
+    }
+
+    /// Total length this layout requires for a given batch geometry.
+    pub fn required_len(&self, batch: usize, inner: usize, n: usize) -> usize {
+        match self {
+            Rhs::Shared(_) => inner * n,
+            Rhs::PerSample(_) => batch * inner * n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Rhs::Shared(s) | Rhs::PerSample(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One batched sparse (or dense-baseline) matrix multiplication: the
+/// uniform interface every execution path dispatches through.
+///
+/// A kernel owns (a view of) a packed batch of `batch()` operand
+/// matrices, each logically `[out_rows, inner_dim]`. The executor calls
+/// [`spmm_sample`](BatchedSpmm::spmm_sample) once per sample, possibly
+/// from many threads; implementations must therefore be `Sync` and must
+/// not mutate shared state.
+///
+/// Accumulation contract: `out += A[b] @ rhs`. Callers pre-fill `out`
+/// with zeros (plain multiply) or a bias (fused bias add) — this is
+/// what lets the GCN sum channel contributions through the same
+/// interface.
+pub trait BatchedSpmm: Sync {
+    /// Backend name for bench legends and error messages.
+    fn name(&self) -> &'static str;
+
+    /// Number of matrices in the batch.
+    fn batch(&self) -> usize;
+
+    /// Rows of each `A[b]` (= rows of each output slice).
+    fn out_rows(&self) -> usize;
+
+    /// Columns of each `A[b]` (= rows of the dense operand).
+    fn inner_dim(&self) -> usize;
+
+    /// Real (non-padding) non-zeros across the batch — the paper's FLOP
+    /// numerator `2 * nnz * n_B`.
+    fn real_nnz(&self) -> usize;
+
+    /// `out += A[b] @ rhs` for one sample. `rhs` is `[inner_dim, n]`,
+    /// `out` is `[out_rows, n]`, both row-major flat.
+    fn spmm_sample(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+}

@@ -1,0 +1,199 @@
+//! The sample-parallel CPU executor: one `dispatch` call processes a
+//! whole packed batch — the CPU analogue of the paper's single fused
+//! kernel launch. `threads = 1` is the serial fallback (the per-sample
+//! launch regime the paper compares against); `threads > 1` splits the
+//! batch across scoped OS threads, each writing a disjoint slice of the
+//! output, so results are bit-identical to the serial path.
+
+use super::{BatchedSpmm, Rhs};
+
+/// Executes engine dispatches with a fixed thread budget.
+#[derive(Clone, Copy, Debug)]
+pub struct Executor {
+    threads: usize,
+}
+
+impl Executor {
+    /// Serial fallback: everything on the calling thread.
+    pub fn serial() -> Executor {
+        Executor { threads: 1 }
+    }
+
+    /// Fixed thread budget (clamped to at least 1).
+    pub fn new(threads: usize) -> Executor {
+        Executor {
+            threads: threads.max(1),
+        }
+    }
+
+    /// One thread per available core — the "parallel" configuration the
+    /// benches compare against [`Executor::serial`].
+    pub fn parallel() -> Executor {
+        Executor::new(
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1),
+        )
+    }
+
+    /// The crate-wide "auto" convention: `0` means one thread per core,
+    /// anything else a fixed budget.
+    pub fn auto(threads: usize) -> Executor {
+        if threads == 0 {
+            Executor::parallel()
+        } else {
+            Executor::new(threads)
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// One batched dispatch: `out[b] += A[b] @ rhs[b]` for every sample
+    /// in the kernel's batch. `out` is `[batch, out_rows, n]` row-major
+    /// flat and must be pre-filled by the caller (zeros or bias).
+    pub fn dispatch<K: BatchedSpmm + ?Sized>(
+        &self,
+        kernel: &K,
+        rhs: Rhs<'_>,
+        n: usize,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let b = kernel.batch();
+        let inner = kernel.inner_dim();
+        let per_out = kernel.out_rows() * n;
+        anyhow::ensure!(
+            out.len() == b * per_out,
+            "{}: output length {} != batch {b} * {} rows * n {n}",
+            kernel.name(),
+            out.len(),
+            kernel.out_rows()
+        );
+        anyhow::ensure!(
+            rhs.len() == rhs.required_len(b, inner, n),
+            "{}: rhs length {} != required {} (batch {b}, inner {inner}, n {n})",
+            kernel.name(),
+            rhs.len(),
+            rhs.required_len(b, inner, n)
+        );
+        if b == 0 || per_out == 0 {
+            return Ok(());
+        }
+
+        let threads = self.threads.min(b);
+        if threads <= 1 {
+            for bi in 0..b {
+                kernel.spmm_sample(
+                    bi,
+                    rhs.sample(bi, inner, n),
+                    n,
+                    &mut out[bi * per_out..(bi + 1) * per_out],
+                );
+            }
+            return Ok(());
+        }
+
+        // Contiguous sample ranges, one scoped thread each; every thread
+        // owns a disjoint &mut slice of the output, so no synchronization
+        // is needed and the result is bit-identical to the serial path.
+        let chunk = b.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (ci, out_chunk) in out.chunks_mut(chunk * per_out).enumerate() {
+                scope.spawn(move || {
+                    for (j, sample_out) in out_chunk.chunks_mut(per_out).enumerate() {
+                        let bi = ci * chunk + j;
+                        kernel.spmm_sample(bi, rhs.sample(bi, inner, n), n, sample_out);
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+
+    /// Convenience: allocate a zeroed output, dispatch, return it.
+    pub fn spmm<K: BatchedSpmm + ?Sized>(
+        &self,
+        kernel: &K,
+        rhs: Rhs<'_>,
+        n: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0f32; kernel.batch() * kernel.out_rows() * n];
+        self.dispatch(kernel, rhs, n, &mut out)?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::batch::{random_dense_batch, PaddedStBatch};
+    use crate::sparse::engine::kernels::StKernel;
+    use crate::sparse::random::{random_batch, RandomSpec};
+    use crate::util::rng::Rng;
+
+    fn workload(batch: usize, dim: usize, nb: usize) -> (PaddedStBatch, Vec<f32>) {
+        let mut rng = Rng::new(11);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, 2), batch);
+        let st = PaddedStBatch::pack(&mats, dim, dim * 2).unwrap();
+        let dense = random_dense_batch(&mut rng, batch, dim, nb);
+        (st, dense)
+    }
+
+    #[test]
+    fn parallel_bitwise_equals_serial() {
+        let (st, dense) = workload(13, 16, 5);
+        let k = StKernel::new(&st);
+        let serial = Executor::serial().spmm(&k, Rhs::PerSample(&dense), 5).unwrap();
+        for threads in [2, 3, 8, 64] {
+            let par = Executor::new(threads)
+                .spmm(&k, Rhs::PerSample(&dense), 5)
+                .unwrap();
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn dispatch_accumulates_into_prefilled_output() {
+        let (st, dense) = workload(3, 8, 4);
+        let k = StKernel::new(&st);
+        let base = Executor::serial().spmm(&k, Rhs::PerSample(&dense), 4).unwrap();
+        let mut out = vec![1.5f32; base.len()];
+        Executor::serial()
+            .dispatch(&k, Rhs::PerSample(&dense), 4, &mut out)
+            .unwrap();
+        for (a, b) in out.iter().zip(&base) {
+            assert_eq!(*a, 1.5 + *b);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        let (st, dense) = workload(2, 8, 4);
+        let k = StKernel::new(&st);
+        let exec = Executor::serial();
+        let mut out = vec![0f32; 2 * 8 * 4 - 1];
+        assert!(exec.dispatch(&k, Rhs::PerSample(&dense), 4, &mut out).is_err());
+        let mut out = vec![0f32; 2 * 8 * 4];
+        assert!(exec
+            .dispatch(&k, Rhs::PerSample(&dense[..dense.len() - 1]), 4, &mut out)
+            .is_err());
+        assert!(exec
+            .dispatch(&k, Rhs::Shared(&dense), 4, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn thread_budget_clamps() {
+        assert_eq!(Executor::new(0).threads(), 1);
+        assert!(Executor::parallel().threads() >= 1);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let st = PaddedStBatch::pack(&[], 4, 4).unwrap();
+        let k = StKernel::new(&st);
+        let out = Executor::new(4).spmm(&k, Rhs::PerSample(&[]), 3).unwrap();
+        assert!(out.is_empty());
+    }
+}

@@ -1,23 +1,34 @@
-//! Sparse-matrix substrate (paper §II-B/C).
+//! Sparse-matrix substrate (paper §II-B/C) and the batched execution
+//! engine built on top of it.
 //!
 //! Formats: [`coo::Coo`], [`csr::Csr`], [`sparse_tensor::SparseTensor`]
 //! (the TensorFlow-style structure the paper's baseline uses), and
 //! [`dense::Dense`] row-major dense matrices. [`batch`] packs many small
-//! matrices into the zero-padded batch layouts the AOT artifacts expect;
-//! [`random`] generates the §V-A randomly-generated workloads; [`ops`]
-//! provides CPU reference multiplications (the correctness oracle on the
-//! rust side, mirroring `python/compile/kernels/ref.py`).
+//! matrices into the zero-padded batch layouts the AOT artifacts expect
+//! (ST, CSR, ELL); [`random`] generates the §V-A randomly-generated
+//! workloads; [`ops`] provides CPU reference multiplications (the
+//! correctness oracle on the rust side, mirroring
+//! `python/compile/kernels/ref.py`).
+//!
+//! [`engine`] is the execution layer: the [`engine::BatchedSpmm`] trait
+//! (one interface, four backends — ST / CSR / ELL / dense-GEMM) plus a
+//! sample-parallel [`engine::Executor`] that processes a whole packed
+//! batch in one dispatch. The GCN forward pass, the coordinator's host
+//! dispatch paths, and the bench harness all multiply through it; `ops`
+//! stays the single-matrix oracle it is property-tested against.
 
 pub mod batch;
 pub mod coo;
 pub mod csr;
 pub mod dense;
+pub mod engine;
 pub mod ops;
 pub mod random;
 pub mod sparse_tensor;
 
-pub use batch::{PaddedCsrBatch, PaddedStBatch};
+pub use batch::{PaddedCsrBatch, PaddedEllBatch, PaddedStBatch};
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;
+pub use engine::{BatchedSpmm, Executor};
 pub use sparse_tensor::SparseTensor;

@@ -1,0 +1,254 @@
+//! Engine parity properties: every `BatchedSpmm` backend × thread count
+//! must match the single-matrix oracles in `sparse::ops` on randomized
+//! workloads, and the engine-routed GCN forward must be bit-stable
+//! against the pre-engine inlined implementation (kept here verbatim as
+//! the refactor oracle).
+
+use bspmm::gcn::config::ModelConfig;
+use bspmm::gcn::params::ParamSet;
+use bspmm::gcn::reference;
+use bspmm::graph::dataset::{Dataset, DatasetKind, ModelBatch};
+use bspmm::sparse::batch::{
+    densify_batch, random_dense_batch, PaddedCsrBatch, PaddedEllBatch, PaddedStBatch,
+};
+use bspmm::sparse::engine::{
+    BatchedSpmm, CsrKernel, EllKernel, Executor, GemmKernel, Rhs, StKernel,
+};
+use bspmm::sparse::ops;
+use bspmm::sparse::random::{random_batch, random_mixed_batch, RandomSpec};
+use bspmm::sparse::{Coo, Dense};
+use bspmm::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Expected whole-batch output: each matrix through the `ops::spmm_st`
+/// oracle, written into its `[dim, nb]` bucket slot (rows past the
+/// matrix's true size stay zero, exactly like the padded formats).
+fn oracle_batch(mats: &[Coo], dim: usize, dense: &[f32], nb: usize) -> Vec<f32> {
+    let mut out = vec![0f32; mats.len() * dim * nb];
+    for (bi, m) in mats.iter().enumerate() {
+        let b = Dense {
+            rows: m.cols,
+            cols: nb,
+            data: dense[bi * dim * nb..bi * dim * nb + m.cols * nb].to_vec(),
+        };
+        let want = ops::spmm_st(&m.to_sparse_tensor(), &b);
+        for r in 0..m.rows {
+            out[bi * dim * nb + r * nb..bi * dim * nb + (r + 1) * nb]
+                .copy_from_slice(&want.data[r * nb..(r + 1) * nb]);
+        }
+    }
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-5 + 1e-5 * w.abs(),
+            "{what}: elem {i}: got {g}, want {w}"
+        );
+    }
+}
+
+fn check_all_backends(mats: &[Coo], dim: usize, nb: usize, dense: &[f32], what: &str) {
+    let want = oracle_batch(mats, dim, dense, nb);
+    let cap = mats.iter().map(Coo::nnz).max().unwrap_or(1);
+    let st = PaddedStBatch::pack(mats, dim, cap).unwrap();
+    let csr = PaddedCsrBatch::pack(mats, dim, cap).unwrap();
+    let ell = PaddedEllBatch::pack_auto(mats, dim).unwrap();
+    let a_dense = densify_batch(mats, dim);
+    let stk = StKernel::new(&st);
+    let csrk = CsrKernel::new(&csr);
+    let ellk = EllKernel::from_padded(&ell);
+    let gemk = GemmKernel::new(&a_dense, mats.len(), dim, dim);
+    let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+    for kernel in kernels {
+        for threads in THREAD_COUNTS {
+            let exec = Executor::new(threads);
+            let got = exec.spmm(kernel, Rhs::PerSample(dense), nb).unwrap();
+            assert_close(&got, &want, &format!("{what}/{}/t{threads}", kernel.name()));
+        }
+    }
+}
+
+#[test]
+fn uniform_workloads_match_oracle_at_all_thread_counts() {
+    let mut rng = Rng::new(0xE1);
+    for case in 0..12 {
+        let dim = rng.range(1, 40);
+        let z = rng.range(1, 4.min(dim));
+        let batch = rng.range(1, 16);
+        let nb = rng.range(1, 24);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, z), batch);
+        let dense = random_dense_batch(&mut rng, batch, dim, nb);
+        check_all_backends(&mats, dim, nb, &dense, &format!("uniform case {case}"));
+    }
+}
+
+#[test]
+fn mixed_workloads_match_oracle_at_all_thread_counts() {
+    let mut rng = Rng::new(0xE2);
+    for case in 0..6 {
+        let dim = 32;
+        let batch = rng.range(2, 12);
+        let nb = rng.range(1, 16);
+        let mats = random_mixed_batch(&mut rng, (4, dim), (1, 3), batch);
+        let dense = random_dense_batch(&mut rng, batch, dim, nb);
+        check_all_backends(&mats, dim, nb, &dense, &format!("mixed case {case}"));
+    }
+}
+
+#[test]
+fn parallel_executor_is_bitwise_deterministic() {
+    let mut rng = Rng::new(0xE3);
+    let mats = random_batch(&mut rng, &RandomSpec::new(24, 3), 64);
+    let st = PaddedStBatch::pack(&mats, 24, 24 * 3).unwrap();
+    let dense = random_dense_batch(&mut rng, 64, 24, 16);
+    let k = StKernel::new(&st);
+    let serial = Executor::serial().spmm(&k, Rhs::PerSample(&dense), 16).unwrap();
+    for threads in [2, 8, 64] {
+        let par = Executor::new(threads)
+            .spmm(&k, Rhs::PerSample(&dense), 16)
+            .unwrap();
+        assert_eq!(serial, par, "threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// GCN forward bit-stability: the pre-engine inlined implementation,
+// kept verbatim, vs the engine-routed `reference::forward`.
+// ---------------------------------------------------------------------
+
+const EPS: f32 = 1e-5;
+
+fn naive_graph_norm_relu(
+    y: &mut [f32],
+    mask: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    b: usize,
+    m: usize,
+    f: usize,
+) {
+    for bi in 0..b {
+        let msk = &mask[bi * m..(bi + 1) * m];
+        let cnt = msk.iter().sum::<f32>().max(1.0);
+        let rows = &mut y[bi * m * f..(bi + 1) * m * f];
+        for j in 0..f {
+            let mut mean = 0f32;
+            for r in 0..m {
+                mean += rows[r * f + j] * msk[r];
+            }
+            mean /= cnt;
+            let mut var = 0f32;
+            for r in 0..m {
+                let d = rows[r * f + j] - mean;
+                var += d * d * msk[r];
+            }
+            var /= cnt;
+            let inv = 1.0 / (var + EPS).sqrt();
+            for r in 0..m {
+                let hn = (rows[r * f + j] - mean) * inv;
+                let v = (gamma[j] * hn + beta[j]) * msk[r];
+                rows[r * f + j] = v.max(0.0);
+            }
+        }
+    }
+}
+
+/// The forward pass exactly as it was before the engine refactor:
+/// per-(sample, channel) inlined loops.
+fn naive_forward(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let mut h = mb.x.clone();
+    let mut fin = cfg.feat_dim;
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        let w = ps.slice(cfg, &format!("conv{li}.w"))?;
+        let bias = ps.slice(cfg, &format!("conv{li}.b"))?;
+        let gamma = ps.slice(cfg, &format!("conv{li}.gamma"))?;
+        let beta = ps.slice(cfg, &format!("conv{li}.beta"))?;
+        let mut y = vec![0f32; b * m * fout];
+        let mut u = vec![0f32; m * fout];
+        for bi in 0..b {
+            let x_s = &h[bi * m * fin..(bi + 1) * m * fin];
+            for ch in 0..cfg.channels {
+                let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
+                let b_ch = &bias[ch * fout..(ch + 1) * fout];
+                for r in 0..m {
+                    let dst = &mut u[r * fout..(r + 1) * fout];
+                    dst.copy_from_slice(b_ch);
+                    let src = &x_s[r * fin..(r + 1) * fin];
+                    for (k, &xv) in src.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w_ch[k * fout..(k + 1) * fout];
+                        for j in 0..fout {
+                            dst[j] += xv * wrow[j];
+                        }
+                    }
+                }
+                let r = mb.ell_width;
+                let base = (bi * cfg.channels + ch) * m * r;
+                let y_s = &mut y[bi * m * fout..(bi + 1) * m * fout];
+                for rid in 0..m {
+                    let dst = &mut y_s[rid * fout..(rid + 1) * fout];
+                    for slot in 0..r {
+                        let val = mb.ell_vals[base + rid * r + slot];
+                        if val == 0.0 {
+                            continue;
+                        }
+                        let cid = mb.ell_cols[base + rid * r + slot] as usize;
+                        let src = &u[cid * fout..(cid + 1) * fout];
+                        for j in 0..fout {
+                            dst[j] += val * src[j];
+                        }
+                    }
+                }
+            }
+        }
+        naive_graph_norm_relu(&mut y, &mb.mask, gamma, beta, b, m, fout);
+        h = y;
+        fin = fout;
+    }
+    let w_out = ps.slice(cfg, "readout.w")?;
+    let b_out = ps.slice(cfg, "readout.b")?;
+    let mut logits = vec![0f32; b * cfg.n_out];
+    for bi in 0..b {
+        let dst = &mut logits[bi * cfg.n_out..(bi + 1) * cfg.n_out];
+        dst.copy_from_slice(b_out);
+        for r in 0..m {
+            let src = &h[(bi * m + r) * fin..(bi * m + r + 1) * fin];
+            for (k, &hv) in src.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = &w_out[k * cfg.n_out..(k + 1) * cfg.n_out];
+                for j in 0..cfg.n_out {
+                    dst[j] += hv * wrow[j];
+                }
+            }
+        }
+    }
+    Ok(logits)
+}
+
+#[test]
+fn gcn_forward_bit_stable_vs_pre_engine_implementation() {
+    let cfg = ModelConfig::synthetic("tox21").unwrap();
+    let ps = ParamSet::random_init(&cfg, 0xBEEF);
+    let d = Dataset::generate(DatasetKind::Tox21, 8, 17);
+    let idx: Vec<usize> = (0..6).collect();
+    let mb = d.pack_batch(&idx, cfg.max_nodes, cfg.ell_width).unwrap();
+
+    let want = naive_forward(&cfg, &ps, &mb).unwrap();
+    let got = reference::forward(&cfg, &ps, &mb).unwrap();
+    assert_eq!(got, want, "engine-routed forward drifted from the pre-engine math");
+
+    for threads in [2, 8] {
+        let par = reference::forward_with(&cfg, &ps, &mb, &Executor::new(threads)).unwrap();
+        assert_eq!(par, want, "threads={threads}");
+    }
+}

@@ -1,40 +1,30 @@
-//! Integration: the serving coordinator end-to-end over real artifacts.
+//! Coordinator end-to-end on the host-engine backend: the batched vs
+//! per-sample dispatch contrast running entirely on the batched-SpMM
+//! engine — no AOT artifacts required, so these run everywhere.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::time::Duration;
 
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
+use bspmm::coordinator::trainer::Trainer;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: run `make artifacts` first");
-        None
-    }
-}
-
-fn server(mode: DispatchMode, max_batch: usize, wait_ms: u64) -> Option<Server> {
-    let dir = artifacts_dir()?;
-    Some(
-        Server::start(ServerConfig {
-            artifacts_dir: dir,
-            model: "tox21".into(),
-            mode,
-            backend: ServeBackend::Pjrt,
-            max_batch,
-            max_wait: Duration::from_millis(wait_ms),
-            params_path: None,
-        })
-        .expect("server start"),
-    )
+fn host_server(mode: DispatchMode, max_batch: usize, wait_ms: u64) -> Server {
+    Server::start(ServerConfig {
+        artifacts_dir: PathBuf::from("unused-for-host-backend"),
+        model: "tox21".into(),
+        mode,
+        backend: ServeBackend::HostEngine { threads: 2 },
+        max_batch,
+        max_wait: Duration::from_millis(wait_ms),
+        params_path: None,
+    })
+    .expect("host server start")
 }
 
 #[test]
-fn batched_server_answers_all_requests() {
-    let Some(srv) = server(DispatchMode::Batched, 50, 20) else { return };
+fn host_batched_server_answers_all_requests() {
+    let srv = host_server(DispatchMode::Batched, 50, 20);
     let data = Dataset::generate(DatasetKind::Tox21, 75, 11);
     let rxs: Vec<_> = data
         .samples
@@ -56,9 +46,9 @@ fn batched_server_answers_all_requests() {
 }
 
 #[test]
-fn per_sample_server_matches_batched_logits() {
-    let Some(srv_b) = server(DispatchMode::Batched, 50, 10) else { return };
-    let Some(srv_s) = server(DispatchMode::PerSample, 1, 0) else { return };
+fn host_per_sample_matches_batched_logits() {
+    let srv_b = host_server(DispatchMode::Batched, 50, 10);
+    let srv_s = host_server(DispatchMode::PerSample, 1, 0);
     let data = Dataset::generate(DatasetKind::Tox21, 8, 12);
 
     let collect = |srv: &Server| -> Vec<Vec<f32>> {
@@ -83,18 +73,17 @@ fn per_sample_server_matches_batched_logits() {
     }
     let mb = srv_b.shutdown().unwrap();
     let ms = srv_s.shutdown().unwrap();
-    // The structural contrast: same work, far fewer device dispatches.
+    // The structural contrast: same work, far fewer engine dispatches.
     assert!(mb.batches < ms.batches, "batched {} !< single {}", mb.batches, ms.batches);
 }
 
 #[test]
-fn server_rejects_unknown_model() {
-    let Some(dir) = artifacts_dir() else { return };
+fn host_server_rejects_unknown_model() {
     let err = Server::start(ServerConfig {
-        artifacts_dir: dir,
+        artifacts_dir: PathBuf::from("unused"),
         model: "nope".into(),
         mode: DispatchMode::Batched,
-        backend: ServeBackend::Pjrt,
+        backend: ServeBackend::HostEngine { threads: 1 },
         max_batch: 50,
         max_wait: Duration::from_millis(1),
         params_path: None,
@@ -103,23 +92,8 @@ fn server_rejects_unknown_model() {
 }
 
 #[test]
-fn server_rejects_unsupported_batch_capacity() {
-    let Some(dir) = artifacts_dir() else { return };
-    let err = Server::start(ServerConfig {
-        artifacts_dir: dir,
-        model: "tox21".into(),
-        mode: DispatchMode::Batched,
-        backend: ServeBackend::Pjrt,
-        max_batch: 33, // no fwd artifact with this capacity
-        max_wait: Duration::from_millis(1),
-        params_path: None,
-    });
-    assert!(err.is_err());
-}
-
-#[test]
-fn shutdown_drains_pending_requests() {
-    let Some(srv) = server(DispatchMode::Batched, 50, 10_000) else { return };
+fn host_shutdown_drains_pending_requests() {
+    let srv = host_server(DispatchMode::Batched, 50, 10_000);
     // Long deadline: requests sit in the queue; shutdown must flush them.
     let data = Dataset::generate(DatasetKind::Tox21, 5, 13);
     let rxs: Vec<_> = data
@@ -133,4 +107,26 @@ fn shutdown_drains_pending_requests() {
     for rx in rxs {
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
     }
+}
+
+#[test]
+fn host_trainer_evaluates_but_cannot_train() {
+    let mut tr = Trainer::new_host("tox21", 2).unwrap();
+    let data = Dataset::generate(DatasetKind::Tox21, 12, 14);
+    let idx: Vec<usize> = (0..12).collect();
+    let (loss, acc) = tr.evaluate(&data, &idx).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+    assert!(tr.dispatches > 0);
+
+    // Training needs the AOT gradient artifacts.
+    let mb = data
+        .pack_batch(&idx[..4], tr.cfg.max_nodes, tr.cfg.ell_width)
+        .unwrap();
+    let err = tr.step_nonbatched(&mb, 0.01);
+    assert!(err.is_err());
+    assert!(
+        err.unwrap_err().to_string().contains("PJRT"),
+        "error should say training needs PJRT artifacts"
+    );
 }

@@ -1,0 +1,313 @@
+//! Inert stand-in for the `xla` crate (PJRT/XLA bindings).
+//!
+//! The offline build environment carries no XLA toolchain, so this local
+//! crate provides exactly the API surface `bspmm::runtime` consumes.
+//! Everything that does not need a real XLA backend behaves faithfully:
+//! `Literal` is a genuine host-side tensor container (construction,
+//! reshape, shape queries, element readback, tuple decomposition), and
+//! `PjRtClient::cpu()` succeeds so runtime construction and manifest
+//! handling work. Only HLO parsing / compilation / execution return an
+//! actionable error — those paths are gated behind `make artifacts` +
+//! the real bindings (see DESIGN.md §Substitutions).
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: stringly, `Send + Sync` so it
+/// converts into `anyhow::Error` at the call sites.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn backend_unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: bspmm was built against the inert `xla` \
+         stub crate (no XLA toolchain in this environment); swap in the \
+         real PJRT bindings to execute AOT artifacts"
+    ))
+}
+
+/// Element types an artifact tensor may carry. `#[non_exhaustive]` keeps
+/// downstream matches future-proof exactly like the real bindings.
+#[non_exhaustive]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Array shape of a non-tuple literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: typed flat data + dims. Fully functional.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+/// Element types `Literal` can marshal to/from host vectors.
+pub trait NativeType: Copy {
+    fn element_type() -> ElementType;
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn read(payload: &Payload) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+
+    fn wrap(data: Vec<Self>) -> Payload {
+        Payload::F32(data)
+    }
+
+    fn read(payload: &Payload) -> Option<&[Self]> {
+        match payload {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+
+    fn wrap(data: Vec<Self>) -> Payload {
+        Payload::I32(data)
+    }
+
+    fn read(payload: &Payload) -> Option<&[Self]> {
+        match payload {
+            Payload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            payload: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Tuple literal (what artifact executions return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            payload: Payload::Tuple(parts),
+        }
+    }
+
+    fn numel(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(_) => 0,
+        }
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if want as usize != self.numel() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elements) from {} elements",
+                self.numel()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            payload: self.payload.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::I32(_) => ElementType::S32,
+            Payload::Tuple(_) => {
+                return Err(Error("tuple literal has no array shape".into()))
+            }
+        };
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+            ty,
+        })
+    }
+
+    /// Read the elements back as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(&self.payload)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.payload {
+            Payload::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text, so construction
+/// fails with an actionable error (callers surface it verbatim).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(backend_unavailable(&format!(
+            "parsing HLO text ({path})"
+        )))
+    }
+}
+
+/// Computation wrapper (proto -> compilable form).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer. In the stub it simply owns a host literal so
+/// upload/readback round-trips work.
+pub struct PjRtBuffer(Literal);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.0.clone())
+    }
+}
+
+/// Compiled executable handle. Never constructible through the stub's
+/// failing `compile`, but the type (and its execute signatures) must
+/// exist for the runtime layer to typecheck.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(backend_unavailable("artifact execution"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(backend_unavailable("artifact execution"))
+    }
+}
+
+/// The PJRT client. Construction succeeds (so `Runtime::new` works and
+/// manifest-only paths run); compilation is where the stub stops.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-host".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(backend_unavailable("artifact compilation"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer(literal.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn backend_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let buf = client
+            .buffer_from_host_literal(None, &Literal::vec1(&[0.0f32]))
+            .unwrap();
+        assert!(buf.to_literal_sync().is_ok());
+    }
+}
