@@ -1,15 +1,19 @@
 //! SpMM micro-benchmark at a single user-chosen point, engine-first:
 //! the four batched-SpMM engine backends (ST / CSR / ELL / dense-GEMM),
-//! serial fallback vs the sample-parallel executor — plus, when the AOT
-//! artifacts exist, the five measured + simulated §V-A series.
+//! serial fallback vs the sample-parallel executor, and a host-engine
+//! `train_step` line (full fwd + engine-dispatch backward + SGD,
+//! DESIGN.md §8) — plus, when the AOT artifacts exist, the five
+//! measured + simulated §V-A series.
 //!
 //!     cargo run --release --example spmm_microbench -- --sweep fig8b --nb 64
 //!     cargo run --release --example spmm_microbench -- --threads 4
 //!
-//! No artifacts are required for the engine series: sweep geometry
-//! falls back to the built-in copy of the aot.py table.
+//! No artifacts are required for the engine or train_step series: sweep
+//! geometry falls back to the built-in copy of the aot.py table.
 
-use bspmm::bench::figures::{engine_speedup_summary, run_engine_bench, FigureRunner};
+use bspmm::bench::figures::{
+    engine_speedup_summary, run_engine_bench, run_train_step_bench, FigureRunner,
+};
 use bspmm::bench::BenchOpts;
 use bspmm::runtime::artifact::SweepSpec;
 use bspmm::runtime::Runtime;
@@ -19,7 +23,9 @@ fn main() -> anyhow::Result<()> {
     let cli = Cli::new("spmm_microbench", "one-point SpMM comparison")
         .opt("sweep", "fig8b", "sweep key: fig8a|fig8b|fig9a..fig9f|fig10")
         .opt("nb", "64", "dense input width n_B (must exist in the sweep)")
-        .opt("threads", "0", "parallel executor threads (0 = one per core)");
+        .opt("threads", "0", "parallel executor threads (0 = one per core)")
+        .opt("train_model", "tox21", "model for the train_step line")
+        .opt("train_batch", "50", "train_step minibatch size (0 = skip)");
     let args = parse_or_exit(&cli);
 
     let rt = match Runtime::new_default() {
@@ -49,6 +55,17 @@ fn main() -> anyhow::Result<()> {
     println!("{}", engine.render());
     print!("{}", engine_speedup_summary(&engine));
     println!();
+
+    // Training-side counterpart: one host train_step (fwd + backward +
+    // SGD, every matmul an engine dispatch), serial vs parallel.
+    let tb = args.usize("train_batch");
+    if tb > 0 {
+        print!(
+            "{}",
+            run_train_step_bench(args.str("train_model"), tb, args.usize("threads"), &opts)?
+        );
+        println!();
+    }
 
     if let Some(rt) = &rt {
         let runner = FigureRunner::new(rt);

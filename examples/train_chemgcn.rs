@@ -6,12 +6,15 @@
 //!
 //!     make artifacts && cargo run --release --example train_chemgcn -- \
 //!         --samples 1000 --epochs 10 --lr 0.02
+//!     # no artifacts? train on the host batched-SpMM engine instead:
+//!     cargo run --release --example train_chemgcn -- --backend host --quick
 //!
 //! All layers compose here: synthetic molecules (S3) -> padded batches
-//! (S1) -> PJRT executions of the AOT'd train-step artifact whose HLO
-//! embeds the L2 model and the L1 Pallas batched-SpMM kernels (fwd AND
-//! bwd) -> rust training loop (S6). The loss curve is recorded in
-//! EXPERIMENTS.md.
+//! (S1) -> either PJRT executions of the AOT'd train-step artifact
+//! whose HLO embeds the L2 model and the L1 Pallas batched-SpMM
+//! kernels (fwd AND bwd), or the host engine's fwd (`gcn::reference`)
+//! + bwd (`gcn::backward`, DESIGN.md §8) -> rust training loop (S6).
+//! The loss curve is recorded in EXPERIMENTS.md.
 
 use std::path::Path;
 
@@ -30,6 +33,8 @@ fn main() -> anyhow::Result<()> {
         .opt("seed", "42", "dataset seed")
         .opt("fold", "0", "k-fold test fold (k=5, paper §V-B)")
         .opt("mode", "batched", "dispatch mode: batched | nonbatched")
+        .opt("backend", "pjrt", "execution backend: pjrt | host")
+        .opt("threads", "0", "host-engine threads (0 = one per core)")
         .opt("out", "target/trained_params.bin", "trained parameter blob")
         .flag("quick", "tiny run (200 samples, 3 epochs)");
     let args = parse_or_exit(&cli);
@@ -48,7 +53,11 @@ fn main() -> anyhow::Result<()> {
         "reaction100" => DatasetKind::Reaction100,
         other => anyhow::bail!("unknown model {other}"),
     };
-    let mut tr = Trainer::new(Path::new("artifacts"), kind.model_name())?;
+    let mut tr = match args.str("backend") {
+        "pjrt" => Trainer::new(Path::new("artifacts"), kind.model_name())?,
+        "host" => Trainer::new_host(kind.model_name(), args.usize("threads"))?,
+        other => anyhow::bail!("unknown backend {other} (use pjrt | host)"),
+    };
     println!(
         "model {}: {} params, {} conv layers ({:?}), train batch {}",
         tr.cfg.name,

@@ -14,6 +14,8 @@
 use crate::bench::report::{FigureResult, Series};
 use crate::bench::workload::SpmmWorkload;
 use crate::bench::BenchOpts;
+use crate::coordinator::trainer::Trainer;
+use crate::graph::dataset::{Dataset, DatasetKind};
 use crate::runtime::artifact::SweepSpec;
 use crate::runtime::Runtime;
 use crate::simulator::cost::CostModel;
@@ -133,6 +135,59 @@ pub fn engine_speedup_summary(f: &FigureResult) -> String {
         }
     }
     out
+}
+
+/// Host-engine `train_step` microbench: each step is one full
+/// fwd + engine-dispatch backward + SGD on `Trainer::new_host`
+/// (DESIGN.md §8), timed on the serial executor vs a `threads`-wide
+/// parallel one (`0` = one per core). No artifacts needed. Returns a
+/// printable summary line.
+pub fn run_train_step_bench(
+    model: &str,
+    batch: usize,
+    threads: usize,
+    opts: &BenchOpts,
+) -> anyhow::Result<String> {
+    anyhow::ensure!(batch >= 1, "train_step bench needs batch >= 1");
+    let kind = match model {
+        "tox21" => DatasetKind::Tox21,
+        "reaction100" => DatasetKind::Reaction100,
+        other => anyhow::bail!("no dataset for model '{other}'"),
+    };
+    let data = Dataset::generate(kind, batch, 77);
+    let idx: Vec<usize> = (0..batch).collect();
+    let par = Executor::auto(threads);
+    let configs = [
+        ("serial".to_string(), 1usize),
+        (format!("{}t", par.threads()), par.threads()),
+    ];
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for (label, t) in configs {
+        let mut tr = Trainer::new_host(model, t)?;
+        let mb = data.pack_batch(&idx, tr.cfg.max_nodes, tr.cfg.ell_width)?;
+        // Small lr: the timing loop keeps stepping the same minibatch,
+        // and the work per step must not drift with the parameters.
+        let lr = 1e-3f32;
+        let samples = timer::bench_adaptive(
+            opts.warmup,
+            opts.min_iters,
+            opts.max_iters.max(1),
+            opts.min_time_s,
+            || {
+                tr.step_batched(&mb, lr).expect("host train step");
+            },
+        );
+        results.push((label, samples.iter().sum::<f64>() / samples.len() as f64));
+    }
+    let (ref plabel, p) = results[1];
+    let s = results[0].1;
+    Ok(format!(
+        "train_step[{model}, B={batch}]: serial {:.2} ms/step -> {plabel} {:.2} ms/step: \
+         {:.2}x parallel speedup\n",
+        s * 1e3,
+        p * 1e3,
+        s / p
+    ))
 }
 
 pub struct FigureRunner<'a> {
@@ -429,6 +484,20 @@ mod tests {
         let f = run_simulated_sweep(&cm, &sw, true).unwrap();
         assert_eq!(f.series.len(), 5);
         assert!(f.series[2].values.iter().all(|v| *v > 0.0));
+    }
+
+    #[test]
+    fn train_step_bench_runs_without_artifacts() {
+        let opts = BenchOpts {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time_s: 0.0,
+        };
+        let line = run_train_step_bench("tox21", 4, 2, &opts).unwrap();
+        assert!(line.contains("train_step[tox21, B=4]"), "{line}");
+        assert!(line.contains("speedup"), "{line}");
+        assert!(run_train_step_bench("nope", 4, 2, &opts).is_err());
     }
 
     #[test]

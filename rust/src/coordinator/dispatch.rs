@@ -6,11 +6,18 @@
 //!
 //! * **PJRT** — artifact executes on the device runtime (requires
 //!   `make artifacts`);
-//! * **Host engine** — `gcn::reference::forward_with` on a
+//! * **Host engine** — `gcn::reference::forward_with_readout` on a
 //!   [`sparse::engine::Executor`](crate::sparse::engine::Executor), so
 //!   every multiplication routes through the [`BatchedSpmm`]
 //!   trait — no artifacts needed, and the executor's thread count is
 //!   the speedup knob.
+//!
+//! The dispatcher caches the tiled readout weight `w_rep`
+//! ([`crate::gcn::reference::build_w_rep`]) — a pure function of
+//! `readout.w`, ~10 MB per forward on reaction100 if rebuilt each call.
+//! Replace parameters through [`HostDispatcher::set_params`] (or call
+//! [`HostDispatcher::invalidate_cache`] after mutating
+//! [`HostDispatcher::params`] directly) so the cache never goes stale.
 //!
 //! [`BatchedSpmm`]: crate::sparse::engine::BatchedSpmm
 
@@ -24,8 +31,12 @@ use crate::sparse::engine::Executor;
 /// In-process model execution over the batched-SpMM engine.
 pub struct HostDispatcher {
     pub cfg: ModelConfig,
+    /// Mutate only via [`HostDispatcher::set_params`], or follow direct
+    /// edits with [`HostDispatcher::invalidate_cache`].
     pub params: ParamSet,
     exec: Executor,
+    /// Cached tiled readout weight; lazily rebuilt after invalidation.
+    w_rep: Option<Vec<f32>>,
     /// Forward dispatches issued (1 per batch in Batched mode, 1 per
     /// sample in PerSample mode) — the same signal the PJRT paths count.
     pub dispatches: u64,
@@ -38,6 +49,7 @@ impl HostDispatcher {
             cfg,
             params,
             exec: Executor::auto(threads),
+            w_rep: None,
             dispatches: 0,
         }
     }
@@ -53,23 +65,48 @@ impl HostDispatcher {
         &self.exec
     }
 
+    /// Replace the parameter set (e.g. after training elsewhere) and
+    /// drop parameter-derived caches.
+    pub fn set_params(&mut self, params: ParamSet) {
+        self.params = params;
+        self.w_rep = None;
+    }
+
+    /// Drop parameter-derived caches after a direct `params` mutation.
+    pub fn invalidate_cache(&mut self) {
+        self.w_rep = None;
+    }
+
     /// Forward a packed batch: one engine-batched dispatch, or one
-    /// batch-1 dispatch per sample (the non-batched baseline).
+    /// batch-1 dispatch per sample (the non-batched baseline). Both
+    /// reuse the cached readout tiling.
     pub fn forward(&mut self, mode: DispatchMode, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
+        if self.w_rep.is_none() {
+            self.w_rep = Some(reference::build_w_rep(&self.cfg, &self.params)?);
+        }
+        let w_rep = self.w_rep.as_deref().unwrap();
         match mode {
             DispatchMode::Batched => {
                 self.dispatches += 1;
-                reference::forward_with(&self.cfg, &self.params, mb, &self.exec)
+                reference::forward_with_readout(&self.cfg, &self.params, mb, &self.exec, w_rep)
             }
             DispatchMode::PerSample => {
                 let n = self.cfg.n_out;
                 let mut logits = vec![0f32; mb.batch * n];
+                let mut dispatched = 0u64;
                 for bi in 0..mb.batch {
                     let one = mb.single(bi);
-                    let l = reference::forward_with(&self.cfg, &self.params, &one, &self.exec)?;
-                    self.dispatches += 1;
+                    let l = reference::forward_with_readout(
+                        &self.cfg,
+                        &self.params,
+                        &one,
+                        &self.exec,
+                        w_rep,
+                    )?;
+                    dispatched += 1;
                     logits[bi * n..(bi + 1) * n].copy_from_slice(&l);
                 }
+                self.dispatches += dispatched;
                 Ok(logits)
             }
         }
@@ -114,5 +151,25 @@ mod tests {
         let a = serial.forward(DispatchMode::Batched, &mb).unwrap();
         let b = parallel.forward(DispatchMode::Batched, &mb).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn set_params_invalidates_readout_cache() {
+        let mut hd = HostDispatcher::synthetic("tox21", 1, 3).unwrap();
+        let d = Dataset::generate(DatasetKind::Tox21, 2, 8);
+        let mb = d
+            .pack_batch(&[0, 1], hd.cfg.max_nodes, hd.cfg.ell_width)
+            .unwrap();
+        let before = hd.forward(DispatchMode::Batched, &mb).unwrap();
+        // New params must actually take effect (stale w_rep would keep
+        // the old readout weights alive).
+        let fresh = ParamSet::random_init(&hd.cfg, 99);
+        hd.set_params(fresh.clone());
+        let after = hd.forward(DispatchMode::Batched, &mb).unwrap();
+        assert_ne!(before, after);
+        // And match a dispatcher built directly on the new params.
+        let mut direct = HostDispatcher::new(hd.cfg.clone(), fresh, 1);
+        let want = direct.forward(DispatchMode::Batched, &mb).unwrap();
+        assert_eq!(after, want);
     }
 }

@@ -5,14 +5,32 @@
 //! * [`batcher`] — the dynamic batch assembler (size + deadline policy);
 //!   pure data structure, property-tested.
 //! * [`dispatch`] — the host-engine forward path: model execution over
-//!   the batched-SpMM engine (`sparse::engine`), no artifacts needed.
+//!   the batched-SpMM engine (`sparse::engine`), no artifacts needed,
+//!   with the tiled readout weight cached per parameter set.
 //! * [`server`] — the serving runtime: a device thread owning the
 //!   execution backend (PJRT artifacts or host engine), assembling
 //!   batches and dispatching either one batched execute (Fig. 7) or
 //!   per-sample executes (Fig. 6).
-//! * [`trainer`] — the training loop in both dispatch modes (Table II);
-//!   forward/evaluate also run on the host engine.
+//! * [`trainer`] — the training loop in both dispatch modes (Table II)
+//!   on either backend; the host engine trains end-to-end through the
+//!   `gcn::backward` engine dispatches (DESIGN.md §8).
 //! * [`metrics`] — latency/throughput/occupancy accounting.
+//!
+//! One artifact-less training step on the host engine:
+//!
+//! ```
+//! use bspmm::coordinator::Trainer;
+//! use bspmm::graph::dataset::{Dataset, DatasetKind};
+//!
+//! let mut tr = Trainer::new_host("tox21", 1)?;
+//! let data = Dataset::generate(DatasetKind::Tox21, 4, 9);
+//! let mb = data.pack_batch(&[0, 1], tr.cfg.max_nodes, tr.cfg.ell_width)?;
+//! let before = tr.params.data.clone();
+//! let loss = tr.step_batched(&mb, 0.01)?; // fwd + bwd + SGD, all host
+//! assert!(loss.is_finite() && loss > 0.0);
+//! assert_ne!(tr.params.data, before); // SGD moved the parameters
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod batcher;
 pub mod dispatch;

@@ -1,4 +1,5 @@
-//! Training loop in both dispatch modes (the Table II experiment).
+//! Training loop in both dispatch modes (the Table II experiment), on
+//! either execution backend.
 //!
 //! * **Batched** (Fig. 7): one `train_step` execute per minibatch — the
 //!   whole fwd+bwd+SGD is a single device dispatch.
@@ -9,13 +10,17 @@
 //!   timing comparison isolates dispatch overhead + device occupancy,
 //!   which is precisely the paper's claim.
 //!
-//! Forward/evaluation additionally run on the host batched-SpMM engine
-//! ([`Trainer::new_host`]): same `BatchedSpmm`-routed math, no
-//! artifacts. Training steps need the AOT gradient artifacts and stay
-//! PJRT-only.
+//! Both modes also run end-to-end on the host batched-SpMM engine
+//! ([`Trainer::new_host`], no artifacts needed): forward/evaluate via
+//! `gcn::reference`, training via `gcn::backward` — every gradient
+//! matmul an engine dispatch (DESIGN.md §8) — plus an in-process SGD
+//! apply. The host paths cache the tiled readout weight `w_rep` (a
+//! pure function of `readout.w`, ~10 MB rebuilt per forward otherwise)
+//! and invalidate it on every parameter update.
 
 use std::path::Path;
 
+use crate::gcn::backward;
 use crate::gcn::config::ModelConfig;
 use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
@@ -74,9 +79,19 @@ pub struct Trainer {
     /// Host engine executor; `None` on the PJRT backend.
     host_exec: Option<Executor>,
     pub cfg: ModelConfig,
+    /// Replace via [`Trainer::set_params`], or follow a direct write
+    /// with [`Trainer::invalidate_cache`] — the host paths cache state
+    /// derived from these values.
     pub params: ParamSet,
     /// Device dispatch counter (executes issued) — the Fig. 11 signal.
+    /// Host-engine steps count in the same units as their artifact
+    /// twins: 1 per batched step, B+1 per non-batched step, 1 per
+    /// forward.
     pub dispatches: u64,
+    /// Cached tiled readout weight (`reference::build_w_rep`) for the
+    /// host-engine paths; rebuilt lazily, dropped on every parameter
+    /// update.
+    w_rep: Option<Vec<f32>>,
 }
 
 impl Trainer {
@@ -90,13 +105,14 @@ impl Trainer {
             cfg,
             params,
             dispatches: 0,
+            w_rep: None,
         })
     }
 
-    /// Host-engine trainer (no artifacts): forward/evaluate route
-    /// through the batched-SpMM engine; training steps, which need the
-    /// AOT gradient artifacts, return an error. `threads = 0` means one
-    /// thread per core.
+    /// Host-engine trainer (no artifacts): forward, evaluation *and*
+    /// training all route through the batched-SpMM engine — the
+    /// backward pass is `gcn::backward`, the SGD apply is in-process.
+    /// `threads = 0` means one thread per core.
     pub fn new_host(model: &str, threads: usize) -> anyhow::Result<Trainer> {
         let cfg = ModelConfig::synthetic(model)?;
         let params = ParamSet::random_init(&cfg, 0x5EED);
@@ -106,20 +122,56 @@ impl Trainer {
             cfg,
             params,
             dispatches: 0,
+            w_rep: None,
         })
     }
 
     fn pjrt(&self) -> anyhow::Result<&Runtime> {
         self.rt.as_ref().ok_or_else(|| {
-            anyhow::anyhow!(
-                "training requires the PJRT artifacts; the host-engine backend is \
-                 forward/evaluate-only"
-            )
+            anyhow::anyhow!("no PJRT runtime: this trainer runs on the host-engine backend")
         })
     }
 
-    /// One batched train step; returns the minibatch loss.
+    /// Replace the parameter set (e.g. with an externally trained
+    /// blob) and drop parameter-derived caches.
+    pub fn set_params(&mut self, params: ParamSet) {
+        self.params = params;
+        self.w_rep = None;
+    }
+
+    /// Drop parameter-derived caches after a direct `params` mutation.
+    pub fn invalidate_cache(&mut self) {
+        self.w_rep = None;
+    }
+
+    /// Lazily (re)build the cached tiled readout weight.
+    fn ensure_w_rep(&mut self) -> anyhow::Result<()> {
+        if self.w_rep.is_none() {
+            self.w_rep = Some(reference::build_w_rep(&self.cfg, &self.params)?);
+        }
+        Ok(())
+    }
+
+    /// One batched train step; returns the minibatch loss. On the host
+    /// backend this is one engine-executed fwd+bwd+SGD (any batch size
+    /// — the engine is not shape-locked the way the AOT artifacts are).
     pub fn step_batched(&mut self, mb: &ModelBatch, lr: f32) -> anyhow::Result<f32> {
+        anyhow::ensure!(mb.batch > 0, "train step on an empty batch");
+        if let Some(exec) = self.host_exec {
+            self.ensure_w_rep()?;
+            let res = backward::grad_with(
+                &self.cfg,
+                &self.params,
+                mb,
+                &exec,
+                self.w_rep.as_deref(),
+            )?;
+            // params <- params - lr * grad, then drop derived caches.
+            axpy(-lr, &res.grads.data, &mut self.params.data);
+            self.w_rep = None;
+            self.dispatches += 1;
+            return Ok(res.loss);
+        }
         anyhow::ensure!(mb.batch == self.cfg.train_batch, "batch size mismatch");
         let mut inputs = param_tensors(&self.cfg, &self.params);
         inputs.extend(batch_tensors(mb, true));
@@ -131,13 +183,43 @@ impl Trainer {
             self.params.data[p.offset..p.offset + p.size]
                 .copy_from_slice(t.as_f32()?);
         }
+        self.w_rep = None;
         Ok(out.last().unwrap().as_f32()?[0])
     }
 
     /// One non-batched train step: B grad dispatches + host-side
-    /// accumulation + one apply_sgd dispatch.
+    /// accumulation + one apply step. On the host backend each grad
+    /// dispatch is a batch-1 engine backward (`gcn::backward`), so the
+    /// batched/non-batched contrast is structural, not mathematical —
+    /// exactly as on PJRT.
     pub fn step_nonbatched(&mut self, mb: &ModelBatch, lr: f32) -> anyhow::Result<f32> {
+        // lr / B below: an empty batch would silently write NaN into
+        // every parameter instead of erroring.
+        anyhow::ensure!(mb.batch > 0, "train step on an empty batch");
         let b = mb.batch;
+        if let Some(exec) = self.host_exec {
+            self.ensure_w_rep()?;
+            let mut grad_sum = vec![0f32; self.cfg.n_params];
+            let mut loss_sum = 0f64;
+            for bi in 0..b {
+                let one = mb.single(bi);
+                let res = backward::grad_with(
+                    &self.cfg,
+                    &self.params,
+                    &one,
+                    &exec,
+                    self.w_rep.as_deref(),
+                )?;
+                self.dispatches += 1;
+                axpy(1.0, &res.grads.data, &mut grad_sum);
+                loss_sum += res.loss as f64;
+            }
+            // params <- params - (lr / B) * grad_sum (the apply step).
+            axpy(-(lr / b as f32), &grad_sum, &mut self.params.data);
+            self.w_rep = None;
+            self.dispatches += 1;
+            return Ok((loss_sum / b as f64) as f32);
+        }
         let mut grad_sum = vec![0f32; self.cfg.n_params];
         let mut loss_sum = 0f64;
         let exe = self.pjrt()?.executable(&self.cfg.artifact_grad_sample)?;
@@ -167,6 +249,7 @@ impl Trainer {
             self.params.data[p.offset..p.offset + p.size]
                 .copy_from_slice(t.as_f32()?);
         }
+        self.w_rep = None;
         Ok((loss_sum / b as f64) as f32)
     }
 
@@ -201,12 +284,15 @@ impl Trainer {
         })
     }
 
-    /// Forward a packed batch: one engine dispatch on the host backend,
-    /// or the matching fwd artifact on PJRT.
+    /// Forward a packed batch: one engine dispatch on the host backend
+    /// (against the cached readout tiling), or the matching fwd
+    /// artifact on PJRT.
     pub fn forward(&mut self, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
         if let Some(exec) = self.host_exec {
+            self.ensure_w_rep()?;
             self.dispatches += 1;
-            return reference::forward_with(&self.cfg, &self.params, mb, &exec);
+            let w_rep = self.w_rep.as_deref().unwrap();
+            return reference::forward_with_readout(&self.cfg, &self.params, mb, &exec, w_rep);
         }
         let name = if mb.batch == self.cfg.infer_batch {
             &self.cfg.artifact_fwd_infer

@@ -1,0 +1,458 @@
+//! Reference backward pass for the ChemGCN, expressed as batched-SpMM
+//! engine dispatches (DESIGN.md §8).
+//!
+//! [`grad`] mirrors [`reference::forward_with`] layer by layer: a
+//! cached forward replay ([`forward_cached`], built from the same
+//! `conv_layer`/`readout` helpers the inference path uses), then the
+//! chain rule walked backwards with every matrix multiplication routed
+//! through the engine:
+//!
+//! * `dU = A^T @ dY` — [`EllKernel`] channel view on
+//!   [`Executor::dispatch_t`] (one batched `A^T·X` dispatch per
+//!   channel);
+//! * `dW = X^T @ dU` — [`GemmKernel`] over the `[B*M, fin]` stacked
+//!   view of the activations, `dispatch_t` (the cross-sample reduction
+//!   folds into a batch-1 matmul);
+//! * `dX = dU @ W^T` — [`GemmKernel`] with [`Rhs::SharedTransposed`]
+//!   (the `X·W^T` form), accumulating across channels through the
+//!   engine's `+=` contract;
+//! * the readout head gets the same two transpose forms over its
+//!   pooled views.
+//!
+//! GraphNorm/ReLU backward and the bias/γ/β reductions are host-side
+//! loops — they contain no matmul. Gradients are checked element-wise
+//! against central finite differences in `tests/grad_check.rs`, and
+//! batched gradients are pinned to the mean of per-sample gradients
+//! (the decomposability contract behind the paper's Table II).
+
+use super::config::{LossKind, ModelConfig};
+use super::params::ParamSet;
+use super::reference::{self, EPS};
+use crate::graph::dataset::ModelBatch;
+use crate::sparse::engine::{EllKernel, Executor, GemmKernel, Rhs};
+use crate::sparse::ops::axpy;
+
+/// Activations the backward pass replays, captured during one forward.
+pub struct ForwardCache {
+    /// Layer inputs: `acts[0]` is `mb.x`, `acts[l]` the output of conv
+    /// layer `l-1`; `acts[L]` feeds the readout head. Each `[B, M, f]`.
+    pub acts: Vec<Vec<f32>>,
+    /// Per-layer pre-normalization accumulators `Σ_ch A_ch @ U_ch`,
+    /// saved before `graph_norm_relu` runs in place (the norm backward
+    /// recomputes its statistics from these).
+    pub ypre: Vec<Vec<f32>>,
+    /// Readout logits `[B, n_out]`.
+    pub logits: Vec<f32>,
+    /// Engine dispatches the forward replay issued.
+    pub dispatches: u64,
+}
+
+/// Forward pass that additionally captures the per-layer activations
+/// the backward pass needs. Logits are bit-identical to
+/// [`reference::forward_with_readout`] — both run the same helpers.
+pub fn forward_cached(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+    w_rep: &[f32],
+) -> anyhow::Result<ForwardCache> {
+    reference::check_batch(cfg, mb)?;
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let mut acts = vec![mb.x.clone()];
+    let mut ypre = Vec::with_capacity(cfg.hidden.len());
+    let mut fin = cfg.feat_dim;
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        let gamma = ps.slice(cfg, &format!("conv{li}.gamma"))?;
+        let beta = ps.slice(cfg, &format!("conv{li}.beta"))?;
+        let y = reference::conv_layer(cfg, ps, li, fin, fout, acts.last().unwrap(), mb, exec)?;
+        ypre.push(y.clone());
+        let mut h = y;
+        reference::graph_norm_relu(&mut h, &mb.mask, gamma, beta, b, m, fout);
+        acts.push(h);
+        fin = fout;
+    }
+    let logits = reference::readout(cfg, ps, acts.last().unwrap(), fin, b, exec, w_rep)?;
+    Ok(ForwardCache {
+        acts,
+        ypre,
+        logits,
+        dispatches: (2 * cfg.channels * cfg.hidden.len() + 1) as u64,
+    })
+}
+
+/// Output of one gradient computation.
+pub struct GradResult {
+    /// Mean minibatch loss (identical to `reference::loss` on the
+    /// replayed logits).
+    pub loss: f32,
+    /// Gradient of the mean loss with respect to every parameter, in
+    /// the same flat layout as [`ParamSet`].
+    pub grads: ParamSet,
+    /// Engine dispatches issued by the forward replay + backward walk.
+    pub dispatches: u64,
+}
+
+/// Loss + full parameter gradient on the serial executor.
+pub fn grad(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch) -> anyhow::Result<GradResult> {
+    grad_with(cfg, ps, mb, &Executor::serial(), None)
+}
+
+/// Loss + full parameter gradient with an explicit executor and an
+/// optional pre-built tiled readout weight (see
+/// [`reference::build_w_rep`]); results are bit-identical for every
+/// thread count.
+pub fn grad_with(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+    w_rep: Option<&[f32]>,
+) -> anyhow::Result<GradResult> {
+    // reference::loss divides by the batch size: an empty batch would
+    // return loss = NaN with all-zero grads instead of an error.
+    anyhow::ensure!(mb.batch > 0, "gradient of an empty batch");
+    let built;
+    let w_rep: &[f32] = match w_rep {
+        Some(w) => w,
+        None => {
+            built = reference::build_w_rep(cfg, ps)?;
+            &built
+        }
+    };
+    let cache = forward_cached(cfg, ps, mb, exec, w_rep)?;
+    let mut dispatches = cache.dispatches;
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let n_out = cfg.n_out;
+    let loss = reference::loss(cfg, &cache.logits, &mb.labels, b);
+    let mut g = ParamSet::zeros(cfg);
+
+    // ---- loss -> dlogits (elementwise, no matmul) -----------------------
+    let dlogits = loss_grad(cfg, &cache.logits, &mb.labels, b);
+
+    // ---- readout head backward (2 engine dispatches) --------------------
+    let fin_last = *cfg.hidden.last().unwrap_or(&cfg.feat_dim);
+    let h_last = cache.acts.last().unwrap();
+    // d b_out: column sums of dlogits (the bias is added once per sample).
+    {
+        let gb = g.slice_mut(cfg, "readout.b")?;
+        for row in dlogits.chunks(n_out) {
+            for (o, v) in row.iter().enumerate() {
+                gb[o] += v;
+            }
+        }
+    }
+    // d W_out = P^T @ dlogits with P[b,:] = Σ_r h[b,r,:] (sum-pool):
+    // one batch-1 transpose GEMM over the pooled [B, fin] view.
+    let mut pooled = vec![0f32; b * fin_last];
+    for bi in 0..b {
+        let dst = &mut pooled[bi * fin_last..(bi + 1) * fin_last];
+        for r in 0..m {
+            let row = &h_last[(bi * m + r) * fin_last..(bi * m + r + 1) * fin_last];
+            for (k, v) in row.iter().enumerate() {
+                dst[k] += v;
+            }
+        }
+    }
+    {
+        let pk = GemmKernel::new(&pooled, 1, b, fin_last);
+        let gw = g.slice_mut(cfg, "readout.w")?;
+        exec.dispatch_t(&pk, Rhs::Shared(&dlogits), n_out, gw)?;
+        dispatches += 1;
+    }
+    // d h: the readout sums rows, so every row of sample b gets
+    // dlogits[b] @ W_out^T — one X·W^T dispatch, then a row broadcast.
+    let w_out = ps.slice(cfg, "readout.w")?;
+    let mut drow = vec![0f32; b * fin_last];
+    let dk = GemmKernel::new(&dlogits, b, 1, n_out);
+    exec.dispatch(&dk, Rhs::SharedTransposed(w_out), fin_last, &mut drow)?;
+    dispatches += 1;
+    let mut dh = vec![0f32; b * m * fin_last];
+    for bi in 0..b {
+        let src = &drow[bi * fin_last..(bi + 1) * fin_last];
+        for r in 0..m {
+            dh[(bi * m + r) * fin_last..(bi * m + r + 1) * fin_last].copy_from_slice(src);
+        }
+    }
+
+    // ---- conv layers, last to first ------------------------------------
+    // 3 dispatches per channel; the first layer skips dX and issues 2.
+    for li in (0..cfg.hidden.len()).rev() {
+        let fout = cfg.hidden[li];
+        let fin = if li == 0 {
+            cfg.feat_dim
+        } else {
+            cfg.hidden[li - 1]
+        };
+        let x = &cache.acts[li];
+        let ypre = &cache.ypre[li];
+        let gamma = ps.slice(cfg, &format!("conv{li}.gamma"))?;
+        let beta = ps.slice(cfg, &format!("conv{li}.beta"))?;
+
+        // GraphNorm + ReLU backward: dL/dH -> dL/dYpre (host-side).
+        let mut dypre = vec![0f32; b * m * fout];
+        let (dgamma, dbeta) =
+            graph_norm_relu_backward(ypre, &mb.mask, gamma, beta, &dh, &mut dypre, b, m, fout);
+        axpy(1.0, &dgamma, g.slice_mut(cfg, &format!("conv{li}.gamma"))?);
+        axpy(1.0, &dbeta, g.slice_mut(cfg, &format!("conv{li}.beta"))?);
+
+        let w = ps.slice(cfg, &format!("conv{li}.w"))?;
+        let mut dx = vec![0f32; b * m * fin];
+        let mut gw_all = vec![0f32; cfg.channels * fin * fout];
+        let mut gb_all = vec![0f32; cfg.channels * fout];
+        for ch in 0..cfg.channels {
+            // dU = A_ch^T @ dYpre — batched transpose ELL dispatch.
+            let adj = EllKernel::channel(mb, ch);
+            let mut du = vec![0f32; b * m * fout];
+            exec.dispatch_t(&adj, Rhs::PerSample(&dypre), fout, &mut du)?;
+            dispatches += 1;
+            // d bias_ch: row sums of dU (the bias broadcasts over rows).
+            {
+                let gb = &mut gb_all[ch * fout..(ch + 1) * fout];
+                for row in du.chunks(fout) {
+                    for (o, v) in row.iter().enumerate() {
+                        gb[o] += v;
+                    }
+                }
+            }
+            // d W_ch = X^T @ dU with all samples stacked: one batch-1
+            // transpose GEMM over the [B*M, fin] view of X, folding the
+            // cross-sample sum into the matmul itself.
+            let xk = GemmKernel::new(x, 1, b * m, fin);
+            exec.dispatch_t(
+                &xk,
+                Rhs::Shared(&du),
+                fout,
+                &mut gw_all[ch * fin * fout..(ch + 1) * fin * fout],
+            )?;
+            dispatches += 1;
+            // dX += dU @ W_ch^T — X·W^T dispatch, accumulating across
+            // channels through the engine's `+=` contract. The first
+            // layer's input is the data, which needs no gradient, so
+            // the dispatch is skipped there.
+            if li > 0 {
+                let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
+                let duk = GemmKernel::new(&du, b, m, fout);
+                exec.dispatch(&duk, Rhs::SharedTransposed(w_ch), fin, &mut dx)?;
+                dispatches += 1;
+            }
+        }
+        axpy(1.0, &gw_all, g.slice_mut(cfg, &format!("conv{li}.w"))?);
+        axpy(1.0, &gb_all, g.slice_mut(cfg, &format!("conv{li}.b"))?);
+        dh = dx;
+    }
+
+    Ok(GradResult {
+        loss,
+        grads: g,
+        dispatches,
+    })
+}
+
+/// d(mean loss)/d(logits), matching `reference::loss` exactly.
+pub fn loss_grad(cfg: &ModelConfig, logits: &[f32], labels: &[f32], batch: usize) -> Vec<f32> {
+    let n = cfg.n_out;
+    assert_eq!(logits.len(), batch * n);
+    assert_eq!(labels.len(), batch * n);
+    let inv_b = 1.0 / batch as f32;
+    let mut d = vec![0f32; batch * n];
+    match cfg.loss {
+        LossKind::Bce => {
+            for i in 0..batch * n {
+                d[i] = (sigmoid(logits[i]) - labels[i]) * inv_b;
+            }
+        }
+        LossKind::Softmax => {
+            for bi in 0..batch {
+                let row = &logits[bi * n..(bi + 1) * n];
+                let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let denom: f32 = row.iter().map(|&v| (v - max).exp()).sum();
+                // Labels are one-hot in the datasets, but the loss is
+                // linear in them, so keep the general Σ_j y_j factor.
+                let lsum: f32 = labels[bi * n..(bi + 1) * n].iter().sum();
+                for j in 0..n {
+                    let p = (row[j] - max).exp() / denom;
+                    d[bi * n + j] = (p * lsum - labels[bi * n + j]) * inv_b;
+                }
+            }
+        }
+    }
+    d
+}
+
+fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Backward of `reference::graph_norm_relu` for one layer: given dL/dH
+/// at the layer output, writes dL/dYpre and returns `(dgamma, dbeta)`.
+/// Statistics (masked mean/var, normalized values) are recomputed from
+/// the cached pre-norm activations in the same operation order as the
+/// forward.
+///
+/// Per (graph, feature) group with mask weights `w_r`, count `N`,
+/// `inv = 1/sqrt(var + EPS)` and gate `[v_r > 0]`:
+/// `dŷ_r = gate_r · dh_r · γ · w_r`, `S1 = Σ dŷ`, `S2 = Σ dŷ·ĥ`, and
+/// `dYpre_r = inv · (dŷ_r − w_r · (S1 + ĥ_r · S2) / N)` — the standard
+/// normalization backward, with the mask zeroing both the padded rows'
+/// own gradients and their (non-existent) contribution to the
+/// statistics.
+#[allow(clippy::too_many_arguments)]
+fn graph_norm_relu_backward(
+    ypre: &[f32],
+    mask: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    dh: &[f32],
+    dypre: &mut [f32],
+    b: usize,
+    m: usize,
+    f: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dgamma = vec![0f32; f];
+    let mut dbeta = vec![0f32; f];
+    let mut hn = vec![0f32; m];
+    let mut dhat = vec![0f32; m];
+    for bi in 0..b {
+        let msk = &mask[bi * m..(bi + 1) * m];
+        let cnt = msk.iter().sum::<f32>().max(1.0);
+        let rows = &ypre[bi * m * f..(bi + 1) * m * f];
+        let drows = &dh[bi * m * f..(bi + 1) * m * f];
+        let orows = &mut dypre[bi * m * f..(bi + 1) * m * f];
+        for j in 0..f {
+            let mut mean = 0f32;
+            for r in 0..m {
+                mean += rows[r * f + j] * msk[r];
+            }
+            mean /= cnt;
+            let mut var = 0f32;
+            for r in 0..m {
+                let d = rows[r * f + j] - mean;
+                var += d * d * msk[r];
+            }
+            var /= cnt;
+            let inv = 1.0 / (var + EPS).sqrt();
+            let mut s1 = 0f32;
+            let mut s2 = 0f32;
+            for r in 0..m {
+                let h = (rows[r * f + j] - mean) * inv;
+                hn[r] = h;
+                let v = (gamma[j] * h + beta[j]) * msk[r];
+                let gate = if v > 0.0 { drows[r * f + j] } else { 0.0 };
+                dgamma[j] += gate * h * msk[r];
+                dbeta[j] += gate * msk[r];
+                let dn = gate * gamma[j] * msk[r];
+                dhat[r] = dn;
+                s1 += dn;
+                s2 += dn * h;
+            }
+            for r in 0..m {
+                orows[r * f + j] = inv * (dhat[r] - msk[r] * (s1 + hn[r] * s2) / cnt);
+            }
+        }
+    }
+    (dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::dataset::{Dataset, DatasetKind};
+
+    fn setup(n: usize, seed: u64) -> (ModelConfig, ParamSet, Dataset) {
+        let cfg = ModelConfig::synthetic("tox21").unwrap();
+        let ps = ParamSet::random_init(&cfg, seed);
+        let data = Dataset::generate(DatasetKind::Tox21, n, seed);
+        (cfg, ps, data)
+    }
+
+    #[test]
+    fn cached_forward_matches_plain_forward() {
+        let (cfg, ps, data) = setup(4, 3);
+        let mb = data.pack_batch(&[0, 1, 2], cfg.max_nodes, cfg.ell_width).unwrap();
+        let w_rep = reference::build_w_rep(&cfg, &ps).unwrap();
+        let plain = reference::forward(&cfg, &ps, &mb).unwrap();
+        let cache =
+            forward_cached(&cfg, &ps, &mb, &Executor::serial(), &w_rep).unwrap();
+        assert_eq!(plain, cache.logits);
+        assert_eq!(cache.acts.len(), cfg.hidden.len() + 1);
+        assert_eq!(cache.ypre.len(), cfg.hidden.len());
+    }
+
+    #[test]
+    fn grad_shapes_and_finiteness() {
+        let (cfg, ps, data) = setup(3, 5);
+        let mb = data.pack_batch(&[0, 1], cfg.max_nodes, cfg.ell_width).unwrap();
+        let res = grad(&cfg, &ps, &mb).unwrap();
+        assert_eq!(res.grads.data.len(), cfg.n_params);
+        assert!(res.loss.is_finite() && res.loss > 0.0);
+        assert!(res.grads.data.iter().all(|v| v.is_finite()));
+        assert!(res.grads.data.iter().any(|v| *v != 0.0));
+        // 17 forward + 22 backward dispatches for the tox21 geometry
+        // (DESIGN.md §8): 2·CH·L + 1 and CH·(3L − 1) + 2 with CH=4,
+        // L=2 (no dX dispatch on the first layer — data needs no grad).
+        assert_eq!(res.dispatches, 17 + 22);
+    }
+
+    #[test]
+    fn grad_parallel_is_bitwise_deterministic() {
+        let (cfg, ps, data) = setup(6, 7);
+        let idx: Vec<usize> = (0..6).collect();
+        let mb = data.pack_batch(&idx, cfg.max_nodes, cfg.ell_width).unwrap();
+        let serial = grad(&cfg, &ps, &mb).unwrap();
+        for threads in [2, 8] {
+            let par =
+                grad_with(&cfg, &ps, &mb, &Executor::new(threads), None).unwrap();
+            assert_eq!(serial.grads.data, par.grads.data, "threads={threads}");
+            assert_eq!(serial.loss, par.loss);
+        }
+    }
+
+    #[test]
+    fn loss_grad_matches_finite_difference_of_loss() {
+        // Pin the loss->logits gradient on its own (both loss kinds),
+        // independent of the model layers.
+        for (loss_kind, n, seed) in [("bce", 12usize, 1u64), ("softmax", 5usize, 2u64)] {
+            let cfg = crate::util::json::parse(&format!(
+                r#"{{
+ "name": "t", "max_nodes": 4, "feat_dim": 2, "channels": 1, "hidden": [2],
+ "n_out": {n}, "loss": "{loss_kind}", "nnz_cap": 4, "ell_width": 3,
+ "train_batch": 2, "infer_batch": 2, "n_params": 0, "params": [],
+ "init_file": "x", "artifact_fwd_infer": "x", "artifact_fwd_train": "x",
+ "artifact_fwd_sample": "x", "artifact_train_step": "x",
+ "artifact_grad_sample": "x", "artifact_apply_sgd": "x"}}"#
+            ))
+            .and_then(|j| ModelConfig::from_json(&j))
+            .unwrap();
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let batch = 3usize;
+            let logits: Vec<f32> = (0..batch * n).map(|_| rng.normal()).collect();
+            let labels: Vec<f32> = (0..batch * n)
+                .map(|_| if rng.bool(0.3) { 1.0 } else { 0.0 })
+                .collect();
+            let g = loss_grad(&cfg, &logits, &labels, batch);
+            let eps = 1e-2f32;
+            for i in 0..batch * n {
+                let mut lp = logits.clone();
+                lp[i] += eps;
+                let mut lm = logits.clone();
+                lm[i] -= eps;
+                let fd = (reference::loss(&cfg, &lp, &labels, batch)
+                    - reference::loss(&cfg, &lm, &labels, batch))
+                    / (2.0 * eps);
+                assert!(
+                    (g[i] - fd).abs() <= 1e-4 + 1e-3 * fd.abs(),
+                    "{loss_kind} logit {i}: analytic {} vs fd {fd}",
+                    g[i]
+                );
+            }
+        }
+    }
+}

@@ -6,8 +6,29 @@
 //! the AOT-dumped initial values; [`reference`] is a pure-rust forward
 //! + loss that mirrors `python/compile/model.py` *exactly* — it is the
 //! cross-language oracle the integration tests compare PJRT artifact
-//! executions against.
+//! executions against; [`backward`] is its gradient twin (DESIGN.md
+//! §8): every backward matmul is a batched-SpMM engine dispatch, and
+//! the result is checked against central finite differences in
+//! `tests/grad_check.rs`.
+//!
+//! Forward + gradient round-trip, artifact-free:
+//!
+//! ```
+//! use bspmm::gcn::{backward, reference, ModelConfig, ParamSet};
+//! use bspmm::graph::dataset::{Dataset, DatasetKind};
+//!
+//! let cfg = ModelConfig::synthetic("tox21")?;
+//! let ps = ParamSet::random_init(&cfg, 7);
+//! let data = Dataset::generate(DatasetKind::Tox21, 4, 1);
+//! let mb = data.pack_batch(&[0, 1], cfg.max_nodes, cfg.ell_width)?;
+//! let logits = reference::forward(&cfg, &ps, &mb)?;
+//! let res = backward::grad(&cfg, &ps, &mb)?;
+//! assert_eq!(logits.len(), 2 * cfg.n_out);
+//! assert_eq!(res.grads.data.len(), cfg.n_params);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
+pub mod backward;
 pub mod config;
 pub mod params;
 pub mod reference;

@@ -70,6 +70,18 @@ impl ParamSet {
         Ok(&self.data[p.offset..p.offset + p.size])
     }
 
+    /// Mutable view of one named parameter tensor — how the backward
+    /// pass writes per-tensor gradients into a [`ParamSet`]-shaped
+    /// accumulator.
+    pub fn slice_mut<'a>(
+        &'a mut self,
+        cfg: &ModelConfig,
+        name: &str,
+    ) -> anyhow::Result<&'a mut [f32]> {
+        let p = cfg.param(name)?;
+        Ok(&mut self.data[p.offset..p.offset + p.size])
+    }
+
     /// Views in layout order — what gets marshalled into literals.
     pub fn views<'a>(&'a self, cfg: &ModelConfig) -> Vec<&'a [f32]> {
         cfg.params

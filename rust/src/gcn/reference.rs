@@ -1,7 +1,10 @@
 //! Pure-rust ChemGCN forward + loss — mirrors `python/compile/model.py`
 //! operation-for-operation. Used by the integration tests as the
 //! cross-language oracle for the PJRT artifact executions, and by the
-//! examples to report accuracy without a device round-trip.
+//! examples to report accuracy without a device round-trip. The
+//! matching backward pass lives in [`super::backward`] (DESIGN.md §8)
+//! and reuses this module's layer helpers so forward and gradient can
+//! never drift apart.
 //!
 //! All multiplication routes through the batched-SpMM engine
 //! ([`crate::sparse::engine`]): the per-channel `X @ W` feature
@@ -10,13 +13,20 @@
 //! engine dispatch covers the whole batch where the pre-engine code
 //! iterated (sample, channel) pairs inline. Iteration order inside the
 //! kernels matches the old inlined loops, so logits are bit-identical.
+//!
+//! The readout head multiplies against a tiled copy of `readout.w`
+//! ([`build_w_rep`], `[M*fin, n_out]`, ~10 MB on reaction100). It is a
+//! pure function of the parameters, so the coordinator's host paths
+//! cache it per [`ParamSet`] and pass it to [`forward_with_readout`];
+//! [`forward_with`] rebuilds it every call for one-shot users.
 
 use super::config::{LossKind, ModelConfig};
 use super::params::ParamSet;
 use crate::graph::dataset::ModelBatch;
 use crate::sparse::engine::{EllKernel, Executor, GemmKernel, Rhs};
 
-const EPS: f32 = 1e-5;
+/// GraphNorm variance stabilizer — matches `model.py`'s `eps`.
+pub(crate) const EPS: f32 = 1e-5;
 
 /// Forward pass on the serial executor: returns logits `[B, n_out]`
 /// (row-major).
@@ -33,68 +43,128 @@ pub fn forward_with(
     mb: &ModelBatch,
     exec: &Executor,
 ) -> anyhow::Result<Vec<f32>> {
-    anyhow::ensure!(mb.max_nodes == cfg.max_nodes, "node bucket mismatch");
-    anyhow::ensure!(mb.feat_dim == cfg.feat_dim, "feature width mismatch");
-    anyhow::ensure!(mb.channels == cfg.channels, "channel count mismatch");
-    let b = mb.batch;
-    let m = cfg.max_nodes;
+    let w_rep = build_w_rep(cfg, ps)?;
+    forward_with_readout(cfg, ps, mb, exec, &w_rep)
+}
 
+/// The tiled readout weight: `readout.w` (`[fin, n_out]`) repeated
+/// `max_nodes` times into `[M*fin, n_out]`, so the sum-pool readout is
+/// one engine dispatch over `[1, M*fin]` row views. Pure function of
+/// the parameters — cache it per [`ParamSet`] and invalidate on every
+/// parameter update (the coordinator's host paths do).
+pub fn build_w_rep(cfg: &ModelConfig, ps: &ParamSet) -> anyhow::Result<Vec<f32>> {
+    let fin = *cfg.hidden.last().unwrap_or(&cfg.feat_dim);
+    let w_out = ps.slice(cfg, "readout.w")?; // [fin, n_out]
+    let mut w_rep = vec![0f32; cfg.max_nodes * fin * cfg.n_out];
+    for row in w_rep.chunks_mut(fin * cfg.n_out) {
+        row.copy_from_slice(w_out);
+    }
+    Ok(w_rep)
+}
+
+/// Forward pass against a caller-provided tiled readout weight (from
+/// [`build_w_rep`]); bit-identical to [`forward_with`], minus the
+/// per-call tiling cost.
+pub fn forward_with_readout(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+    w_rep: &[f32],
+) -> anyhow::Result<Vec<f32>> {
+    check_batch(cfg, mb)?;
     let mut h = mb.x.clone(); // [B, M, fin]
     let mut fin = cfg.feat_dim;
     for (li, &fout) in cfg.hidden.iter().enumerate() {
-        let w = ps.slice(cfg, &format!("conv{li}.w"))?; // [CH, fin, fout]
-        let bias = ps.slice(cfg, &format!("conv{li}.b"))?; // [CH, fout]
         let gamma = ps.slice(cfg, &format!("conv{li}.gamma"))?;
         let beta = ps.slice(cfg, &format!("conv{li}.beta"))?;
-
-        // y[b,m,o] = sum_ch SpMM(A[b,ch], X[b] @ W[ch] + bias[ch]).
-        // Two engine dispatches per channel, each covering the whole
-        // batch (vs one pair of inlined loops per (sample, channel)).
-        let mut y = vec![0f32; b * m * fout];
-        let mut u = vec![0f32; b * m * fout];
-        for ch in 0..cfg.channels {
-            let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
-            let b_ch = &bias[ch * fout..(ch + 1) * fout];
-            // U = X @ W[ch] + bias[ch]   (MatMul + Add, Fig. 6):
-            // bias-prefill, then accumulate through the dense backend.
-            for row in u.chunks_mut(fout) {
-                row.copy_from_slice(b_ch);
-            }
-            let xw = GemmKernel::new(&h, b, m, fin);
-            exec.dispatch(&xw, Rhs::Shared(w_ch), fout, &mut u)?;
-            // y += A[ch] @ U             (SpMM + ElementWiseAdd).
-            let adj = EllKernel::channel(mb, ch);
-            exec.dispatch(&adj, Rhs::PerSample(&u), fout, &mut y)?;
-        }
+        let mut y = conv_layer(cfg, ps, li, fin, fout, &h, mb, exec)?;
         // GraphNorm + ReLU (+ re-mask).
-        graph_norm_relu(&mut y, &mb.mask, gamma, beta, b, m, fout);
+        graph_norm_relu(&mut y, &mb.mask, gamma, beta, mb.batch, cfg.max_nodes, fout);
         h = y;
         fin = fout;
     }
+    readout(cfg, ps, &h, fin, mb.batch, exec, w_rep)
+}
 
-    // Sum-pool readout + dense head: logits[b] = b_out + Σ_r h[b,r,:] @
-    // W. Viewing h[b] as [1, m*fin] against W tiled m times keeps the
-    // original (r, k) accumulation order while routing through the
-    // engine.
-    let w_out = ps.slice(cfg, "readout.w")?; // [fin, n_out]
-    let b_out = ps.slice(cfg, "readout.b")?;
-    let n_out = cfg.n_out;
-    let mut w_rep = vec![0f32; m * fin * n_out];
-    for row in w_rep.chunks_mut(fin * n_out) {
-        row.copy_from_slice(w_out);
+/// Shared geometry validation for forward and backward entry points.
+pub(crate) fn check_batch(cfg: &ModelConfig, mb: &ModelBatch) -> anyhow::Result<()> {
+    anyhow::ensure!(mb.max_nodes == cfg.max_nodes, "node bucket mismatch");
+    anyhow::ensure!(mb.feat_dim == cfg.feat_dim, "feature width mismatch");
+    anyhow::ensure!(mb.channels == cfg.channels, "channel count mismatch");
+    Ok(())
+}
+
+/// One graph-conv layer up to (not including) GraphNorm: returns the
+/// pre-normalization accumulator `y[b,m,o] = Σ_ch A[b,ch] @ (X[b] @
+/// W[ch] + bias[ch])`. Two engine dispatches per channel, each covering
+/// the whole batch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_layer(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    li: usize,
+    fin: usize,
+    fout: usize,
+    h: &[f32],
+    mb: &ModelBatch,
+    exec: &Executor,
+) -> anyhow::Result<Vec<f32>> {
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let w = ps.slice(cfg, &format!("conv{li}.w"))?; // [CH, fin, fout]
+    let bias = ps.slice(cfg, &format!("conv{li}.b"))?; // [CH, fout]
+    let mut y = vec![0f32; b * m * fout];
+    let mut u = vec![0f32; b * m * fout];
+    for ch in 0..cfg.channels {
+        let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
+        let b_ch = &bias[ch * fout..(ch + 1) * fout];
+        // U = X @ W[ch] + bias[ch]   (MatMul + Add, Fig. 6):
+        // bias-prefill, then accumulate through the dense backend.
+        for row in u.chunks_mut(fout) {
+            row.copy_from_slice(b_ch);
+        }
+        let xw = GemmKernel::new(h, b, m, fin);
+        exec.dispatch(&xw, Rhs::Shared(w_ch), fout, &mut u)?;
+        // y += A[ch] @ U             (SpMM + ElementWiseAdd).
+        let adj = EllKernel::channel(mb, ch);
+        exec.dispatch(&adj, Rhs::PerSample(&u), fout, &mut y)?;
     }
+    Ok(y)
+}
+
+/// Sum-pool readout + dense head: logits[b] = b_out + Σ_r h[b,r,:] @ W.
+/// Viewing h[b] as [1, m*fin] against the tiled weight keeps the
+/// original (r, k) accumulation order while routing through the engine.
+pub(crate) fn readout(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    h: &[f32],
+    fin: usize,
+    b: usize,
+    exec: &Executor,
+    w_rep: &[f32],
+) -> anyhow::Result<Vec<f32>> {
+    let m = cfg.max_nodes;
+    let n_out = cfg.n_out;
+    anyhow::ensure!(
+        w_rep.len() == m * fin * n_out,
+        "w_rep length {} != {m} * {fin} * {n_out} (stale readout cache?)",
+        w_rep.len()
+    );
+    let b_out = ps.slice(cfg, "readout.b")?;
     let mut logits = vec![0f32; b * n_out];
     for row in logits.chunks_mut(n_out) {
         row.copy_from_slice(b_out);
     }
-    let readout = GemmKernel::new(&h, b, 1, m * fin);
-    exec.dispatch(&readout, Rhs::Shared(&w_rep), n_out, &mut logits)?;
+    let readout = GemmKernel::new(h, b, 1, m * fin);
+    exec.dispatch(&readout, Rhs::Shared(w_rep), n_out, &mut logits)?;
     Ok(logits)
 }
 
 /// In-place per-graph masked normalization + affine + ReLU + re-mask —
 /// matches `model.graph_norm` followed by `jax.nn.relu`.
-fn graph_norm_relu(
+pub(crate) fn graph_norm_relu(
     y: &mut [f32],
     mask: &[f32],
     gamma: &[f32],

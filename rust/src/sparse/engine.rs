@@ -19,10 +19,39 @@
 //! * [`GemmKernel`] — dense batches (the batched-GEMM / cuBLAS
 //!   baseline, also the `X @ W` feature transform in the model).
 //!
+//! Every backend dispatches in two transpose forms (DESIGN.md §8): the
+//! plain `out += A[b] @ rhs` forward form, and the `out += A[b]^T @ rhs`
+//! form ([`Executor::dispatch_t`]) the backward pass uses for `A^T·X`
+//! gradients. The `X·W^T` gradient form is covered on the operand side
+//! by [`Rhs::SharedTransposed`].
+//!
 //! Every caller that multiplies routes through this trait:
-//! `gcn::reference::forward`, the coordinator's host dispatch paths,
-//! and the bench harness. `sparse::ops` stays the single-matrix oracle
-//! the engine is property-tested against (`tests/engine_parity.rs`).
+//! `gcn::reference::forward` and `gcn::backward::grad`, the
+//! coordinator's host dispatch paths, and the bench harness.
+//! `sparse::ops` stays the single-matrix oracle the engine is
+//! property-tested against (`tests/engine_parity.rs`).
+//!
+//! Forward/transpose round-trip through one backend:
+//!
+//! ```
+//! use bspmm::sparse::batch::PaddedStBatch;
+//! use bspmm::sparse::engine::{Executor, Rhs, StKernel};
+//! use bspmm::sparse::random::{random_batch, RandomSpec};
+//! use bspmm::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(1);
+//! let mats = random_batch(&mut rng, &RandomSpec::new(4, 2), 3);
+//! let st = PaddedStBatch::pack(&mats, 4, 8)?;
+//! let k = StKernel::new(&st);
+//! let x: Vec<f32> = (0..3 * 4 * 2).map(|i| i as f32 * 0.1).collect();
+//! let exec = Executor::serial();
+//! let y = exec.spmm(&k, Rhs::PerSample(&x), 2)?; // y[b] = A[b] @ x[b]
+//! let g = exec.spmm_t(&k, Rhs::PerSample(&y), 2)?; // g[b] = A[b]^T @ y[b]
+//! assert_eq!(y.len(), 3 * 4 * 2);
+//! assert_eq!(g.len(), 3 * 4 * 2);
+//! assert!(g.iter().any(|v| *v != 0.0));
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod exec;
 pub mod kernels;
@@ -38,29 +67,43 @@ pub enum Rhs<'a> {
     Shared(&'a [f32]),
     /// Independent dense operands, flat `[batch, inner_dim, n]`.
     PerSample(&'a [f32]),
+    /// One shared operand stored *transposed*: the slice is `[n,
+    /// inner_dim]` row-major and the dispatch multiplies against its
+    /// transpose — the `X·W^T` form the backward pass uses
+    /// (DESIGN.md §8). The executor materializes the `[inner_dim, n]`
+    /// transpose once per dispatch (weights are small), so the
+    /// per-sample kernels still read contiguous rows.
+    SharedTransposed(&'a [f32]),
 }
 
 impl<'a> Rhs<'a> {
     /// The `[inner_dim, n]` slice sample `b` multiplies against.
+    ///
+    /// # Panics
+    /// On [`Rhs::SharedTransposed`]: the executor normalizes that
+    /// layout to [`Rhs::Shared`] before any per-sample access.
     #[inline]
     pub fn sample(&self, b: usize, inner: usize, n: usize) -> &'a [f32] {
         match *self {
             Rhs::Shared(s) => &s[..inner * n],
             Rhs::PerSample(s) => &s[b * inner * n..(b + 1) * inner * n],
+            Rhs::SharedTransposed(_) => {
+                panic!("SharedTransposed must be materialized by the executor before sampling")
+            }
         }
     }
 
     /// Total length this layout requires for a given batch geometry.
     pub fn required_len(&self, batch: usize, inner: usize, n: usize) -> usize {
         match self {
-            Rhs::Shared(_) => inner * n,
+            Rhs::Shared(_) | Rhs::SharedTransposed(_) => inner * n,
             Rhs::PerSample(_) => batch * inner * n,
         }
     }
 
     pub fn len(&self) -> usize {
         match self {
-            Rhs::Shared(s) | Rhs::PerSample(s) => s.len(),
+            Rhs::Shared(s) | Rhs::PerSample(s) | Rhs::SharedTransposed(s) => s.len(),
         }
     }
 
@@ -74,14 +117,16 @@ impl<'a> Rhs<'a> {
 ///
 /// A kernel owns (a view of) a packed batch of `batch()` operand
 /// matrices, each logically `[out_rows, inner_dim]`. The executor calls
-/// [`spmm_sample`](BatchedSpmm::spmm_sample) once per sample, possibly
-/// from many threads; implementations must therefore be `Sync` and must
-/// not mutate shared state.
+/// [`spmm_sample`](BatchedSpmm::spmm_sample) (or its transpose twin
+/// [`spmm_sample_t`](BatchedSpmm::spmm_sample_t)) once per sample,
+/// possibly from many threads; implementations must therefore be `Sync`
+/// and must not mutate shared state.
 ///
 /// Accumulation contract: `out += A[b] @ rhs`. Callers pre-fill `out`
 /// with zeros (plain multiply) or a bias (fused bias add) — this is
 /// what lets the GCN sum channel contributions through the same
-/// interface.
+/// interface, and what lets the backward pass accumulate `dX` across
+/// channels (DESIGN.md §8).
 pub trait BatchedSpmm: Sync {
     /// Backend name for bench legends and error messages.
     fn name(&self) -> &'static str;
@@ -102,4 +147,9 @@ pub trait BatchedSpmm: Sync {
     /// `out += A[b] @ rhs` for one sample. `rhs` is `[inner_dim, n]`,
     /// `out` is `[out_rows, n]`, both row-major flat.
     fn spmm_sample(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+
+    /// `out += A[b]^T @ rhs` for one sample — the `A^T·X` transpose
+    /// form the backward pass dispatches (DESIGN.md §8). `rhs` is
+    /// `[out_rows, n]`, `out` is `[inner_dim, n]`, both row-major flat.
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]);
 }

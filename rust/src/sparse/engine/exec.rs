@@ -4,6 +4,12 @@
 //! launch regime the paper compares against); `threads > 1` splits the
 //! batch across scoped OS threads, each writing a disjoint slice of the
 //! output, so results are bit-identical to the serial path.
+//!
+//! Both transpose forms of the backward pass (DESIGN.md §8) ride the
+//! same machinery: [`Executor::dispatch_t`] runs the `A^T·X` form via
+//! [`BatchedSpmm::spmm_sample_t`], and [`Rhs::SharedTransposed`]
+//! covers the `X·W^T` form by materializing the (small) transposed
+//! weight once per dispatch.
 
 use super::{BatchedSpmm, Rhs};
 
@@ -60,15 +66,45 @@ impl Executor {
         n: usize,
         out: &mut [f32],
     ) -> anyhow::Result<()> {
+        self.dispatch_impl(kernel, rhs, n, out, false)
+    }
+
+    /// Transpose dispatch: `out[b] += A[b]^T @ rhs[b]` — the `A^T·X`
+    /// gradient form (DESIGN.md §8). `out` is `[batch, inner_dim, n]`,
+    /// `rhs` samples are `[out_rows, n]`; otherwise identical to
+    /// [`Executor::dispatch`], including the sample-parallel split and
+    /// the pre-filled-accumulator contract.
+    pub fn dispatch_t<K: BatchedSpmm + ?Sized>(
+        &self,
+        kernel: &K,
+        rhs: Rhs<'_>,
+        n: usize,
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        self.dispatch_impl(kernel, rhs, n, out, true)
+    }
+
+    fn dispatch_impl<K: BatchedSpmm + ?Sized>(
+        &self,
+        kernel: &K,
+        rhs: Rhs<'_>,
+        n: usize,
+        out: &mut [f32],
+        transpose: bool,
+    ) -> anyhow::Result<()> {
         let b = kernel.batch();
-        let inner = kernel.inner_dim();
-        let per_out = kernel.out_rows() * n;
+        // Transposing A swaps the roles of its rows and columns.
+        let (out_rows, inner) = if transpose {
+            (kernel.inner_dim(), kernel.out_rows())
+        } else {
+            (kernel.out_rows(), kernel.inner_dim())
+        };
+        let per_out = out_rows * n;
         anyhow::ensure!(
             out.len() == b * per_out,
-            "{}: output length {} != batch {b} * {} rows * n {n}",
+            "{}: output length {} != batch {b} * {out_rows} rows * n {n}",
             kernel.name(),
             out.len(),
-            kernel.out_rows()
         );
         anyhow::ensure!(
             rhs.len() == rhs.required_len(b, inner, n),
@@ -81,15 +117,33 @@ impl Executor {
             return Ok(());
         }
 
+        // X·W^T form: materialize the [inner, n] transpose of the
+        // [n, inner] shared operand once per dispatch, so the
+        // per-sample kernels keep reading contiguous rows.
+        let tbuf: Vec<f32>;
+        let rhs = match rhs {
+            Rhs::SharedTransposed(w) => {
+                let mut t = vec![0f32; inner * n];
+                for k in 0..inner {
+                    for j in 0..n {
+                        t[k * n + j] = w[j * inner + k];
+                    }
+                }
+                tbuf = t;
+                Rhs::Shared(&tbuf)
+            }
+            other => other,
+        };
+
         let threads = self.threads.min(b);
         if threads <= 1 {
             for bi in 0..b {
-                kernel.spmm_sample(
-                    bi,
-                    rhs.sample(bi, inner, n),
-                    n,
-                    &mut out[bi * per_out..(bi + 1) * per_out],
-                );
+                let sample_out = &mut out[bi * per_out..(bi + 1) * per_out];
+                if transpose {
+                    kernel.spmm_sample_t(bi, rhs.sample(bi, inner, n), n, sample_out);
+                } else {
+                    kernel.spmm_sample(bi, rhs.sample(bi, inner, n), n, sample_out);
+                }
             }
             return Ok(());
         }
@@ -103,7 +157,11 @@ impl Executor {
                 scope.spawn(move || {
                     for (j, sample_out) in out_chunk.chunks_mut(per_out).enumerate() {
                         let bi = ci * chunk + j;
-                        kernel.spmm_sample(bi, rhs.sample(bi, inner, n), n, sample_out);
+                        if transpose {
+                            kernel.spmm_sample_t(bi, rhs.sample(bi, inner, n), n, sample_out);
+                        } else {
+                            kernel.spmm_sample(bi, rhs.sample(bi, inner, n), n, sample_out);
+                        }
                     }
                 });
             }
@@ -122,13 +180,27 @@ impl Executor {
         self.dispatch(kernel, rhs, n, &mut out)?;
         Ok(out)
     }
+
+    /// Convenience twin of [`Executor::spmm`] for the transpose form:
+    /// allocate a zeroed `[batch, inner_dim, n]` output, `dispatch_t`,
+    /// return it.
+    pub fn spmm_t<K: BatchedSpmm + ?Sized>(
+        &self,
+        kernel: &K,
+        rhs: Rhs<'_>,
+        n: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut out = vec![0f32; kernel.batch() * kernel.inner_dim() * n];
+        self.dispatch_t(kernel, rhs, n, &mut out)?;
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sparse::batch::{random_dense_batch, PaddedStBatch};
-    use crate::sparse::engine::kernels::StKernel;
+    use crate::sparse::engine::kernels::{GemmKernel, StKernel};
     use crate::sparse::random::{random_batch, RandomSpec};
     use crate::util::rng::Rng;
 
@@ -151,6 +223,43 @@ mod tests {
                 .unwrap();
             assert_eq!(serial, par, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn transpose_parallel_bitwise_equals_serial() {
+        let (st, dense) = workload(13, 16, 5);
+        let k = StKernel::new(&st);
+        let serial = Executor::serial()
+            .spmm_t(&k, Rhs::PerSample(&dense), 5)
+            .unwrap();
+        assert!(serial.iter().any(|v| *v != 0.0));
+        for threads in [2, 3, 8, 64] {
+            let par = Executor::new(threads)
+                .spmm_t(&k, Rhs::PerSample(&dense), 5)
+                .unwrap();
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn shared_transposed_equals_pretransposed_shared() {
+        // Rhs::SharedTransposed(W) with W stored [n, inner] must equal
+        // Rhs::Shared(W^T) with the transpose done by hand.
+        let mut rng = Rng::new(17);
+        let (batch, rows, inner, n) = (4usize, 5usize, 3usize, 6usize);
+        let a: Vec<f32> = (0..batch * rows * inner).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..n * inner).map(|_| rng.normal()).collect(); // [n, inner]
+        let mut wt = vec![0f32; inner * n];
+        for j in 0..n {
+            for k in 0..inner {
+                wt[k * n + j] = w[j * inner + k];
+            }
+        }
+        let kernel = GemmKernel::new(&a, batch, rows, inner);
+        let exec = Executor::new(2);
+        let got = exec.spmm(&kernel, Rhs::SharedTransposed(&w), n).unwrap();
+        let want = exec.spmm(&kernel, Rhs::Shared(&wt), n).unwrap();
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -181,6 +290,9 @@ mod tests {
         assert!(exec
             .dispatch(&k, Rhs::Shared(&dense), 4, &mut out)
             .is_err());
+        assert!(exec
+            .dispatch_t(&k, Rhs::PerSample(&dense[..dense.len() - 1]), 4, &mut out)
+            .is_err());
     }
 
     #[test]
@@ -194,6 +306,8 @@ mod tests {
         let st = PaddedStBatch::pack(&[], 4, 4).unwrap();
         let k = StKernel::new(&st);
         let out = Executor::new(4).spmm(&k, Rhs::PerSample(&[]), 3).unwrap();
+        assert!(out.is_empty());
+        let out = Executor::new(4).spmm_t(&k, Rhs::PerSample(&[]), 3).unwrap();
         assert!(out.is_empty());
     }
 }

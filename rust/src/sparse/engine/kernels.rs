@@ -61,6 +61,25 @@ impl BatchedSpmm for StKernel<'_> {
             }
         }
     }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Same nnz-major loop with the (row, col) roles swapped:
+        // A^T[c, r] = A[r, c].
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            let src = &rhs[rid * n..(rid + 1) * n];
+            let dst = &mut out[cid * n..(cid + 1) * n];
+            for j in 0..n {
+                dst[j] += val * src[j];
+            }
+        }
+    }
 }
 
 /// CSR backend (paper Fig. 4): row-major, race-free by construction.
@@ -110,6 +129,25 @@ impl BatchedSpmm for CsrKernel<'_> {
                 let val = self.csr.vals[base + i];
                 let cid = self.csr.col_ids[base + i] as usize;
                 let src = &rhs[cid * n..(cid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Row-major traversal turns into a scatter over output rows —
+        // still race-free, since each sample is processed by one thread.
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let src = &rhs[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
+                let dst = &mut out[cid * n..(cid + 1) * n];
                 for j in 0..n {
                     dst[j] += val * src[j];
                 }
@@ -225,6 +263,27 @@ impl BatchedSpmm for EllKernel<'_> {
             }
         }
     }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Gather-from-row, scatter-to-column: the form the backward
+        // adjacency dispatch `dU = A^T @ dY` uses (DESIGN.md §8).
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let src = &rhs[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                let dst = &mut out[cid * n..(cid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
 }
 
 /// Dense backend: the batched-GEMM (cuBLAS) baseline over a densified
@@ -287,6 +346,25 @@ impl BatchedSpmm for GemmKernel<'_> {
             }
         }
     }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // out[k] += A[r, k] * rhs[r] — the `X^T @ dU` weight-gradient
+        // form, traversing A in its native row-major order.
+        let base = b * self.rows * self.inner;
+        for r in 0..self.rows {
+            let src = &rhs[r * n..(r + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let dst = &mut out[k * n..(k + 1) * n];
+                for j in 0..n {
+                    dst[j] += av * src[j];
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -335,6 +413,53 @@ mod tests {
                 }
             }
             assert_eq!(k.real_nnz(), batch * dim * z, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn all_backends_transpose_matches_transposed_oracle() {
+        // out = A^T @ x must equal the plain oracle run on the
+        // host-transposed dense form of A, for every backend.
+        let mut rng = Rng::new(33);
+        let (dim, z, batch, nb) = (9usize, 2usize, 5usize, 4usize);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, z), batch);
+        let st = PaddedStBatch::pack(&mats, dim, dim * z).unwrap();
+        let csr = PaddedCsrBatch::pack(&mats, dim, dim * z).unwrap();
+        let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+        let a_dense = densify_batch(&mats, dim);
+        let dense: Vec<f32> = (0..batch * dim * nb).map(|_| rng.normal()).collect();
+
+        let exec = Executor::serial();
+        let stk = StKernel::new(&st);
+        let csrk = CsrKernel::new(&csr);
+        let ellk = EllKernel::from_padded(&ell);
+        let gemk = GemmKernel::new(&a_dense, batch, dim, dim);
+        let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+        for k in kernels {
+            let got = exec.spmm_t(k, Rhs::PerSample(&dense), nb).unwrap();
+            for (bi, m) in mats.iter().enumerate() {
+                let a = m.to_dense();
+                let mut at = Dense::zeros(dim, dim);
+                for r in 0..dim {
+                    for c in 0..dim {
+                        at.data[c * dim + r] = a.at(r, c);
+                    }
+                }
+                let b = Dense {
+                    rows: dim,
+                    cols: nb,
+                    data: dense[bi * dim * nb..(bi + 1) * dim * nb].to_vec(),
+                };
+                let want = ops::gemm(&at, &b);
+                for (j, w) in want.data.iter().enumerate() {
+                    let g = got[bi * dim * nb + j];
+                    assert!(
+                        (g - w).abs() <= 1e-5 + 1e-5 * w.abs(),
+                        "{} sample {bi} elem {j}: got {g}, want {w}",
+                        k.name()
+                    );
+                }
+            }
         }
     }
 

@@ -11,11 +11,12 @@
 //! `python/compile/kernels/ref.py`).
 //!
 //! [`engine`] is the execution layer: the [`engine::BatchedSpmm`] trait
-//! (one interface, four backends — ST / CSR / ELL / dense-GEMM) plus a
-//! sample-parallel [`engine::Executor`] that processes a whole packed
-//! batch in one dispatch. The GCN forward pass, the coordinator's host
-//! dispatch paths, and the bench harness all multiply through it; `ops`
-//! stays the single-matrix oracle it is property-tested against.
+//! (one interface, four backends — ST / CSR / ELL / dense-GEMM, each in
+//! plain and transpose form) plus a sample-parallel
+//! [`engine::Executor`] that processes a whole packed batch in one
+//! dispatch. The GCN forward *and backward* passes, the coordinator's
+//! host dispatch paths, and the bench harness all multiply through it;
+//! `ops` stays the single-matrix oracle it is property-tested against.
 
 pub mod batch;
 pub mod coo;
