@@ -1,23 +1,36 @@
 //! SpMM micro-benchmark at a single user-chosen point, engine-first:
-//! the four batched-SpMM engine backends (ST / CSR / ELL / dense-GEMM),
-//! serial fallback vs the sample-parallel executor, and a host-engine
-//! `train_step` line (full fwd + engine-dispatch backward + SGD,
-//! DESIGN.md §8) — plus, when the AOT artifacts exist, the five
-//! measured + simulated §V-A series.
+//! the four batched-SpMM engine backends (ST / CSR / ELL / dense-GEMM)
+//! in three executor configurations — serial fallback, static-parallel
+//! (the legacy contiguous sample split) and the work-stealing worker
+//! pool (DESIGN.md §9) — plus a host-engine `train_step` line (full
+//! fwd + engine-dispatch backward + SGD, DESIGN.md §8) and, when the
+//! AOT artifacts exist, the five measured + simulated §V-A series.
 //!
 //!     cargo run --release --example spmm_microbench -- --sweep fig8b --nb 64
 //!     cargo run --release --example spmm_microbench -- --threads 4
+//!     cargo run --release --example spmm_microbench -- --json
+//!
+//! `--json` additionally runs the mixed-batch sweep (fig10, first n_B
+//! point — the load-imbalance case stealing exists for) and writes the
+//! whole serial / static / work-stealing comparison, train_step line
+//! included, to `BENCH_engine.json` at the repository root so the perf
+//! trajectory is machine-recorded across PRs.
 //!
 //! No artifacts are required for the engine or train_step series: sweep
 //! geometry falls back to the built-in copy of the aot.py table.
 
+use std::path::Path;
+
 use bspmm::bench::figures::{
     engine_speedup_summary, run_engine_bench, run_train_step_bench, FigureRunner,
 };
+use bspmm::bench::report::save_json_in;
 use bspmm::bench::BenchOpts;
 use bspmm::runtime::artifact::SweepSpec;
 use bspmm::runtime::Runtime;
+use bspmm::sparse::engine::Executor;
 use bspmm::util::cli::{parse_or_exit, Cli};
+use bspmm::util::json::{arr, num, obj, s};
 
 fn main() -> anyhow::Result<()> {
     let cli = Cli::new("spmm_microbench", "one-point SpMM comparison")
@@ -25,7 +38,11 @@ fn main() -> anyhow::Result<()> {
         .opt("nb", "64", "dense input width n_B (must exist in the sweep)")
         .opt("threads", "0", "parallel executor threads (0 = one per core)")
         .opt("train_model", "tox21", "model for the train_step line")
-        .opt("train_batch", "50", "train_step minibatch size (0 = skip)");
+        .opt("train_batch", "50", "train_step minibatch size (0 = skip)")
+        .flag(
+            "json",
+            "also run the fig10 mixed sweep and write BENCH_engine.json at the repo root",
+        );
     let args = parse_or_exit(&cli);
 
     let rt = match Runtime::new_default() {
@@ -49,22 +66,66 @@ fn main() -> anyhow::Result<()> {
     );
     sw.nbs = vec![nb];
 
-    // Engine backends: one dispatch per whole batch, serial vs parallel.
+    // Engine backends: one dispatch per whole batch, serial vs static
+    // parallel vs work-stealing pool.
     let opts = BenchOpts::from_env();
-    let engine = run_engine_bench(&sw, args.usize("threads"), &opts)?;
+    let threads = args.usize("threads");
+    let engine = run_engine_bench(&sw, threads, &opts)?;
     println!("{}", engine.render());
     print!("{}", engine_speedup_summary(&engine));
     println!();
+    let mut figures = vec![engine];
+
+    // The mixed-batch sweep (Fig. 10 geometry): the skewed case the
+    // work-stealing decomposition exists for. Only run for the JSON
+    // record — it is the expensive point.
+    if args.flag("json") && sw.key != "fig10" {
+        let mut mixed = match &rt {
+            Some(rt) => rt.manifest.sweep("fig10")?,
+            None => SweepSpec::builtin("fig10")?,
+        };
+        mixed.nbs.truncate(1);
+        let mixed_fig = run_engine_bench(&mixed, threads, &opts)?;
+        println!("{}", mixed_fig.render());
+        print!("{}", engine_speedup_summary(&mixed_fig));
+        println!();
+        figures.push(mixed_fig);
+    }
 
     // Training-side counterpart: one host train_step (fwd + backward +
-    // SGD, every matmul an engine dispatch), serial vs parallel.
+    // SGD, every matmul an engine dispatch) per iteration, serial vs
+    // one persistent pool.
     let tb = args.usize("train_batch");
+    let mut train = None;
     if tb > 0 {
-        print!(
-            "{}",
-            run_train_step_bench(args.str("train_model"), tb, args.usize("threads"), &opts)?
-        );
+        let t = run_train_step_bench(args.str("train_model"), tb, threads, &opts)?;
+        print!("{}", t.render());
         println!();
+        train = Some(t);
+    }
+
+    if args.flag("json") {
+        // Record the resolved worker count (not the raw CLI value,
+        // where 0 means auto) so records from different machines stay
+        // comparable.
+        let mut fields = vec![
+            ("key", s("BENCH_engine")),
+            ("threads", num(Executor::resolve_threads(threads) as f64)),
+            (
+                "figures",
+                arr(figures.iter().map(|f| f.to_json()).collect()),
+            ),
+        ];
+        if let Some(t) = &train {
+            fields.push(("train_step", t.to_json()));
+        }
+        // CARGO_MANIFEST_DIR is rust/, so the repo root is its parent —
+        // stable regardless of the invoking working directory.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap_or_else(|| Path::new("."));
+        let path = save_json_in(root, "BENCH_engine", &obj(fields))?;
+        println!("wrote {}\n", path.display());
     }
 
     if let Some(rt) = &rt {

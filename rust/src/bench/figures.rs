@@ -19,7 +19,8 @@ use crate::graph::dataset::{Dataset, DatasetKind};
 use crate::runtime::artifact::SweepSpec;
 use crate::runtime::Runtime;
 use crate::simulator::cost::CostModel;
-use crate::sparse::engine::{BatchedSpmm, Executor, Rhs};
+use crate::sparse::engine::{BatchedSpmm, Executor, Rhs, SchedPolicy};
+use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::timer;
 
 /// Approach names, in the paper's legend order.
@@ -34,18 +35,28 @@ pub const APPROACHES: [&str; 5] = [
 /// Engine backend names, in `SpmmWorkload` accessor order.
 pub const ENGINE_BACKENDS: [&str; 4] = ["Engine-ST", "Engine-CSR", "Engine-ELL", "Engine-GEMM"];
 
-/// Benchmark the four engine backends at every sweep point, serial
-/// executor vs `threads`-wide parallel executor (`0` = one per core).
-/// Series come in (serial, parallel) pairs per backend; no runtime or
-/// artifacts are needed.
+/// Benchmark the four engine backends at every sweep point in three
+/// executor configurations: serial fallback, `threads`-wide static
+/// split (the legacy contiguous sample partition), and `threads`-wide
+/// work-stealing pool (`threads = 0` = one per core). Series come in
+/// (serial, static, steal) triples per backend; no runtime or
+/// artifacts are needed. On uniform sweeps static and steal should
+/// coincide (the planner keeps the static fast path); mixed sweeps
+/// (fig10) are where stealing pulls ahead.
 pub fn run_engine_bench(
     sw: &SweepSpec,
     threads: usize,
     opts: &BenchOpts,
 ) -> anyhow::Result<FigureResult> {
-    let par = Executor::auto(threads);
-    let execs = [Executor::serial(), par];
-    let labels = ["serial".to_string(), format!("{}t", par.threads())];
+    let t = Executor::resolve_threads(threads);
+    let stat = Executor::with_policy(t, SchedPolicy::Static);
+    let steal = Executor::new(t);
+    let labels = [
+        "serial".to_string(),
+        format!("static-{t}t"),
+        format!("steal-{t}t"),
+    ];
+    let execs = [Executor::serial(), stat, steal];
     let mut series: Vec<Series> = Vec::new();
     for backend in ENGINE_BACKENDS {
         for label in &labels {
@@ -108,9 +119,8 @@ pub fn run_engine_bench(
     })
 }
 
-/// Per-backend serial -> parallel speedup lines for an engine figure
-/// (series arranged in (serial, parallel) pairs, as `run_engine_bench`
-/// emits them).
+/// Per-backend speedup lines for an engine figure (series arranged in
+/// (serial, static, steal) triples, as `run_engine_bench` emits them).
 pub fn engine_speedup_summary(f: &FigureResult) -> String {
     let best = |s: &Series| {
         s.values
@@ -120,34 +130,84 @@ pub fn engine_speedup_summary(f: &FigureResult) -> String {
             .fold(f64::MIN, f64::max)
     };
     let mut out = String::new();
-    for pair in f.series.chunks(2) {
-        if pair.len() != 2 {
+    for group in f.series.chunks(3) {
+        if group.len() != 3 {
             continue;
         }
-        let (s, p) = (best(&pair[0]), best(&pair[1]));
-        if s > 0.0 && p > 0.0 {
+        let (s, st, wk) = (best(&group[0]), best(&group[1]), best(&group[2]));
+        if s > 0.0 && st > 0.0 && wk > 0.0 {
             out.push_str(&format!(
-                "  {} {s:.3} -> {} {p:.3} GFLOPS: {:.2}x parallel speedup\n",
-                pair[0].name,
-                pair[1].name,
-                p / s
+                "  {} {s:.3} -> {} {st:.3} ({:.2}x) -> {} {wk:.3} GFLOPS \
+                 ({:.2}x parallel speedup)\n",
+                group[0].name,
+                group[1].name,
+                st / s,
+                group[2].name,
+                wk / s
             ));
         }
     }
     out
 }
 
+/// One host `train_step` timing comparison ([`run_train_step_bench`]):
+/// mean seconds per step under each executor configuration, in
+/// (serial, pool) order.
+#[derive(Clone, Debug)]
+pub struct TrainStepBench {
+    pub model: String,
+    pub batch: usize,
+    /// `(label, mean seconds per step)` per configuration.
+    pub points: Vec<(String, f64)>,
+}
+
+impl TrainStepBench {
+    /// The printable summary line the microbench and CHANGES.md quote.
+    pub fn render(&self) -> String {
+        let (_, s) = &self.points[0];
+        let mut out = format!(
+            "train_step[{}, B={}]: serial {:.2} ms/step",
+            self.model,
+            self.batch,
+            s * 1e3
+        );
+        for (label, p) in &self.points[1..] {
+            out.push_str(&format!(" -> {label} {:.2} ms/step", p * 1e3));
+        }
+        let (_, last) = &self.points[self.points.len() - 1];
+        out.push_str(&format!(": {:.2}x parallel speedup\n", s / last));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("batch", num(self.batch as f64)),
+            (
+                "points",
+                arr(self
+                    .points
+                    .iter()
+                    .map(|(label, secs)| {
+                        obj(vec![("label", s(label)), ("secs_per_step", num(*secs))])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
 /// Host-engine `train_step` microbench: each step is one full
 /// fwd + engine-dispatch backward + SGD on `Trainer::new_host`
 /// (DESIGN.md §8), timed on the serial executor vs a `threads`-wide
-/// parallel one (`0` = one per core). No artifacts needed. Returns a
-/// printable summary line.
+/// work-stealing pool (`0` = one per core) — every configuration runs
+/// all of its steps on one persistent pool. No artifacts needed.
 pub fn run_train_step_bench(
     model: &str,
     batch: usize,
     threads: usize,
     opts: &BenchOpts,
-) -> anyhow::Result<String> {
+) -> anyhow::Result<TrainStepBench> {
     anyhow::ensure!(batch >= 1, "train_step bench needs batch >= 1");
     let kind = match model {
         "tox21" => DatasetKind::Tox21,
@@ -156,12 +216,9 @@ pub fn run_train_step_bench(
     };
     let data = Dataset::generate(kind, batch, 77);
     let idx: Vec<usize> = (0..batch).collect();
-    let par = Executor::auto(threads);
-    let configs = [
-        ("serial".to_string(), 1usize),
-        (format!("{}t", par.threads()), par.threads()),
-    ];
-    let mut results: Vec<(String, f64)> = Vec::new();
+    let t = Executor::resolve_threads(threads);
+    let configs = [("serial".to_string(), 1usize), (format!("{t}t"), t)];
+    let mut points: Vec<(String, f64)> = Vec::new();
     for (label, t) in configs {
         let mut tr = Trainer::new_host(model, t)?;
         let mb = data.pack_batch(&idx, tr.cfg.max_nodes, tr.cfg.ell_width)?;
@@ -177,17 +234,13 @@ pub fn run_train_step_bench(
                 tr.step_batched(&mb, lr).expect("host train step");
             },
         );
-        results.push((label, samples.iter().sum::<f64>() / samples.len() as f64));
+        points.push((label, samples.iter().sum::<f64>() / samples.len() as f64));
     }
-    let (ref plabel, p) = results[1];
-    let s = results[0].1;
-    Ok(format!(
-        "train_step[{model}, B={batch}]: serial {:.2} ms/step -> {plabel} {:.2} ms/step: \
-         {:.2}x parallel speedup\n",
-        s * 1e3,
-        p * 1e3,
-        s / p
-    ))
+    Ok(TrainStepBench {
+        model: model.to_string(),
+        batch,
+        points,
+    })
 }
 
 pub struct FigureRunner<'a> {
@@ -494,9 +547,13 @@ mod tests {
             max_iters: 1,
             min_time_s: 0.0,
         };
-        let line = run_train_step_bench("tox21", 4, 2, &opts).unwrap();
+        let bench = run_train_step_bench("tox21", 4, 2, &opts).unwrap();
+        let line = bench.render();
         assert!(line.contains("train_step[tox21, B=4]"), "{line}");
         assert!(line.contains("speedup"), "{line}");
+        assert_eq!(bench.points.len(), 2);
+        assert!(bench.points.iter().all(|(_, secs)| *secs > 0.0));
+        assert!(bench.to_json().to_string().contains("secs_per_step"));
         assert!(run_train_step_bench("nope", 4, 2, &opts).is_err());
     }
 
@@ -513,11 +570,13 @@ mod tests {
             min_time_s: 0.0,
         };
         let f = run_engine_bench(&sw, 2, &opts).unwrap();
-        assert_eq!(f.series.len(), ENGINE_BACKENDS.len() * 2);
+        assert_eq!(f.series.len(), ENGINE_BACKENDS.len() * 3);
         assert!(f
             .series
             .iter()
             .all(|s| s.values.len() == 1 && s.values[0] > 0.0));
-        assert!(!engine_speedup_summary(&f).is_empty());
+        let summary = engine_speedup_summary(&f);
+        assert!(!summary.is_empty());
+        assert!(summary.contains("static-2t") && summary.contains("steal-2t"));
     }
 }

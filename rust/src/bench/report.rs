@@ -74,13 +74,19 @@ impl FigureResult {
     }
 }
 
-/// Write any bench result blob to `target/bench_results/<key>.json`.
-pub fn save_json(key: &str, j: &Json) -> anyhow::Result<PathBuf> {
-    let dir = PathBuf::from("target/bench_results");
-    std::fs::create_dir_all(&dir)?;
+/// Write any bench result blob to `<dir>/<key>.json` (creating the
+/// directory), e.g. the repo-root `BENCH_engine.json` the microbench's
+/// `--json` flag records the perf trajectory in.
+pub fn save_json_in(dir: &std::path::Path, key: &str, j: &Json) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{key}.json"));
     std::fs::write(&path, j.to_string())?;
     Ok(path)
+}
+
+/// Write any bench result blob to `target/bench_results/<key>.json`.
+pub fn save_json(key: &str, j: &Json) -> anyhow::Result<PathBuf> {
+    save_json_in(&PathBuf::from("target/bench_results"), key, j)
 }
 
 /// Simple two-column "paper vs ours" comparison row set (tables II-IV).

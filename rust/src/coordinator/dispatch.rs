@@ -34,6 +34,11 @@ pub struct HostDispatcher {
     /// Mutate only via [`HostDispatcher::set_params`], or follow direct
     /// edits with [`HostDispatcher::invalidate_cache`].
     pub params: ParamSet,
+    /// One executor — and with it one persistent
+    /// [`WorkerPool`](crate::sparse::engine::WorkerPool) — for the
+    /// dispatcher's whole lifetime: every forward it serves runs on the
+    /// same parked workers, with zero thread spawns after construction
+    /// (DESIGN.md §9).
     exec: Executor,
     /// Cached tiled readout weight; lazily rebuilt after invalidation.
     w_rep: Option<Vec<f32>>,
@@ -61,6 +66,8 @@ impl HostDispatcher {
         Ok(HostDispatcher::new(cfg, params, threads))
     }
 
+    /// The dispatcher's long-lived executor (a handle on its one
+    /// worker pool).
     pub fn executor(&self) -> &Executor {
         &self.exec
     }

@@ -50,7 +50,10 @@ pub enum DispatchMode {
 pub enum ServeBackend {
     /// AOT artifacts on the PJRT runtime.
     Pjrt,
-    /// In-process batched-SpMM engine; `threads = 0` means one per core.
+    /// In-process batched-SpMM engine; `threads = 0` means one per
+    /// core. The device thread's [`HostDispatcher`] constructs one
+    /// persistent worker pool at startup and serves every request on
+    /// it — no per-dispatch thread spawning (DESIGN.md §9).
     HostEngine { threads: usize },
 }
 

@@ -14,9 +14,14 @@
 //! ([`Trainer::new_host`], no artifacts needed): forward/evaluate via
 //! `gcn::reference`, training via `gcn::backward` — every gradient
 //! matmul an engine dispatch (DESIGN.md §8) — plus an in-process SGD
-//! apply. The host paths cache the tiled readout weight `w_rep` (a
-//! pure function of `readout.w`, ~10 MB rebuilt per forward otherwise)
-//! and invalidate it on every parameter update.
+//! apply. The trainer owns **one** executor (and with it one persistent
+//! [`WorkerPool`](crate::sparse::engine::WorkerPool)) for its whole
+//! lifetime: all 39 engine dispatches of a tox21 train step — and every
+//! step after it — run on the same parked workers, with zero thread
+//! spawns after construction (DESIGN.md §9; pinned by
+//! `tests/host_serving.rs`). The host paths cache the tiled readout
+//! weight `w_rep` (a pure function of `readout.w`, ~10 MB rebuilt per
+//! forward otherwise) and invalidate it on every parameter update.
 
 use std::path::Path;
 
@@ -112,6 +117,7 @@ impl Trainer {
     /// Host-engine trainer (no artifacts): forward, evaluation *and*
     /// training all route through the batched-SpMM engine — the
     /// backward pass is `gcn::backward`, the SGD apply is in-process.
+    /// Constructs the trainer's one long-lived worker pool here;
     /// `threads = 0` means one thread per core.
     pub fn new_host(model: &str, threads: usize) -> anyhow::Result<Trainer> {
         let cfg = ModelConfig::synthetic(model)?;
@@ -130,6 +136,13 @@ impl Trainer {
         self.rt.as_ref().ok_or_else(|| {
             anyhow::anyhow!("no PJRT runtime: this trainer runs on the host-engine backend")
         })
+    }
+
+    /// The host-engine executor (a handle on the trainer's one worker
+    /// pool); `None` on the PJRT backend. The spawn/steal-accounting
+    /// tests read pool statistics through this.
+    pub fn executor(&self) -> Option<&Executor> {
+        self.host_exec.as_ref()
     }
 
     /// Replace the parameter set (e.g. with an externally trained
@@ -157,7 +170,7 @@ impl Trainer {
     /// — the engine is not shape-locked the way the AOT artifacts are).
     pub fn step_batched(&mut self, mb: &ModelBatch, lr: f32) -> anyhow::Result<f32> {
         anyhow::ensure!(mb.batch > 0, "train step on an empty batch");
-        if let Some(exec) = self.host_exec {
+        if let Some(exec) = self.host_exec.clone() {
             self.ensure_w_rep()?;
             let res = backward::grad_with(
                 &self.cfg,
@@ -197,7 +210,7 @@ impl Trainer {
         // every parameter instead of erroring.
         anyhow::ensure!(mb.batch > 0, "train step on an empty batch");
         let b = mb.batch;
-        if let Some(exec) = self.host_exec {
+        if let Some(exec) = self.host_exec.clone() {
             self.ensure_w_rep()?;
             let mut grad_sum = vec![0f32; self.cfg.n_params];
             let mut loss_sum = 0f64;
@@ -288,7 +301,7 @@ impl Trainer {
     /// (against the cached readout tiling), or the matching fwd
     /// artifact on PJRT.
     pub fn forward(&mut self, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
-        if let Some(exec) = self.host_exec {
+        if let Some(exec) = self.host_exec.clone() {
             self.ensure_w_rep()?;
             self.dispatches += 1;
             let w_rep = self.w_rep.as_deref().unwrap();

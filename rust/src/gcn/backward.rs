@@ -12,7 +12,9 @@
 //!   channel);
 //! * `dW = X^T @ dU` — [`GemmKernel`] over the `[B*M, fin]` stacked
 //!   view of the activations, `dispatch_t` (the cross-sample reduction
-//!   folds into a batch-1 matmul);
+//!   folds into a batch-1 matmul, which the worker pool row-splits
+//!   across workers — bit-stably — rather than leaving it
+//!   single-threaded, DESIGN.md §9);
 //! * `dX = dU @ W^T` — [`GemmKernel`] with [`Rhs::SharedTransposed`]
 //!   (the `X·W^T` form), accumulating across channels through the
 //!   engine's `+=` contract;

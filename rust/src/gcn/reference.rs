@@ -35,8 +35,10 @@ pub fn forward(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch) -> anyhow::Res
 }
 
 /// Forward pass with an explicit engine executor (the coordinator's
-/// host dispatch paths pass a parallel one). Results are identical for
-/// every thread count — samples are independent.
+/// host dispatch paths pass a handle on their long-lived worker pool,
+/// so one pool spans every dispatch of a forward or train step).
+/// Results are bit-identical for every thread count and steal order
+/// (DESIGN.md §9).
 pub fn forward_with(
     cfg: &ModelConfig,
     ps: &ParamSet,

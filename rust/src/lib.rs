@@ -14,8 +14,9 @@
 //!   plus the training step (loss + grad + SGD). AOT-lowered to HLO text.
 //! * **Layer 3 (this crate)** — the coordinator: a dataset/graph substrate,
 //!   the unified batched-SpMM execution engine (`sparse::engine` — one
-//!   `BatchedSpmm` trait, four backends, a sample-parallel CPU executor
-//!   that every multiplying layer dispatches through), a dynamic batcher
+//!   `BatchedSpmm` trait, four backends, and an executor over a
+//!   persistent work-stealing worker pool that every multiplying layer
+//!   dispatches through, DESIGN.md §9), a dynamic batcher
 //!   and serving runtime, the training loop, a PJRT runtime that loads
 //!   the AOT artifacts, and a P100 GPU cost-model simulator that
 //!   regenerates the paper's figures where real-GPU measurements are

@@ -5,11 +5,15 @@
 //! once. This module is the CPU realization of that idea as an actual
 //! execution subsystem rather than a padding format: a [`BatchedSpmm`]
 //! trait describing "multiply sample `b` of a packed batch against a
-//! dense operand", four backends over the crate's batch layouts, and a
-//! sample-parallel [`Executor`] whose `dispatch` processes the whole
-//! batch in one call (the CPU analogue of the single fused CUDA launch;
-//! `threads = 1` is the serial fallback standing in for the per-sample
-//! launch regime).
+//! dense operand", four backends over the crate's batch layouts, and an
+//! [`Executor`] whose `dispatch` processes the whole batch in one call
+//! (the CPU analogue of the single fused CUDA launch; `threads = 1` is
+//! the serial fallback standing in for the per-sample launch regime).
+//! The executor is a thin handle over a persistent [`WorkerPool`]
+//! (parked worker threads + a work-stealing task queue over (sample,
+//! row-block) tasks, DESIGN.md §9) — share one pool across a trainer's
+//! or server's lifetime by cloning the handle instead of constructing
+//! executors per call.
 //!
 //! Backends ([`kernels`]):
 //! * [`StKernel`] — SparseTensor batches (paper Fig. 2, `PaddedStBatch`);
@@ -55,9 +59,11 @@
 
 pub mod exec;
 pub mod kernels;
+pub mod pool;
 
 pub use exec::Executor;
 pub use kernels::{CsrKernel, EllKernel, GemmKernel, StKernel};
+pub use pool::{PoolStats, SchedPolicy, WorkerPool};
 
 /// Right-hand-side operand layout for one engine dispatch.
 #[derive(Clone, Copy, Debug)]
@@ -152,4 +158,74 @@ pub trait BatchedSpmm: Sync {
     /// form the backward pass dispatches (DESIGN.md §8). `rhs` is
     /// `[out_rows, n]`, `out` is `[inner_dim, n]`, both row-major flat.
     fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+
+    /// Real non-zeros of sample `b` — the worker pool's cost-model
+    /// signal for decomposing a dispatch into near-equal tasks
+    /// (DESIGN.md §9). An estimate is fine (the dense backend reports
+    /// its full extent without scanning); stealing absorbs the error.
+    fn sample_nnz(&self, b: usize) -> usize;
+
+    /// Row-blocked form of [`spmm_sample`](BatchedSpmm::spmm_sample):
+    /// accumulate only output rows `row0 .. row0 + out.len() / n`, with
+    /// `out` the `[rows, n]` block for exactly that range. Contributions
+    /// to each output element must arrive in the same order as in the
+    /// full-sample call — that per-element order is what makes pool
+    /// output bit-identical to serial regardless of how a sample is
+    /// split across workers (DESIGN.md §9).
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+
+    /// Row-blocked form of
+    /// [`spmm_sample_t`](BatchedSpmm::spmm_sample_t): accumulate only
+    /// transpose-output rows (columns of `A[b]`) `row0 .. row0 +
+    /// out.len() / n`, under the same per-element accumulation-order
+    /// contract as [`spmm_sample_rows`](BatchedSpmm::spmm_sample_rows).
+    /// This is the split that parallelizes the backward's batch-1
+    /// `dW = X^T·dU` dispatches within one sample.
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+}
+
+/// References to kernels are kernels: this is what lets the executor
+/// type-erase any `K: BatchedSpmm + ?Sized` into the `&dyn BatchedSpmm`
+/// the worker pool runs (an unsized `K` cannot be coerced directly, but
+/// `&K` is always `Sized`).
+impl<K: BatchedSpmm + ?Sized> BatchedSpmm for &K {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+
+    fn out_rows(&self) -> usize {
+        (**self).out_rows()
+    }
+
+    fn inner_dim(&self) -> usize {
+        (**self).inner_dim()
+    }
+
+    fn real_nnz(&self) -> usize {
+        (**self).real_nnz()
+    }
+
+    fn spmm_sample(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample(b, rhs, n, out)
+    }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_t(b, rhs, n, out)
+    }
+
+    fn sample_nnz(&self, b: usize) -> usize {
+        (**self).sample_nnz(b)
+    }
+
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_rows(b, row0, rhs, n, out)
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_t_rows(b, row0, rhs, n, out)
+    }
 }

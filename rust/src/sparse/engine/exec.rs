@@ -1,9 +1,19 @@
-//! The sample-parallel CPU executor: one `dispatch` call processes a
+//! The batched-dispatch executor: one `dispatch` call processes a
 //! whole packed batch — the CPU analogue of the paper's single fused
 //! kernel launch. `threads = 1` is the serial fallback (the per-sample
-//! launch regime the paper compares against); `threads > 1` splits the
-//! batch across scoped OS threads, each writing a disjoint slice of the
-//! output, so results are bit-identical to the serial path.
+//! launch regime the paper compares against); `threads > 1` runs on the
+//! executor's persistent [`WorkerPool`] (parked workers + work-stealing
+//! over (sample, row-block) tasks, DESIGN.md §9). Output is
+//! bit-identical to the serial path for every thread count, policy and
+//! steal order: tasks partition the output elements and the row-blocked
+//! kernels preserve the serial per-element accumulation order.
+//!
+//! `Executor` is a cheap `Arc` handle over its pool: clone it to share
+//! one pool across every dispatching layer (the trainer, the serving
+//! device thread, the benches) instead of constructing executors — and
+//! with them, thread pools — per call. The pool's only thread spawns
+//! happen at construction ([`Executor::stats`] exposes the accounting
+//! the tests pin).
 //!
 //! Both transpose forms of the backward pass (DESIGN.md §8) ride the
 //! same machinery: [`Executor::dispatch_t`] runs the `A^T·X` form via
@@ -11,49 +21,75 @@
 //! covers the `X·W^T` form by materializing the (small) transposed
 //! weight once per dispatch.
 
+use std::sync::Arc;
+
+use super::pool::{PoolStats, SchedPolicy, WorkerPool};
 use super::{BatchedSpmm, Rhs};
 
-/// Executes engine dispatches with a fixed thread budget.
-#[derive(Clone, Copy, Debug)]
+/// Thin, cloneable handle over a persistent [`WorkerPool`]; all engine
+/// dispatches go through one of these.
+#[derive(Clone)]
 pub struct Executor {
-    threads: usize,
+    pool: Arc<WorkerPool>,
 }
 
 impl Executor {
-    /// Serial fallback: everything on the calling thread.
+    /// Serial fallback: everything on the calling thread, no worker
+    /// threads spawned, no synchronization on the dispatch path.
     pub fn serial() -> Executor {
-        Executor { threads: 1 }
+        Executor::with_policy(1, SchedPolicy::WorkStealing)
     }
 
-    /// Fixed thread budget (clamped to at least 1).
+    /// Fixed thread budget (clamped to at least 1) with the default
+    /// work-stealing scheduler. Spawns the pool's `threads - 1` workers
+    /// now; dispatches never spawn.
     pub fn new(threads: usize) -> Executor {
+        Executor::with_policy(threads, SchedPolicy::WorkStealing)
+    }
+
+    /// Fixed thread budget with an explicit scheduling policy
+    /// ([`SchedPolicy::Static`] is the legacy contiguous sample split
+    /// the benches use as the parallel baseline).
+    pub fn with_policy(threads: usize, policy: SchedPolicy) -> Executor {
         Executor {
-            threads: threads.max(1),
+            pool: Arc::new(WorkerPool::new(threads, policy)),
         }
     }
 
     /// One thread per available core — the "parallel" configuration the
     /// benches compare against [`Executor::serial`].
     pub fn parallel() -> Executor {
-        Executor::new(
-            std::thread::available_parallelism()
-                .map(std::num::NonZeroUsize::get)
-                .unwrap_or(1),
-        )
+        Executor::new(Executor::resolve_threads(0))
     }
 
     /// The crate-wide "auto" convention: `0` means one thread per core,
     /// anything else a fixed budget.
     pub fn auto(threads: usize) -> Executor {
+        Executor::new(Executor::resolve_threads(threads))
+    }
+
+    /// Resolve the "auto" convention without constructing a pool: `0`
+    /// means one thread per available core, anything else a fixed
+    /// budget clamped to at least 1. The benches use this to label
+    /// configurations before building their executors.
+    pub fn resolve_threads(threads: usize) -> usize {
         if threads == 0 {
-            Executor::parallel()
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
         } else {
-            Executor::new(threads)
+            threads.max(1)
         }
     }
 
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.workers()
+    }
+
+    /// Cumulative scheduling counters of the underlying pool
+    /// (dispatches, tasks, steals, threads spawned at construction).
+    pub fn stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// One batched dispatch: `out[b] += A[b] @ rhs[b]` for every sample
@@ -72,7 +108,7 @@ impl Executor {
     /// Transpose dispatch: `out[b] += A[b]^T @ rhs[b]` — the `A^T·X`
     /// gradient form (DESIGN.md §8). `out` is `[batch, inner_dim, n]`,
     /// `rhs` samples are `[out_rows, n]`; otherwise identical to
-    /// [`Executor::dispatch`], including the sample-parallel split and
+    /// [`Executor::dispatch`], including the pool-parallel split and
     /// the pre-filled-accumulator contract.
     pub fn dispatch_t<K: BatchedSpmm + ?Sized>(
         &self,
@@ -135,37 +171,10 @@ impl Executor {
             other => other,
         };
 
-        let threads = self.threads.min(b);
-        if threads <= 1 {
-            for bi in 0..b {
-                let sample_out = &mut out[bi * per_out..(bi + 1) * per_out];
-                if transpose {
-                    kernel.spmm_sample_t(bi, rhs.sample(bi, inner, n), n, sample_out);
-                } else {
-                    kernel.spmm_sample(bi, rhs.sample(bi, inner, n), n, sample_out);
-                }
-            }
-            return Ok(());
-        }
-
-        // Contiguous sample ranges, one scoped thread each; every thread
-        // owns a disjoint &mut slice of the output, so no synchronization
-        // is needed and the result is bit-identical to the serial path.
-        let chunk = b.div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (ci, out_chunk) in out.chunks_mut(chunk * per_out).enumerate() {
-                scope.spawn(move || {
-                    for (j, sample_out) in out_chunk.chunks_mut(per_out).enumerate() {
-                        let bi = ci * chunk + j;
-                        if transpose {
-                            kernel.spmm_sample_t(bi, rhs.sample(bi, inner, n), n, sample_out);
-                        } else {
-                            kernel.spmm_sample(bi, rhs.sample(bi, inner, n), n, sample_out);
-                        }
-                    }
-                });
-            }
-        });
+        // `&K` is Sized even when `K` is not, so it coerces to the
+        // `&dyn BatchedSpmm` the (non-generic) pool machinery runs.
+        self.pool
+            .run_dispatch(&kernel, rhs, n, inner, out_rows, transpose, out);
         Ok(())
     }
 
@@ -196,6 +205,15 @@ impl Executor {
     }
 }
 
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("threads", &self.threads())
+            .field("policy", &self.pool.policy())
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,10 +236,12 @@ mod tests {
         let k = StKernel::new(&st);
         let serial = Executor::serial().spmm(&k, Rhs::PerSample(&dense), 5).unwrap();
         for threads in [2, 3, 8, 64] {
-            let par = Executor::new(threads)
-                .spmm(&k, Rhs::PerSample(&dense), 5)
-                .unwrap();
-            assert_eq!(serial, par, "threads={threads}");
+            for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                let par = Executor::with_policy(threads, policy)
+                    .spmm(&k, Rhs::PerSample(&dense), 5)
+                    .unwrap();
+                assert_eq!(serial, par, "threads={threads} policy={policy:?}");
+            }
         }
     }
 
@@ -239,6 +259,22 @@ mod tests {
                 .unwrap();
             assert_eq!(serial, par, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn shared_handle_reuses_one_pool() {
+        let (st, dense) = workload(6, 8, 4);
+        let k = StKernel::new(&st);
+        let exec = Executor::new(3);
+        let twin = exec.clone();
+        let before = exec.stats();
+        assert_eq!(before.spawned_threads, 2);
+        twin.spmm(&k, Rhs::PerSample(&dense), 4).unwrap();
+        exec.spmm(&k, Rhs::PerSample(&dense), 4).unwrap();
+        let after = exec.stats();
+        // Both handles dispatched on the same pool, and nothing spawned.
+        assert_eq!(after.dispatches - before.dispatches, 2);
+        assert_eq!(after.spawned_threads, before.spawned_threads);
     }
 
     #[test]

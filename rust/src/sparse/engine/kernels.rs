@@ -6,6 +6,17 @@
 //! iteration order as the `sparse::ops` single-matrix oracles (and the
 //! formerly-inlined loops in `gcn::reference`), so engine results are
 //! bit-identical to the code they replaced.
+//!
+//! Every backend additionally implements the row-blocked variants
+//! (`spmm_sample_rows` / `spmm_sample_t_rows`) the worker pool uses to
+//! split a single dominant sample across workers (DESIGN.md §9). The
+//! row-indexed layouts (CSR/ELL/GEMM forward, GEMM transpose) jump
+//! straight to the block; the scatter-shaped forms (ST both ways,
+//! CSR/ELL transpose) scan the sample's non-zeros in the serial order
+//! and keep only contributions landing inside the block — more scanning
+//! than a dedicated index would need, but it preserves the serial
+//! per-element accumulation order exactly, which is what makes pool
+//! output bit-identical to serial under any steal order.
 
 use super::BatchedSpmm;
 use crate::graph::dataset::ModelBatch;
@@ -80,6 +91,58 @@ impl BatchedSpmm for StKernel<'_> {
             }
         }
     }
+
+    fn sample_nnz(&self, b: usize) -> usize {
+        let cap = self.st.nnz_cap;
+        self.st.vals[b * cap..(b + 1) * cap]
+            .iter()
+            .filter(|v| **v != 0.0)
+            .count()
+    }
+
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // nnz-major scan filtered to output rows [row0, row1): each
+        // element still receives its contributions in slot order.
+        let row1 = row0 + out.len() / n;
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            if rid < row0 || rid >= row1 {
+                continue;
+            }
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            let src = &rhs[cid * n..(cid + 1) * n];
+            let dst = &mut out[(rid - row0) * n..(rid - row0 + 1) * n];
+            for j in 0..n {
+                dst[j] += val * src[j];
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            if cid < row0 || cid >= row1 {
+                continue;
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            let src = &rhs[rid * n..(rid + 1) * n];
+            let dst = &mut out[(cid - row0) * n..(cid - row0 + 1) * n];
+            for j in 0..n {
+                dst[j] += val * src[j];
+            }
+        }
+    }
 }
 
 /// CSR backend (paper Fig. 4): row-major, race-free by construction.
@@ -138,7 +201,8 @@ impl BatchedSpmm for CsrKernel<'_> {
 
     fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
         // Row-major traversal turns into a scatter over output rows —
-        // still race-free, since each sample is processed by one thread.
+        // still race-free, since each (sample, row-block) task is
+        // claimed by exactly one worker.
         let m1 = self.csr.dim + 1;
         let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
         let base = b * self.csr.nnz_cap;
@@ -148,6 +212,53 @@ impl BatchedSpmm for CsrKernel<'_> {
                 let val = self.csr.vals[base + i];
                 let cid = self.csr.col_ids[base + i] as usize;
                 let dst = &mut out[cid * n..(cid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
+
+    fn sample_nnz(&self, b: usize) -> usize {
+        let m1 = self.csr.dim + 1;
+        self.csr.rpt[b * m1 + self.csr.dim] as usize
+    }
+
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Row pointers let the block jump straight to its rows.
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in row0..row1 {
+            let dst = &mut out[(r - row0) * n..(r - row0 + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
+                let src = &rhs[cid * n..(cid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Scatter form: scan every row in serial order, keep only
+        // contributions landing in [row0, row1).
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let src = &rhs[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let cid = self.csr.col_ids[base + i] as usize;
+                if cid < row0 || cid >= row1 {
+                    continue;
+                }
+                let val = self.csr.vals[base + i];
+                let dst = &mut out[(cid - row0) * n..(cid - row0 + 1) * n];
                 for j in 0..n {
                     dst[j] += val * src[j];
                 }
@@ -284,6 +395,61 @@ impl BatchedSpmm for EllKernel<'_> {
             }
         }
     }
+
+    fn sample_nnz(&self, b: usize) -> usize {
+        let base = self.offset + b * self.stride;
+        self.vals[base..base + self.rows * self.width]
+            .iter()
+            .filter(|v| **v != 0.0)
+            .count()
+    }
+
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // ELL rows are directly indexed: run the per-row loop on the
+        // block's rows only.
+        let row1 = row0 + out.len() / n;
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in row0..row1 {
+            let dst = &mut out[(rid - row0) * n..(rid - row0 + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                let src = &rhs[cid * n..(cid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Scatter form: full (rid, slot) scan in serial order, filtered
+        // to the block's output rows.
+        let row1 = row0 + out.len() / n;
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let src = &rhs[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                if cid < row0 || cid >= row1 {
+                    continue;
+                }
+                let dst = &mut out[(cid - row0) * n..(cid - row0 + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
 }
 
 /// Dense backend: the batched-GEMM (cuBLAS) baseline over a densified
@@ -359,6 +525,53 @@ impl BatchedSpmm for GemmKernel<'_> {
                     continue;
                 }
                 let dst = &mut out[k * n..(k + 1) * n];
+                for j in 0..n {
+                    dst[j] += av * src[j];
+                }
+            }
+        }
+    }
+
+    fn sample_nnz(&self, _b: usize) -> usize {
+        // Dense cost: the full extent, no scan (the pool only needs a
+        // relative planning signal).
+        self.rows * self.inner
+    }
+
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        let base = b * self.rows * self.inner;
+        for r in row0..row1 {
+            let dst = &mut out[(r - row0) * n..(r - row0 + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let src = &rhs[k * n..(k + 1) * n];
+                for j in 0..n {
+                    dst[j] += av * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Loop interchange (k outer over the block, r inner ascending)
+        // keeps every out[k] element's contributions in the same
+        // ascending-r order as the full spmm_sample_t, so row-splitting
+        // the `X^T @ dU` reduction is bit-exact — and the block never
+        // touches the other blocks' columns, so no scan is wasted.
+        let row1 = row0 + out.len() / n;
+        let base = b * self.rows * self.inner;
+        for k in row0..row1 {
+            let dst = &mut out[(k - row0) * n..(k - row0 + 1) * n];
+            for r in 0..self.rows {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let src = &rhs[r * n..(r + 1) * n];
                 for j in 0..n {
                     dst[j] += av * src[j];
                 }
@@ -484,6 +697,65 @@ mod tests {
             let a = exec.spmm(&view, Rhs::PerSample(&dense), nb).unwrap();
             let b = exec.spmm(&contiguous, Rhs::PerSample(&dense), nb).unwrap();
             assert_eq!(a, b, "channel {ch}");
+        }
+    }
+
+    #[test]
+    fn row_blocked_assembly_is_bit_identical_to_full_sample() {
+        // Computing a sample in arbitrary row blocks must reproduce the
+        // full-sample result bit for bit, in both transpose forms —
+        // the invariant the worker pool's row-split tasks rely on.
+        let mut rng = Rng::new(71);
+        let (dim, z, batch, nb) = (11usize, 3usize, 4usize, 5usize);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, z), batch);
+        let st = PaddedStBatch::pack(&mats, dim, dim * z).unwrap();
+        let csr = PaddedCsrBatch::pack(&mats, dim, dim * z).unwrap();
+        let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+        let a_dense = densify_batch(&mats, dim);
+        let rhs: Vec<f32> = (0..dim * nb).map(|_| rng.normal()).collect();
+
+        let stk = StKernel::new(&st);
+        let csrk = CsrKernel::new(&csr);
+        let ellk = EllKernel::from_padded(&ell);
+        let gemk = GemmKernel::new(&a_dense, batch, dim, dim);
+        let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+        // Uneven block boundaries, including 1-row blocks.
+        let cuts = [0usize, 1, 4, 9, dim];
+        for k in kernels {
+            let mut nnz_sum = 0;
+            for b in 0..batch {
+                nnz_sum += k.sample_nnz(b);
+                for transpose in [false, true] {
+                    let mut full = vec![0.25f32; dim * nb];
+                    let mut blocked = vec![0.25f32; dim * nb];
+                    if transpose {
+                        k.spmm_sample_t(b, &rhs, nb, &mut full);
+                    } else {
+                        k.spmm_sample(b, &rhs, nb, &mut full);
+                    }
+                    for w in cuts.windows(2) {
+                        let (r0, r1) = (w[0], w[1]);
+                        let block = &mut blocked[r0 * nb..r1 * nb];
+                        if transpose {
+                            k.spmm_sample_t_rows(b, r0, &rhs, nb, block);
+                        } else {
+                            k.spmm_sample_rows(b, r0, &rhs, nb, block);
+                        }
+                    }
+                    assert_eq!(
+                        full,
+                        blocked,
+                        "{} sample {b} transpose={transpose}",
+                        k.name()
+                    );
+                }
+            }
+            if k.name() == "engine-gemm" {
+                // The dense backend reports its full extent as cost.
+                assert_eq!(nnz_sum, batch * dim * dim);
+            } else {
+                assert_eq!(nnz_sum, k.real_nnz(), "{}", k.name());
+            }
         }
     }
 

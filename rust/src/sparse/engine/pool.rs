@@ -1,0 +1,667 @@
+//! The persistent work-stealing worker pool behind [`Executor`].
+//!
+//! Before this module existed the executor spawned fresh scoped OS
+//! threads for every dispatch — ~39 times per host train step — and
+//! split each batch into *contiguous sample ranges*, which
+//! load-imbalances on mixed batches (the Fig. 10 workload: one large
+//! matrix next to many small ones). [`WorkerPool`] is the host-side
+//! analogue of what GE-SpMM/HC-SpMM do on device: execution resources
+//! stay resident (workers park on a condvar between dispatches; the
+//! only thread spawns happen at pool construction) and irregular row
+//! work is balanced across them at runtime by stealing.
+//!
+//! One dispatch proceeds in three steps:
+//!
+//! 1. **Decompose** ([`plan_tasks`]): an nnz-based cost model turns the
+//!    batch into near-equal-cost [`Task`]s — contiguous sample chunks,
+//!    plus per-sample *row blocks* when a single sample dominates (that
+//!    is what lets a batch-1 `dW = X^T·dU` dispatch use every worker).
+//!    Uniform batches with enough samples keep the legacy contiguous
+//!    count split: at most one task per worker, the static fast path.
+//! 2. **Assign**: tasks are handed to workers as contiguous,
+//!    count-balanced segments. The assignment is deliberately *not*
+//!    cost-balanced — the cost model only sets task granularity, and
+//!    stealing absorbs both its mispredictions (padding-heavy samples,
+//!    nnz concentrated in a few rows) and OS scheduling noise.
+//! 3. **Execute**: each worker drains its own segment, then scans the
+//!    other segments and steals leftover tasks ([`PoolStats::steals`]
+//!    counts those). When the plan yields at most one task per worker
+//!    the scan is skipped entirely (`static_dispatches`).
+//!
+//! **Determinism.** Output is bit-identical to the serial loop for any
+//! worker count, policy and steal order, by construction rather than by
+//! synchronization: tasks partition the output elements (a split never
+//! crosses a row, and rows of a sample belong to exactly one task), so
+//! no output element is ever combined across tasks, and the row-blocked
+//! kernel variants preserve the serial per-element accumulation order
+//! inside each task (DESIGN.md §9). There is no cross-task reduction to
+//! order in the first place.
+//!
+//! [`Executor`]: super::Executor
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+use super::{BatchedSpmm, Rhs};
+
+/// How a dispatch is decomposed across the pool's workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Always the legacy contiguous sample split: at most one task per
+    /// worker, no row blocks, no stealing. The pre-pool executor
+    /// behavior, kept as the bench baseline.
+    Static,
+    /// Adaptive: uniform batches take the static split, skewed batches
+    /// (and batches with fewer samples than workers) are decomposed by
+    /// the nnz cost model into finer (sample, row-block) tasks that
+    /// workers steal from each other.
+    #[default]
+    WorkStealing,
+}
+
+/// Cumulative scheduling counters for one pool (monotonic; read deltas
+/// around a region of interest). `spawned_threads` is set at
+/// construction and never changes afterwards — the "zero spawns after
+/// pool construction" contract the accounting tests pin.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Worker slots, including the dispatching caller.
+    pub workers: usize,
+    /// OS threads spawned at construction (`workers - 1`).
+    pub spawned_threads: u64,
+    /// Engine dispatches executed by this pool.
+    pub dispatches: u64,
+    /// Dispatches that ran on the static path (serial, or at most one
+    /// task per worker — no steal scanning).
+    pub static_dispatches: u64,
+    /// Dispatches that ran with steal scanning enabled.
+    pub stealing_dispatches: u64,
+    /// Tasks produced by the planner across all dispatches.
+    pub tasks: u64,
+    /// Tasks executed by a worker other than their assigned owner.
+    pub steals: u64,
+}
+
+/// One unit of dispatch work: samples `s0..s1` of the batch. A
+/// multi-sample task always covers every output row; a single-sample
+/// task (`s1 == s0 + 1`) may cover the sub-range `row0..row1` of the
+/// output rows, which is how one dominant sample is split across
+/// workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub s0: u32,
+    pub s1: u32,
+    pub row0: u32,
+    pub row1: u32,
+}
+
+impl Task {
+    fn full(s0: usize, s1: usize, out_rows: usize) -> Task {
+        Task {
+            s0: s0 as u32,
+            s1: s1 as u32,
+            row0: 0,
+            row1: out_rows as u32,
+        }
+    }
+}
+
+/// Decompose one dispatch into tasks.
+///
+/// `costs[s]` is the relative cost of sample `s` (nnz plus a row term),
+/// `out_rows` the per-sample output row count of this dispatch
+/// (`inner_dim` for transpose dispatches). Uniform batches (max cost at
+/// most twice the mean) with at least `workers` samples keep the legacy
+/// contiguous count split — at most one task per worker, so the caller
+/// runs them without steal scanning and the fast path of the pre-pool
+/// executor survives unchanged. Everything else is chunked to
+/// near-equal cost at finer granularity (4 tasks per worker on skewed
+/// batches), splitting any sample whose cost exceeds the chunk target
+/// into row blocks.
+pub fn plan_tasks(
+    costs: &[u64],
+    out_rows: usize,
+    workers: usize,
+    policy: SchedPolicy,
+) -> Vec<Task> {
+    let b = costs.len();
+    if b == 0 || out_rows == 0 {
+        return Vec::new();
+    }
+    let t = workers.max(1);
+    let total: u64 = costs.iter().sum();
+    let maxc = costs.iter().copied().max().unwrap_or(0);
+    let uniform = maxc.saturating_mul(b as u64) <= 2 * total;
+    if policy == SchedPolicy::Static || (uniform && b >= t) {
+        return static_split(b, out_rows, t);
+    }
+    let parts = (t * if uniform { 1 } else { 4 }) as u64;
+    let target = total.div_ceil(parts).max(1);
+    let mut tasks = Vec::new();
+    let mut open = 0usize; // start of the currently accumulating chunk
+    let mut acc = 0u64;
+    for s in 0..b {
+        let c = costs[s];
+        if c > target && out_rows > 1 {
+            if s > open {
+                tasks.push(Task::full(open, s, out_rows));
+            }
+            // Row-split the dominant sample into near-equal blocks.
+            // The block count is capped at the worker count: blocks of
+            // one sample are cost-uniform under the model (finer
+            // granularity adds no balancing power), and the
+            // scatter-shaped kernels rescan the sample's non-zeros per
+            // block, so every extra block is a full extra scan.
+            let k = (c.div_ceil(target) as usize).min(out_rows).min(t);
+            for i in 0..k {
+                tasks.push(Task {
+                    s0: s as u32,
+                    s1: (s + 1) as u32,
+                    row0: (i * out_rows / k) as u32,
+                    row1: ((i + 1) * out_rows / k) as u32,
+                });
+            }
+            open = s + 1;
+            acc = 0;
+        } else {
+            if acc > 0 && acc + c > target {
+                tasks.push(Task::full(open, s, out_rows));
+                open = s;
+                acc = 0;
+            }
+            acc += c;
+        }
+    }
+    if b > open {
+        tasks.push(Task::full(open, b, out_rows));
+    }
+    tasks
+}
+
+/// The legacy contiguous count split: at most one full-row task per
+/// worker, samples in order — exactly the partition the pre-pool
+/// executor used. Depends only on the batch size, so the static paths
+/// call it without computing costs.
+fn static_split(b: usize, out_rows: usize, workers: usize) -> Vec<Task> {
+    let chunk = b.div_ceil(workers.max(1));
+    (0..b)
+        .step_by(chunk)
+        .map(|s0| Task::full(s0, (s0 + chunk).min(b), out_rows))
+        .collect()
+}
+
+/// Per-sample planner costs for a dispatch: nnz plus a row term (the
+/// padded-row scan every kernel pays) plus one. This is deliberately an
+/// approximation — ST/ELL padding slots and row-concentrated nnz are
+/// invisible to it — and stealing is what absorbs the error. For ST and
+/// ELL views `sample_nnz` is an O(nnz_cap) scan per sample; caching
+/// per-sample counts in the packed batches would amortize it across a
+/// dispatch sequence (ROADMAP follow-up).
+fn sample_costs(kernel: &dyn BatchedSpmm, out_rows: usize) -> Vec<u64> {
+    (0..kernel.batch())
+        .map(|b| kernel.sample_nnz(b) as u64 + out_rows as u64 + 1)
+        .collect()
+}
+
+/// Lock, recovering from poisoning: a panicking worker is already
+/// reported through `Slot::panicked` (and re-raised by the dispatcher),
+/// and no pool invariant spans a poisoned critical section, so later
+/// dispatches must not die with an opaque `PoisonError` on top.
+fn lock_pool<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock_pool`]'s twin for condvar waits.
+fn unpoison<T>(r: LockResult<MutexGuard<'_, T>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------
+// Pool internals
+// ---------------------------------------------------------------------
+
+/// Owner-indexed slice of the task list. `next` is claimed with
+/// `fetch_add` by the owner and by thieves alike; a claim is final, so
+/// every task executes exactly once.
+struct Segment {
+    next: AtomicUsize,
+    end: usize,
+}
+
+/// Everything a worker needs to execute one dispatch. Lives on the
+/// dispatching thread's stack; workers reach it through a raw pointer
+/// that is only valid while the dispatcher blocks in
+/// [`WorkerPool::run_dispatch`].
+struct Job<'a> {
+    kernel: &'a dyn BatchedSpmm,
+    rhs: Rhs<'a>,
+    n: usize,
+    /// Rows of the rhs operand (`inner` of the dispatch).
+    inner: usize,
+    out_rows: usize,
+    per_out: usize,
+    transpose: bool,
+    out: *mut f32,
+    tasks: &'a [Task],
+    segs: &'a [Segment],
+    /// Scan other segments after draining your own.
+    steal: bool,
+}
+
+/// Lifetime-erased pointer to the active [`Job`], published under the
+/// pool mutex. Safety: the dispatcher keeps the pointee alive until
+/// every worker has decremented `active` back to zero.
+#[derive(Clone, Copy)]
+struct JobPtr(*const ());
+
+unsafe impl Send for JobPtr {}
+
+struct Slot {
+    epoch: u64,
+    job: Option<JobPtr>,
+    /// Spawned workers still inside the current epoch's job.
+    active: usize,
+    /// A worker panicked while executing the current job.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    steals: AtomicU64,
+}
+
+/// A persistent pool of `workers` execution slots: `workers - 1` parked
+/// OS threads plus the dispatching caller, who participates as worker
+/// 0. Construction is the only place threads are spawned; dispatches
+/// wake the workers, run one job, and park them again. Clone the
+/// owning [`Executor`](super::Executor) (an `Arc` handle) to share one
+/// pool across the engine, trainer and serving hot paths.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    policy: SchedPolicy,
+    /// Serializes dispatches: the pool runs one job at a time.
+    dispatch_lock: Mutex<()>,
+    dispatches: AtomicU64,
+    static_dispatches: AtomicU64,
+    stealing_dispatches: AtomicU64,
+    tasks: AtomicU64,
+}
+
+impl WorkerPool {
+    /// A pool with `workers` total slots (clamped to at least 1) and
+    /// the given scheduling policy. Spawns `workers - 1` threads — the
+    /// last spawn this pool will ever perform.
+    pub fn new(workers: usize, policy: SchedPolicy) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            steals: AtomicU64::new(0),
+        });
+        let handles = (1..workers)
+            .map(|me| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("bspmm-worker-{me}"))
+                    .spawn(move || worker_loop(&sh, me))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            workers,
+            policy,
+            dispatch_lock: Mutex::new(()),
+            dispatches: AtomicU64::new(0),
+            static_dispatches: AtomicU64::new(0),
+            stealing_dispatches: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// Snapshot of the cumulative scheduling counters.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            spawned_threads: self.handles.len() as u64,
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            static_dispatches: self.static_dispatches.load(Ordering::Relaxed),
+            stealing_dispatches: self.stealing_dispatches.load(Ordering::Relaxed),
+            tasks: self.tasks.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute one validated, normalized dispatch (`rhs` must not be
+    /// [`Rhs::SharedTransposed`]; the executor materializes that form
+    /// first). `out` is `[batch, out_rows, n]`, pre-filled by the
+    /// caller per the engine's `+=` contract.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_dispatch(
+        &self,
+        kernel: &dyn BatchedSpmm,
+        rhs: Rhs<'_>,
+        n: usize,
+        inner: usize,
+        out_rows: usize,
+        transpose: bool,
+        out: &mut [f32],
+    ) {
+        let b = kernel.batch();
+        let per_out = out_rows * n;
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        if self.workers == 1 {
+            // Serial fast path: no planning scan, no synchronization.
+            self.static_dispatches.fetch_add(1, Ordering::Relaxed);
+            self.tasks.fetch_add(1, Ordering::Relaxed);
+            for s in 0..b {
+                let sample_out = &mut out[s * per_out..(s + 1) * per_out];
+                if transpose {
+                    kernel.spmm_sample_t(s, rhs.sample(s, inner, n), n, sample_out);
+                } else {
+                    kernel.spmm_sample(s, rhs.sample(s, inner, n), n, sample_out);
+                }
+            }
+            return;
+        }
+        let tasks = if self.policy == SchedPolicy::Static {
+            // The static split only counts samples — skip the
+            // O(batch * nnz) cost scan it would never read.
+            static_split(b, out_rows, self.workers)
+        } else {
+            let costs = sample_costs(kernel, out_rows);
+            plan_tasks(&costs, out_rows, self.workers, self.policy)
+        };
+        self.tasks.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+        let steal = tasks.len() > self.workers;
+        let segs: Vec<Segment> = (0..self.workers)
+            .map(|w| Segment {
+                next: AtomicUsize::new(w * tasks.len() / self.workers),
+                end: (w + 1) * tasks.len() / self.workers,
+            })
+            .collect();
+        let job = Job {
+            kernel,
+            rhs,
+            n,
+            inner,
+            out_rows,
+            per_out,
+            transpose,
+            out: out.as_mut_ptr(),
+            tasks: &tasks,
+            segs: &segs,
+            steal,
+        };
+        if tasks.len() <= 1 {
+            // Not worth waking anyone: run inline on the caller.
+            self.static_dispatches.fetch_add(1, Ordering::Relaxed);
+            for task in &tasks {
+                exec_task(&job, task);
+            }
+            return;
+        }
+        if steal {
+            self.stealing_dispatches.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.static_dispatches.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let _serialize = lock_pool(&self.dispatch_lock);
+        {
+            let mut g = lock_pool(&self.shared.slot);
+            debug_assert_eq!(g.active, 0, "previous job still active");
+            g.epoch += 1;
+            g.job = Some(JobPtr(&job as *const Job as *const ()));
+            g.active = self.handles.len();
+            g.panicked = false;
+        }
+        self.shared.work_cv.notify_all();
+        // The caller is worker 0.
+        let caller_panic = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(&job, 0, &self.shared)
+        }))
+        .is_err();
+        let panicked = {
+            let mut g = lock_pool(&self.shared.slot);
+            while g.active != 0 {
+                g = unpoison(self.shared.done_cv.wait(g));
+            }
+            // The job (and its borrows of kernel/rhs/out/tasks) must not
+            // outlive this frame: unpublish before returning.
+            g.job = None;
+            g.panicked
+        };
+        if caller_panic || panicked {
+            panic!("engine worker panicked during a pool dispatch");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = lock_pool(&self.shared.slot);
+            g.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("policy", &self.policy)
+            .finish()
+    }
+}
+
+/// Body of each spawned worker thread: park on the condvar, run each
+/// published job to completion, report back, park again.
+fn worker_loop(shared: &Shared, me: usize) {
+    let mut seen = 0u64;
+    loop {
+        let ptr = {
+            let mut g = lock_pool(&shared.slot);
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    break;
+                }
+                g = unpoison(shared.work_cv.wait(g));
+            }
+            seen = g.epoch;
+            g.job.expect("epoch advanced without a job")
+        };
+        // Safety: the dispatcher keeps the Job alive (and `out`
+        // exclusively borrowed) until `active` drops back to zero,
+        // which only happens after this call returns.
+        let job: &Job = unsafe { &*(ptr.0 as *const Job) };
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(job, me, shared)
+        }))
+        .is_err();
+        let mut g = lock_pool(&shared.slot);
+        g.active -= 1;
+        g.panicked |= panicked;
+        if g.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// One worker's share of a job: drain the own segment, then (in
+/// stealing mode) scan the other segments in cyclic order and steal
+/// whatever is left. Claims are `fetch_add`s, so a task runs exactly
+/// once no matter who claims it; after a worker has seen every segment
+/// drained it can exit — segments never grow, and the dispatcher waits
+/// for claimed tasks to finish via the `active` count.
+fn run_job(job: &Job, me: usize, shared: &Shared) {
+    let nseg = job.segs.len();
+    let mut stolen = 0u64;
+    let rounds = if job.steal { nseg } else { 1 };
+    for off in 0..rounds {
+        let v = (me + off) % nseg;
+        let seg = &job.segs[v];
+        loop {
+            let i = seg.next.fetch_add(1, Ordering::Relaxed);
+            if i >= seg.end {
+                break;
+            }
+            exec_task(job, &job.tasks[i]);
+            if v != me {
+                stolen += 1;
+            }
+        }
+    }
+    if stolen > 0 {
+        shared.steals.fetch_add(stolen, Ordering::Relaxed);
+    }
+}
+
+/// Execute one task. Safety of the raw output pointer: tasks partition
+/// the `[batch, out_rows, n]` output (disjoint (sample, row) ranges by
+/// construction in [`plan_tasks`]) and each task is claimed exactly
+/// once, so no two threads ever touch the same element.
+fn exec_task(job: &Job, task: &Task) {
+    let n = job.n;
+    let full = task.row0 == 0 && task.row1 as usize == job.out_rows;
+    let row0 = task.row0 as usize;
+    let rows = (task.row1 - task.row0) as usize;
+    for s in task.s0..task.s1 {
+        let s = s as usize;
+        let off = s * job.per_out + row0 * n;
+        let out = unsafe { std::slice::from_raw_parts_mut(job.out.add(off), rows * n) };
+        let rhs = job.rhs.sample(s, job.inner, n);
+        match (job.transpose, full) {
+            (false, true) => job.kernel.spmm_sample(s, rhs, n, out),
+            (false, false) => job.kernel.spmm_sample_rows(s, row0, rhs, n, out),
+            (true, true) => job.kernel.spmm_sample_t(s, rhs, n, out),
+            (true, false) => job.kernel.spmm_sample_t_rows(s, row0, rhs, n, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every (sample, row) output cell must be covered by exactly one
+    /// task, for any cost profile.
+    fn assert_partition(tasks: &[Task], b: usize, out_rows: usize) {
+        let mut hits = vec![0u32; b * out_rows];
+        for t in tasks {
+            assert!(t.s1 > t.s0 && t.row1 > t.row0, "empty task {t:?}");
+            if t.s1 - t.s0 > 1 {
+                assert_eq!((t.row0, t.row1 as usize), (0, out_rows), "{t:?}");
+            }
+            for s in t.s0..t.s1 {
+                for r in t.row0..t.row1 {
+                    hits[s as usize * out_rows + r as usize] += 1;
+                }
+            }
+        }
+        assert!(hits.iter().all(|&h| h == 1), "coverage {hits:?}");
+    }
+
+    #[test]
+    fn uniform_batch_keeps_legacy_contiguous_split() {
+        let costs = vec![10u64; 64];
+        let tasks = plan_tasks(&costs, 24, 8, SchedPolicy::WorkStealing);
+        assert_eq!(tasks.len(), 8);
+        for (w, t) in tasks.iter().enumerate() {
+            assert_eq!((t.s0 as usize, t.s1 as usize), (w * 8, w * 8 + 8));
+            assert_eq!((t.row0, t.row1), (0, 24));
+        }
+        assert_partition(&tasks, 64, 24);
+    }
+
+    #[test]
+    fn static_policy_never_row_splits() {
+        let mut costs = vec![1u64; 8];
+        costs[0] = 1000;
+        let tasks = plan_tasks(&costs, 16, 4, SchedPolicy::Static);
+        assert_eq!(tasks.len(), 4);
+        assert!(tasks.iter().all(|t| t.row0 == 0 && t.row1 == 16));
+        assert_partition(&tasks, 8, 16);
+    }
+
+    #[test]
+    fn dominant_sample_is_row_split() {
+        let mut costs = vec![2u64; 16];
+        costs[3] = 2000;
+        let tasks = plan_tasks(&costs, 32, 4, SchedPolicy::WorkStealing);
+        assert!(tasks.len() > 4, "skew must oversubscribe: {}", tasks.len());
+        let blocks: Vec<&Task> = tasks.iter().filter(|t| t.s0 == 3 && t.s1 == 4).collect();
+        assert!(blocks.len() > 1, "sample 3 not split: {tasks:?}");
+        assert_partition(&tasks, 16, 32);
+    }
+
+    #[test]
+    fn batch_one_splits_rows_across_workers() {
+        // The dW shape: one sample, many output rows.
+        let tasks = plan_tasks(&[500], 16, 8, SchedPolicy::WorkStealing);
+        assert_eq!(tasks.len(), 8);
+        assert_partition(&tasks, 1, 16);
+    }
+
+    #[test]
+    fn single_row_samples_are_never_split() {
+        let mut costs = vec![1u64; 6];
+        costs[2] = 1000;
+        let tasks = plan_tasks(&costs, 1, 4, SchedPolicy::WorkStealing);
+        assert!(tasks.iter().all(|t| t.row0 == 0 && t.row1 == 1));
+        assert_partition(&tasks, 6, 1);
+    }
+
+    #[test]
+    fn random_plans_always_partition_the_output() {
+        let mut rng = crate::util::rng::Rng::new(0x9E57);
+        for _ in 0..200 {
+            let b = rng.range(1, 20);
+            let out_rows = rng.range(1, 40);
+            let workers = rng.range(1, 12);
+            let costs: Vec<u64> = (0..b)
+                .map(|_| if rng.bool(0.2) { rng.range(1, 5000) as u64 } else { rng.range(1, 20) as u64 })
+                .collect();
+            for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                let tasks = plan_tasks(&costs, out_rows, workers, policy);
+                assert_partition(&tasks, b, out_rows);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_plans_no_tasks() {
+        assert!(plan_tasks(&[], 8, 4, SchedPolicy::WorkStealing).is_empty());
+        assert!(plan_tasks(&[5], 0, 4, SchedPolicy::WorkStealing).is_empty());
+    }
+}

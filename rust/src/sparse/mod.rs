@@ -12,11 +12,12 @@
 //!
 //! [`engine`] is the execution layer: the [`engine::BatchedSpmm`] trait
 //! (one interface, four backends — ST / CSR / ELL / dense-GEMM, each in
-//! plain and transpose form) plus a sample-parallel
-//! [`engine::Executor`] that processes a whole packed batch in one
-//! dispatch. The GCN forward *and backward* passes, the coordinator's
-//! host dispatch paths, and the bench harness all multiply through it;
-//! `ops` stays the single-matrix oracle it is property-tested against.
+//! plain and transpose form) plus an [`engine::Executor`] that
+//! processes a whole packed batch in one dispatch over a persistent
+//! work-stealing [`engine::WorkerPool`] (DESIGN.md §9). The GCN forward
+//! *and backward* passes, the coordinator's host dispatch paths, and
+//! the bench harness all multiply through it; `ops` stays the
+//! single-matrix oracle it is property-tested against.
 
 pub mod batch;
 pub mod coo;
@@ -31,5 +32,5 @@ pub use batch::{PaddedCsrBatch, PaddedEllBatch, PaddedStBatch};
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;
-pub use engine::{BatchedSpmm, Executor};
+pub use engine::{BatchedSpmm, Executor, WorkerPool};
 pub use sparse_tensor::SparseTensor;

@@ -1,8 +1,12 @@
 //! Engine parity properties: every `BatchedSpmm` backend × thread count
 //! must match the single-matrix oracles in `sparse::ops` on randomized
-//! workloads, and the engine-routed GCN forward must be bit-stable
-//! against the pre-engine inlined implementation (kept here verbatim as
-//! the refactor oracle).
+//! workloads (uniform, mixed, and skewed one-giant-many-tiny batches),
+//! worker-pool output must be bit-identical to serial regardless of
+//! policy and steal order, the pool's scheduling counters must show the
+//! static fast path on uniform batches and actual stealing on skewed
+//! ones, and the engine-routed GCN forward must be bit-stable against
+//! the pre-engine inlined implementation (kept here verbatim as the
+//! refactor oracle).
 
 use bspmm::gcn::config::ModelConfig;
 use bspmm::gcn::params::ParamSet;
@@ -12,10 +16,10 @@ use bspmm::sparse::batch::{
     densify_batch, random_dense_batch, PaddedCsrBatch, PaddedEllBatch, PaddedStBatch,
 };
 use bspmm::sparse::engine::{
-    BatchedSpmm, CsrKernel, EllKernel, Executor, GemmKernel, Rhs, StKernel,
+    BatchedSpmm, CsrKernel, EllKernel, Executor, GemmKernel, Rhs, SchedPolicy, StKernel,
 };
 use bspmm::sparse::ops;
-use bspmm::sparse::random::{random_batch, random_mixed_batch, RandomSpec};
+use bspmm::sparse::random::{random_batch, random_coo, random_mixed_batch, RandomSpec};
 use bspmm::sparse::{Coo, Dense};
 use bspmm::util::rng::Rng;
 
@@ -97,6 +101,141 @@ fn mixed_workloads_match_oracle_at_all_thread_counts() {
         let dense = random_dense_batch(&mut rng, batch, dim, nb);
         check_all_backends(&mats, dim, nb, &dense, &format!("mixed case {case}"));
     }
+}
+
+/// One giant sample next to many tiny ones: the Fig. 10-style skew that
+/// load-imbalances a contiguous sample split. The giant sits first, so
+/// the legacy static partition would hand one worker almost all of the
+/// work.
+fn skewed_batch(rng: &mut Rng) -> (Vec<Coo>, usize) {
+    let dim = 96;
+    let mut mats = vec![random_coo(rng, &RandomSpec::new(dim, 8))];
+    for _ in 0..12 {
+        let d = rng.range(3, 8);
+        mats.push(random_coo(rng, &RandomSpec::new(d, 1)));
+    }
+    (mats, dim)
+}
+
+#[test]
+fn skewed_workloads_match_oracle_at_all_thread_counts() {
+    let mut rng = Rng::new(0xE5);
+    for case in 0..4 {
+        let (mats, dim) = skewed_batch(&mut rng);
+        let nb = rng.range(1, 12);
+        let dense = random_dense_batch(&mut rng, mats.len(), dim, nb);
+        check_all_backends(&mats, dim, nb, &dense, &format!("skewed case {case}"));
+    }
+}
+
+#[test]
+fn skewed_batches_are_bit_identical_to_serial_for_every_backend() {
+    // Row-split tasks + stealing must not change a single bit, in
+    // either transpose form, for any thread count or policy.
+    let mut rng = Rng::new(0xE7);
+    let (mats, dim) = skewed_batch(&mut rng);
+    let nb = 7;
+    let dense = random_dense_batch(&mut rng, mats.len(), dim, nb);
+    let cap = mats.iter().map(Coo::nnz).max().unwrap();
+    let st = PaddedStBatch::pack(&mats, dim, cap).unwrap();
+    let csr = PaddedCsrBatch::pack(&mats, dim, cap).unwrap();
+    let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+    let a_dense = densify_batch(&mats, dim);
+    let stk = StKernel::new(&st);
+    let csrk = CsrKernel::new(&csr);
+    let ellk = EllKernel::from_padded(&ell);
+    let gemk = GemmKernel::new(&a_dense, mats.len(), dim, dim);
+    let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+    let serial = Executor::serial();
+    for kernel in kernels {
+        let fwd = serial.spmm(kernel, Rhs::PerSample(&dense), nb).unwrap();
+        let bwd = serial.spmm_t(kernel, Rhs::PerSample(&dense), nb).unwrap();
+        for threads in THREAD_COUNTS {
+            for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                let exec = Executor::with_policy(threads, policy);
+                let pf = exec.spmm(kernel, Rhs::PerSample(&dense), nb).unwrap();
+                assert_eq!(pf, fwd, "{}/t{threads}/{policy:?} fwd", kernel.name());
+                let pb = exec.spmm_t(kernel, Rhs::PerSample(&dense), nb).unwrap();
+                assert_eq!(pb, bwd, "{}/t{threads}/{policy:?} bwd", kernel.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn uniform_batches_stay_static_while_skewed_batches_steal() {
+    let mut rng = Rng::new(0xE6);
+
+    // Uniform: the planner keeps the legacy contiguous split (at most
+    // one task per worker), so stealing is structurally impossible.
+    let mats = random_batch(&mut rng, &RandomSpec::new(24, 3), 64);
+    let st = PaddedStBatch::pack(&mats, 24, 24 * 3).unwrap();
+    let dense = random_dense_batch(&mut rng, 64, 24, 8);
+    let k = StKernel::new(&st);
+    let exec = Executor::new(8);
+    let before = exec.stats();
+    assert_eq!(before.spawned_threads, 7);
+    exec.spmm(&k, Rhs::PerSample(&dense), 8).unwrap();
+    let after = exec.stats();
+    assert_eq!(after.dispatches - before.dispatches, 1);
+    assert_eq!(after.static_dispatches - before.static_dispatches, 1);
+    assert_eq!(after.stealing_dispatches, before.stealing_dispatches);
+    assert_eq!(after.steals, before.steals, "uniform batch must not steal");
+    assert_eq!(after.spawned_threads, before.spawned_threads);
+
+    // Skewed, with the planner's uniform-rows-per-sample assumption
+    // deliberately violated: one sample holds nearly all its non-zeros
+    // in its first rows, so the first row block of its split carries
+    // almost all the real work and the cost model mispredicts. Idle
+    // workers must rebalance by stealing — and stealing must not change
+    // the output bits.
+    let dim = 512;
+    let mut giant = Coo::new(dim, dim);
+    for r in 0..32 {
+        for c in 0..dim {
+            giant.push(r, c, 0.5 + (c % 7) as f32 * 0.1);
+        }
+    }
+    for r in 32..dim {
+        giant.push(r, r, 1.0);
+    }
+    let mut mats = vec![giant];
+    for i in 0..15 {
+        let mut tiny = Coo::new(4, 4);
+        for r in 0..4 {
+            tiny.push(r, (r + i) % 4, 1.0);
+        }
+        mats.push(tiny);
+    }
+    let cap = mats.iter().map(Coo::nnz).max().unwrap();
+    let st = PaddedStBatch::pack(&mats, dim, cap).unwrap();
+    let k = StKernel::new(&st);
+    let dense = random_dense_batch(&mut rng, mats.len(), dim, 64);
+    let want = Executor::serial().spmm(&k, Rhs::PerSample(&dense), 64).unwrap();
+    let exec = Executor::new(4);
+    let before = exec.stats();
+    let mut got = Vec::new();
+    for _ in 0..10 {
+        got = exec.spmm(&k, Rhs::PerSample(&dense), 64).unwrap();
+    }
+    assert_eq!(got, want, "stealing changed the output");
+    let after = exec.stats();
+    assert_eq!(after.dispatches - before.dispatches, 10);
+    assert_eq!(
+        after.stealing_dispatches - before.stealing_dispatches,
+        10,
+        "skewed batch did not take the stealing path"
+    );
+    assert!(
+        after.tasks - before.tasks > 10 * 4,
+        "skewed plan did not oversubscribe: {} tasks",
+        after.tasks - before.tasks
+    );
+    assert!(
+        after.steals > before.steals,
+        "skewed dispatches never stole a task"
+    );
+    assert_eq!(after.spawned_threads, before.spawned_threads);
 }
 
 #[test]

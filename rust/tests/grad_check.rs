@@ -194,22 +194,12 @@ fn f64_mirror_matches_f32_forward() {
     );
 }
 
-#[test]
-fn every_parameter_tensor_matches_central_finite_differences() {
-    let cfg = tiny_cfg();
-    let ps = generic_params(&cfg, 11);
-    // Mixed batch: synthetic molecules have different node/edge counts.
-    let data = Dataset::generate(DatasetKind::Tox21, 6, 17);
-    let mb = data.pack_batch(&[0, 2, 4], cfg.max_nodes, cfg.ell_width).unwrap();
-
-    let res = backward::grad(&cfg, &ps, &mb).unwrap();
-    assert!(res.loss.is_finite());
-
-    // Central differences at f64 on f32-representable points: perturb
-    // the f32 parameter, measure the *actual* step `hi - lo` (the
-    // nominal ε is rounded to the parameter's f32 grid), difference the
-    // f64 mirror. Fallback ε values only shift the (rare) window where
-    // a ReLU kink sits inside [lo, hi].
+/// Check an analytic gradient against central finite differences at f64
+/// on f32-representable points: perturb the f32 parameter, measure the
+/// *actual* step `hi - lo` (the nominal ε is rounded to the parameter's
+/// f32 grid), difference the f64 mirror. Fallback ε values only shift
+/// the (rare) window where a ReLU kink sits inside [lo, hi].
+fn assert_grads_match_fd(cfg: &ModelConfig, ps: &ParamSet, mb: &ModelBatch, grads: &[f32]) {
     const EPSILONS: [f32; 3] = [1e-4, 2.5e-5, 5e-4];
     const REL: f64 = 1e-4;
     let fd_at = |i: usize, eps: f32| -> f64 {
@@ -218,16 +208,16 @@ fn every_parameter_tensor_matches_central_finite_differences() {
         let hi = old + eps;
         let lo = old - eps;
         p.data[i] = hi;
-        let lp = loss_f64(&cfg, &p, &mb);
+        let lp = loss_f64(cfg, &p, mb);
         p.data[i] = lo;
-        let lm = loss_f64(&cfg, &p, &mb);
+        let lm = loss_f64(cfg, &p, mb);
         (lp - lm) / (hi as f64 - lo as f64)
     };
     for spec in &cfg.params {
         let mut checked = 0usize;
         for k in 0..spec.size {
             let i = spec.offset + k;
-            let g = res.grads.data[i] as f64;
+            let g = grads[i] as f64;
             let ok = EPSILONS.iter().any(|&eps| {
                 let fd = fd_at(i, eps);
                 (g - fd).abs() <= REL * g.abs().max(fd.abs()).max(1.0)
@@ -243,6 +233,48 @@ fn every_parameter_tensor_matches_central_finite_differences() {
         }
         assert_eq!(checked, spec.size, "{} not fully checked", spec.name);
     }
+}
+
+#[test]
+fn every_parameter_tensor_matches_central_finite_differences() {
+    let cfg = tiny_cfg();
+    let ps = generic_params(&cfg, 11);
+    // Mixed batch: synthetic molecules have different node/edge counts.
+    let data = Dataset::generate(DatasetKind::Tox21, 6, 17);
+    let mb = data.pack_batch(&[0, 2, 4], cfg.max_nodes, cfg.ell_width).unwrap();
+
+    let res = backward::grad(&cfg, &ps, &mb).unwrap();
+    assert!(res.loss.is_finite());
+    assert_grads_match_fd(&cfg, &ps, &mb, &res.grads.data);
+}
+
+#[test]
+fn row_parallel_batch1_dw_is_bit_stable_and_passes_fd() {
+    // A batch-1 gradient makes every `dW = X^T·dU` dispatch (and the
+    // readout twin) a batch-1 transpose GEMM: with one sample there is
+    // nothing to sample-split, so the worker pool row-splits the
+    // reduction across workers (DESIGN.md §9). That split must be
+    // invisible bit-for-bit against the single-threaded backward, and
+    // the row-parallel gradient must still pass the same 1e-4
+    // finite-difference gate as the serial one.
+    let cfg = tiny_cfg();
+    let ps = generic_params(&cfg, 47);
+    let data = Dataset::generate(DatasetKind::Tox21, 4, 53);
+    let mb = data.pack_batch(&[2], cfg.max_nodes, cfg.ell_width).unwrap();
+    assert_eq!(mb.batch, 1);
+
+    let serial = backward::grad(&cfg, &ps, &mb).unwrap();
+    let mut parallel = None;
+    for threads in [2, 8] {
+        let par = backward::grad_with(&cfg, &ps, &mb, &Executor::new(threads), None).unwrap();
+        assert_eq!(
+            serial.grads.data, par.grads.data,
+            "threads={threads}: row-parallel dW drifted from single-threaded"
+        );
+        assert_eq!(serial.loss, par.loss);
+        parallel = Some(par);
+    }
+    assert_grads_match_fd(&cfg, &ps, &mb, &parallel.unwrap().grads.data);
 }
 
 #[test]

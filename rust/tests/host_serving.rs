@@ -154,6 +154,44 @@ fn host_trainer_trains_without_artifacts() {
 }
 
 #[test]
+fn full_train_step_runs_on_exactly_one_pool_with_zero_new_spawns() {
+    // The tentpole contract: a trainer owns one persistent worker pool
+    // for its lifetime, every engine dispatch of a train step runs on
+    // it, and nothing ever spawns a thread after pool construction —
+    // the host-side analogue of keeping the device kernel resident
+    // (DESIGN.md §9).
+    let mut tr = Trainer::new_host("tox21", 4).unwrap();
+    let exec = tr.executor().expect("host trainer has an executor").clone();
+    let s0 = exec.stats();
+    assert_eq!(s0.workers, 4);
+    assert_eq!(s0.spawned_threads, 3, "pool spawns workers - 1 threads");
+    assert_eq!(s0.dispatches, 0);
+
+    let data = Dataset::generate(DatasetKind::Tox21, 8, 19);
+    let idx: Vec<usize> = (0..8).collect();
+    let mb = data
+        .pack_batch(&idx, tr.cfg.max_nodes, tr.cfg.ell_width)
+        .unwrap();
+    tr.step_batched(&mb, 0.01).unwrap();
+    let s1 = exec.stats();
+    // 17 forward + 22 backward engine dispatches (DESIGN.md §8), all on
+    // this one pool — the trainer constructed no other executor.
+    assert_eq!(s1.dispatches - s0.dispatches, 39);
+    assert_eq!(
+        s1.spawned_threads, s0.spawned_threads,
+        "a dispatch spawned a thread"
+    );
+    assert_eq!(s1.static_dispatches + s1.stealing_dispatches, s1.dispatches);
+
+    // Further steps and forwards keep riding the same pool.
+    tr.step_batched(&mb, 0.01).unwrap();
+    tr.forward(&mb).unwrap();
+    let s2 = exec.stats();
+    assert_eq!(s2.dispatches - s1.dispatches, 39 + 17);
+    assert_eq!(s2.spawned_threads, s0.spawned_threads);
+}
+
+#[test]
 fn trainer_set_params_invalidates_readout_cache() {
     let data = Dataset::generate(DatasetKind::Tox21, 4, 16);
     let mut tr = Trainer::new_host("tox21", 1).unwrap();
