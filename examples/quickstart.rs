@@ -92,7 +92,8 @@ fn main() -> anyhow::Result<()> {
         .fold(0f32, f32::max);
     let loss = reference::loss(&cfg, logits, &mb.labels, mb.batch);
     println!(
-        "ChemGCN forward over {} molecules: loss = {loss:.4} (max |diff| vs rust oracle = {max_diff:.2e})",
+        "ChemGCN forward over {} molecules: loss = {loss:.4} \
+         (max |diff| vs rust oracle = {max_diff:.2e})",
         mb.batch
     );
     println!("quickstart OK");

@@ -1,10 +1,14 @@
 //! SpMM micro-benchmark at a single user-chosen point, engine-first:
 //! the four batched-SpMM engine backends (ST / CSR / ELL / dense-GEMM)
-//! in three executor configurations — serial fallback, static-parallel
-//! (the legacy contiguous sample split) and the work-stealing worker
-//! pool (DESIGN.md §9) — plus a host-engine `train_step` line (full
-//! fwd + engine-dispatch backward + SGD, DESIGN.md §8) and, when the
-//! AOT artifacts exist, the five measured + simulated §V-A series.
+//! in four executor configurations — scalar serial baseline (the
+//! pre-vectorization inner loops, DESIGN.md §10), vectorized serial
+//! fallback, static-parallel (the legacy contiguous sample split) and
+//! the work-stealing worker pool (DESIGN.md §9) — plus a host-engine
+//! `train_step` line (full fwd + engine-dispatch backward + SGD,
+//! DESIGN.md §8) and, when the AOT artifacts exist, the five measured
+//! + simulated §V-A series. The per-backend summary lines report both
+//! the scalar → vectorized kernel speedup and the serial → parallel
+//! speedup on top of it.
 //!
 //!     cargo run --release --example spmm_microbench -- --sweep fig8b --nb 64
 //!     cargo run --release --example spmm_microbench -- --threads 4
@@ -12,9 +16,10 @@
 //!
 //! `--json` additionally runs the mixed-batch sweep (fig10, first n_B
 //! point — the load-imbalance case stealing exists for) and writes the
-//! whole serial / static / work-stealing comparison, train_step line
-//! included, to `BENCH_engine.json` at the repository root so the perf
-//! trajectory is machine-recorded across PRs.
+//! whole scalar / serial / static / work-stealing comparison,
+//! train_step line included, to `BENCH_engine.json` at the repository
+//! root so the perf trajectory (vectorization win included) is
+//! machine-recorded across PRs.
 //!
 //! No artifacts are required for the engine or train_step series: sweep
 //! geometry falls back to the built-in copy of the aot.py table.
@@ -66,8 +71,8 @@ fn main() -> anyhow::Result<()> {
     );
     sw.nbs = vec![nb];
 
-    // Engine backends: one dispatch per whole batch, serial vs static
-    // parallel vs work-stealing pool.
+    // Engine backends: one dispatch per whole batch, scalar baseline vs
+    // vectorized serial vs static parallel vs work-stealing pool.
     let opts = BenchOpts::from_env();
     let threads = args.usize("threads");
     let engine = run_engine_bench(&sw, threads, &opts)?;

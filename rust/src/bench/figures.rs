@@ -19,7 +19,7 @@ use crate::graph::dataset::{Dataset, DatasetKind};
 use crate::runtime::artifact::SweepSpec;
 use crate::runtime::Runtime;
 use crate::simulator::cost::CostModel;
-use crate::sparse::engine::{BatchedSpmm, Executor, Rhs, SchedPolicy};
+use crate::sparse::engine::{BatchedSpmm, Executor, KernelVariant, Rhs, SchedPolicy};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::timer;
 
@@ -35,28 +35,34 @@ pub const APPROACHES: [&str; 5] = [
 /// Engine backend names, in `SpmmWorkload` accessor order.
 pub const ENGINE_BACKENDS: [&str; 4] = ["Engine-ST", "Engine-CSR", "Engine-ELL", "Engine-GEMM"];
 
-/// Benchmark the four engine backends at every sweep point in three
-/// executor configurations: serial fallback, `threads`-wide static
-/// split (the legacy contiguous sample partition), and `threads`-wide
-/// work-stealing pool (`threads = 0` = one per core). Series come in
-/// (serial, static, steal) triples per backend; no runtime or
-/// artifacts are needed. On uniform sweeps static and steal should
-/// coincide (the planner keeps the static fast path); mixed sweeps
-/// (fig10) are where stealing pulls ahead.
+/// Benchmark the four engine backends at every sweep point in four
+/// executor configurations: scalar serial baseline (the
+/// pre-vectorization inner loops, DESIGN.md §10), vectorized serial
+/// fallback, `threads`-wide static split (the legacy contiguous sample
+/// partition), and `threads`-wide work-stealing pool (`threads = 0` =
+/// one per core; static and steal run the vectorized kernels). Series
+/// come in (scalar, serial, static, steal) quadruples per backend; no
+/// runtime or artifacts are needed. scalar → serial isolates the
+/// kernel-vectorization win, serial → static/steal the parallel win.
+/// On uniform sweeps static and steal should coincide (the planner
+/// keeps the static fast path); mixed sweeps (fig10) are where
+/// stealing pulls ahead.
 pub fn run_engine_bench(
     sw: &SweepSpec,
     threads: usize,
     opts: &BenchOpts,
 ) -> anyhow::Result<FigureResult> {
     let t = Executor::resolve_threads(threads);
+    let scalar = Executor::with_variant(1, SchedPolicy::WorkStealing, KernelVariant::Scalar);
     let stat = Executor::with_policy(t, SchedPolicy::Static);
     let steal = Executor::new(t);
     let labels = [
+        "scalar".to_string(),
         "serial".to_string(),
         format!("static-{t}t"),
         format!("steal-{t}t"),
     ];
-    let execs = [Executor::serial(), stat, steal];
+    let execs = [scalar, Executor::serial(), stat, steal];
     let mut series: Vec<Series> = Vec::new();
     for backend in ENGINE_BACKENDS {
         for label in &labels {
@@ -120,7 +126,9 @@ pub fn run_engine_bench(
 }
 
 /// Per-backend speedup lines for an engine figure (series arranged in
-/// (serial, static, steal) triples, as `run_engine_bench` emits them).
+/// (scalar, serial, static, steal) quadruples, as `run_engine_bench`
+/// emits them): the scalar → serial ratio is the pure vectorization
+/// win, serial → static/steal the parallel win on top of it.
 pub fn engine_speedup_summary(f: &FigureResult) -> String {
     let best = |s: &Series| {
         s.values
@@ -130,19 +138,26 @@ pub fn engine_speedup_summary(f: &FigureResult) -> String {
             .fold(f64::MIN, f64::max)
     };
     let mut out = String::new();
-    for group in f.series.chunks(3) {
-        if group.len() != 3 {
+    for group in f.series.chunks(4) {
+        if group.len() != 4 {
             continue;
         }
-        let (s, st, wk) = (best(&group[0]), best(&group[1]), best(&group[2]));
-        if s > 0.0 && st > 0.0 && wk > 0.0 {
+        let (sc, s, st, wk) = (
+            best(&group[0]),
+            best(&group[1]),
+            best(&group[2]),
+            best(&group[3]),
+        );
+        if sc > 0.0 && s > 0.0 && st > 0.0 && wk > 0.0 {
             out.push_str(&format!(
-                "  {} {s:.3} -> {} {st:.3} ({:.2}x) -> {} {wk:.3} GFLOPS \
-                 ({:.2}x parallel speedup)\n",
+                "  {} {sc:.3} -> {} {s:.3} ({:.2}x vector speedup) -> {} {st:.3} ({:.2}x) \
+                 -> {} {wk:.3} GFLOPS ({:.2}x parallel speedup)\n",
                 group[0].name,
                 group[1].name,
-                st / s,
+                s / sc,
                 group[2].name,
+                st / s,
+                group[3].name,
                 wk / s
             ));
         }
@@ -570,13 +585,19 @@ mod tests {
             min_time_s: 0.0,
         };
         let f = run_engine_bench(&sw, 2, &opts).unwrap();
-        assert_eq!(f.series.len(), ENGINE_BACKENDS.len() * 3);
+        assert_eq!(f.series.len(), ENGINE_BACKENDS.len() * 4);
         assert!(f
             .series
             .iter()
             .all(|s| s.values.len() == 1 && s.values[0] > 0.0));
+        // Every backend carries its scalar-baseline series.
+        assert_eq!(
+            f.series.iter().filter(|s| s.name.ends_with("(scalar)")).count(),
+            ENGINE_BACKENDS.len()
+        );
         let summary = engine_speedup_summary(&f);
         assert!(!summary.is_empty());
+        assert!(summary.contains("vector speedup"), "{summary}");
         assert!(summary.contains("static-2t") && summary.contains("steal-2t"));
     }
 }

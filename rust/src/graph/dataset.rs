@@ -169,6 +169,11 @@ pub struct ModelBatch {
     pub n_out: usize,
     pub ell_cols: Vec<i32>,
     pub ell_vals: Vec<f32>,
+    /// Real (non-padding) non-zeros per `[B, CH]` adjacency plane,
+    /// counted once at pack time so the engine's per-channel ELL views
+    /// answer `BatchedSpmm::sample_nnz` in O(1) on every cost-model
+    /// scan instead of rescanning `M * R` slots (DESIGN.md §10).
+    pub ell_nnz: Vec<u32>,
     pub x: Vec<f32>,
     pub mask: Vec<f32>,
     pub labels: Vec<f32>,
@@ -191,6 +196,7 @@ impl ModelBatch {
             n_out,
             ell_cols: vec![0i32; batch * channels * max_nodes * ell_width],
             ell_vals: vec![0f32; batch * channels * max_nodes * ell_width],
+            ell_nnz: vec![0u32; batch * channels],
             x: vec![0f32; batch * max_nodes * FEAT_DIM],
             mask: vec![0f32; batch * max_nodes],
             labels: vec![0f32; batch * n_out],
@@ -216,6 +222,10 @@ impl ModelBatch {
                 m,
                 r,
             )?;
+            // Explicit zero values pack like padding slots; count what a
+            // scan of the plane would see.
+            self.ell_nnz[bi * self.channels + ci] =
+                a.vals.iter().filter(|v| **v != 0.0).count() as u32;
         }
         let (fx, fm) = featurize(mol, m);
         self.x[bi * m * FEAT_DIM..(bi + 1) * m * FEAT_DIM].copy_from_slice(&fx);
@@ -241,6 +251,7 @@ impl ModelBatch {
             n_out: self.n_out,
             ell_cols: self.ell_cols[b * per_adj..(b + 1) * per_adj].to_vec(),
             ell_vals: sl(&self.ell_vals, per_adj),
+            ell_nnz: self.ell_nnz[b * self.channels..(b + 1) * self.channels].to_vec(),
             x: sl(&self.x, self.max_nodes * self.feat_dim),
             mask: sl(&self.mask, self.max_nodes),
             labels: sl(&self.labels, self.n_out),
@@ -378,6 +389,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cached_channel_nnz_matches_plane_scan() {
+        // The pack-time per-(sample, channel) counts must equal a
+        // from-scratch scan of each ELL plane — the O(1) cost-model
+        // contract the engine's channel views rely on (DESIGN.md §10).
+        let d = Dataset::generate(DatasetKind::Tox21, 10, 11);
+        let mb = d.pack_batch(&[0, 2, 5, 9], 50, 12).unwrap();
+        let (m, r) = (50usize, 12usize);
+        for bi in 0..mb.batch {
+            for ci in 0..mb.channels {
+                let base = (bi * mb.channels + ci) * m * r;
+                let scan = mb.ell_vals[base..base + m * r]
+                    .iter()
+                    .filter(|v| **v != 0.0)
+                    .count();
+                assert_eq!(
+                    mb.ell_nnz[bi * mb.channels + ci] as usize,
+                    scan,
+                    "sample {bi} channel {ci}"
+                );
+            }
+        }
+        let s = mb.single(2);
+        assert_eq!(
+            s.ell_nnz,
+            mb.ell_nnz[2 * mb.channels..3 * mb.channels].to_vec()
+        );
     }
 
     #[test]

@@ -94,7 +94,10 @@ fn cmd_gen_data(rest: &[String]) -> anyhow::Result<()> {
     let args = parse(&cli, rest)?;
     let n = args.usize("samples");
     println!("Table I (synthetic stand-ins; see DESIGN.md §7 Substitutions)\n");
-    println!("{:<13} {:>9} {:>8} {:>9} {:>10} {:>9}", "dataset", "#matrices", "max dim", "mean dim", "mean bonds", "nnz/row");
+    println!(
+        "{:<13} {:>9} {:>8} {:>9} {:>10} {:>9}",
+        "dataset", "#matrices", "max dim", "mean dim", "mean bonds", "nnz/row"
+    );
     for kind in [DatasetKind::Tox21, DatasetKind::Reaction100] {
         let d = Dataset::generate(kind, n, args.u64("seed"));
         let mean_dim: f64 =

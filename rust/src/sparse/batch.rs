@@ -24,6 +24,11 @@ pub struct PaddedStBatch {
     pub nnz_cap: usize,
     pub ids: Vec<i32>,
     pub vals: Vec<f32>,
+    /// Real (non-padding) non-zeros of each sample, counted once at
+    /// pack time so the engine's cost model (`BatchedSpmm::sample_nnz`)
+    /// is O(1) per sample instead of an O(nnz_cap) scan on every
+    /// work-stealing dispatch (DESIGN.md §10).
+    pub nnz_per_sample: Vec<u32>,
 }
 
 impl PaddedStBatch {
@@ -31,6 +36,7 @@ impl PaddedStBatch {
         let batch = mats.len();
         let mut ids = vec![0i32; batch * nnz_cap * 2];
         let mut vals = vec![0f32; batch * nnz_cap];
+        let mut nnz_per_sample = vec![0u32; batch];
         for (b, m) in mats.iter().enumerate() {
             anyhow::ensure!(
                 m.rows <= dim && m.cols <= dim,
@@ -48,6 +54,9 @@ impl PaddedStBatch {
                 ids[(b * nnz_cap + i) * 2 + 1] = m.col_ids[i] as i32;
                 vals[b * nnz_cap + i] = m.vals[i];
             }
+            // Count what a scan of the padded slots would see: explicit
+            // zero values pack like padding and the kernels skip them.
+            nnz_per_sample[b] = m.vals.iter().filter(|v| **v != 0.0).count() as u32;
         }
         Ok(Self {
             batch,
@@ -55,13 +64,14 @@ impl PaddedStBatch {
             nnz_cap,
             ids,
             vals,
+            nnz_per_sample,
         })
     }
 
     /// Total *real* non-zeros (excludes padding) — the paper's FLOP
-    /// numerator counts only these.
+    /// numerator counts only these. O(batch), from the pack-time counts.
     pub fn real_nnz(&self) -> usize {
-        self.vals.iter().filter(|v| **v != 0.0).count()
+        self.nnz_per_sample.iter().map(|&c| c as usize).sum()
     }
 
     /// Padding fraction of nnz slots (ablation metric).
@@ -78,6 +88,7 @@ impl PaddedStBatch {
             nnz_cap: self.nnz_cap,
             ids: self.ids[b * self.nnz_cap * 2..(b + 1) * self.nnz_cap * 2].to_vec(),
             vals: self.vals[b * self.nnz_cap..(b + 1) * self.nnz_cap].to_vec(),
+            nnz_per_sample: vec![self.nnz_per_sample[b]],
         }
     }
 }
@@ -160,6 +171,10 @@ pub struct PaddedEllBatch {
     pub width: usize,
     pub cols: Vec<i32>,
     pub vals: Vec<f32>,
+    /// Real (non-padding) non-zeros of each sample, counted once at
+    /// pack time — the O(1) cost-model source for the engine's ELL
+    /// backend (DESIGN.md §10).
+    pub nnz_per_sample: Vec<u32>,
 }
 
 impl PaddedEllBatch {
@@ -167,6 +182,7 @@ impl PaddedEllBatch {
         let batch = mats.len();
         let mut cols = vec![0i32; batch * dim * width];
         let mut vals = vec![0f32; batch * dim * width];
+        let mut nnz_per_sample = vec![0u32; batch];
         for (b, m) in mats.iter().enumerate() {
             anyhow::ensure!(
                 m.rows <= dim && m.cols <= dim,
@@ -187,6 +203,8 @@ impl PaddedEllBatch {
                 vals[base + row * width + slot] = m.vals[i];
                 fill[row] += 1;
             }
+            // Explicit zero values occupy a slot but scan as padding.
+            nnz_per_sample[b] = m.vals.iter().filter(|v| **v != 0.0).count() as u32;
         }
         Ok(Self {
             batch,
@@ -194,6 +212,7 @@ impl PaddedEllBatch {
             width,
             cols,
             vals,
+            nnz_per_sample,
         })
     }
 
@@ -214,9 +233,10 @@ impl PaddedEllBatch {
         Self::pack(mats, dim, width)
     }
 
-    /// Total *real* non-zeros (excludes padding).
+    /// Total *real* non-zeros (excludes padding). O(batch), from the
+    /// pack-time counts.
     pub fn real_nnz(&self) -> usize {
-        self.vals.iter().filter(|v| **v != 0.0).count()
+        self.nnz_per_sample.iter().map(|&c| c as usize).sum()
     }
 
     /// Padding fraction of slots (ablation metric).
@@ -327,6 +347,55 @@ mod tests {
                     assert_eq!(flat[b * 36 + r * 6 + c], d.at(r, c));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn cached_nnz_counts_match_recomputed_scan_on_random_batches() {
+        // The pack-time per-sample counts must always equal what a
+        // from-scratch scan of the padded value arrays reports — the
+        // O(1) cost-model contract (DESIGN.md §10) — including when a
+        // COO carries an explicit zero value (packed like padding).
+        let mut rng = Rng::new(0x77);
+        for case in 0..8 {
+            let dim = rng.range(4, 24);
+            let batch = rng.range(1, 10);
+            let mut mats = random_mixed_batch(&mut rng, (2, dim), (1, 3), batch);
+            let mut withzero = Coo::new(2, 2);
+            withzero.push(0, 1, 0.0); // explicit zero: scans as padding
+            withzero.push(1, 0, 2.5);
+            mats.push(withzero);
+            let cap = mats.iter().map(Coo::nnz).max().unwrap();
+            let st = PaddedStBatch::pack(&mats, dim, cap).unwrap();
+            let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+            for b in 0..mats.len() {
+                let st_scan = st.vals[b * cap..(b + 1) * cap]
+                    .iter()
+                    .filter(|v| **v != 0.0)
+                    .count();
+                assert_eq!(
+                    st.nnz_per_sample[b] as usize, st_scan,
+                    "case {case} st sample {b}"
+                );
+                let per = ell.dim * ell.width;
+                let ell_scan = ell.vals[b * per..(b + 1) * per]
+                    .iter()
+                    .filter(|v| **v != 0.0)
+                    .count();
+                assert_eq!(
+                    ell.nnz_per_sample[b] as usize, ell_scan,
+                    "case {case} ell sample {b}"
+                );
+                assert_eq!(st.single(b).nnz_per_sample, vec![st.nnz_per_sample[b]]);
+            }
+            assert_eq!(
+                st.real_nnz(),
+                st.vals.iter().filter(|v| **v != 0.0).count()
+            );
+            assert_eq!(
+                ell.real_nnz(),
+                ell.vals.iter().filter(|v| **v != 0.0).count()
+            );
         }
     }
 

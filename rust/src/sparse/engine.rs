@@ -29,6 +29,14 @@
 //! gradients. The `X·W^T` gradient form is covered on the operand side
 //! by [`Rhs::SharedTransposed`].
 //!
+//! Inner loops are vectorized: every dispatch form updates the dense
+//! feature dimension in [`LANES`]-wide column blocks the compiler
+//! autovectorizes, with the pre-vectorization scalar kernels kept as
+//! the [`KernelVariant::Scalar`] parity oracle (DESIGN.md §10).
+//! Vectorizing over output columns regroups only independent elements,
+//! so both variants are bit-identical — pinned per backend × dispatch
+//! form × thread count × policy in `tests/engine_parity.rs`.
+//!
 //! Every caller that multiplies routes through this trait:
 //! `gcn::reference::forward` and `gcn::backward::grad`, the
 //! coordinator's host dispatch paths, and the bench harness.
@@ -62,8 +70,28 @@ pub mod kernels;
 pub mod pool;
 
 pub use exec::Executor;
-pub use kernels::{CsrKernel, EllKernel, GemmKernel, StKernel};
+pub use kernels::{CsrKernel, EllKernel, GemmKernel, LANES, StKernel};
 pub use pool::{PoolStats, SchedPolicy, WorkerPool};
+
+/// Which inner-loop implementation a dispatch runs (DESIGN.md §10).
+///
+/// Both variants compute bit-identical output: vectorization happens
+/// over *output columns*, which are independent elements, so each
+/// output element's accumulation chain over the non-zeros is untouched.
+/// The scalar variant survives as the parity oracle the property tests
+/// pin the vectorized kernels against, and as the microbench baseline
+/// that makes the vectorization win measurable per backend.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// The pre-vectorization scalar inner loops (`for j in 0..n`),
+    /// kept verbatim as the reference implementation.
+    Scalar,
+    /// Column-blocked [`LANES`]-wide inner loops (`chunks_exact` +
+    /// fixed-size array blocks the compiler autovectorizes, scalar tail
+    /// for `n % LANES`). The default.
+    #[default]
+    Vectorized,
+}
 
 /// Right-hand-side operand layout for one engine dispatch.
 #[derive(Clone, Copy, Debug)]
@@ -182,6 +210,38 @@ pub trait BatchedSpmm: Sync {
     /// This is the split that parallelizes the backward's batch-1
     /// `dW = X^T·dU` dispatches within one sample.
     fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+
+    /// Scalar-inner-loop twin of
+    /// [`spmm_sample`](BatchedSpmm::spmm_sample): the pre-vectorization
+    /// kernel, kept verbatim as the [`KernelVariant::Scalar`] parity
+    /// oracle and bench baseline (DESIGN.md §10). Must be bit-identical
+    /// to the vectorized form on every input.
+    fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+
+    /// Scalar twin of [`spmm_sample_t`](BatchedSpmm::spmm_sample_t).
+    fn spmm_sample_t_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]);
+
+    /// Scalar twin of
+    /// [`spmm_sample_rows`](BatchedSpmm::spmm_sample_rows).
+    fn spmm_sample_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    );
+
+    /// Scalar twin of
+    /// [`spmm_sample_t_rows`](BatchedSpmm::spmm_sample_t_rows).
+    fn spmm_sample_t_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    );
 }
 
 /// References to kernels are kernels: this is what lets the executor
@@ -227,5 +287,35 @@ impl<K: BatchedSpmm + ?Sized> BatchedSpmm for &K {
 
     fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
         (**self).spmm_sample_t_rows(b, row0, rhs, n, out)
+    }
+
+    fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_scalar(b, rhs, n, out)
+    }
+
+    fn spmm_sample_t_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_t_scalar(b, rhs, n, out)
+    }
+
+    fn spmm_sample_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        (**self).spmm_sample_rows_scalar(b, row0, rhs, n, out)
+    }
+
+    fn spmm_sample_t_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        (**self).spmm_sample_t_rows_scalar(b, row0, rhs, n, out)
     }
 }

@@ -24,7 +24,7 @@
 use std::sync::Arc;
 
 use super::pool::{PoolStats, SchedPolicy, WorkerPool};
-use super::{BatchedSpmm, Rhs};
+use super::{BatchedSpmm, KernelVariant, Rhs};
 
 /// Thin, cloneable handle over a persistent [`WorkerPool`]; all engine
 /// dispatches go through one of these.
@@ -56,6 +56,18 @@ impl Executor {
         }
     }
 
+    /// [`Executor::with_policy`] with an explicit kernel variant:
+    /// [`KernelVariant::Scalar`] pins the pre-vectorization scalar
+    /// inner loops — the parity oracle the property tests compare
+    /// against and the baseline the microbench's scalar-vs-vectorized
+    /// comparison runs on (DESIGN.md §10). Output is bit-identical
+    /// across variants; this is a pure perf/observability knob.
+    pub fn with_variant(threads: usize, policy: SchedPolicy, variant: KernelVariant) -> Executor {
+        Executor {
+            pool: Arc::new(WorkerPool::with_variant(threads, policy, variant)),
+        }
+    }
+
     /// One thread per available core — the "parallel" configuration the
     /// benches compare against [`Executor::serial`].
     pub fn parallel() -> Executor {
@@ -84,6 +96,11 @@ impl Executor {
 
     pub fn threads(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Which inner-loop implementation this executor's dispatches run.
+    pub fn variant(&self) -> KernelVariant {
+        self.pool.variant()
     }
 
     /// Cumulative scheduling counters of the underlying pool
@@ -210,6 +227,7 @@ impl std::fmt::Debug for Executor {
         f.debug_struct("Executor")
             .field("threads", &self.threads())
             .field("policy", &self.pool.policy())
+            .field("variant", &self.variant())
             .finish()
     }
 }
@@ -259,6 +277,26 @@ mod tests {
                 .unwrap();
             assert_eq!(serial, par, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn scalar_variant_is_bitwise_identical_to_vectorized() {
+        let (st, dense) = workload(9, 16, 11); // 11 = tail width 3
+        let k = StKernel::new(&st);
+        let vec_fwd = Executor::serial().spmm(&k, Rhs::PerSample(&dense), 11).unwrap();
+        let vec_bwd = Executor::serial()
+            .spmm_t(&k, Rhs::PerSample(&dense), 11)
+            .unwrap();
+        for threads in [1, 4] {
+            let scalar =
+                Executor::with_variant(threads, SchedPolicy::WorkStealing, KernelVariant::Scalar);
+            assert_eq!(scalar.variant(), KernelVariant::Scalar);
+            let sf = scalar.spmm(&k, Rhs::PerSample(&dense), 11).unwrap();
+            let sb = scalar.spmm_t(&k, Rhs::PerSample(&dense), 11).unwrap();
+            assert_eq!(sf, vec_fwd, "threads={threads}");
+            assert_eq!(sb, vec_bwd, "threads={threads}");
+        }
+        assert_eq!(Executor::serial().variant(), KernelVariant::Vectorized);
     }
 
     #[test]

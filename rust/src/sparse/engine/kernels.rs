@@ -17,10 +17,68 @@
 //! than a dedicated index would need, but it preserves the serial
 //! per-element accumulation order exactly, which is what makes pool
 //! output bit-identical to serial under any steal order.
+//!
+//! **Vectorization (DESIGN.md §10).** The per-non-zero inner loop over
+//! the dense feature dimension — `out[r, j] += a[r, c] * x[c, j]` for
+//! `j in 0..n` — is the engine's hottest loop, and the default kernels
+//! run it in column-blocked form: [`LANES`]-wide blocks of output
+//! columns updated through `chunks_exact` and fixed-size `[f32; LANES]`
+//! arrays (which the compiler reliably autovectorizes; no unsafe, no
+//! intrinsics), plus a scalar tail for the `n % LANES` trailing
+//! columns. Output columns are independent elements, so the blocking
+//! regroups *which j's are updated together* without touching any
+//! element's accumulation chain over the non-zeros — vectorized output
+//! is bit-identical to the scalar reference. The pre-vectorization
+//! scalar loops survive verbatim as the `*_scalar` trait methods
+//! ([`KernelVariant::Scalar`]): the parity oracle the property tests
+//! pin against, and the microbench baseline the scalar-vs-vectorized
+//! GFLOPS comparison runs on.
+//!
+//! [`KernelVariant::Scalar`]: super::KernelVariant::Scalar
 
 use super::BatchedSpmm;
 use crate::graph::dataset::ModelBatch;
 use crate::sparse::batch::{PaddedCsrBatch, PaddedEllBatch, PaddedStBatch};
+
+/// Column-block width of the vectorized inner loops: 8 f32 lanes is one
+/// 256-bit AVX2 vector (two 128-bit SSE/NEON ops on narrower hosts),
+/// wide enough to saturate the FP units on the tox21/reaction100
+/// feature widths (64+) while bounding the scalar tail at 7 elements.
+/// A compile-time constant because the whole point is fixed-size array
+/// blocks the compiler can keep in registers.
+pub const LANES: usize = 8;
+
+/// `dst[l] += val * src[l]` over one fixed-width block. The fixed
+/// `[f32; LANES]` shape is what lets the compiler emit one vector
+/// multiply-add sequence with no bounds checks or trip-count logic.
+#[inline(always)]
+fn axpy_block(dst: &mut [f32; LANES], val: f32, src: &[f32; LANES]) {
+    for l in 0..LANES {
+        dst[l] += val * src[l];
+    }
+}
+
+/// Vectorized `dst[j] += val * src[j]` over a full feature row:
+/// [`LANES`]-wide blocks via `chunks_exact`, then a scalar tail for the
+/// `n % LANES` trailing columns. Every output element sees exactly the
+/// same multiply-then-add it sees in the scalar loop — only the
+/// grouping of independent columns changes — so this is bit-identical
+/// to the scalar reference for any `n`.
+#[inline(always)]
+fn axpy_row(dst: &mut [f32], val: f32, src: &[f32]) {
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for (db, sb) in d.by_ref().zip(s.by_ref()) {
+        axpy_block(
+            db.try_into().expect("LANES-wide chunk"),
+            val,
+            sb.try_into().expect("LANES-wide chunk"),
+        );
+    }
+    for (dj, sj) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *dj += val * *sj;
+    }
+}
 
 /// SparseTensor backend (paper Fig. 2): nnz-major loop over the padded
 /// `ids`/`vals` arrays. Padding slots carry `val == 0` at `(0, 0)` and
@@ -65,6 +123,92 @@ impl BatchedSpmm for StKernel<'_> {
             }
             let rid = self.st.ids[(b * cap + i) * 2] as usize;
             let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            axpy_row(
+                &mut out[rid * n..(rid + 1) * n],
+                val,
+                &rhs[cid * n..(cid + 1) * n],
+            );
+        }
+    }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Same nnz-major loop with the (row, col) roles swapped:
+        // A^T[c, r] = A[r, c].
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            axpy_row(
+                &mut out[cid * n..(cid + 1) * n],
+                val,
+                &rhs[rid * n..(rid + 1) * n],
+            );
+        }
+    }
+
+    fn sample_nnz(&self, b: usize) -> usize {
+        // O(1): counted once at pack time (DESIGN.md §10) — this runs
+        // on every cost-model scan of every work-stealing dispatch.
+        self.st.nnz_per_sample[b] as usize
+    }
+
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // nnz-major scan filtered to output rows [row0, row1): each
+        // element still receives its contributions in slot order.
+        let row1 = row0 + out.len() / n;
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            if rid < row0 || rid >= row1 {
+                continue;
+            }
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            axpy_row(
+                &mut out[(rid - row0) * n..(rid - row0 + 1) * n],
+                val,
+                &rhs[cid * n..(cid + 1) * n],
+            );
+        }
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            if cid < row0 || cid >= row1 {
+                continue;
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            axpy_row(
+                &mut out[(cid - row0) * n..(cid - row0 + 1) * n],
+                val,
+                &rhs[rid * n..(rid + 1) * n],
+            );
+        }
+    }
+
+    fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
             let src = &rhs[cid * n..(cid + 1) * n];
             let dst = &mut out[rid * n..(rid + 1) * n];
             for j in 0..n {
@@ -73,9 +217,7 @@ impl BatchedSpmm for StKernel<'_> {
         }
     }
 
-    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
-        // Same nnz-major loop with the (row, col) roles swapped:
-        // A^T[c, r] = A[r, c].
+    fn spmm_sample_t_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
         let cap = self.st.nnz_cap;
         for i in 0..cap {
             let val = self.st.vals[b * cap + i];
@@ -92,17 +234,14 @@ impl BatchedSpmm for StKernel<'_> {
         }
     }
 
-    fn sample_nnz(&self, b: usize) -> usize {
-        let cap = self.st.nnz_cap;
-        self.st.vals[b * cap..(b + 1) * cap]
-            .iter()
-            .filter(|v| **v != 0.0)
-            .count()
-    }
-
-    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
-        // nnz-major scan filtered to output rows [row0, row1): each
-        // element still receives its contributions in slot order.
+    fn spmm_sample_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
         let row1 = row0 + out.len() / n;
         let cap = self.st.nnz_cap;
         for i in 0..cap {
@@ -123,7 +262,14 @@ impl BatchedSpmm for StKernel<'_> {
         }
     }
 
-    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+    fn spmm_sample_t_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
         let row1 = row0 + out.len() / n;
         let cap = self.st.nnz_cap;
         for i in 0..cap {
@@ -191,10 +337,7 @@ impl BatchedSpmm for CsrKernel<'_> {
             for i in rpt[r] as usize..rpt[r + 1] as usize {
                 let val = self.csr.vals[base + i];
                 let cid = self.csr.col_ids[base + i] as usize;
-                let src = &rhs[cid * n..(cid + 1) * n];
-                for j in 0..n {
-                    dst[j] += val * src[j];
-                }
+                axpy_row(dst, val, &rhs[cid * n..(cid + 1) * n]);
             }
         }
     }
@@ -211,10 +354,7 @@ impl BatchedSpmm for CsrKernel<'_> {
             for i in rpt[r] as usize..rpt[r + 1] as usize {
                 let val = self.csr.vals[base + i];
                 let cid = self.csr.col_ids[base + i] as usize;
-                let dst = &mut out[cid * n..(cid + 1) * n];
-                for j in 0..n {
-                    dst[j] += val * src[j];
-                }
+                axpy_row(&mut out[cid * n..(cid + 1) * n], val, src);
             }
         }
     }
@@ -235,6 +375,40 @@ impl BatchedSpmm for CsrKernel<'_> {
             for i in rpt[r] as usize..rpt[r + 1] as usize {
                 let val = self.csr.vals[base + i];
                 let cid = self.csr.col_ids[base + i] as usize;
+                axpy_row(dst, val, &rhs[cid * n..(cid + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Scatter form: scan every row in serial order, keep only
+        // contributions landing in [row0, row1).
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let src = &rhs[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let cid = self.csr.col_ids[base + i] as usize;
+                if cid < row0 || cid >= row1 {
+                    continue;
+                }
+                let val = self.csr.vals[base + i];
+                axpy_row(&mut out[(cid - row0) * n..(cid - row0 + 1) * n], val, src);
+            }
+        }
+    }
+
+    fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let dst = &mut out[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
                 let src = &rhs[cid * n..(cid + 1) * n];
                 for j in 0..n {
                     dst[j] += val * src[j];
@@ -243,9 +417,56 @@ impl BatchedSpmm for CsrKernel<'_> {
         }
     }
 
-    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
-        // Scatter form: scan every row in serial order, keep only
-        // contributions landing in [row0, row1).
+    fn spmm_sample_t_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let src = &rhs[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
+                let dst = &mut out[cid * n..(cid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in row0..row1 {
+            let dst = &mut out[(r - row0) * n..(r - row0 + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
+                let src = &rhs[cid * n..(cid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
         let row1 = row0 + out.len() / n;
         let m1 = self.csr.dim + 1;
         let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
@@ -281,10 +502,20 @@ pub struct EllKernel<'a> {
     offset: usize,
     /// Stride between consecutive samples' planes.
     stride: usize,
+    /// Per-sample real-nnz counts cached at pack time, when the view's
+    /// backing batch carries them: sample `b`'s count sits at
+    /// `nnz[nnz_offset + b * nnz_stride]`. `None` (raw-array views)
+    /// falls back to the O(rows * width) scan.
+    nnz: Option<&'a [u32]>,
+    nnz_offset: usize,
+    nnz_stride: usize,
 }
 
 impl<'a> EllKernel<'a> {
-    /// Contiguous `[batch, rows, width]` view over raw ELL arrays.
+    /// Contiguous `[batch, rows, width]` view over raw ELL arrays. No
+    /// cached nnz counts travel with raw arrays, so `sample_nnz` scans;
+    /// prefer [`EllKernel::from_padded`] / [`EllKernel::channel`] on the
+    /// packed formats, which count once at pack time.
     pub fn new(
         cols: &'a [i32],
         vals: &'a [f32],
@@ -302,11 +533,17 @@ impl<'a> EllKernel<'a> {
             width,
             offset: 0,
             stride: rows * width,
+            nnz: None,
+            nnz_offset: 0,
+            nnz_stride: 1,
         }
     }
 
     pub fn from_padded(ell: &'a PaddedEllBatch) -> EllKernel<'a> {
-        EllKernel::new(&ell.cols, &ell.vals, ell.batch, ell.dim, ell.width)
+        EllKernel {
+            nnz: Some(&ell.nnz_per_sample),
+            ..EllKernel::new(&ell.cols, &ell.vals, ell.batch, ell.dim, ell.width)
+        }
     }
 
     /// View of one adjacency channel of a packed model batch
@@ -323,6 +560,9 @@ impl<'a> EllKernel<'a> {
             width: mb.ell_width,
             offset: ch * plane,
             stride: mb.channels * plane,
+            nnz: Some(&mb.ell_nnz),
+            nnz_offset: ch,
+            nnz_stride: mb.channels,
         }
     }
 }
@@ -345,18 +585,112 @@ impl BatchedSpmm for EllKernel<'_> {
     }
 
     fn real_nnz(&self) -> usize {
-        (0..self.batch)
-            .map(|b| {
+        match self.nnz {
+            Some(counts) => (0..self.batch)
+                .map(|b| counts[self.nnz_offset + b * self.nnz_stride] as usize)
+                .sum(),
+            None => (0..self.batch)
+                .map(|b| {
+                    let base = self.offset + b * self.stride;
+                    self.vals[base..base + self.rows * self.width]
+                        .iter()
+                        .filter(|v| **v != 0.0)
+                        .count()
+                })
+                .sum(),
+        }
+    }
+
+    fn spmm_sample(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let dst = &mut out[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                axpy_row(dst, val, &rhs[cid * n..(cid + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Gather-from-row, scatter-to-column: the form the backward
+        // adjacency dispatch `dU = A^T @ dY` uses (DESIGN.md §8).
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let src = &rhs[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                axpy_row(&mut out[cid * n..(cid + 1) * n], val, src);
+            }
+        }
+    }
+
+    fn sample_nnz(&self, b: usize) -> usize {
+        match self.nnz {
+            // O(1): counted at pack time (DESIGN.md §10).
+            Some(counts) => counts[self.nnz_offset + b * self.nnz_stride] as usize,
+            None => {
                 let base = self.offset + b * self.stride;
                 self.vals[base..base + self.rows * self.width]
                     .iter()
                     .filter(|v| **v != 0.0)
                     .count()
-            })
-            .sum()
+            }
+        }
     }
 
-    fn spmm_sample(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // ELL rows are directly indexed: run the per-row loop on the
+        // block's rows only.
+        let row1 = row0 + out.len() / n;
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in row0..row1 {
+            let dst = &mut out[(rid - row0) * n..(rid - row0 + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                axpy_row(dst, val, &rhs[cid * n..(cid + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // Scatter form: full (rid, slot) scan in serial order, filtered
+        // to the block's output rows.
+        let row1 = row0 + out.len() / n;
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let src = &rhs[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                if cid < row0 || cid >= row1 {
+                    continue;
+                }
+                axpy_row(&mut out[(cid - row0) * n..(cid - row0 + 1) * n], val, src);
+            }
+        }
+    }
+
+    fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
         let base = self.offset + b * self.stride;
         let r = self.width;
         for rid in 0..self.rows {
@@ -375,9 +709,7 @@ impl BatchedSpmm for EllKernel<'_> {
         }
     }
 
-    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
-        // Gather-from-row, scatter-to-column: the form the backward
-        // adjacency dispatch `dU = A^T @ dY` uses (DESIGN.md §8).
+    fn spmm_sample_t_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
         let base = self.offset + b * self.stride;
         let r = self.width;
         for rid in 0..self.rows {
@@ -396,17 +728,14 @@ impl BatchedSpmm for EllKernel<'_> {
         }
     }
 
-    fn sample_nnz(&self, b: usize) -> usize {
-        let base = self.offset + b * self.stride;
-        self.vals[base..base + self.rows * self.width]
-            .iter()
-            .filter(|v| **v != 0.0)
-            .count()
-    }
-
-    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
-        // ELL rows are directly indexed: run the per-row loop on the
-        // block's rows only.
+    fn spmm_sample_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
         let row1 = row0 + out.len() / n;
         let base = self.offset + b * self.stride;
         let r = self.width;
@@ -426,9 +755,14 @@ impl BatchedSpmm for EllKernel<'_> {
         }
     }
 
-    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
-        // Scatter form: full (rid, slot) scan in serial order, filtered
-        // to the block's output rows.
+    fn spmm_sample_t_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
         let row1 = row0 + out.len() / n;
         let base = self.offset + b * self.stride;
         let r = self.width;
@@ -505,10 +839,7 @@ impl BatchedSpmm for GemmKernel<'_> {
                 if av == 0.0 {
                     continue;
                 }
-                let src = &rhs[k * n..(k + 1) * n];
-                for j in 0..n {
-                    dst[j] += av * src[j];
-                }
+                axpy_row(dst, av, &rhs[k * n..(k + 1) * n]);
             }
         }
     }
@@ -524,10 +855,7 @@ impl BatchedSpmm for GemmKernel<'_> {
                 if av == 0.0 {
                     continue;
                 }
-                let dst = &mut out[k * n..(k + 1) * n];
-                for j in 0..n {
-                    dst[j] += av * src[j];
-                }
+                axpy_row(&mut out[k * n..(k + 1) * n], av, src);
             }
         }
     }
@@ -548,10 +876,7 @@ impl BatchedSpmm for GemmKernel<'_> {
                 if av == 0.0 {
                     continue;
                 }
-                let src = &rhs[k * n..(k + 1) * n];
-                for j in 0..n {
-                    dst[j] += av * src[j];
-                }
+                axpy_row(dst, av, &rhs[k * n..(k + 1) * n]);
             }
         }
     }
@@ -562,6 +887,87 @@ impl BatchedSpmm for GemmKernel<'_> {
         // ascending-r order as the full spmm_sample_t, so row-splitting
         // the `X^T @ dU` reduction is bit-exact — and the block never
         // touches the other blocks' columns, so no scan is wasted.
+        let row1 = row0 + out.len() / n;
+        let base = b * self.rows * self.inner;
+        for k in row0..row1 {
+            let dst = &mut out[(k - row0) * n..(k - row0 + 1) * n];
+            for r in 0..self.rows {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                axpy_row(dst, av, &rhs[r * n..(r + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let base = b * self.rows * self.inner;
+        for r in 0..self.rows {
+            let dst = &mut out[r * n..(r + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let src = &rhs[k * n..(k + 1) * n];
+                for j in 0..n {
+                    dst[j] += av * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_t_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let base = b * self.rows * self.inner;
+        for r in 0..self.rows {
+            let src = &rhs[r * n..(r + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let dst = &mut out[k * n..(k + 1) * n];
+                for j in 0..n {
+                    dst[j] += av * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        let base = b * self.rows * self.inner;
+        for r in row0..row1 {
+            let dst = &mut out[(r - row0) * n..(r - row0 + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                let src = &rhs[k * n..(k + 1) * n];
+                for j in 0..n {
+                    dst[j] += av * src[j];
+                }
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
         let row1 = row0 + out.len() / n;
         let base = b * self.rows * self.inner;
         for k in row0..row1 {
@@ -697,6 +1103,11 @@ mod tests {
             let a = exec.spmm(&view, Rhs::PerSample(&dense), nb).unwrap();
             let b = exec.spmm(&contiguous, Rhs::PerSample(&dense), nb).unwrap();
             assert_eq!(a, b, "channel {ch}");
+            // The two views must also agree on the cached per-sample
+            // cost-model counts.
+            for bi in 0..3 {
+                assert_eq!(view.sample_nnz(bi), contiguous.sample_nnz(bi), "channel {ch}");
+            }
         }
     }
 
@@ -772,5 +1183,56 @@ mod tests {
         let a = exec.spmm(&k, Rhs::Shared(&w), nb).unwrap();
         let b = exec.spmm(&k, Rhs::PerSample(&tiled), nb).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn axpy_row_is_bit_identical_to_scalar_loop_at_every_width() {
+        // The vectorized primitive itself, across full blocks, tails,
+        // and sub-LANES widths.
+        let mut rng = Rng::new(0xA9);
+        for n in [0usize, 1, 3, LANES - 1, LANES, LANES + 1, 2 * LANES, 65] {
+            let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let init: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let val = rng.normal();
+            let mut vec_out = init.clone();
+            axpy_row(&mut vec_out, val, &src);
+            let mut ref_out = init;
+            for j in 0..n {
+                ref_out[j] += val * src[j];
+            }
+            assert_eq!(vec_out, ref_out, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cached_sample_nnz_matches_recomputed_scan() {
+        // O(1) cached counts on the packed formats must agree with a
+        // from-scratch scan of the padded value arrays — the cost-model
+        // contract the pool's planner relies on (DESIGN.md §10).
+        let mut rng = Rng::new(0xC0);
+        let dim = 24;
+        let mats = crate::sparse::random::random_mixed_batch(&mut rng, (4, dim), (1, 3), 9);
+        let cap = mats.iter().map(crate::sparse::Coo::nnz).max().unwrap();
+        let st = PaddedStBatch::pack(&mats, dim, cap).unwrap();
+        let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+        let stk = StKernel::new(&st);
+        let ellk = EllKernel::from_padded(&ell);
+        for b in 0..mats.len() {
+            let st_scan = st.vals[b * cap..(b + 1) * cap]
+                .iter()
+                .filter(|v| **v != 0.0)
+                .count();
+            assert_eq!(stk.sample_nnz(b), st_scan, "st sample {b}");
+            let per = ell.dim * ell.width;
+            let ell_scan = ell.vals[b * per..(b + 1) * per]
+                .iter()
+                .filter(|v| **v != 0.0)
+                .count();
+            assert_eq!(ellk.sample_nnz(b), ell_scan, "ell sample {b}");
+            // The raw-array view (no cache) must agree with the cached one.
+            let raw = EllKernel::new(&ell.cols, &ell.vals, ell.batch, ell.dim, ell.width);
+            assert_eq!(raw.sample_nnz(b), ellk.sample_nnz(b), "raw ell sample {b}");
+        }
+        assert_eq!(stk.real_nnz(), mats.iter().map(crate::sparse::Coo::nnz).sum());
     }
 }

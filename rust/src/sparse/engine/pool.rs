@@ -43,7 +43,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
-use super::{BatchedSpmm, Rhs};
+use super::{BatchedSpmm, KernelVariant, Rhs};
 
 /// How a dispatch is decomposed across the pool's workers.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -194,10 +194,10 @@ fn static_split(b: usize, out_rows: usize, workers: usize) -> Vec<Task> {
 /// Per-sample planner costs for a dispatch: nnz plus a row term (the
 /// padded-row scan every kernel pays) plus one. This is deliberately an
 /// approximation — ST/ELL padding slots and row-concentrated nnz are
-/// invisible to it — and stealing is what absorbs the error. For ST and
-/// ELL views `sample_nnz` is an O(nnz_cap) scan per sample; caching
-/// per-sample counts in the packed batches would amortize it across a
-/// dispatch sequence (ROADMAP follow-up).
+/// invisible to it — and stealing is what absorbs the error.
+/// `sample_nnz` is O(1) on every packed batch format (counts are cached
+/// at pack time, DESIGN.md §10), so this whole scan is O(batch) per
+/// dispatch.
 fn sample_costs(kernel: &dyn BatchedSpmm, out_rows: usize) -> Vec<u64> {
     (0..kernel.batch())
         .map(|b| kernel.sample_nnz(b) as u64 + out_rows as u64 + 1)
@@ -242,6 +242,9 @@ struct Job<'a> {
     out_rows: usize,
     per_out: usize,
     transpose: bool,
+    /// Which inner-loop implementation the tasks run (bit-identical
+    /// either way; DESIGN.md §10).
+    variant: KernelVariant,
     out: *mut f32,
     tasks: &'a [Task],
     segs: &'a [Segment],
@@ -285,6 +288,7 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
     workers: usize,
     policy: SchedPolicy,
+    variant: KernelVariant,
     /// Serializes dispatches: the pool runs one job at a time.
     dispatch_lock: Mutex<()>,
     dispatches: AtomicU64,
@@ -295,9 +299,22 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// A pool with `workers` total slots (clamped to at least 1) and
-    /// the given scheduling policy. Spawns `workers - 1` threads — the
-    /// last spawn this pool will ever perform.
+    /// the given scheduling policy, running the default vectorized
+    /// kernels. Spawns `workers - 1` threads — the last spawn this pool
+    /// will ever perform.
     pub fn new(workers: usize, policy: SchedPolicy) -> WorkerPool {
+        WorkerPool::with_variant(workers, policy, KernelVariant::default())
+    }
+
+    /// [`WorkerPool::new`] with an explicit kernel variant:
+    /// [`KernelVariant::Scalar`] pins the pre-vectorization inner loops
+    /// (the parity oracle and bench baseline, DESIGN.md §10). Both
+    /// variants produce bit-identical output.
+    pub fn with_variant(
+        workers: usize,
+        policy: SchedPolicy,
+        variant: KernelVariant,
+    ) -> WorkerPool {
         let workers = workers.max(1);
         let shared = Arc::new(Shared {
             slot: Mutex::new(Slot {
@@ -325,6 +342,7 @@ impl WorkerPool {
             handles,
             workers,
             policy,
+            variant,
             dispatch_lock: Mutex::new(()),
             dispatches: AtomicU64::new(0),
             static_dispatches: AtomicU64::new(0),
@@ -339,6 +357,10 @@ impl WorkerPool {
 
     pub fn policy(&self) -> SchedPolicy {
         self.policy
+    }
+
+    pub fn variant(&self) -> KernelVariant {
+        self.variant
     }
 
     /// Snapshot of the cumulative scheduling counters.
@@ -378,10 +400,20 @@ impl WorkerPool {
             self.tasks.fetch_add(1, Ordering::Relaxed);
             for s in 0..b {
                 let sample_out = &mut out[s * per_out..(s + 1) * per_out];
-                if transpose {
-                    kernel.spmm_sample_t(s, rhs.sample(s, inner, n), n, sample_out);
-                } else {
-                    kernel.spmm_sample(s, rhs.sample(s, inner, n), n, sample_out);
+                let rhs_s = rhs.sample(s, inner, n);
+                match (self.variant, transpose) {
+                    (KernelVariant::Vectorized, false) => {
+                        kernel.spmm_sample(s, rhs_s, n, sample_out)
+                    }
+                    (KernelVariant::Vectorized, true) => {
+                        kernel.spmm_sample_t(s, rhs_s, n, sample_out)
+                    }
+                    (KernelVariant::Scalar, false) => {
+                        kernel.spmm_sample_scalar(s, rhs_s, n, sample_out)
+                    }
+                    (KernelVariant::Scalar, true) => {
+                        kernel.spmm_sample_t_scalar(s, rhs_s, n, sample_out)
+                    }
                 }
             }
             return;
@@ -410,6 +442,7 @@ impl WorkerPool {
             out_rows,
             per_out,
             transpose,
+            variant: self.variant,
             out: out.as_mut_ptr(),
             tasks: &tasks,
             segs: &segs,
@@ -478,6 +511,7 @@ impl std::fmt::Debug for WorkerPool {
         f.debug_struct("WorkerPool")
             .field("workers", &self.workers)
             .field("policy", &self.policy)
+            .field("variant", &self.variant)
             .finish()
     }
 }
@@ -552,6 +586,7 @@ fn run_job(job: &Job, me: usize, shared: &Shared) {
 /// construction in [`plan_tasks`]) and each task is claimed exactly
 /// once, so no two threads ever touch the same element.
 fn exec_task(job: &Job, task: &Task) {
+    use KernelVariant::{Scalar, Vectorized};
     let n = job.n;
     let full = task.row0 == 0 && task.row1 as usize == job.out_rows;
     let row0 = task.row0 as usize;
@@ -561,11 +596,15 @@ fn exec_task(job: &Job, task: &Task) {
         let off = s * job.per_out + row0 * n;
         let out = unsafe { std::slice::from_raw_parts_mut(job.out.add(off), rows * n) };
         let rhs = job.rhs.sample(s, job.inner, n);
-        match (job.transpose, full) {
-            (false, true) => job.kernel.spmm_sample(s, rhs, n, out),
-            (false, false) => job.kernel.spmm_sample_rows(s, row0, rhs, n, out),
-            (true, true) => job.kernel.spmm_sample_t(s, rhs, n, out),
-            (true, false) => job.kernel.spmm_sample_t_rows(s, row0, rhs, n, out),
+        match (job.variant, job.transpose, full) {
+            (Vectorized, false, true) => job.kernel.spmm_sample(s, rhs, n, out),
+            (Vectorized, false, false) => job.kernel.spmm_sample_rows(s, row0, rhs, n, out),
+            (Vectorized, true, true) => job.kernel.spmm_sample_t(s, rhs, n, out),
+            (Vectorized, true, false) => job.kernel.spmm_sample_t_rows(s, row0, rhs, n, out),
+            (Scalar, false, true) => job.kernel.spmm_sample_scalar(s, rhs, n, out),
+            (Scalar, false, false) => job.kernel.spmm_sample_rows_scalar(s, row0, rhs, n, out),
+            (Scalar, true, true) => job.kernel.spmm_sample_t_scalar(s, rhs, n, out),
+            (Scalar, true, false) => job.kernel.spmm_sample_t_rows_scalar(s, row0, rhs, n, out),
         }
     }
 }
@@ -650,7 +689,13 @@ mod tests {
             let out_rows = rng.range(1, 40);
             let workers = rng.range(1, 12);
             let costs: Vec<u64> = (0..b)
-                .map(|_| if rng.bool(0.2) { rng.range(1, 5000) as u64 } else { rng.range(1, 20) as u64 })
+                .map(|_| {
+                    if rng.bool(0.2) {
+                        rng.range(1, 5000) as u64
+                    } else {
+                        rng.range(1, 20) as u64
+                    }
+                })
                 .collect();
             for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
                 let tasks = plan_tasks(&costs, out_rows, workers, policy);

@@ -16,7 +16,8 @@ use bspmm::sparse::batch::{
     densify_batch, random_dense_batch, PaddedCsrBatch, PaddedEllBatch, PaddedStBatch,
 };
 use bspmm::sparse::engine::{
-    BatchedSpmm, CsrKernel, EllKernel, Executor, GemmKernel, Rhs, SchedPolicy, StKernel,
+    BatchedSpmm, CsrKernel, EllKernel, Executor, GemmKernel, KernelVariant, LANES, Rhs,
+    SchedPolicy, StKernel,
 };
 use bspmm::sparse::ops;
 use bspmm::sparse::random::{random_batch, random_coo, random_mixed_batch, RandomSpec};
@@ -236,6 +237,144 @@ fn uniform_batches_stay_static_while_skewed_batches_steal() {
         "skewed dispatches never stole a task"
     );
     assert_eq!(after.spawned_threads, before.spawned_threads);
+}
+
+/// Scalar-serial is THE reference: every backend × variant × thread
+/// count × policy must reproduce it bit for bit, in both transpose
+/// forms. Skewed and batch-1 workloads push dispatches through the
+/// row-blocked kernel variants (`spmm_sample[_t]_rows`), so all four
+/// dispatch forms are covered (DESIGN.md §10).
+fn check_scalar_vs_vectorized(mats: &[Coo], dim: usize, nb: usize, dense: &[f32], what: &str) {
+    let cap = mats.iter().map(Coo::nnz).max().unwrap_or(1);
+    let st = PaddedStBatch::pack(mats, dim, cap).unwrap();
+    let csr = PaddedCsrBatch::pack(mats, dim, cap).unwrap();
+    let ell = PaddedEllBatch::pack_auto(mats, dim).unwrap();
+    let a_dense = densify_batch(mats, dim);
+    let stk = StKernel::new(&st);
+    let csrk = CsrKernel::new(&csr);
+    let ellk = EllKernel::from_padded(&ell);
+    let gemk = GemmKernel::new(&a_dense, mats.len(), dim, dim);
+    let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+    let oracle = Executor::with_variant(1, SchedPolicy::WorkStealing, KernelVariant::Scalar);
+    for kernel in kernels {
+        let fwd = oracle.spmm(kernel, Rhs::PerSample(dense), nb).unwrap();
+        let bwd = oracle.spmm_t(kernel, Rhs::PerSample(dense), nb).unwrap();
+        for variant in [KernelVariant::Scalar, KernelVariant::Vectorized] {
+            for threads in THREAD_COUNTS {
+                for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                    let exec = Executor::with_variant(threads, policy, variant);
+                    let pf = exec.spmm(kernel, Rhs::PerSample(dense), nb).unwrap();
+                    assert_eq!(
+                        pf,
+                        fwd,
+                        "{what}/{}/{variant:?}/t{threads}/{policy:?} fwd",
+                        kernel.name()
+                    );
+                    let pb = exec.spmm_t(kernel, Rhs::PerSample(dense), nb).unwrap();
+                    assert_eq!(
+                        pb,
+                        bwd,
+                        "{what}/{}/{variant:?}/t{threads}/{policy:?} bwd",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn vectorized_kernels_bit_identical_to_scalar_reference_everywhere() {
+    let mut rng = Rng::new(0xE8);
+    // Uniform, with a non-multiple-of-LANES feature width (tail 1).
+    let mats = random_batch(&mut rng, &RandomSpec::new(24, 3), 12);
+    let dense = random_dense_batch(&mut rng, 12, 24, LANES + 1);
+    check_scalar_vs_vectorized(&mats, 24, LANES + 1, &dense, "uniform");
+    // Skewed: the pool row-splits the giant sample, exercising the
+    // rows/t_rows forms of both variants under stealing.
+    let (mats, dim) = skewed_batch(&mut rng);
+    let dense = random_dense_batch(&mut rng, mats.len(), dim, 13);
+    check_scalar_vs_vectorized(&mats, dim, 13, &dense, "skewed");
+    // Batch-1 (the dW = X^T·dU shape): row fan-out across all workers.
+    let one = vec![random_coo(&mut rng, &RandomSpec::new(48, 4))];
+    let dense = random_dense_batch(&mut rng, 1, 48, 5);
+    check_scalar_vs_vectorized(&one, 48, 5, &dense, "batch1");
+}
+
+#[test]
+fn tail_widths_bit_identical_scalar_vs_vectorized_on_every_form() {
+    // The tox21/reaction100 feature widths are not multiples of LANES,
+    // so the scalar tail path is always live in training: audit it at
+    // n in {1, 7, 8, 9, 65} — sub-block, block-minus-one, exact block,
+    // block-plus-one, many-blocks-plus-one — for every backend and all
+    // four dispatch forms, directly at the kernel-method level.
+    let mut rng = Rng::new(0xE9);
+    let dim = 17;
+    let mats = random_mixed_batch(&mut rng, (3, dim), (1, 3), 5);
+    let cap = mats.iter().map(Coo::nnz).max().unwrap();
+    let st = PaddedStBatch::pack(&mats, dim, cap).unwrap();
+    let csr = PaddedCsrBatch::pack(&mats, dim, cap).unwrap();
+    let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+    let a_dense = densify_batch(&mats, dim);
+    let stk = StKernel::new(&st);
+    let csrk = CsrKernel::new(&csr);
+    let ellk = EllKernel::from_padded(&ell);
+    let gemk = GemmKernel::new(&a_dense, mats.len(), dim, dim);
+    let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+    assert_eq!(LANES, 8, "tail widths below assume LANES == 8");
+    for n in [1usize, 7, 8, 9, 65] {
+        let rhs: Vec<f32> = (0..dim * n).map(|_| rng.normal()).collect();
+        // Uneven row cuts, including 1-row blocks.
+        let cuts = [0usize, 1, 9, dim];
+        for kernel in kernels {
+            for b in 0..mats.len() {
+                for transpose in [false, true] {
+                    let mut vec_full = vec![0.5f32; dim * n];
+                    let mut sc_full = vec_full.clone();
+                    if transpose {
+                        kernel.spmm_sample_t(b, &rhs, n, &mut vec_full);
+                        kernel.spmm_sample_t_scalar(b, &rhs, n, &mut sc_full);
+                    } else {
+                        kernel.spmm_sample(b, &rhs, n, &mut vec_full);
+                        kernel.spmm_sample_scalar(b, &rhs, n, &mut sc_full);
+                    }
+                    assert_eq!(
+                        vec_full,
+                        sc_full,
+                        "{} n={n} sample {b} transpose={transpose} full",
+                        kernel.name()
+                    );
+                    let mut vec_blocked = vec![0.5f32; dim * n];
+                    let mut sc_blocked = vec_blocked.clone();
+                    for w in cuts.windows(2) {
+                        let (r0, r1) = (w[0], w[1]);
+                        let vb = &mut vec_blocked[r0 * n..r1 * n];
+                        let sb = &mut sc_blocked[r0 * n..r1 * n];
+                        if transpose {
+                            kernel.spmm_sample_t_rows(b, r0, &rhs, n, vb);
+                            kernel.spmm_sample_t_rows_scalar(b, r0, &rhs, n, sb);
+                        } else {
+                            kernel.spmm_sample_rows(b, r0, &rhs, n, vb);
+                            kernel.spmm_sample_rows_scalar(b, r0, &rhs, n, sb);
+                        }
+                    }
+                    assert_eq!(
+                        vec_blocked,
+                        sc_blocked,
+                        "{} n={n} sample {b} transpose={transpose} rows",
+                        kernel.name()
+                    );
+                    // And the blocked assembly must equal the full form.
+                    assert_eq!(
+                        vec_blocked,
+                        vec_full,
+                        "{} n={n} sample {b} transpose={transpose} assembly",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]
