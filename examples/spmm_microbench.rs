@@ -1,39 +1,45 @@
 //! SpMM micro-benchmark at a single user-chosen point, engine-first:
-//! the four batched-SpMM engine backends (ST / CSR / ELL / dense-GEMM)
-//! in four executor configurations — scalar serial baseline (the
+//! the batched-SpMM engine series (ST / CSR / ELL / dense-GEMM, plus
+//! the cost-model-selected `auto` backend, DESIGN.md §11) in four
+//! executor configurations — scalar serial baseline (the
 //! pre-vectorization inner loops, DESIGN.md §10), vectorized serial
 //! fallback, static-parallel (the legacy contiguous sample split) and
 //! the work-stealing worker pool (DESIGN.md §9) — plus a host-engine
 //! `train_step` line (full fwd + engine-dispatch backward + SGD,
-//! DESIGN.md §8) and, when the AOT artifacts exist, the five measured
-//! + simulated §V-A series. The per-backend summary lines report both
-//! the scalar → vectorized kernel speedup and the serial → parallel
-//! speedup on top of it.
+//! DESIGN.md §8), a cold-plan vs cached-plan train-step line (the
+//! plan/execute split, DESIGN.md §11) and, when the AOT artifacts
+//! exist, the five measured + simulated §V-A series. The per-backend
+//! summary lines report the scalar → vectorized kernel speedup, the
+//! serial → parallel speedup, the auto-vs-best-fixed-backend ratio and
+//! the plan-reuse speedup.
 //!
 //!     cargo run --release --example spmm_microbench -- --sweep fig8b --nb 64
 //!     cargo run --release --example spmm_microbench -- --threads 4
+//!     cargo run --release --example spmm_microbench -- --backend auto
+//!     cargo run --release --example spmm_microbench -- --plan both
 //!     cargo run --release --example spmm_microbench -- --json
 //!
 //! `--json` additionally runs the mixed-batch sweep (fig10, first n_B
 //! point — the load-imbalance case stealing exists for) and writes the
-//! whole scalar / serial / static / work-stealing comparison,
-//! train_step line included, to `BENCH_engine.json` at the repository
-//! root so the perf trajectory (vectorization win included) is
-//! machine-recorded across PRs.
+//! whole scalar / serial / static / work-stealing comparison — auto
+//! backend, train_step and cold-vs-cached plan_reuse lines included —
+//! to `BENCH_engine.json` at the repository root so the perf
+//! trajectory is machine-recorded across PRs.
 //!
-//! No artifacts are required for the engine or train_step series: sweep
-//! geometry falls back to the built-in copy of the aot.py table.
+//! No artifacts are required for the engine, train_step or plan series:
+//! sweep geometry falls back to the built-in copy of the aot.py table.
 
 use std::path::Path;
 
 use bspmm::bench::figures::{
-    engine_speedup_summary, run_engine_bench, run_train_step_bench, FigureRunner,
+    auto_choices, auto_vs_fixed_summary, engine_speedup_summary, run_engine_bench_backends,
+    run_plan_bench, run_train_step_bench, FigureRunner, ENGINE_SERIES,
 };
 use bspmm::bench::report::save_json_in;
 use bspmm::bench::BenchOpts;
 use bspmm::runtime::artifact::SweepSpec;
 use bspmm::runtime::Runtime;
-use bspmm::sparse::engine::Executor;
+use bspmm::sparse::engine::{Backend, Executor};
 use bspmm::util::cli::{parse_or_exit, Cli};
 use bspmm::util::json::{arr, num, obj, s};
 
@@ -42,6 +48,14 @@ fn main() -> anyhow::Result<()> {
         .opt("sweep", "fig8b", "sweep key: fig8a|fig8b|fig9a..fig9f|fig10")
         .opt("nb", "64", "dense input width n_B (must exist in the sweep)")
         .opt("threads", "0", "parallel executor threads (0 = one per core)")
+        .opt("backend", "all", "engine series: all|st|csr|ell|gemm|auto")
+        .opt(
+            "plan",
+            "cached",
+            "train-step plan regime: cached|cold|both. cached (default) skips the \
+             plan_reuse line unless --json; cold and both are synonyms that run the \
+             cold-vs-cached comparison (the speedup line needs both regimes)",
+        )
         .opt("train_model", "tox21", "model for the train_step line")
         .opt("train_batch", "50", "train_step minibatch size (0 = skip)")
         .flag(
@@ -71,13 +85,24 @@ fn main() -> anyhow::Result<()> {
     );
     sw.nbs = vec![nb];
 
-    // Engine backends: one dispatch per whole batch, scalar baseline vs
-    // vectorized serial vs static parallel vs work-stealing pool.
+    // Engine series: one dispatch per whole batch, scalar baseline vs
+    // vectorized serial vs static parallel vs work-stealing pool, for
+    // the requested backend list (auto = cost-model selection).
+    let backends: Vec<Backend> = match args.str("backend") {
+        "all" => ENGINE_SERIES.to_vec(),
+        one => vec![Backend::parse(one)?],
+    };
     let opts = BenchOpts::from_env();
     let threads = args.usize("threads");
-    let engine = run_engine_bench(&sw, threads, &opts)?;
+    let engine = run_engine_bench_backends(&sw, threads, &opts, &backends)?;
     println!("{}", engine.render());
     print!("{}", engine_speedup_summary(&engine));
+    if backends.contains(&Backend::Auto) {
+        print!("{}", auto_vs_fixed_summary(&engine));
+        for (nb, chosen) in auto_choices(&sw)? {
+            println!("  auto choice at n_B={nb}: {chosen}");
+        }
+    }
     println!();
     let mut figures = vec![engine];
 
@@ -90,23 +115,38 @@ fn main() -> anyhow::Result<()> {
             None => SweepSpec::builtin("fig10")?,
         };
         mixed.nbs.truncate(1);
-        let mixed_fig = run_engine_bench(&mixed, threads, &opts)?;
+        let mixed_fig = run_engine_bench_backends(&mixed, threads, &opts, &backends)?;
         println!("{}", mixed_fig.render());
         print!("{}", engine_speedup_summary(&mixed_fig));
+        if backends.contains(&Backend::Auto) {
+            print!("{}", auto_vs_fixed_summary(&mixed_fig));
+        }
         println!();
         figures.push(mixed_fig);
     }
 
     // Training-side counterpart: one host train_step (fwd + backward +
     // SGD, every matmul an engine dispatch) per iteration, serial vs
-    // one persistent pool.
+    // one persistent pool — plus the cold-vs-cached plan comparison
+    // when requested (the plan/execute split, DESIGN.md §11).
     let tb = args.usize("train_batch");
     let mut train = None;
+    let mut plan_bench = None;
     if tb > 0 {
         let t = run_train_step_bench(args.str("train_model"), tb, threads, &opts)?;
         print!("{}", t.render());
-        println!();
         train = Some(t);
+        let plan_mode = args.str("plan");
+        anyhow::ensure!(
+            matches!(plan_mode, "cached" | "cold" | "both"),
+            "--plan must be cached|cold|both, got '{plan_mode}'"
+        );
+        if plan_mode != "cached" || args.flag("json") {
+            let p = run_plan_bench(args.str("train_model"), tb, threads, &opts)?;
+            print!("{}", p.render());
+            plan_bench = Some(p);
+        }
+        println!();
     }
 
     if args.flag("json") {
@@ -123,6 +163,9 @@ fn main() -> anyhow::Result<()> {
         ];
         if let Some(t) = &train {
             fields.push(("train_step", t.to_json()));
+        }
+        if let Some(p) = &plan_bench {
+            fields.push(("plan_reuse", p.to_json()));
         }
         // CARGO_MANIFEST_DIR is rust/, so the repo root is its parent —
         // stable regardless of the invoking working directory.

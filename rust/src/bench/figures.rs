@@ -19,7 +19,9 @@ use crate::graph::dataset::{Dataset, DatasetKind};
 use crate::runtime::artifact::SweepSpec;
 use crate::runtime::Runtime;
 use crate::simulator::cost::CostModel;
-use crate::sparse::engine::{BatchedSpmm, Executor, KernelVariant, Rhs, SchedPolicy};
+use crate::sparse::engine::{
+    AutoThresholds, Backend, Executor, KernelBundle, KernelVariant, PlanStats, Rhs, SchedPolicy,
+};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::timer;
 
@@ -32,27 +34,62 @@ pub const APPROACHES: [&str; 5] = [
     "BatchedGEMM",
 ];
 
-/// Engine backend names, in `SpmmWorkload` accessor order.
-pub const ENGINE_BACKENDS: [&str; 4] = ["Engine-ST", "Engine-CSR", "Engine-ELL", "Engine-GEMM"];
+/// Engine series, legend order: the four fixed backends plus the
+/// cost-model-selected `Backend::Auto` line (DESIGN.md §11).
+pub const ENGINE_SERIES: [Backend; 5] = [
+    Backend::St,
+    Backend::Csr,
+    Backend::Ell,
+    Backend::Gemm,
+    Backend::Auto,
+];
 
-/// Benchmark the four engine backends at every sweep point in four
-/// executor configurations: scalar serial baseline (the
-/// pre-vectorization inner loops, DESIGN.md §10), vectorized serial
-/// fallback, `threads`-wide static split (the legacy contiguous sample
-/// partition), and `threads`-wide work-stealing pool (`threads = 0` =
-/// one per core; static and steal run the vectorized kernels). Series
-/// come in (scalar, serial, static, steal) quadruples per backend; no
-/// runtime or artifacts are needed. scalar → serial isolates the
-/// kernel-vectorization win, serial → static/steal the parallel win.
-/// On uniform sweeps static and steal should coincide (the planner
-/// keeps the static fast path); mixed sweeps (fig10) are where
+/// Legend name of one engine series.
+pub fn engine_legend(b: Backend) -> &'static str {
+    match b {
+        Backend::St => "Engine-ST",
+        Backend::Csr => "Engine-CSR",
+        Backend::Ell => "Engine-ELL",
+        Backend::Gemm => "Engine-GEMM",
+        Backend::Auto => "Engine-AUTO",
+    }
+}
+
+/// Benchmark the engine series ([`ENGINE_SERIES`]: four fixed backends
+/// plus `Backend::Auto`, which resolves per point via the cost model)
+/// at every sweep point in four executor configurations: scalar serial
+/// baseline (the pre-vectorization inner loops, DESIGN.md §10),
+/// vectorized serial fallback, `threads`-wide static split (the legacy
+/// contiguous sample partition), and `threads`-wide work-stealing pool
+/// (`threads = 0` = one per core; static and steal run the vectorized
+/// kernels). Series come in (scalar, serial, static, steal) quadruples
+/// per backend; no runtime or artifacts are needed. scalar → serial
+/// isolates the kernel-vectorization win, serial → static/steal the
+/// parallel win, and the AUTO group vs the fixed groups
+/// ([`auto_vs_fixed_summary`]) shows whether the auto thresholds are
+/// calibrated. On uniform sweeps static and steal should coincide (the
+/// planner keeps the static fast path); mixed sweeps (fig10) are where
 /// stealing pulls ahead.
 pub fn run_engine_bench(
     sw: &SweepSpec,
     threads: usize,
     opts: &BenchOpts,
 ) -> anyhow::Result<FigureResult> {
+    run_engine_bench_backends(sw, threads, opts, &ENGINE_SERIES)
+}
+
+/// [`run_engine_bench`] restricted to an explicit backend list
+/// (`Backend::Auto` resolves per sweep point against all four packings
+/// via the [`AutoThresholds`] cost model — env-calibratable, see
+/// DESIGN.md §11).
+pub fn run_engine_bench_backends(
+    sw: &SweepSpec,
+    threads: usize,
+    opts: &BenchOpts,
+    backends: &[Backend],
+) -> anyhow::Result<FigureResult> {
     let t = Executor::resolve_threads(threads);
+    let th = AutoThresholds::from_env();
     let scalar = Executor::with_variant(1, SchedPolicy::WorkStealing, KernelVariant::Scalar);
     let stat = Executor::with_policy(t, SchedPolicy::Static);
     let steal = Executor::new(t);
@@ -64,10 +101,10 @@ pub fn run_engine_bench(
     ];
     let execs = [scalar, Executor::serial(), stat, steal];
     let mut series: Vec<Series> = Vec::new();
-    for backend in ENGINE_BACKENDS {
+    for &backend in backends {
         for label in &labels {
             series.push(Series {
-                name: format!("{backend}({label})"),
+                name: format!("{}({label})", engine_legend(backend)),
                 values: Vec::new(),
             });
         }
@@ -78,8 +115,16 @@ pub fn run_engine_bench(
         let csrk = w.csr_kernel();
         let ellk = w.ell_kernel();
         let gemk = w.gemm_kernel();
-        let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
-        for (ki, kernel) in kernels.iter().enumerate() {
+        let bundle = KernelBundle {
+            st: Some(&stk),
+            csr: Some(&csrk),
+            ell: Some(&ellk),
+            gemm: Some(&gemk),
+            ell_width: Some(w.ell.width),
+        };
+        for (ki, &backend) in backends.iter().enumerate() {
+            let (_, kernel) = bundle.resolve(backend, &th)?;
+            let kernel = &kernel;
             for (ei, exec) in execs.iter().enumerate() {
                 let mut out = vec![0f32; kernel.batch() * kernel.out_rows() * nb];
                 // The zero-fill resets the += accumulation and must stay
@@ -163,6 +208,193 @@ pub fn engine_speedup_summary(f: &FigureResult) -> String {
         }
     }
     out
+}
+
+/// Auto-vs-best-fixed comparison for an engine figure that carries an
+/// `Engine-AUTO` series group: peak auto GFLOPS against the peak over
+/// every fixed-backend series. A ratio near (or above) 1.0 means the
+/// cost-model thresholds are well calibrated for this sweep; far below
+/// 1.0 means recalibrate (DESIGN.md §11).
+pub fn auto_vs_fixed_summary(f: &FigureResult) -> String {
+    let best = |s: &Series| {
+        s.values
+            .iter()
+            .cloned()
+            .filter(|v| v.is_finite())
+            .fold(f64::MIN, f64::max)
+    };
+    let (mut auto_best, mut fixed_best) = (f64::MIN, f64::MIN);
+    let mut fixed_name = "";
+    for s in &f.series {
+        let v = best(s);
+        if s.name.starts_with("Engine-AUTO") {
+            auto_best = auto_best.max(v);
+        } else if v > fixed_best {
+            fixed_best = v;
+            fixed_name = &s.name;
+        }
+    }
+    if auto_best <= 0.0 || fixed_best <= 0.0 {
+        return String::new();
+    }
+    format!(
+        "  auto-backend {auto_best:.3} GFLOPS vs best fixed {fixed_name} {fixed_best:.3} \
+         ({:.2}x of best fixed)\n",
+        auto_best / fixed_best
+    )
+}
+
+/// Which concrete backend `Backend::Auto` resolves to at each sweep
+/// point (pure cost-model resolution — no timing). Note it re-packs
+/// the workload per point to read its profile, so it is meant for the
+/// one-or-two-point microbench summaries, not for inner loops.
+pub fn auto_choices(sw: &SweepSpec) -> anyhow::Result<Vec<(usize, Backend)>> {
+    let th = AutoThresholds::from_env();
+    let mut out = Vec::new();
+    for &nb in &sw.nbs {
+        let w = SpmmWorkload::build(sw, nb)?;
+        let stk = w.st_kernel();
+        let csrk = w.csr_kernel();
+        let ellk = w.ell_kernel();
+        let gemk = w.gemm_kernel();
+        let bundle = KernelBundle {
+            st: Some(&stk),
+            csr: Some(&csrk),
+            ell: Some(&ellk),
+            gemm: Some(&gemk),
+            ell_width: Some(w.ell.width),
+        };
+        let (chosen, _) = bundle.resolve(Backend::Auto, &th)?;
+        out.push((nb, chosen));
+    }
+    Ok(out)
+}
+
+/// Cold-plan vs cached-plan host `train_step` comparison
+/// ([`run_plan_bench`]): what the plan/execute split saves per step.
+#[derive(Clone, Debug)]
+pub struct PlanBench {
+    pub model: String,
+    pub batch: usize,
+    /// Mean seconds per step with the plan cache cleared before every
+    /// step (compile + arena warm-up paid each time).
+    pub cold_secs: f64,
+    /// Mean seconds per step replaying the cached plan.
+    pub cached_secs: f64,
+    /// Plan/arena accounting of the cached phase alone (counter fields
+    /// are deltas over that phase — `plans_built` should be 0 and every
+    /// step a replay; `arena_bytes` is the absolute footprint).
+    pub stats: PlanStats,
+}
+
+impl PlanBench {
+    /// The printable summary line the microbench and CHANGES.md quote.
+    pub fn render(&self) -> String {
+        format!(
+            "plan_reuse[{}, B={}]: cold {:.2} ms/step -> cached {:.2} ms/step \
+             ({:.2}x plan-reuse speedup; arena {} KiB, {} zero-fills elided)\n",
+            self.model,
+            self.batch,
+            self.cold_secs * 1e3,
+            self.cached_secs * 1e3,
+            self.cold_secs / self.cached_secs,
+            self.stats.arena_bytes / 1024,
+            self.stats.zero_fills_elided,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("batch", num(self.batch as f64)),
+            (
+                "points",
+                arr(vec![
+                    obj(vec![
+                        ("label", s("cold-plan")),
+                        ("secs_per_step", num(self.cold_secs)),
+                    ]),
+                    obj(vec![
+                        ("label", s("cached-plan")),
+                        ("secs_per_step", num(self.cached_secs)),
+                    ]),
+                ]),
+            ),
+            ("plans_built", num(self.stats.plans_built as f64)),
+            ("replays", num(self.stats.replays as f64)),
+            ("arena_bytes", num(self.stats.arena_bytes as f64)),
+            (
+                "zero_fills_elided",
+                num(self.stats.zero_fills_elided as f64),
+            ),
+        ])
+    }
+}
+
+/// Host `train_step` under the two plan regimes (DESIGN.md §11): the
+/// *cold* configuration clears the trainer's plan cache before every
+/// step, so each step re-compiles its plan and re-allocates its arena;
+/// the *cached* configuration replays one compiled plan. Same trainer,
+/// same pool, same minibatch — the delta is exactly what plan/workspace
+/// caching saves.
+pub fn run_plan_bench(
+    model: &str,
+    batch: usize,
+    threads: usize,
+    opts: &BenchOpts,
+) -> anyhow::Result<PlanBench> {
+    anyhow::ensure!(batch >= 1, "plan bench needs batch >= 1");
+    let kind = match model {
+        "tox21" => DatasetKind::Tox21,
+        "reaction100" => DatasetKind::Reaction100,
+        other => anyhow::bail!("no dataset for model '{other}'"),
+    };
+    let data = Dataset::generate(kind, batch, 77);
+    let idx: Vec<usize> = (0..batch).collect();
+    let t = Executor::resolve_threads(threads);
+    let mut tr = Trainer::new_host(model, t)?;
+    let mb = data.pack_batch(&idx, tr.cfg.max_nodes, tr.cfg.ell_width)?;
+    let lr = 1e-3f32;
+    let mean = |samples: Vec<f64>| samples.iter().sum::<f64>() / samples.len() as f64;
+    let cold_samples = timer::bench_adaptive(
+        opts.warmup,
+        opts.min_iters,
+        opts.max_iters.max(1),
+        opts.min_time_s,
+        || {
+            tr.clear_plan_cache();
+            tr.step_batched(&mb, lr).expect("cold-plan train step");
+        },
+    );
+    // Snapshot here so the recorded counters cover the cached phase
+    // only — the cold loop above built one plan per iteration by
+    // design, which must not read as cache thrash in the record.
+    let s0 = tr.plan_stats();
+    // At least one warm-up step so the cached samples never include the
+    // one-time compile.
+    let cached_samples = timer::bench_adaptive(
+        opts.warmup.max(1),
+        opts.min_iters,
+        opts.max_iters.max(1),
+        opts.min_time_s,
+        || {
+            tr.step_batched(&mb, lr).expect("cached-plan train step");
+        },
+    );
+    let s1 = tr.plan_stats();
+    Ok(PlanBench {
+        model: model.to_string(),
+        batch,
+        cold_secs: mean(cold_samples),
+        cached_secs: mean(cached_samples),
+        stats: PlanStats {
+            plans_built: s1.plans_built - s0.plans_built,
+            replays: s1.replays - s0.replays,
+            arena_bytes: s1.arena_bytes,
+            arena_reuses: s1.arena_reuses - s0.arena_reuses,
+            zero_fills_elided: s1.zero_fills_elided - s0.zero_fills_elided,
+        },
+    })
 }
 
 /// One host `train_step` timing comparison ([`run_train_step_bench`]):
@@ -480,6 +712,7 @@ pub fn run_figure_bench(keys: &[&str], with_gemm: bool) -> anyhow::Result<()> {
         let path = engine.save()?;
         println!("  -> {}\n", path.display());
         print!("{}", engine_speedup_summary(&engine));
+        print!("{}", auto_vs_fixed_summary(&engine));
         println!();
 
         if let Some(rt) = &rt {
@@ -585,7 +818,7 @@ mod tests {
             min_time_s: 0.0,
         };
         let f = run_engine_bench(&sw, 2, &opts).unwrap();
-        assert_eq!(f.series.len(), ENGINE_BACKENDS.len() * 4);
+        assert_eq!(f.series.len(), ENGINE_SERIES.len() * 4);
         assert!(f
             .series
             .iter()
@@ -593,11 +826,50 @@ mod tests {
         // Every backend carries its scalar-baseline series.
         assert_eq!(
             f.series.iter().filter(|s| s.name.ends_with("(scalar)")).count(),
-            ENGINE_BACKENDS.len()
+            ENGINE_SERIES.len()
+        );
+        // The auto series resolved and ran.
+        assert_eq!(
+            f.series
+                .iter()
+                .filter(|s| s.name.starts_with("Engine-AUTO"))
+                .count(),
+            4
         );
         let summary = engine_speedup_summary(&f);
         assert!(!summary.is_empty());
         assert!(summary.contains("vector speedup"), "{summary}");
         assert!(summary.contains("static-2t") && summary.contains("steal-2t"));
+        let auto = auto_vs_fixed_summary(&f);
+        assert!(auto.contains("best fixed"), "{auto}");
+        // Auto resolves to a concrete backend at every point.
+        let choices = auto_choices(&sw).unwrap();
+        assert_eq!(choices.len(), 1);
+        assert_ne!(choices[0].1, Backend::Auto);
+        // A restricted backend list restricts the series.
+        let only = run_engine_bench_backends(&sw, 1, &opts, &[Backend::Ell]).unwrap();
+        assert_eq!(only.series.len(), 4);
+        assert!(only.series.iter().all(|s| s.name.starts_with("Engine-ELL")));
+    }
+
+    #[test]
+    fn plan_bench_runs_without_artifacts() {
+        let opts = BenchOpts {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time_s: 0.0,
+        };
+        let bench = run_plan_bench("tox21", 4, 1, &opts).unwrap();
+        let line = bench.render();
+        assert!(line.contains("plan_reuse[tox21, B=4]"), "{line}");
+        assert!(line.contains("plan-reuse speedup"), "{line}");
+        assert!(bench.cold_secs > 0.0 && bench.cached_secs > 0.0);
+        // The cached phase really replayed a cached plan — and built
+        // nothing (its counters are deltas over that phase alone).
+        assert!(bench.stats.replays > 0, "{:?}", bench.stats);
+        assert_eq!(bench.stats.plans_built, 0, "{:?}", bench.stats);
+        assert!(bench.to_json().to_string().contains("cached-plan"));
+        assert!(run_plan_bench("nope", 4, 1, &opts).is_err());
     }
 }

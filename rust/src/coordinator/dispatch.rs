@@ -19,6 +19,16 @@
 //! [`HostDispatcher::invalidate_cache`] after mutating
 //! [`HostDispatcher::params`] directly) so the cache never goes stale.
 //!
+//! Forwards run plan/execute split (DESIGN.md §11): the dispatcher
+//! keeps one compiled [`StepPlan`](crate::sparse::engine::StepPlan) +
+//! [`Workspace`](crate::sparse::engine::Workspace) per batch geometry
+//! in a [`PlanCache`] — built on the first batch of that shape,
+//! replayed for every batch after it with zero intermediate
+//! allocations. Geometry changes (batch size, node bucket) compile a
+//! new entry; parameter updates keep every plan (only `w_rep` is
+//! parameter-derived). [`HostDispatcher::plan_stats`] exposes the
+//! accounting.
+//!
 //! [`BatchedSpmm`]: crate::sparse::engine::BatchedSpmm
 
 use crate::coordinator::server::DispatchMode;
@@ -26,7 +36,7 @@ use crate::gcn::config::ModelConfig;
 use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
 use crate::graph::dataset::ModelBatch;
-use crate::sparse::engine::Executor;
+use crate::sparse::engine::{AutoThresholds, Executor, PlanCache, PlanStats};
 
 /// In-process model execution over the batched-SpMM engine.
 pub struct HostDispatcher {
@@ -42,6 +52,11 @@ pub struct HostDispatcher {
     exec: Executor,
     /// Cached tiled readout weight; lazily rebuilt after invalidation.
     w_rep: Option<Vec<f32>>,
+    /// One compiled (plan, workspace) per batch geometry (DESIGN.md
+    /// §11). Never invalidated by parameter updates.
+    plans: PlanCache,
+    /// Auto-backend decision thresholds baked into new plans.
+    thresholds: AutoThresholds,
     /// Forward dispatches issued (1 per batch in Batched mode, 1 per
     /// sample in PerSample mode) — the same signal the PJRT paths count.
     pub dispatches: u64,
@@ -55,6 +70,8 @@ impl HostDispatcher {
             params,
             exec: Executor::auto(threads),
             w_rep: None,
+            plans: PlanCache::new(),
+            thresholds: AutoThresholds::from_env(),
             dispatches: 0,
         }
     }
@@ -80,35 +97,56 @@ impl HostDispatcher {
     }
 
     /// Drop parameter-derived caches after a direct `params` mutation.
+    /// Plans are geometry-derived and survive.
     pub fn invalidate_cache(&mut self) {
         self.w_rep = None;
     }
 
+    /// Plan/arena accounting across every geometry this dispatcher has
+    /// served (DESIGN.md §11).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plans.stats()
+    }
+
     /// Forward a packed batch: one engine-batched dispatch, or one
     /// batch-1 dispatch per sample (the non-batched baseline). Both
-    /// reuse the cached readout tiling.
+    /// reuse the cached readout tiling, and both replay a cached step
+    /// plan — the per-sample mode shares one batch-1 plan + workspace
+    /// across all its samples.
     pub fn forward(&mut self, mode: DispatchMode, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
         if self.w_rep.is_none() {
             self.w_rep = Some(reference::build_w_rep(&self.cfg, &self.params)?);
         }
         let w_rep = self.w_rep.as_deref().unwrap();
+        let cfg = &self.cfg;
+        let th = self.thresholds;
         match mode {
             DispatchMode::Batched => {
                 self.dispatches += 1;
-                reference::forward_with_readout(&self.cfg, &self.params, mb, &self.exec, w_rep)
+                let key = reference::forward_plan_key(cfg, mb);
+                let (plan, ws) = self
+                    .plans
+                    .entry_with(key, || reference::plan_forward(cfg, mb, &th))?;
+                reference::forward_planned(cfg, &self.params, mb, &self.exec, w_rep, plan, ws)
             }
             DispatchMode::PerSample => {
-                let n = self.cfg.n_out;
+                let n = cfg.n_out;
                 let mut logits = vec![0f32; mb.batch * n];
                 let mut dispatched = 0u64;
                 for bi in 0..mb.batch {
                     let one = mb.single(bi);
-                    let l = reference::forward_with_readout(
-                        &self.cfg,
+                    let key = reference::forward_plan_key(cfg, &one);
+                    let (plan, ws) = self
+                        .plans
+                        .entry_with(key, || reference::plan_forward(cfg, &one, &th))?;
+                    let l = reference::forward_planned(
+                        cfg,
                         &self.params,
                         &one,
                         &self.exec,
                         w_rep,
+                        plan,
+                        ws,
                     )?;
                     dispatched += 1;
                     logits[bi * n..(bi + 1) * n].copy_from_slice(&l);
@@ -158,6 +196,33 @@ mod tests {
         let a = serial.forward(DispatchMode::Batched, &mb).unwrap();
         let b = parallel.forward(DispatchMode::Batched, &mb).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn per_sample_mode_shares_one_batch1_plan() {
+        let mut hd = HostDispatcher::synthetic("tox21", 1, 3).unwrap();
+        let d = Dataset::generate(DatasetKind::Tox21, 6, 8);
+        let idx: Vec<usize> = (0..6).collect();
+        let mb = d
+            .pack_batch(&idx, hd.cfg.max_nodes, hd.cfg.ell_width)
+            .unwrap();
+        hd.forward(DispatchMode::PerSample, &mb).unwrap();
+        let s = hd.plan_stats();
+        // 6 samples, one compiled batch-1 plan, 5 replays.
+        assert_eq!(s.plans_built, 1);
+        assert_eq!(s.replays, 5);
+        assert!(s.zero_fills_elided > 0);
+        // The batched geometry is a second plan; repeating it replays.
+        hd.forward(DispatchMode::Batched, &mb).unwrap();
+        hd.forward(DispatchMode::Batched, &mb).unwrap();
+        let s = hd.plan_stats();
+        assert_eq!(s.plans_built, 2);
+        assert_eq!(s.replays, 6);
+        // Parameter updates keep every plan.
+        let fresh = ParamSet::random_init(&hd.cfg, 5);
+        hd.set_params(fresh);
+        hd.forward(DispatchMode::Batched, &mb).unwrap();
+        assert_eq!(hd.plan_stats().plans_built, 2);
     }
 
     #[test]

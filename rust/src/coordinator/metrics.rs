@@ -16,6 +16,11 @@ struct Inner {
     batch_slots: u64,
     batch_capacity: u64,
     device_busy_us: u64,
+    /// Latest plan-cache accounting from the host-engine backend
+    /// (DESIGN.md §11): compiled step plans and cached replays. Zero on
+    /// the PJRT backend.
+    plans_built: u64,
+    plan_replays: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
 }
@@ -38,6 +43,10 @@ pub struct MetricsSnapshot {
     pub mean_batch_size: f64,
     pub mean_occupancy: f64,
     pub device_busy_us: u64,
+    /// Step plans compiled by the host-engine backend (0 on PJRT).
+    pub plans_built: u64,
+    /// Forwards served by replaying a cached plan (0 on PJRT).
+    pub plan_replays: u64,
     pub wall_secs: f64,
     pub throughput_rps: f64,
 }
@@ -73,6 +82,14 @@ impl Metrics {
         g.device_busy_us += device_us;
     }
 
+    /// Store the latest plan-cache counters (cumulative on the source
+    /// side, so the newest snapshot wins).
+    pub fn record_plans(&self, plans_built: u64, plan_replays: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.plans_built = plans_built;
+        g.plan_replays = plan_replays;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let wall = match (g.started, g.finished) {
@@ -98,6 +115,8 @@ impl Metrics {
                 g.batch_slots as f64 / g.batch_capacity as f64
             },
             device_busy_us: g.device_busy_us,
+            plans_built: g.plans_built,
+            plan_replays: g.plan_replays,
             wall_secs: wall,
             throughput_rps: if wall > 0.0 {
                 g.requests as f64 / wall
@@ -119,10 +138,12 @@ mod tests {
         m.record_request(1000, 200);
         m.record_request(3000, 600);
         m.record_batch(2, 4, 1500);
+        m.record_plans(1, 7);
         m.mark_finish();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
+        assert_eq!((s.plans_built, s.plan_replays), (1, 7));
         assert!((s.mean_latency_us - 2000.0).abs() < 1.0);
         assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
         assert!((s.mean_occupancy - 0.5).abs() < 1e-12);

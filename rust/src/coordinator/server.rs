@@ -13,7 +13,10 @@
 //!   (requires `make artifacts`);
 //! * [`ServeBackend::HostEngine`] — the in-process batched-SpMM engine
 //!   (`sparse::engine`), needing no artifacts; its executor thread
-//!   count is the CPU speedup knob.
+//!   count is the CPU speedup knob. Forwards replay compiled step
+//!   plans from the dispatcher's per-geometry cache (DESIGN.md §11);
+//!   the cache's accounting is surfaced in
+//!   [`MetricsSnapshot::plans_built`] / `plan_replays`.
 //!
 //! The device thread structure (everything backend-facing on one
 //! thread, clients talking over channels) is forced by the `xla`
@@ -302,6 +305,11 @@ fn serve_chunk(
             let t0 = Instant::now();
             let logits = hd.forward(mode, &mb)?;
             let device_us = t0.elapsed().as_micros() as u64;
+            // Surface the dispatcher's plan-cache accounting: a steady
+            // stream of same-capacity batches shows plans_built frozen
+            // and plan_replays tracking the batch count (DESIGN.md §11).
+            let ps = hd.plan_stats();
+            metrics.record_plans(ps.plans_built, ps.replays);
             (hd.cfg.n_out, logits, device_us)
         }
     };

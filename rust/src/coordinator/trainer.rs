@@ -22,6 +22,16 @@
 //! `tests/host_serving.rs`). The host paths cache the tiled readout
 //! weight `w_rep` (a pure function of `readout.w`, ~10 MB rebuilt per
 //! forward otherwise) and invalidate it on every parameter update.
+//!
+//! The host paths also run the plan/execute split (DESIGN.md §11): one
+//! compiled [`StepPlan`](crate::sparse::engine::StepPlan) +
+//! [`Workspace`](crate::sparse::engine::Workspace) per (geometry,
+//! mode), built on the first step of that shape and replayed after —
+//! steady-state train steps rebuild no plan and allocate no
+//! intermediate (pinned by `tests/host_serving.rs` via
+//! [`Trainer::plan_stats`]). Geometry changes compile a new entry;
+//! parameter updates keep every plan (only `w_rep` is
+//! parameter-derived).
 
 use std::path::Path;
 
@@ -31,7 +41,7 @@ use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
 use crate::graph::dataset::{Dataset, ModelBatch};
 use crate::runtime::{Runtime, Tensor};
-use crate::sparse::engine::Executor;
+use crate::sparse::engine::{AutoThresholds, Executor, PlanCache, PlanStats};
 use crate::sparse::ops::axpy;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,6 +107,17 @@ pub struct Trainer {
     /// host-engine paths; rebuilt lazily, dropped on every parameter
     /// update.
     w_rep: Option<Vec<f32>>,
+    /// One compiled (plan, workspace) per (geometry, mode) for the
+    /// host-engine paths (DESIGN.md §11): a fixed-geometry training
+    /// loop compiles its train plan on step 1 and replays it — with
+    /// zero intermediate allocations — from step 2 on. Geometry
+    /// changes compile a new entry; parameter updates keep every plan.
+    plans: PlanCache,
+    /// Auto-backend decision thresholds baked into new plans.
+    thresholds: AutoThresholds,
+    /// Persistent gradient accumulator for the planned host backward
+    /// (sized lazily on the first host step, reused forever after).
+    grad_buf: Vec<f32>,
 }
 
 impl Trainer {
@@ -111,6 +132,9 @@ impl Trainer {
             params,
             dispatches: 0,
             w_rep: None,
+            plans: PlanCache::new(),
+            thresholds: AutoThresholds::from_env(),
+            grad_buf: Vec::new(),
         })
     }
 
@@ -129,6 +153,9 @@ impl Trainer {
             params,
             dispatches: 0,
             w_rep: None,
+            plans: PlanCache::new(),
+            thresholds: AutoThresholds::from_env(),
+            grad_buf: Vec::new(),
         })
     }
 
@@ -146,7 +173,8 @@ impl Trainer {
     }
 
     /// Replace the parameter set (e.g. with an externally trained
-    /// blob) and drop parameter-derived caches.
+    /// blob) and drop parameter-derived caches. Step plans are
+    /// geometry-derived and survive parameter updates.
     pub fn set_params(&mut self, params: ParamSet) {
         self.params = params;
         self.w_rep = None;
@@ -155,6 +183,20 @@ impl Trainer {
     /// Drop parameter-derived caches after a direct `params` mutation.
     pub fn invalidate_cache(&mut self) {
         self.w_rep = None;
+    }
+
+    /// Plan/arena accounting across every (geometry, mode) this trainer
+    /// has run (DESIGN.md §11): steady-state fixed-geometry training
+    /// shows `plans_built` frozen at 1 and `arena_bytes` constant.
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plans.stats()
+    }
+
+    /// Drop every compiled plan + workspace. The microbench's cold-plan
+    /// configuration calls this between steps to measure what plan
+    /// caching saves; normal training never needs it.
+    pub fn clear_plan_cache(&mut self) {
+        self.plans.clear();
     }
 
     /// Lazily (re)build the cached tiled readout weight.
@@ -167,23 +209,38 @@ impl Trainer {
 
     /// One batched train step; returns the minibatch loss. On the host
     /// backend this is one engine-executed fwd+bwd+SGD (any batch size
-    /// — the engine is not shape-locked the way the AOT artifacts are).
+    /// — the engine is not shape-locked the way the AOT artifacts are),
+    /// replayed from the cached train plan of this geometry: from step
+    /// 2 on, no plan is rebuilt and no intermediate is allocated
+    /// (DESIGN.md §11).
     pub fn step_batched(&mut self, mb: &ModelBatch, lr: f32) -> anyhow::Result<f32> {
         anyhow::ensure!(mb.batch > 0, "train step on an empty batch");
         if let Some(exec) = self.host_exec.clone() {
             self.ensure_w_rep()?;
-            let res = backward::grad_with(
-                &self.cfg,
+            if self.grad_buf.len() != self.cfg.n_params {
+                self.grad_buf.resize(self.cfg.n_params, 0.0);
+            }
+            let cfg = &self.cfg;
+            let th = self.thresholds;
+            let key = backward::train_plan_key(cfg, mb);
+            let (plan, ws) = self
+                .plans
+                .entry_with(key, || backward::plan_train(cfg, mb, &th))?;
+            let loss = backward::grad_planned(
+                cfg,
                 &self.params,
                 mb,
                 &exec,
-                self.w_rep.as_deref(),
+                self.w_rep.as_deref().unwrap(),
+                plan,
+                ws,
+                &mut self.grad_buf,
             )?;
             // params <- params - lr * grad, then drop derived caches.
-            axpy(-lr, &res.grads.data, &mut self.params.data);
+            axpy(-lr, &self.grad_buf, &mut self.params.data);
             self.w_rep = None;
             self.dispatches += 1;
-            return Ok(res.loss);
+            return Ok(loss);
         }
         anyhow::ensure!(mb.batch == self.cfg.train_batch, "batch size mismatch");
         let mut inputs = param_tensors(&self.cfg, &self.params);
@@ -212,20 +269,34 @@ impl Trainer {
         let b = mb.batch;
         if let Some(exec) = self.host_exec.clone() {
             self.ensure_w_rep()?;
+            if self.grad_buf.len() != self.cfg.n_params {
+                self.grad_buf.resize(self.cfg.n_params, 0.0);
+            }
             let mut grad_sum = vec![0f32; self.cfg.n_params];
             let mut loss_sum = 0f64;
+            // Every per-sample gradient replays one shared batch-1
+            // train plan — B replays per step, one compile ever.
             for bi in 0..b {
                 let one = mb.single(bi);
-                let res = backward::grad_with(
-                    &self.cfg,
+                let cfg = &self.cfg;
+                let th = self.thresholds;
+                let key = backward::train_plan_key(cfg, &one);
+                let (plan, ws) = self
+                    .plans
+                    .entry_with(key, || backward::plan_train(cfg, &one, &th))?;
+                let loss = backward::grad_planned(
+                    cfg,
                     &self.params,
                     &one,
                     &exec,
-                    self.w_rep.as_deref(),
+                    self.w_rep.as_deref().unwrap(),
+                    plan,
+                    ws,
+                    &mut self.grad_buf,
                 )?;
                 self.dispatches += 1;
-                axpy(1.0, &res.grads.data, &mut grad_sum);
-                loss_sum += res.loss as f64;
+                axpy(1.0, &self.grad_buf, &mut grad_sum);
+                loss_sum += loss as f64;
             }
             // params <- params - (lr / B) * grad_sum (the apply step).
             axpy(-(lr / b as f32), &grad_sum, &mut self.params.data);
@@ -298,14 +369,27 @@ impl Trainer {
     }
 
     /// Forward a packed batch: one engine dispatch on the host backend
-    /// (against the cached readout tiling), or the matching fwd
-    /// artifact on PJRT.
+    /// (against the cached readout tiling, replaying the cached forward
+    /// plan of this geometry), or the matching fwd artifact on PJRT.
     pub fn forward(&mut self, mb: &ModelBatch) -> anyhow::Result<Vec<f32>> {
         if let Some(exec) = self.host_exec.clone() {
             self.ensure_w_rep()?;
             self.dispatches += 1;
-            let w_rep = self.w_rep.as_deref().unwrap();
-            return reference::forward_with_readout(&self.cfg, &self.params, mb, &exec, w_rep);
+            let cfg = &self.cfg;
+            let th = self.thresholds;
+            let key = reference::forward_plan_key(cfg, mb);
+            let (plan, ws) = self
+                .plans
+                .entry_with(key, || reference::plan_forward(cfg, mb, &th))?;
+            return reference::forward_planned(
+                cfg,
+                &self.params,
+                mb,
+                &exec,
+                self.w_rep.as_deref().unwrap(),
+                plan,
+                ws,
+            );
         }
         let name = if mb.batch == self.cfg.infer_batch {
             &self.cfg.artifact_fwd_infer

@@ -26,12 +26,27 @@
 //! against central finite differences in `tests/grad_check.rs`, and
 //! batched gradients are pinned to the mean of per-sample gradients
 //! (the decomposability contract behind the paper's Table II).
+//!
+//! **Plan/execute split (DESIGN.md §11).** [`grad_with`] is the direct
+//! path: fresh intermediates, name-resolved parameters, and the
+//! executor's per-dispatch `SharedTransposed` materialization. The
+//! trainer instead compiles a [`StepPlan`] once per geometry
+//! ([`plan_train`]) and replays it ([`grad_planned`]): every
+//! intermediate (`du`, `dx`, `dypre`, the pooled/readout buffers, the
+//! GraphNorm scratch, the pre-transposed weights) comes from a
+//! caller-held [`Workspace`] arena and the gradient accumulates
+//! straight into a caller-held flat buffer, so steady-state train
+//! steps allocate nothing. Same helpers, same dispatch sequence, same
+//! accumulation order — bit-identical gradients.
 
 use super::config::{LossKind, ModelConfig};
 use super::params::ParamSet;
 use super::reference::{self, EPS};
 use crate::graph::dataset::ModelBatch;
-use crate::sparse::engine::{EllKernel, Executor, GemmKernel, Rhs};
+use crate::sparse::engine::{
+    plan::transpose_into, AutoThresholds, Backend, DispatchDesc, EllKernel, Executor, GemmKernel,
+    GeometryKey, ParamRef, PlanCursor, Rhs, RhsKind, SlotId, SlotInit, StepPlan, Workspace,
+};
 use crate::sparse::ops::axpy;
 
 /// Activations the backward pass replays, captured during one forward.
@@ -195,8 +210,14 @@ pub fn grad_with(
 
         // GraphNorm + ReLU backward: dL/dH -> dL/dYpre (host-side).
         let mut dypre = vec![0f32; b * m * fout];
-        let (dgamma, dbeta) =
-            graph_norm_relu_backward(ypre, &mb.mask, gamma, beta, &dh, &mut dypre, b, m, fout);
+        let mut dgamma = vec![0f32; fout];
+        let mut dbeta = vec![0f32; fout];
+        let mut hn = vec![0f32; m];
+        let mut dhat = vec![0f32; m];
+        graph_norm_relu_backward(
+            ypre, &mb.mask, gamma, beta, &dh, &mut dypre, b, m, fout, &mut dgamma, &mut dbeta,
+            &mut hn, &mut dhat,
+        );
         axpy(1.0, &dgamma, g.slice_mut(cfg, &format!("conv{li}.gamma"))?);
         axpy(1.0, &dbeta, g.slice_mut(cfg, &format!("conv{li}.beta"))?);
 
@@ -255,11 +276,25 @@ pub fn grad_with(
 
 /// d(mean loss)/d(logits), matching `reference::loss` exactly.
 pub fn loss_grad(cfg: &ModelConfig, logits: &[f32], labels: &[f32], batch: usize) -> Vec<f32> {
+    let mut d = vec![0f32; batch * cfg.n_out];
+    loss_grad_into(cfg, logits, labels, batch, &mut d);
+    d
+}
+
+/// [`loss_grad`] into a caller-held buffer (every element is
+/// overwritten, so arena callers need no zero-fill).
+pub fn loss_grad_into(
+    cfg: &ModelConfig,
+    logits: &[f32],
+    labels: &[f32],
+    batch: usize,
+    d: &mut [f32],
+) {
     let n = cfg.n_out;
     assert_eq!(logits.len(), batch * n);
     assert_eq!(labels.len(), batch * n);
+    assert_eq!(d.len(), batch * n);
     let inv_b = 1.0 / batch as f32;
-    let mut d = vec![0f32; batch * n];
     match cfg.loss {
         LossKind::Bce => {
             for i in 0..batch * n {
@@ -281,7 +316,6 @@ pub fn loss_grad(cfg: &ModelConfig, logits: &[f32], labels: &[f32], batch: usize
             }
         }
     }
-    d
 }
 
 fn sigmoid(x: f32) -> f32 {
@@ -294,7 +328,13 @@ fn sigmoid(x: f32) -> f32 {
 }
 
 /// Backward of `reference::graph_norm_relu` for one layer: given dL/dH
-/// at the layer output, writes dL/dYpre and returns `(dgamma, dbeta)`.
+/// at the layer output, writes dL/dYpre and *accumulates* into the
+/// caller's `dgamma`/`dbeta` (zero-initialized by the direct path;
+/// pointed straight at the zeroed gradient accumulator by the planned
+/// path — same accumulation order either way, hence identical bits).
+/// `hn`/`dhat` are caller-held `[max_nodes]` scratch, fully overwritten
+/// per (graph, feature) group before any read — the planned path serves
+/// them from the workspace arena instead of allocating per layer.
 /// Statistics (masked mean/var, normalized values) are recomputed from
 /// the cached pre-norm activations in the same operation order as the
 /// forward.
@@ -317,11 +357,13 @@ fn graph_norm_relu_backward(
     b: usize,
     m: usize,
     f: usize,
-) -> (Vec<f32>, Vec<f32>) {
-    let mut dgamma = vec![0f32; f];
-    let mut dbeta = vec![0f32; f];
-    let mut hn = vec![0f32; m];
-    let mut dhat = vec![0f32; m];
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+    hn: &mut [f32],
+    dhat: &mut [f32],
+) {
+    debug_assert!(dgamma.len() == f && dbeta.len() == f);
+    debug_assert!(hn.len() >= m && dhat.len() >= m);
     for bi in 0..b {
         let msk = &mask[bi * m..(bi + 1) * m];
         let cnt = msk.iter().sum::<f32>().max(1.0);
@@ -360,7 +402,380 @@ fn graph_norm_relu_backward(
             }
         }
     }
-    (dgamma, dbeta)
+}
+
+// ---------------------------------------------------------------------
+// Plan/execute split (DESIGN.md §11)
+// ---------------------------------------------------------------------
+
+/// Cache key for a train plan of this batch shape.
+pub fn train_plan_key(cfg: &ModelConfig, mb: &ModelBatch) -> GeometryKey {
+    reference::geometry_key(cfg, mb, reference::MODE_TRAIN)
+}
+
+/// Workspace slot ids of a train plan: the forward slots
+/// ([`reference::fwd_slot_ids`]) followed by the backward
+/// intermediates, fixed by construction order so builders and
+/// replayers derive identical ids from the config alone.
+struct TrainSlots {
+    ypre: Vec<SlotId>,
+    dlogits: SlotId,
+    pooled: SlotId,
+    drow: SlotId,
+    dh: SlotId,
+    dx: SlotId,
+    du: SlotId,
+    dypre: SlotId,
+    /// Pre-transposed weight scratch — replaces the executor's
+    /// per-dispatch `SharedTransposed` materialization allocation.
+    wt: SlotId,
+    hn: SlotId,
+    dhat: SlotId,
+}
+
+fn train_slot_ids(cfg: &ModelConfig) -> TrainSlots {
+    let l = cfg.hidden.len() as u32;
+    // Forward slots occupy 0..=l+1 (u, act[0..l], logits).
+    let base = l + 2;
+    TrainSlots {
+        ypre: (0..l).map(|i| SlotId(base + i)).collect(),
+        dlogits: SlotId(base + l),
+        pooled: SlotId(base + l + 1),
+        drow: SlotId(base + l + 2),
+        dh: SlotId(base + l + 3),
+        dx: SlotId(base + l + 4),
+        du: SlotId(base + l + 5),
+        dypre: SlotId(base + l + 6),
+        wt: SlotId(base + l + 7),
+        hn: SlotId(base + l + 8),
+        dhat: SlotId(base + l + 9),
+    }
+}
+
+/// Compile a full train step (forward replay + backward walk) for this
+/// geometry: the forward plan extended with the backward slots,
+/// the `readout.w` parameter ref, and the 22 backward dispatch
+/// descriptors in issue order. Replay via [`grad_planned`].
+pub fn plan_train(
+    cfg: &ModelConfig,
+    mb: &ModelBatch,
+    th: &AutoThresholds,
+) -> anyhow::Result<StepPlan> {
+    let mut plan = StepPlan::new(train_plan_key(cfg, mb));
+    reference::plan_forward_into(cfg, mb, th, &mut plan)?;
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let n_out = cfg.n_out;
+    let fin_last = *cfg.hidden.last().unwrap_or(&cfg.feat_dim);
+    let max_f = reference::max_feat(cfg);
+    let sl = train_slot_ids(cfg);
+
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        let id = plan.add_slot(b * m * fout);
+        debug_assert_eq!(id, sl.ypre[li]);
+    }
+    debug_assert_eq!(plan.add_slot(b * n_out), sl.dlogits);
+    debug_assert_eq!(plan.add_slot(b * fin_last), sl.pooled);
+    debug_assert_eq!(plan.add_slot(b * fin_last), sl.drow);
+    // dh and dx swap buffers every layer, so both declare the widest
+    // feature dimension either ever carries.
+    debug_assert_eq!(plan.add_slot(b * m * max_f), sl.dh);
+    debug_assert_eq!(plan.add_slot(b * m * max_f), sl.dx);
+    debug_assert_eq!(plan.add_slot(b * m * max_f), sl.du);
+    debug_assert_eq!(plan.add_slot(b * m * max_f), sl.dypre);
+    let mut wt_len = n_out * fin_last;
+    let mut fin = cfg.feat_dim;
+    for &fout in &cfg.hidden {
+        wt_len = wt_len.max(fin * fout);
+        fin = fout;
+    }
+    debug_assert_eq!(plan.add_slot(wt_len), sl.wt);
+    debug_assert_eq!(plan.add_slot(m), sl.hn);
+    debug_assert_eq!(plan.add_slot(m), sl.dhat);
+
+    // Forward params end at readout.b; the backward additionally reads
+    // (and writes the gradient of) readout.w.
+    let rw = cfg.param("readout.w")?;
+    let idx = plan.add_param(rw.offset, rw.size);
+    debug_assert_eq!(idx, reference::p_readout_w(cfg));
+
+    // Backward descriptors, in grad_with's dispatch order.
+    plan.add_dispatch(DispatchDesc {
+        backend: Backend::Gemm,
+        transpose: true,
+        rhs: RhsKind::Shared,
+        n: n_out as u32,
+        out: SlotId::NONE, // dW_out accumulates into the grads buffer
+    });
+    plan.add_dispatch(DispatchDesc {
+        backend: Backend::Gemm,
+        transpose: false,
+        rhs: RhsKind::SharedTransposed,
+        n: fin_last as u32,
+        out: sl.drow,
+    });
+    for li in (0..cfg.hidden.len()).rev() {
+        let fout = cfg.hidden[li];
+        let fin = if li == 0 {
+            cfg.feat_dim
+        } else {
+            cfg.hidden[li - 1]
+        };
+        for ch in 0..cfg.channels {
+            plan.add_dispatch(DispatchDesc {
+                backend: reference::adjacency_backend(mb, ch, th)?,
+                transpose: true,
+                rhs: RhsKind::PerSample,
+                n: fout as u32,
+                out: sl.du,
+            });
+            plan.add_dispatch(DispatchDesc {
+                backend: Backend::Gemm,
+                transpose: true,
+                rhs: RhsKind::Shared,
+                n: fout as u32,
+                out: SlotId::NONE, // dW_ch accumulates into the grads buffer
+            });
+            if li > 0 {
+                plan.add_dispatch(DispatchDesc {
+                    backend: Backend::Gemm,
+                    transpose: false,
+                    rhs: RhsKind::SharedTransposed,
+                    n: fin as u32,
+                    out: sl.dx,
+                });
+            }
+        }
+    }
+    Ok(plan)
+}
+
+/// Two disjoint mutable parameter slices of the flat gradient buffer
+/// (the γ/β pair the norm backward fills together).
+fn two_grad_slices<'a>(
+    grads: &'a mut [f32],
+    a: ParamRef,
+    b: ParamRef,
+) -> (&'a mut [f32], &'a mut [f32]) {
+    assert!(
+        a.offset + a.len <= b.offset || b.offset + b.len <= a.offset,
+        "overlapping parameter refs"
+    );
+    if a.offset < b.offset {
+        let (lo, hi) = grads.split_at_mut(b.offset as usize);
+        (&mut lo[a.range()], &mut hi[..b.len as usize])
+    } else {
+        let (lo, hi) = grads.split_at_mut(a.offset as usize);
+        let blo = &mut lo[b.range()];
+        (&mut hi[..a.len as usize], blo)
+    }
+}
+
+/// Replay a compiled train plan: loss + full parameter gradient,
+/// bit-identical to [`grad_with`] on the same executor, with every
+/// intermediate drawn from the workspace and the gradient accumulated
+/// into the caller's flat `grads` buffer (`cfg.n_params` long, zeroed
+/// here). Steady-state replays allocate no intermediate buffer — only
+/// O(1) fixed-size bookkeeping (the key check and the act/ypre handle
+/// vectors) remains per step.
+#[allow(clippy::too_many_arguments)]
+pub fn grad_planned(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+    w_rep: &[f32],
+    plan: &StepPlan,
+    ws: &mut Workspace,
+    grads: &mut [f32],
+) -> anyhow::Result<f32> {
+    anyhow::ensure!(mb.batch > 0, "gradient of an empty batch");
+    anyhow::ensure!(
+        plan.key == train_plan_key(cfg, mb),
+        "stale train plan: geometry changed without a rebuild"
+    );
+    anyhow::ensure!(grads.len() == cfg.n_params, "gradient buffer length");
+    grads.fill(0.0);
+    let sl = train_slot_ids(cfg);
+    let mut cursor = PlanCursor::new(plan);
+    let f = reference::forward_planned_core(
+        cfg,
+        ps,
+        mb,
+        exec,
+        w_rep,
+        plan,
+        ws,
+        &mut cursor,
+        &sl.ypre,
+    )?;
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let n_out = cfg.n_out;
+    let loss = reference::loss(cfg, &f.logits, &mb.labels, b);
+
+    // ---- loss -> dlogits (elementwise, no matmul) -----------------------
+    let mut dlogits = ws.take(sl.dlogits, b * n_out, SlotInit::Overwrite);
+    loss_grad_into(cfg, &f.logits, &mb.labels, b, &mut dlogits);
+
+    // ---- readout head backward (2 engine dispatches) --------------------
+    let fin_last = *cfg.hidden.last().unwrap_or(&cfg.feat_dim);
+    let h_last: &[f32] = f.acts.last().map_or(&mb.x[..], |v| &v[..]);
+    let p_rw = plan.param(reference::p_readout_w(cfg));
+    // d b_out: column sums of dlogits (the bias is added once per sample).
+    {
+        let gb = &mut grads[plan.param(reference::p_readout_b(cfg)).range()];
+        for row in dlogits.chunks(n_out) {
+            for (o, v) in row.iter().enumerate() {
+                gb[o] += v;
+            }
+        }
+    }
+    // d W_out = P^T @ dlogits with P[b,:] = Σ_r h[b,r,:] (sum-pool):
+    // one batch-1 transpose GEMM over the pooled [B, fin] view.
+    let mut pooled = ws.take(sl.pooled, b * fin_last, SlotInit::Zeroed);
+    for bi in 0..b {
+        let dst = &mut pooled[bi * fin_last..(bi + 1) * fin_last];
+        for r in 0..m {
+            let row = &h_last[(bi * m + r) * fin_last..(bi * m + r + 1) * fin_last];
+            for (k, v) in row.iter().enumerate() {
+                dst[k] += v;
+            }
+        }
+    }
+    {
+        let d = cursor.dispatch();
+        debug_assert!(d.backend == Backend::Gemm && d.transpose);
+        let pk = GemmKernel::new(&pooled, 1, b, fin_last);
+        let gw = &mut grads[p_rw.range()];
+        exec.dispatch_t(&pk, Rhs::Shared(&dlogits), d.n as usize, gw)?;
+    }
+    // d h: the readout sums rows, so every row of sample b gets
+    // dlogits[b] @ W_out^T — one X·W^T dispatch (against the
+    // pre-transposed weight slot), then a row broadcast.
+    let mut wt = ws.take(sl.wt, n_out * fin_last, SlotInit::Overwrite);
+    let mut drow = ws.take(sl.drow, b * fin_last, SlotInit::Zeroed);
+    {
+        let d = cursor.dispatch();
+        debug_assert_eq!(d.rhs, RhsKind::SharedTransposed);
+        let w_out = &ps.data[p_rw.range()];
+        transpose_into(w_out, n_out, fin_last, &mut wt);
+        let dk = GemmKernel::new(&dlogits, b, 1, n_out);
+        exec.dispatch(&dk, Rhs::Shared(&wt[..n_out * fin_last]), d.n as usize, &mut drow)?;
+    }
+    let mut dh = ws.take(sl.dh, b * m * fin_last, SlotInit::Overwrite);
+    for bi in 0..b {
+        let src = &drow[bi * fin_last..(bi + 1) * fin_last];
+        for r in 0..m {
+            dh[(bi * m + r) * fin_last..(bi * m + r + 1) * fin_last].copy_from_slice(src);
+        }
+    }
+
+    // ---- conv layers, last to first ------------------------------------
+    // 3 dispatches per channel; the first layer skips dX and issues 2.
+    let mut dx = ws.take(sl.dx, b * m * reference::max_feat(cfg), SlotInit::Overwrite);
+    let mut du = ws.take(sl.du, b * m * reference::max_feat(cfg), SlotInit::Overwrite);
+    let mut dypre = ws.take(sl.dypre, b * m * reference::max_feat(cfg), SlotInit::Overwrite);
+    let mut hn = ws.take(sl.hn, m, SlotInit::Overwrite);
+    let mut dhat = ws.take(sl.dhat, m, SlotInit::Overwrite);
+    for li in (0..cfg.hidden.len()).rev() {
+        let fout = cfg.hidden[li];
+        let fin = if li == 0 {
+            cfg.feat_dim
+        } else {
+            cfg.hidden[li - 1]
+        };
+        let x: &[f32] = if li == 0 { &mb.x } else { &f.acts[li - 1] };
+        let ypre = &f.ypre[li];
+        let gamma = &ps.data[plan.param(reference::p_gamma(li)).range()];
+        let beta = &ps.data[plan.param(reference::p_beta(li)).range()];
+
+        // GraphNorm + ReLU backward: dL/dH -> dL/dYpre (host-side),
+        // with dγ/dβ accumulated straight into the gradient buffer.
+        reference::fit(&mut dypre, b * m * fout);
+        {
+            let (dgamma, dbeta) = two_grad_slices(
+                grads,
+                plan.param(reference::p_gamma(li)),
+                plan.param(reference::p_beta(li)),
+            );
+            graph_norm_relu_backward(
+                ypre, &mb.mask, gamma, beta, &dh, &mut dypre, b, m, fout, dgamma, dbeta, &mut hn,
+                &mut dhat,
+            );
+        }
+
+        let w = &ps.data[plan.param(reference::p_w(li)).range()];
+        if li > 0 {
+            reference::fit(&mut dx, b * m * fin);
+            dx.fill(0.0);
+        }
+        for ch in 0..cfg.channels {
+            // dU = A_ch^T @ dYpre — batched transpose dispatch on the
+            // plan's resolved adjacency backend.
+            let backend = cursor.dispatch().backend;
+            reference::fit(&mut du, b * m * fout);
+            du.fill(0.0);
+            match backend {
+                Backend::Ell => {
+                    let adj = EllKernel::channel(mb, ch);
+                    exec.dispatch_t(&adj, Rhs::PerSample(&dypre), fout, &mut du)?;
+                }
+                other => anyhow::bail!("adjacency planned on unpacked backend {other}"),
+            }
+            // d bias_ch: row sums of dU (the bias broadcasts over rows).
+            {
+                let pb = plan.param(reference::p_b(li));
+                let gb = &mut grads[pb.range()][ch * fout..(ch + 1) * fout];
+                for row in du.chunks(fout) {
+                    for (o, v) in row.iter().enumerate() {
+                        gb[o] += v;
+                    }
+                }
+            }
+            // d W_ch = X^T @ dU with all samples stacked: one batch-1
+            // transpose GEMM over the [B*M, fin] view of X, straight
+            // into the gradient buffer.
+            {
+                let d = cursor.dispatch();
+                debug_assert!(d.backend == Backend::Gemm && d.transpose);
+                let xk = GemmKernel::new(x, 1, b * m, fin);
+                let pw = plan.param(reference::p_w(li));
+                let gw = &mut grads[pw.range()][ch * fin * fout..(ch + 1) * fin * fout];
+                exec.dispatch_t(&xk, Rhs::Shared(&du), d.n as usize, gw)?;
+            }
+            // dX += dU @ W_ch^T — the X·W^T form against the
+            // pre-transposed weight slot, accumulating across channels
+            // through the engine's `+=` contract. The first layer's
+            // input is the data, which needs no gradient.
+            if li > 0 {
+                let d = cursor.dispatch();
+                debug_assert_eq!(d.rhs, RhsKind::SharedTransposed);
+                let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
+                reference::fit(&mut wt, fout * fin);
+                transpose_into(w_ch, fout, fin, &mut wt);
+                let duk = GemmKernel::new(&du, b, m, fout);
+                exec.dispatch(&duk, Rhs::Shared(&wt[..fout * fin]), d.n as usize, &mut dx)?;
+            }
+        }
+        if li > 0 {
+            std::mem::swap(&mut dh, &mut dx);
+        }
+    }
+    cursor.finish();
+
+    ws.put(sl.dlogits, dlogits);
+    ws.put(sl.pooled, pooled);
+    ws.put(sl.drow, drow);
+    ws.put(sl.dh, dh);
+    ws.put(sl.dx, dx);
+    ws.put(sl.du, du);
+    ws.put(sl.dypre, dypre);
+    ws.put(sl.wt, wt);
+    ws.put(sl.hn, hn);
+    ws.put(sl.dhat, dhat);
+    reference::restore_planned_fwd(cfg, ws, &sl.ypre, f);
+    Ok(loss)
 }
 
 #[cfg(test)]

@@ -19,11 +19,24 @@
 //! pure function of the parameters, so the coordinator's host paths
 //! cache it per [`ParamSet`] and pass it to [`forward_with_readout`];
 //! [`forward_with`] rebuilds it every call for one-shot users.
+//!
+//! **Plan/execute split (DESIGN.md §11).** [`forward_with_readout`] is
+//! the *direct* path: it re-derives shapes/params per call and
+//! allocates fresh intermediates. The hot paths instead compile a
+//! [`StepPlan`] once per geometry ([`plan_forward`]) and replay it
+//! ([`forward_planned`]) with every intermediate — layer activations,
+//! the `U = XW + b` scratch, the logits — drawn from a caller-held
+//! [`Workspace`] arena, so steady-state replays allocate nothing.
+//! Both paths run the same layer helpers on the same engine dispatch
+//! sequence, so their logits are bit-identical.
 
 use super::config::{LossKind, ModelConfig};
 use super::params::ParamSet;
 use crate::graph::dataset::ModelBatch;
-use crate::sparse::engine::{EllKernel, Executor, GemmKernel, Rhs};
+use crate::sparse::engine::{
+    choose_backend, AutoThresholds, Backend, DispatchDesc, DispatchProfile, EllKernel, Executor,
+    GemmKernel, GeometryKey, PlanCursor, Rhs, RhsKind, SlotId, SlotInit, StepPlan, Workspace,
+};
 
 /// GraphNorm variance stabilizer — matches `model.py`'s `eps`.
 pub(crate) const EPS: f32 = 1e-5;
@@ -100,7 +113,8 @@ pub(crate) fn check_batch(cfg: &ModelConfig, mb: &ModelBatch) -> anyhow::Result<
 /// One graph-conv layer up to (not including) GraphNorm: returns the
 /// pre-normalization accumulator `y[b,m,o] = Σ_ch A[b,ch] @ (X[b] @
 /// W[ch] + bias[ch])`. Two engine dispatches per channel, each covering
-/// the whole batch.
+/// the whole batch. This is the direct (unplanned) wrapper: it resolves
+/// parameters by name and allocates fresh intermediates per call.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn conv_layer(
     cfg: &ModelConfig,
@@ -118,6 +132,34 @@ pub(crate) fn conv_layer(
     let bias = ps.slice(cfg, &format!("conv{li}.b"))?; // [CH, fout]
     let mut y = vec![0f32; b * m * fout];
     let mut u = vec![0f32; b * m * fout];
+    conv_layer_into(cfg, w, bias, fin, fout, h, mb, exec, None, &mut y, &mut u)?;
+    Ok(y)
+}
+
+/// Shared core of the direct and planned conv layer: accumulate one
+/// layer into the caller's `y` (pre-zeroed) using the caller's `u`
+/// scratch (fully bias-overwritten per channel, so it needs no
+/// zeroing). When `plan` is given, each dispatch consumes its recorded
+/// [`DispatchDesc`] — the adjacency dispatch runs on the descriptor's
+/// resolved backend instead of re-deriving it.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_layer_into(
+    cfg: &ModelConfig,
+    w: &[f32],
+    bias: &[f32],
+    fin: usize,
+    fout: usize,
+    h: &[f32],
+    mb: &ModelBatch,
+    exec: &Executor,
+    mut plan: Option<&mut PlanCursor<'_>>,
+    y: &mut [f32],
+    u: &mut [f32],
+) -> anyhow::Result<()> {
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    debug_assert_eq!(y.len(), b * m * fout);
+    debug_assert_eq!(u.len(), b * m * fout);
     for ch in 0..cfg.channels {
         let w_ch = &w[ch * fin * fout..(ch + 1) * fin * fout];
         let b_ch = &bias[ch * fout..(ch + 1) * fout];
@@ -126,18 +168,39 @@ pub(crate) fn conv_layer(
         for row in u.chunks_mut(fout) {
             row.copy_from_slice(b_ch);
         }
+        // The planned path reads the dense width off the descriptor —
+        // the recorded value, not a re-derivation.
+        let n = match plan.as_deref_mut() {
+            Some(c) => {
+                let d = c.dispatch();
+                debug_assert_eq!(d.backend, Backend::Gemm);
+                d.n as usize
+            }
+            None => fout,
+        };
+        debug_assert_eq!(n, fout);
         let xw = GemmKernel::new(h, b, m, fin);
-        exec.dispatch(&xw, Rhs::Shared(w_ch), fout, &mut u)?;
+        exec.dispatch(&xw, Rhs::Shared(w_ch), n, u)?;
         // y += A[ch] @ U             (SpMM + ElementWiseAdd).
-        let adj = EllKernel::channel(mb, ch);
-        exec.dispatch(&adj, Rhs::PerSample(&u), fout, &mut y)?;
+        let backend = match plan.as_deref_mut() {
+            Some(c) => c.dispatch().backend,
+            None => Backend::Ell,
+        };
+        match backend {
+            Backend::Ell => {
+                let adj = EllKernel::channel(mb, ch);
+                exec.dispatch(&adj, Rhs::PerSample(u), fout, y)?;
+            }
+            other => anyhow::bail!("adjacency planned on unpacked backend {other}"),
+        }
     }
-    Ok(y)
+    Ok(())
 }
 
 /// Sum-pool readout + dense head: logits[b] = b_out + Σ_r h[b,r,:] @ W.
 /// Viewing h[b] as [1, m*fin] against the tiled weight keeps the
 /// original (r, k) accumulation order while routing through the engine.
+/// Direct wrapper — allocates the logits buffer per call.
 pub(crate) fn readout(
     cfg: &ModelConfig,
     ps: &ParamSet,
@@ -147,6 +210,27 @@ pub(crate) fn readout(
     exec: &Executor,
     w_rep: &[f32],
 ) -> anyhow::Result<Vec<f32>> {
+    let b_out = ps.slice(cfg, "readout.b")?;
+    let mut logits = vec![0f32; b * cfg.n_out];
+    readout_into(cfg, b_out, h, fin, b, exec, w_rep, None, &mut logits)?;
+    Ok(logits)
+}
+
+/// Shared core of the direct and planned readout: prefill the caller's
+/// `logits` buffer with the bias (full overwrite — no zeroing needed)
+/// and accumulate the pooled head through one engine dispatch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn readout_into(
+    cfg: &ModelConfig,
+    b_out: &[f32],
+    h: &[f32],
+    fin: usize,
+    b: usize,
+    exec: &Executor,
+    w_rep: &[f32],
+    mut plan: Option<&mut PlanCursor<'_>>,
+    logits: &mut [f32],
+) -> anyhow::Result<()> {
     let m = cfg.max_nodes;
     let n_out = cfg.n_out;
     anyhow::ensure!(
@@ -154,14 +238,336 @@ pub(crate) fn readout(
         "w_rep length {} != {m} * {fin} * {n_out} (stale readout cache?)",
         w_rep.len()
     );
-    let b_out = ps.slice(cfg, "readout.b")?;
-    let mut logits = vec![0f32; b * n_out];
+    debug_assert_eq!(logits.len(), b * n_out);
     for row in logits.chunks_mut(n_out) {
         row.copy_from_slice(b_out);
     }
+    let n = match plan.as_deref_mut() {
+        Some(c) => {
+            let d = c.dispatch();
+            debug_assert_eq!(d.backend, Backend::Gemm);
+            d.n as usize
+        }
+        None => n_out,
+    };
+    debug_assert_eq!(n, n_out);
     let readout = GemmKernel::new(h, b, 1, m * fin);
-    exec.dispatch(&readout, Rhs::Shared(w_rep), n_out, &mut logits)?;
-    Ok(logits)
+    exec.dispatch(&readout, Rhs::Shared(w_rep), n, logits)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Plan/execute split (DESIGN.md §11)
+// ---------------------------------------------------------------------
+
+/// Mode tags for [`GeometryKey`]s (forward-only vs full train step).
+pub(crate) const MODE_FORWARD: u32 = 1;
+pub(crate) const MODE_TRAIN: u32 = 2;
+
+/// The geometry a gcn plan depends on: mode, batch size, and every
+/// model dimension the slot table / dispatch list reads. Batch
+/// *contents* (adjacency values, features) are not part of the key —
+/// plans replay across minibatches of the same shape.
+pub(crate) fn geometry_key(cfg: &ModelConfig, mb: &ModelBatch, mode: u32) -> GeometryKey {
+    let mut v = vec![
+        mode,
+        mb.batch as u32,
+        mb.max_nodes as u32,
+        mb.feat_dim as u32,
+        mb.channels as u32,
+        mb.ell_width as u32,
+        cfg.n_out as u32,
+    ];
+    v.extend(cfg.hidden.iter().map(|&h| h as u32));
+    GeometryKey(v)
+}
+
+/// Cache key for a forward plan of this batch shape.
+pub fn forward_plan_key(cfg: &ModelConfig, mb: &ModelBatch) -> GeometryKey {
+    geometry_key(cfg, mb, MODE_FORWARD)
+}
+
+// Parameter-reference indices into `StepPlan::params`, fixed by
+// `plan_forward_into`'s push order: (w, b, gamma, beta) per conv layer,
+// then readout.b; train plans append readout.w (backward.rs).
+pub(crate) fn p_w(li: usize) -> usize {
+    4 * li
+}
+pub(crate) fn p_b(li: usize) -> usize {
+    4 * li + 1
+}
+pub(crate) fn p_gamma(li: usize) -> usize {
+    4 * li + 2
+}
+pub(crate) fn p_beta(li: usize) -> usize {
+    4 * li + 3
+}
+pub(crate) fn p_readout_b(cfg: &ModelConfig) -> usize {
+    4 * cfg.hidden.len()
+}
+pub(crate) fn p_readout_w(cfg: &ModelConfig) -> usize {
+    4 * cfg.hidden.len() + 1
+}
+
+/// Workspace slot ids of a forward plan, fixed by construction order:
+/// the shared `U = XW + b` scratch, one post-norm activation per conv
+/// layer, and the logits. Pure function of the config, so builders and
+/// replayers derive identical ids.
+pub(crate) struct FwdSlots {
+    pub u: SlotId,
+    pub act: Vec<SlotId>,
+    pub logits: SlotId,
+}
+
+pub(crate) fn fwd_slot_ids(cfg: &ModelConfig) -> FwdSlots {
+    let l = cfg.hidden.len();
+    FwdSlots {
+        u: SlotId(0),
+        act: (0..l).map(|i| SlotId(1 + i as u32)).collect(),
+        logits: SlotId(1 + l as u32),
+    }
+}
+
+/// Widest feature dimension any intermediate of this model carries.
+pub(crate) fn max_feat(cfg: &ModelConfig) -> usize {
+    cfg.hidden.iter().copied().max().unwrap_or(cfg.feat_dim)
+}
+
+/// Append the forward step's slots, parameter refs and dispatch
+/// descriptors to `plan` (the train planner continues from here).
+/// Descriptors resolve their backend at build time: the dense feature
+/// transform and readout can only run on GEMM, the adjacency SpMM is
+/// chosen by the cost model over the packings the [`ModelBatch`]
+/// actually holds (ELL today) — so a cached plan never re-runs
+/// selection (DESIGN.md §11).
+pub(crate) fn plan_forward_into(
+    cfg: &ModelConfig,
+    mb: &ModelBatch,
+    th: &AutoThresholds,
+    plan: &mut StepPlan,
+) -> anyhow::Result<FwdSlots> {
+    check_batch(cfg, mb)?;
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let sl = fwd_slot_ids(cfg);
+    let u = plan.add_slot(b * m * max_feat(cfg));
+    debug_assert_eq!(u, sl.u);
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        let id = plan.add_slot(b * m * fout);
+        debug_assert_eq!(id, sl.act[li]);
+    }
+    let logits = plan.add_slot(b * cfg.n_out);
+    debug_assert_eq!(logits, sl.logits);
+
+    for li in 0..cfg.hidden.len() {
+        for name in ["w", "b", "gamma", "beta"] {
+            let p = cfg.param(&format!("conv{li}.{name}"))?;
+            plan.add_param(p.offset, p.size);
+        }
+    }
+    let rb = cfg.param("readout.b")?;
+    plan.add_param(rb.offset, rb.size);
+
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        for ch in 0..cfg.channels {
+            plan.add_dispatch(DispatchDesc {
+                backend: Backend::Gemm,
+                transpose: false,
+                rhs: RhsKind::Shared,
+                n: fout as u32,
+                out: sl.u,
+            });
+            plan.add_dispatch(DispatchDesc {
+                backend: adjacency_backend(mb, ch, th)?,
+                transpose: false,
+                rhs: RhsKind::PerSample,
+                n: fout as u32,
+                out: sl.act[li],
+            });
+        }
+    }
+    plan.add_dispatch(DispatchDesc {
+        backend: Backend::Gemm,
+        transpose: false,
+        rhs: RhsKind::Shared,
+        n: cfg.n_out as u32,
+        out: sl.logits,
+    });
+    Ok(sl)
+}
+
+/// Resolve the adjacency SpMM backend for one channel from the O(1)
+/// nnz cost model. The [`ModelBatch`] packs its adjacency in ELL only,
+/// so the candidate set is `{Ell}` today — the selection still runs so
+/// additional packings become a one-line candidate change.
+pub(crate) fn adjacency_backend(
+    mb: &ModelBatch,
+    ch: usize,
+    th: &AutoThresholds,
+) -> anyhow::Result<Backend> {
+    let nnz: usize = (0..mb.batch)
+        .map(|b| mb.ell_nnz[b * mb.channels + ch] as usize)
+        .sum();
+    let profile = DispatchProfile {
+        batch: mb.batch,
+        rows: mb.max_nodes,
+        inner: mb.max_nodes,
+        nnz,
+        ell_width: Some(mb.ell_width),
+    };
+    choose_backend(&profile, &[Backend::Ell], th)
+}
+
+/// Compile a forward step for this geometry: slot table + resolved
+/// dispatch descriptors + cached parameter offsets. Pure function of
+/// (config, batch shape, thresholds) — replay it against any batch of
+/// the same geometry via [`forward_planned`].
+pub fn plan_forward(
+    cfg: &ModelConfig,
+    mb: &ModelBatch,
+    th: &AutoThresholds,
+) -> anyhow::Result<StepPlan> {
+    let mut plan = StepPlan::new(forward_plan_key(cfg, mb));
+    plan_forward_into(cfg, mb, th, &mut plan)?;
+    Ok(plan)
+}
+
+/// Resize a taken arena buffer to this use's exact length (capacity was
+/// reserved by `Workspace::prepare`, so this never reallocates in
+/// steady state).
+pub(crate) fn fit(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() > len {
+        buf.truncate(len);
+    } else {
+        buf.resize(len, 0.0);
+    }
+}
+
+/// Buffers a planned forward leaves taken out of the workspace; the
+/// caller reads them (backward replays them) and must hand every one
+/// back via [`restore_planned_fwd`].
+pub(crate) struct PlannedFwd {
+    /// Post-norm activations, one per conv layer (`acts[l]` feeds layer
+    /// `l + 1`; the layer-0 input is `mb.x` and is never copied).
+    pub acts: Vec<Vec<f32>>,
+    /// Pre-norm accumulators (captured only for train replays).
+    pub ypre: Vec<Vec<f32>>,
+    pub logits: Vec<f32>,
+}
+
+/// Return a planned forward's buffers to their arena slots.
+pub(crate) fn restore_planned_fwd(
+    cfg: &ModelConfig,
+    ws: &mut Workspace,
+    ypre_slots: &[SlotId],
+    f: PlannedFwd,
+) {
+    let sl = fwd_slot_ids(cfg);
+    for (li, a) in f.acts.into_iter().enumerate() {
+        ws.put(sl.act[li], a);
+    }
+    for (li, y) in f.ypre.into_iter().enumerate() {
+        ws.put(ypre_slots[li], y);
+    }
+    ws.put(sl.logits, f.logits);
+}
+
+/// Replay the forward portion of a plan, drawing every intermediate
+/// from the workspace. `ypre_slots` non-empty captures pre-norm
+/// accumulators for the backward pass (train plans declare those
+/// slots). Dispatch sequence and math are identical to
+/// [`forward_with_readout`] — bit-identical logits.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_planned_core(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+    w_rep: &[f32],
+    plan: &StepPlan,
+    ws: &mut Workspace,
+    cursor: &mut PlanCursor<'_>,
+    ypre_slots: &[SlotId],
+) -> anyhow::Result<PlannedFwd> {
+    check_batch(cfg, mb)?;
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let sl = fwd_slot_ids(cfg);
+    let mut u = ws.take(sl.u, b * m * max_feat(cfg), SlotInit::Overwrite);
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(cfg.hidden.len());
+    let mut ypre: Vec<Vec<f32>> = Vec::with_capacity(ypre_slots.len());
+    let mut fin = cfg.feat_dim;
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        let w = &ps.data[plan.param(p_w(li)).range()];
+        let bias = &ps.data[plan.param(p_b(li)).range()];
+        let gamma = &ps.data[plan.param(p_gamma(li)).range()];
+        let beta = &ps.data[plan.param(p_beta(li)).range()];
+        let mut y = ws.take(sl.act[li], b * m * fout, SlotInit::Zeroed);
+        fit(&mut u, b * m * fout);
+        let h: &[f32] = if li == 0 { &mb.x } else { &acts[li - 1] };
+        conv_layer_into(
+            cfg,
+            w,
+            bias,
+            fin,
+            fout,
+            h,
+            mb,
+            exec,
+            Some(&mut *cursor),
+            &mut y,
+            &mut u,
+        )?;
+        if !ypre_slots.is_empty() {
+            let mut yp = ws.take(ypre_slots[li], b * m * fout, SlotInit::Overwrite);
+            yp.copy_from_slice(&y);
+            ypre.push(yp);
+        }
+        graph_norm_relu(&mut y, &mb.mask, gamma, beta, b, m, fout);
+        acts.push(y);
+        fin = fout;
+    }
+    let mut logits = ws.take(sl.logits, b * cfg.n_out, SlotInit::Overwrite);
+    let b_out = &ps.data[plan.param(p_readout_b(cfg)).range()];
+    let h_last: &[f32] = acts.last().map_or(&mb.x[..], |v| &v[..]);
+    readout_into(
+        cfg,
+        b_out,
+        h_last,
+        fin,
+        b,
+        exec,
+        w_rep,
+        Some(&mut *cursor),
+        &mut logits,
+    )?;
+    ws.put(sl.u, u);
+    Ok(PlannedFwd { acts, ypre, logits })
+}
+
+/// Replay a compiled forward plan: bit-identical to
+/// [`forward_with_readout`], with zero intermediate allocations in
+/// steady state (the returned logits vector is the one per-call copy —
+/// results must outlive the arena).
+pub fn forward_planned(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+    w_rep: &[f32],
+    plan: &StepPlan,
+    ws: &mut Workspace,
+) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        plan.key == forward_plan_key(cfg, mb),
+        "stale forward plan: geometry changed without a rebuild"
+    );
+    let mut cursor = PlanCursor::new(plan);
+    let f = forward_planned_core(cfg, ps, mb, exec, w_rep, plan, ws, &mut cursor, &[])?;
+    cursor.finish();
+    let out = f.logits.clone();
+    restore_planned_fwd(cfg, ws, &[], f);
+    Ok(out)
 }
 
 /// In-place per-graph masked normalization + affine + ReLU + re-mask —

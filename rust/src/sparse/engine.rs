@@ -43,6 +43,16 @@
 //! `sparse::ops` stays the single-matrix oracle the engine is
 //! property-tested against (`tests/engine_parity.rs`).
 //!
+//! On top of raw dispatch sits the plan/execute split ([`plan`],
+//! DESIGN.md §11): a [`StepPlan`] compiles a hot path's dispatch
+//! sequence once per geometry (resolved [`Backend`] per dispatch —
+//! [`Backend::Auto`] picks ST/CSR/ELL/GEMM from the O(1) nnz cost
+//! model — plus shapes, output slots and cached parameter offsets),
+//! and a [`Workspace`] arena serves every intermediate buffer, so
+//! steady-state replays allocate nothing and skip redundant
+//! zero-fills. Planned execution is bit-identical to direct dispatch
+//! on every backend × thread count × policy.
+//!
 //! Forward/transpose round-trip through one backend:
 //!
 //! ```
@@ -67,10 +77,16 @@
 
 pub mod exec;
 pub mod kernels;
+pub mod plan;
 pub mod pool;
 
 pub use exec::Executor;
 pub use kernels::{CsrKernel, EllKernel, GemmKernel, LANES, StKernel};
+pub use plan::{
+    choose_backend, AutoThresholds, Backend, DispatchDesc, DispatchProfile, GeometryKey,
+    KernelBundle, ParamRef, PlanCache, PlanCursor, PlanStats, RhsKind, SlotId, SlotInit,
+    StepPlan, Workspace,
+};
 pub use pool::{PoolStats, SchedPolicy, WorkerPool};
 
 /// Which inner-loop implementation a dispatch runs (DESIGN.md §10).

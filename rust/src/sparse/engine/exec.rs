@@ -19,7 +19,16 @@
 //! same machinery: [`Executor::dispatch_t`] runs the `A^T·X` form via
 //! [`BatchedSpmm::spmm_sample_t`], and [`Rhs::SharedTransposed`]
 //! covers the `X·W^T` form by materializing the (small) transposed
-//! weight once per dispatch.
+//! weight once per dispatch. (Planned replays pre-transpose into a
+//! workspace slot instead — see [`super::plan`] — so their dispatches
+//! pass [`Rhs::Shared`] and allocate nothing; both routes produce the
+//! same element order, hence identical bits.)
+//!
+//! Backend selection composes on top: `Executor::dispatch_bundle`
+//! (defined in [`super::plan`]) resolves a [`super::Backend`] request —
+//! including [`super::Backend::Auto`], the cost-model-driven choice —
+//! against a [`super::KernelBundle`] of available packings and then
+//! runs this module's ordinary dispatch on the chosen kernel.
 
 use std::sync::Arc;
 
@@ -172,16 +181,15 @@ impl Executor {
 
         // X·W^T form: materialize the [inner, n] transpose of the
         // [n, inner] shared operand once per dispatch, so the
-        // per-sample kernels keep reading contiguous rows.
+        // per-sample kernels keep reading contiguous rows. Planned
+        // replays pre-transpose into an arena slot with the same
+        // `transpose_into` — one implementation, so the two paths can
+        // never drift out of bit-identity.
         let tbuf: Vec<f32>;
         let rhs = match rhs {
             Rhs::SharedTransposed(w) => {
                 let mut t = vec![0f32; inner * n];
-                for k in 0..inner {
-                    for j in 0..n {
-                        t[k * n + j] = w[j * inner + k];
-                    }
-                }
+                super::plan::transpose_into(w, inner, n, &mut t);
                 tbuf = t;
                 Rhs::Shared(&tbuf)
             }

@@ -1,0 +1,870 @@
+//! Compiled step plans: the plan-once / execute-many layer of the
+//! engine (DESIGN.md §11).
+//!
+//! A hot path that issues the same dispatch sequence every iteration —
+//! the GCN train step issues 39 — used to pay three avoidable per-step
+//! costs: ~15 fresh zero-filled `vec![0f32; ...]` intermediates, a
+//! backend/shape re-derivation per dispatch, and redundant zero-fills
+//! of buffers whose first use overwrites them anyway. This module
+//! splits that into:
+//!
+//! * [`StepPlan`] — the compiled form of one forward or train step: a
+//!   slot table (every intermediate buffer the step needs, with its
+//!   maximum length), the ordered list of [`DispatchDesc`] dispatch
+//!   descriptors (resolved backend, transpose form, [`RhsKind`],
+//!   output slot, dense width), and cached parameter-table offsets so
+//!   replays never re-run name lookups. Plans are pure functions of
+//!   the model/batch *geometry* — batch contents change freely under a
+//!   cached plan.
+//! * [`Workspace`] — a slot-addressed arena of reusable f32 buffers
+//!   with explicit overwrite-vs-accumulate preparation semantics
+//!   ([`SlotInit`]): `Zeroed` zero-fills (the buffer is accumulated
+//!   into), `Overwrite` hands the buffer back untouched because the
+//!   step fully overwrites it (counted in
+//!   [`PlanStats::zero_fills_elided`]). Steady-state replays allocate
+//!   no intermediate buffer: every f32 intermediate is served from the
+//!   arena (what remains per replay is O(1) fixed-size bookkeeping — a
+//!   geometry key and a handful of buffer handles — not data).
+//! * [`Backend`] / [`AutoThresholds`] / [`choose_backend`] — per-
+//!   dispatch backend selection. `Backend::Auto` resolves to a
+//!   concrete backend (ST / CSR / ELL / GEMM) from the O(1) nnz cost
+//!   model (density and padding-waste thresholds, calibratable via
+//!   env or the microbench); resolution happens once at plan build (or
+//!   per [`KernelBundle`] dispatch in the bench) and execution is then
+//!   bit-identical to running that fixed backend directly.
+//! * [`PlanCache`] + [`PlanStats`] — one (plan, workspace) pair per
+//!   [`GeometryKey`], built on first use and replayed thereafter;
+//!   geometry changes build a new entry, parameter updates never
+//!   invalidate a plan.
+//!
+//! Determinism: planning changes where buffers live and which backend
+//! runs — never an element's accumulation order — so planned execution
+//! is bit-identical to the direct path for every backend × thread
+//! count × policy (`tests/engine_parity.rs`).
+
+use super::{BatchedSpmm, Executor, Rhs};
+
+// ---------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------
+
+/// Which [`BatchedSpmm`] backend a dispatch runs on. `Auto` is resolved
+/// to one of the four concrete backends at plan-build (or bundle-
+/// dispatch) time via [`choose_backend`]; a [`StepPlan`] never stores
+/// `Auto`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    St,
+    Csr,
+    Ell,
+    Gemm,
+    /// Pick per dispatch from the nnz cost model ([`AutoThresholds`]).
+    #[default]
+    Auto,
+}
+
+impl Backend {
+    /// All concrete backends, in bench legend order.
+    pub const FIXED: [Backend; 4] = [Backend::St, Backend::Csr, Backend::Ell, Backend::Gemm];
+
+    /// Parse a CLI name (`st|csr|ell|gemm|auto`).
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        Ok(match s {
+            "st" => Backend::St,
+            "csr" => Backend::Csr,
+            "ell" => Backend::Ell,
+            "gemm" => Backend::Gemm,
+            "auto" => Backend::Auto,
+            other => anyhow::bail!("unknown backend '{other}' (st|csr|ell|gemm|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::St => "st",
+            Backend::Csr => "csr",
+            Backend::Ell => "ell",
+            Backend::Gemm => "gemm",
+            Backend::Auto => "auto",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Calibratable decision thresholds for [`Backend::Auto`] (DESIGN.md
+/// §11 documents the calibration procedure: sweep the microbench with
+/// `--backend auto` against the fixed backends and move the knob until
+/// the auto line tracks the best fixed line at every density).
+#[derive(Clone, Copy, Debug)]
+pub struct AutoThresholds {
+    /// Batch density `nnz / (batch * rows * cols)` at or above which
+    /// the dense GEMM backend wins: dense inner loops stream
+    /// contiguously with no index loads, which beats the sparse formats
+    /// once a quarter-ish of the cells are populated.
+    pub gemm_density: f64,
+    /// ELL padded-slot waste `batch * rows * width / nnz` at or below
+    /// which the row-regular ELL layout beats CSR: ELL's fixed-width
+    /// rows drop the row-pointer indirection but scan padding, so it
+    /// only wins while padding stays a small multiple of the real work.
+    pub ell_waste: f64,
+}
+
+impl Default for AutoThresholds {
+    fn default() -> Self {
+        AutoThresholds {
+            gemm_density: 0.25,
+            ell_waste: 3.0,
+        }
+    }
+}
+
+impl AutoThresholds {
+    /// Defaults overridden by `BSPMM_GEMM_DENSITY` / `BSPMM_ELL_WASTE`
+    /// (the calibration loop re-runs the microbench under different
+    /// values without recompiling).
+    pub fn from_env() -> AutoThresholds {
+        let read = |key: &str, dflt: f64| {
+            std::env::var(key)
+                .ok()
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(dflt)
+        };
+        let d = AutoThresholds::default();
+        AutoThresholds {
+            gemm_density: read("BSPMM_GEMM_DENSITY", d.gemm_density),
+            ell_waste: read("BSPMM_ELL_WASTE", d.ell_waste),
+        }
+    }
+}
+
+/// The aggregate shape/sparsity facts one auto decision reads. All O(1)
+/// to assemble on the packed formats (per-sample nnz is counted at pack
+/// time, DESIGN.md §10).
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchProfile {
+    pub batch: usize,
+    pub rows: usize,
+    pub inner: usize,
+    /// Real (non-padding) non-zeros across the batch.
+    pub nnz: usize,
+    /// ELL slot width, when an ELL packing of the operand exists.
+    pub ell_width: Option<usize>,
+}
+
+impl DispatchProfile {
+    /// Profile of an existing kernel (any backend).
+    pub fn of(k: &dyn BatchedSpmm, ell_width: Option<usize>) -> DispatchProfile {
+        DispatchProfile {
+            batch: k.batch(),
+            rows: k.out_rows(),
+            inner: k.inner_dim(),
+            nnz: k.real_nnz(),
+            ell_width,
+        }
+    }
+
+    /// `nnz / (batch * rows * inner)`.
+    pub fn density(&self) -> f64 {
+        let cells = (self.batch * self.rows * self.inner).max(1) as f64;
+        self.nnz as f64 / cells
+    }
+
+    /// `batch * rows * width / nnz` — how many padded ELL slots are
+    /// scanned per real non-zero.
+    pub fn ell_waste(&self) -> f64 {
+        match self.ell_width {
+            Some(w) => (self.batch * self.rows * w) as f64 / self.nnz.max(1) as f64,
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// Resolve a backend request against the candidates a call site can
+/// actually construct. Fixed requests pass through (if available);
+/// `Auto` walks the cost model: dense enough → GEMM, row-regular
+/// enough → ELL, otherwise CSR, with ST and GEMM as structural
+/// fallbacks. Deterministic — same profile, same choice — so a plan
+/// that caches the result stays bit-stable across replays.
+pub fn choose_backend(
+    profile: &DispatchProfile,
+    candidates: &[Backend],
+    th: &AutoThresholds,
+) -> anyhow::Result<Backend> {
+    anyhow::ensure!(!candidates.is_empty(), "auto-backend with no candidates");
+    let has = |b: Backend| candidates.contains(&b);
+    if has(Backend::Gemm) && profile.density() >= th.gemm_density {
+        return Ok(Backend::Gemm);
+    }
+    if has(Backend::Ell) && profile.ell_waste() <= th.ell_waste {
+        return Ok(Backend::Ell);
+    }
+    for b in [Backend::Csr, Backend::Ell, Backend::St, Backend::Gemm] {
+        if has(b) {
+            return Ok(b);
+        }
+    }
+    anyhow::bail!("no concrete backend among {candidates:?}")
+}
+
+/// The packings one logical batch is available in — what the bench (and
+/// any caller holding several formats of the same matrices) hands to
+/// [`Executor::dispatch_bundle`] so `Backend::Auto` has a real choice.
+#[derive(Clone, Copy, Default)]
+pub struct KernelBundle<'a> {
+    pub st: Option<&'a dyn BatchedSpmm>,
+    pub csr: Option<&'a dyn BatchedSpmm>,
+    pub ell: Option<&'a dyn BatchedSpmm>,
+    pub gemm: Option<&'a dyn BatchedSpmm>,
+    /// Slot width of the ELL packing, for the waste heuristic.
+    pub ell_width: Option<usize>,
+}
+
+impl<'a> KernelBundle<'a> {
+    fn get(&self, b: Backend) -> Option<&'a dyn BatchedSpmm> {
+        match b {
+            Backend::St => self.st,
+            Backend::Csr => self.csr,
+            Backend::Ell => self.ell,
+            Backend::Gemm => self.gemm,
+            Backend::Auto => None,
+        }
+    }
+
+    /// Concrete backends present in this bundle.
+    pub fn candidates(&self) -> Vec<Backend> {
+        Backend::FIXED
+            .into_iter()
+            .filter(|&b| self.get(b).is_some())
+            .collect()
+    }
+
+    /// Aggregate profile (read off any present kernel — they all pack
+    /// the same matrices).
+    pub fn profile(&self) -> anyhow::Result<DispatchProfile> {
+        let k = self
+            .st
+            .or(self.csr)
+            .or(self.ell)
+            .or(self.gemm)
+            .ok_or_else(|| anyhow::anyhow!("empty kernel bundle"))?;
+        Ok(DispatchProfile::of(k, self.ell_width))
+    }
+
+    /// Resolve `backend` (possibly `Auto`) to a concrete kernel.
+    pub fn resolve(
+        &self,
+        backend: Backend,
+        th: &AutoThresholds,
+    ) -> anyhow::Result<(Backend, &'a dyn BatchedSpmm)> {
+        let chosen = match backend {
+            Backend::Auto => choose_backend(&self.profile()?, &self.candidates(), th)?,
+            fixed => fixed,
+        };
+        let k = self
+            .get(chosen)
+            .ok_or_else(|| anyhow::anyhow!("backend {chosen} not packed in this bundle"))?;
+        Ok((chosen, k))
+    }
+}
+
+impl Executor {
+    /// One dispatch with backend selection: resolve `backend` (fixed or
+    /// [`Backend::Auto`]) against the bundle, dispatch on the chosen
+    /// kernel, and report which backend ran. Execution is bit-identical
+    /// to dispatching that fixed backend directly — selection only
+    /// decides *which* kernel's (deterministic) accumulation runs.
+    pub fn dispatch_bundle(
+        &self,
+        bundle: &KernelBundle<'_>,
+        backend: Backend,
+        th: &AutoThresholds,
+        rhs: Rhs<'_>,
+        n: usize,
+        out: &mut [f32],
+    ) -> anyhow::Result<Backend> {
+        let (chosen, kernel) = bundle.resolve(backend, th)?;
+        self.dispatch(kernel, rhs, n, out)?;
+        Ok(chosen)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workspace arena
+// ---------------------------------------------------------------------
+
+/// Index of one arena buffer inside a [`Workspace`], assigned by
+/// [`StepPlan::add_slot`] at plan-build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotId(pub u32);
+
+impl SlotId {
+    /// Sentinel for dispatches whose output lives in a caller-held
+    /// buffer (the gradient accumulator) rather than an arena slot.
+    pub const NONE: SlotId = SlotId(u32::MAX);
+}
+
+/// How a slot's contents are prepared when taken for a step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotInit {
+    /// Zero-fill: the step accumulates into the buffer (the engine's
+    /// `+=` contract), so stale contents must be cleared.
+    Zeroed,
+    /// Hand the buffer back untouched: the step fully overwrites it
+    /// (bias prefill, broadcast, full elementwise store) before any
+    /// read. This is where the old code's redundant `vec![0f32; ...]`
+    /// zero-fills disappear ([`PlanStats::zero_fills_elided`]).
+    Overwrite,
+}
+
+/// Slot-addressed arena of reusable f32 buffers. Buffers are `take`n
+/// out (owned, so several slots can be live at once with no borrow
+/// gymnastics), used, and `put` back; after [`Workspace::prepare`] has
+/// reserved a plan's maximum lengths, steady-state take/put cycles
+/// never touch the allocator.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    bufs: Vec<Vec<f32>>,
+    /// Slot takes served without growing the backing allocation.
+    reuses: u64,
+    /// Slot takes that had to allocate or grow (first step, or a
+    /// geometry the plan under-declared — a bug the stats tests catch).
+    grows: u64,
+    /// `SlotInit::Overwrite` takes that skipped the zero-fill an
+    /// allocate-fresh implementation would have paid.
+    zero_fills_elided: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Reserve every slot's maximum length up front so replay-time
+    /// takes never allocate.
+    pub fn prepare(&mut self, plan: &StepPlan) {
+        if self.bufs.len() < plan.slots.len() {
+            self.bufs.resize_with(plan.slots.len(), Vec::new);
+        }
+        for (buf, &len) in self.bufs.iter_mut().zip(&plan.slots) {
+            if buf.capacity() < len {
+                buf.reserve_exact(len - buf.len());
+            }
+        }
+    }
+
+    /// Take slot `id` out of the arena as an owned buffer of exactly
+    /// `len` elements, prepared per `init`. Pair with
+    /// [`Workspace::put`]; a slot that is never put back loses its
+    /// allocation (visible as `grows` on the next take).
+    pub fn take(&mut self, id: SlotId, len: usize, init: SlotInit) -> Vec<f32> {
+        let i = id.0 as usize;
+        if i >= self.bufs.len() {
+            self.bufs.resize_with(i + 1, Vec::new);
+        }
+        let mut buf = std::mem::take(&mut self.bufs[i]);
+        if buf.capacity() >= len {
+            self.reuses += 1;
+        } else {
+            self.grows += 1;
+        }
+        match init {
+            SlotInit::Zeroed => {
+                buf.clear();
+                buf.resize(len, 0.0);
+            }
+            SlotInit::Overwrite => {
+                // Contents are about to be overwritten; only the length
+                // must match. An elision is only counted when the whole
+                // prefix already existed — a shorter buffer still pays a
+                // zero-fill for the extension (the full length, on the
+                // very first take), which would be dishonest to report
+                // as saved.
+                if buf.len() >= len {
+                    buf.truncate(len);
+                    self.zero_fills_elided += 1;
+                } else {
+                    buf.resize(len, 0.0);
+                }
+            }
+        }
+        buf
+    }
+
+    /// Return a taken buffer to its slot.
+    pub fn put(&mut self, id: SlotId, buf: Vec<f32>) {
+        let i = id.0 as usize;
+        if i >= self.bufs.len() {
+            self.bufs.resize_with(i + 1, Vec::new);
+        }
+        self.bufs[i] = buf;
+    }
+
+    /// Read a slot in place (e.g. results left behind by a replay).
+    pub fn peek(&self, id: SlotId) -> &[f32] {
+        static EMPTY: [f32; 0] = [];
+        self.bufs.get(id.0 as usize).map_or(&EMPTY[..], |b| &b[..])
+    }
+
+    /// Total bytes currently backing the arena. Constant across
+    /// steady-state replays — the "zero new arena buffers" signal the
+    /// stats tests pin.
+    pub fn arena_bytes(&self) -> u64 {
+        self.bufs
+            .iter()
+            .map(|b| (b.capacity() * std::mem::size_of::<f32>()) as u64)
+            .sum()
+    }
+
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    pub fn zero_fills_elided(&self) -> u64 {
+        self.zero_fills_elided
+    }
+}
+
+// ---------------------------------------------------------------------
+// Step plans
+// ---------------------------------------------------------------------
+
+/// The geometry a plan was compiled for: a mode tag plus every
+/// dimension the slot table and descriptor list depend on. Two batches
+/// with equal keys replay the same plan; any difference (batch size,
+/// node bucket, feature widths, …) builds a new one.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct GeometryKey(pub Vec<u32>);
+
+/// Operand layout of a planned dispatch — mirrors [`Rhs`] without the
+/// borrow, so descriptors are plain data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RhsKind {
+    Shared,
+    PerSample,
+    /// Logical `X·W^T` form. Replays pre-transpose the weight into a
+    /// workspace slot and dispatch [`Rhs::Shared`], eliding the
+    /// executor's per-dispatch transpose allocation.
+    SharedTransposed,
+}
+
+/// One compiled dispatch: everything a replay needs that the direct
+/// path re-derives per call.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchDesc {
+    /// Concrete backend (never [`Backend::Auto`] — resolution happens
+    /// at plan build).
+    pub backend: Backend,
+    /// `A^T·X` transpose form ([`Executor::dispatch_t`]).
+    pub transpose: bool,
+    pub rhs: RhsKind,
+    /// Dense operand width `n` of this dispatch.
+    pub n: u32,
+    /// Workspace slot the dispatch accumulates into.
+    pub out: SlotId,
+}
+
+/// Cached parameter-table entry: flat (offset, len) into the
+/// [`ParamSet`](crate::gcn::ParamSet) data vector, resolved once at
+/// plan build so replays never run name lookups or `format!`.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamRef {
+    pub offset: u32,
+    pub len: u32,
+}
+
+impl ParamRef {
+    #[inline]
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset as usize..(self.offset + self.len) as usize
+    }
+}
+
+/// The compiled form of one forward or train step. Built once per
+/// geometry, replayed every iteration after that.
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    pub key: GeometryKey,
+    /// Required maximum length of each workspace slot.
+    pub slots: Vec<usize>,
+    /// Dispatch descriptors in issue order.
+    pub dispatches: Vec<DispatchDesc>,
+    /// Parameter references in a caller-defined fixed order.
+    pub params: Vec<ParamRef>,
+}
+
+impl StepPlan {
+    pub fn new(key: GeometryKey) -> StepPlan {
+        StepPlan {
+            key,
+            slots: Vec::new(),
+            dispatches: Vec::new(),
+            params: Vec::new(),
+        }
+    }
+
+    /// Declare a slot of (at most) `len` elements.
+    pub fn add_slot(&mut self, len: usize) -> SlotId {
+        self.slots.push(len);
+        SlotId((self.slots.len() - 1) as u32)
+    }
+
+    /// Raise an existing slot's declared length (shared scratch reused
+    /// at several sizes declares its maximum).
+    pub fn grow_slot(&mut self, id: SlotId, len: usize) {
+        let s = &mut self.slots[id.0 as usize];
+        *s = (*s).max(len);
+    }
+
+    pub fn add_dispatch(&mut self, desc: DispatchDesc) {
+        self.dispatches.push(desc);
+    }
+
+    pub fn add_param(&mut self, offset: usize, len: usize) -> usize {
+        self.params.push(ParamRef {
+            offset: offset as u32,
+            len: len as u32,
+        });
+        self.params.len() - 1
+    }
+
+    pub fn param(&self, idx: usize) -> ParamRef {
+        self.params[idx]
+    }
+}
+
+/// Sequential reader over a plan's dispatch descriptors; replays
+/// consume exactly the recorded sequence (checked in debug builds by
+/// [`PlanCursor::finish`]).
+pub struct PlanCursor<'a> {
+    plan: &'a StepPlan,
+    next: usize,
+}
+
+impl<'a> PlanCursor<'a> {
+    pub fn new(plan: &'a StepPlan) -> PlanCursor<'a> {
+        PlanCursor { plan, next: 0 }
+    }
+
+    /// The next dispatch descriptor in issue order.
+    #[inline]
+    pub fn dispatch(&mut self) -> &'a DispatchDesc {
+        let d = &self.plan.dispatches[self.next];
+        self.next += 1;
+        d
+    }
+
+    /// Assert the replay issued every planned dispatch.
+    pub fn finish(self) {
+        debug_assert_eq!(
+            self.next,
+            self.plan.dispatches.len(),
+            "replay consumed {} of {} planned dispatches",
+            self.next,
+            self.plan.dispatches.len()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Plan cache + stats
+// ---------------------------------------------------------------------
+
+/// Cumulative plan/arena accounting for one [`PlanCache`] (the
+/// plan-layer analogue of [`PoolStats`](super::PoolStats)). Read deltas
+/// around a region of interest; the steady-state contract is
+/// `plans_built` frozen and `arena_bytes` constant from step 2 on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Plans compiled (one per geometry seen).
+    pub plans_built: u64,
+    /// Steps served from a cached plan.
+    pub replays: u64,
+    /// Bytes currently backing all cached workspaces.
+    pub arena_bytes: u64,
+    /// Buffer takes served without growing an allocation.
+    pub arena_reuses: u64,
+    /// Redundant zero-fills skipped via [`SlotInit::Overwrite`].
+    pub zero_fills_elided: u64,
+}
+
+struct CacheEntry {
+    key: GeometryKey,
+    plan: StepPlan,
+    ws: Workspace,
+}
+
+/// One (plan, workspace) pair per geometry, built on first use.
+/// Geometry changes build a new entry (bounded FIFO eviction);
+/// parameter updates never touch this cache — plans depend only on
+/// geometry.
+pub struct PlanCache {
+    entries: Vec<CacheEntry>,
+    cap: usize,
+    plans_built: u64,
+    replays: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache {
+            entries: Vec::new(),
+            // Enough for the live modes of one host (train + a couple
+            // of eval/serve batch shapes) without unbounded growth.
+            cap: 8,
+            plans_built: 0,
+            replays: 0,
+        }
+    }
+
+    /// The cached plan + workspace for `key`, building (and preparing
+    /// the workspace of) a new entry via `build` on a miss.
+    pub fn entry_with(
+        &mut self,
+        key: GeometryKey,
+        build: impl FnOnce() -> anyhow::Result<StepPlan>,
+    ) -> anyhow::Result<(&StepPlan, &mut Workspace)> {
+        if let Some(pos) = self.entries.iter().position(|e| e.key == key) {
+            self.replays += 1;
+            let e = &mut self.entries[pos];
+            return Ok((&e.plan, &mut e.ws));
+        }
+        let plan = build()?;
+        let mut ws = Workspace::new();
+        ws.prepare(&plan);
+        self.plans_built += 1;
+        if self.entries.len() == self.cap {
+            self.entries.remove(0);
+        }
+        self.entries.push(CacheEntry { key, plan, ws });
+        let e = self.entries.last_mut().unwrap();
+        Ok((&e.plan, &mut e.ws))
+    }
+
+    /// Drop every cached plan and workspace (the microbench's cold-plan
+    /// configuration does this between steps).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> PlanStats {
+        let mut s = PlanStats {
+            plans_built: self.plans_built,
+            replays: self.replays,
+            ..PlanStats::default()
+        };
+        for e in &self.entries {
+            s.arena_bytes += e.ws.arena_bytes();
+            s.arena_reuses += e.ws.reuses();
+            s.zero_fills_elided += e.ws.zero_fills_elided();
+        }
+        s
+    }
+}
+
+/// Materialize the transpose of a `[n, inner]` row-major weight into
+/// `dst` (`[inner, n]`) — the same element order the executor's
+/// [`Rhs::SharedTransposed`] normalization produces, so a planned
+/// dispatch against the pre-transposed slot is bit-identical to the
+/// direct `SharedTransposed` dispatch while allocating nothing.
+pub fn transpose_into(w: &[f32], inner: usize, n: usize, dst: &mut [f32]) {
+    debug_assert_eq!(w.len(), inner * n);
+    debug_assert!(dst.len() >= inner * n);
+    for k in 0..inner {
+        for j in 0..n {
+            dst[k * n + j] = w[j * inner + k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_reuses_and_elides_after_prepare() {
+        let mut plan = StepPlan::new(GeometryKey(vec![1]));
+        let a = plan.add_slot(16);
+        let b = plan.add_slot(8);
+        plan.grow_slot(b, 32);
+        assert_eq!(plan.slots, vec![16, 32]);
+
+        let mut ws = Workspace::new();
+        ws.prepare(&plan);
+        let bytes0 = ws.arena_bytes();
+        assert!(bytes0 >= ((16 + 32) * 4) as u64);
+
+        for step in 0..3 {
+            let mut x = ws.take(a, 16, SlotInit::Zeroed);
+            assert!(x.iter().all(|&v| v == 0.0));
+            x[3] = 7.0;
+            let y = ws.take(b, 20, SlotInit::Overwrite);
+            assert_eq!(y.len(), 20);
+            ws.put(a, x);
+            ws.put(b, y);
+            assert_eq!(ws.arena_bytes(), bytes0, "step {step} grew the arena");
+        }
+        assert_eq!(ws.grows(), 0);
+        assert_eq!(ws.reuses(), 6);
+        // The first Overwrite take still zero-fills (the buffer starts
+        // empty); only the warm takes elide.
+        assert_eq!(ws.zero_fills_elided(), 2);
+        // Zeroed takes really clear stale contents.
+        let x = ws.take(a, 16, SlotInit::Zeroed);
+        assert!(x.iter().all(|&v| v == 0.0));
+        ws.put(a, x);
+    }
+
+    #[test]
+    fn workspace_without_prepare_grows_once_then_reuses() {
+        let mut ws = Workspace::new();
+        let id = SlotId(0);
+        let v = ws.take(id, 64, SlotInit::Zeroed);
+        ws.put(id, v);
+        assert_eq!(ws.grows(), 1);
+        let v = ws.take(id, 64, SlotInit::Zeroed);
+        ws.put(id, v);
+        assert_eq!(ws.grows(), 1);
+        assert_eq!(ws.reuses(), 1);
+    }
+
+    #[test]
+    fn choose_backend_follows_thresholds() {
+        let th = AutoThresholds::default();
+        let all = [Backend::St, Backend::Csr, Backend::Ell, Backend::Gemm];
+        // Dense batch -> GEMM.
+        let dense = DispatchProfile {
+            batch: 4,
+            rows: 8,
+            inner: 8,
+            nnz: 4 * 8 * 8 / 2,
+            ell_width: Some(8),
+        };
+        assert_eq!(choose_backend(&dense, &all, &th).unwrap(), Backend::Gemm);
+        // Sparse + row-regular -> ELL.
+        let regular = DispatchProfile {
+            batch: 4,
+            rows: 64,
+            inner: 64,
+            nnz: 4 * 64 * 2,
+            ell_width: Some(3),
+        };
+        assert_eq!(choose_backend(&regular, &all, &th).unwrap(), Backend::Ell);
+        // Sparse + padding-heavy ELL -> CSR.
+        let ragged = DispatchProfile {
+            batch: 4,
+            rows: 64,
+            inner: 64,
+            nnz: 40,
+            ell_width: Some(16),
+        };
+        assert_eq!(choose_backend(&ragged, &all, &th).unwrap(), Backend::Csr);
+        // Candidate set restricts the choice.
+        assert_eq!(
+            choose_backend(&ragged, &[Backend::Ell], &th).unwrap(),
+            Backend::Ell
+        );
+        assert_eq!(
+            choose_backend(&dense, &[Backend::St], &th).unwrap(),
+            Backend::St
+        );
+        assert!(choose_backend(&dense, &[], &th).is_err());
+    }
+
+    #[test]
+    fn plan_cache_builds_once_per_geometry_and_evicts_fifo() {
+        let mut cache = PlanCache::new();
+        let key = |v: u32| GeometryKey(vec![v]);
+        let build = |v: u32| {
+            move || {
+                let mut p = StepPlan::new(GeometryKey(vec![v]));
+                p.add_slot(8);
+                Ok(p)
+            }
+        };
+        cache.entry_with(key(1), build(1)).unwrap();
+        cache.entry_with(key(1), build(1)).unwrap();
+        cache.entry_with(key(2), build(2)).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.plans_built, 2);
+        assert_eq!(s.replays, 1);
+        assert!(s.arena_bytes >= (2 * 8 * 4) as u64);
+        // Node-count-style geometry difference is a different key.
+        assert_ne!(key(1), key(2));
+        for v in 3..=10 {
+            cache.entry_with(key(v), build(v)).unwrap();
+        }
+        assert_eq!(cache.len(), 8, "cache must stay bounded");
+        // key(1) was evicted; re-entry rebuilds.
+        cache.entry_with(key(1), build(1)).unwrap();
+        assert_eq!(cache.stats().plans_built, 11);
+    }
+
+    #[test]
+    fn transpose_into_matches_manual_transpose() {
+        let (inner, n) = (3usize, 4usize);
+        let w: Vec<f32> = (0..n * inner).map(|i| i as f32).collect(); // [n, inner]
+        let mut dst = vec![0f32; inner * n];
+        transpose_into(&w, inner, n, &mut dst);
+        for j in 0..n {
+            for k in 0..inner {
+                assert_eq!(dst[k * n + j], w[j * inner + k]);
+            }
+        }
+    }
+
+    #[test]
+    fn cursor_walks_descriptors_in_order() {
+        let mut p = StepPlan::new(GeometryKey(vec![0]));
+        let s = p.add_slot(4);
+        for n in [3u32, 5] {
+            p.add_dispatch(DispatchDesc {
+                backend: Backend::Ell,
+                transpose: false,
+                rhs: RhsKind::PerSample,
+                n,
+                out: s,
+            });
+        }
+        let mut c = PlanCursor::new(&p);
+        assert_eq!(c.dispatch().n, 3);
+        assert_eq!(c.dispatch().n, 5);
+        c.finish();
+    }
+
+    #[test]
+    fn backend_parse_round_trips() {
+        for b in [
+            Backend::St,
+            Backend::Csr,
+            Backend::Ell,
+            Backend::Gemm,
+            Backend::Auto,
+        ] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert!(Backend::parse("nope").is_err());
+    }
+}

@@ -125,20 +125,36 @@ pub fn plan_tasks(
     workers: usize,
     policy: SchedPolicy,
 ) -> Vec<Task> {
+    let mut tasks = Vec::new();
+    plan_tasks_into(costs, out_rows, workers, policy, &mut tasks);
+    tasks
+}
+
+/// [`plan_tasks`] writing into a caller-held buffer — the pool reuses
+/// one task vector across dispatches (under the dispatch lock) so
+/// steady-state dispatches allocate no scheduling metadata.
+fn plan_tasks_into(
+    costs: &[u64],
+    out_rows: usize,
+    workers: usize,
+    policy: SchedPolicy,
+    tasks: &mut Vec<Task>,
+) {
+    tasks.clear();
     let b = costs.len();
     if b == 0 || out_rows == 0 {
-        return Vec::new();
+        return;
     }
     let t = workers.max(1);
     let total: u64 = costs.iter().sum();
     let maxc = costs.iter().copied().max().unwrap_or(0);
     let uniform = maxc.saturating_mul(b as u64) <= 2 * total;
     if policy == SchedPolicy::Static || (uniform && b >= t) {
-        return static_split(b, out_rows, t);
+        static_split_into(b, out_rows, t, tasks);
+        return;
     }
     let parts = (t * if uniform { 1 } else { 4 }) as u64;
     let target = total.div_ceil(parts).max(1);
-    let mut tasks = Vec::new();
     let mut open = 0usize; // start of the currently accumulating chunk
     let mut acc = 0u64;
     for s in 0..b {
@@ -176,19 +192,16 @@ pub fn plan_tasks(
     if b > open {
         tasks.push(Task::full(open, b, out_rows));
     }
-    tasks
 }
 
 /// The legacy contiguous count split: at most one full-row task per
 /// worker, samples in order — exactly the partition the pre-pool
 /// executor used. Depends only on the batch size, so the static paths
 /// call it without computing costs.
-fn static_split(b: usize, out_rows: usize, workers: usize) -> Vec<Task> {
+fn static_split_into(b: usize, out_rows: usize, workers: usize, tasks: &mut Vec<Task>) {
+    tasks.clear();
     let chunk = b.div_ceil(workers.max(1));
-    (0..b)
-        .step_by(chunk)
-        .map(|s0| Task::full(s0, (s0 + chunk).min(b), out_rows))
-        .collect()
+    tasks.extend((0..b).step_by(chunk).map(|s0| Task::full(s0, (s0 + chunk).min(b), out_rows)));
 }
 
 /// Per-sample planner costs for a dispatch: nnz plus a row term (the
@@ -197,11 +210,10 @@ fn static_split(b: usize, out_rows: usize, workers: usize) -> Vec<Task> {
 /// invisible to it — and stealing is what absorbs the error.
 /// `sample_nnz` is O(1) on every packed batch format (counts are cached
 /// at pack time, DESIGN.md §10), so this whole scan is O(batch) per
-/// dispatch.
-fn sample_costs(kernel: &dyn BatchedSpmm, out_rows: usize) -> Vec<u64> {
-    (0..kernel.batch())
-        .map(|b| kernel.sample_nnz(b) as u64 + out_rows as u64 + 1)
-        .collect()
+/// dispatch, into a reused buffer.
+fn sample_costs_into(kernel: &dyn BatchedSpmm, out_rows: usize, costs: &mut Vec<u64>) {
+    costs.clear();
+    costs.extend((0..kernel.batch()).map(|b| kernel.sample_nnz(b) as u64 + out_rows as u64 + 1));
 }
 
 /// Lock, recovering from poisoning: a panicking worker is already
@@ -277,6 +289,18 @@ struct Shared {
     steals: AtomicU64,
 }
 
+/// Per-pool dispatch scratch — the cost vector, task plan and worker
+/// segments of the *current* dispatch, reused across dispatches under
+/// the dispatch lock so steady-state dispatches allocate no scheduling
+/// metadata (the plan-layer counterpart of the `Workspace` arena,
+/// DESIGN.md §11).
+#[derive(Default)]
+struct Scratch {
+    costs: Vec<u64>,
+    tasks: Vec<Task>,
+    segs: Vec<Segment>,
+}
+
 /// A persistent pool of `workers` execution slots: `workers - 1` parked
 /// OS threads plus the dispatching caller, who participates as worker
 /// 0. Construction is the only place threads are spawned; dispatches
@@ -289,8 +313,9 @@ pub struct WorkerPool {
     workers: usize,
     policy: SchedPolicy,
     variant: KernelVariant,
-    /// Serializes dispatches: the pool runs one job at a time.
-    dispatch_lock: Mutex<()>,
+    /// Serializes dispatches (the pool runs one job at a time) and
+    /// guards the reusable dispatch scratch.
+    dispatch_lock: Mutex<Scratch>,
     dispatches: AtomicU64,
     static_dispatches: AtomicU64,
     stealing_dispatches: AtomicU64,
@@ -343,7 +368,7 @@ impl WorkerPool {
             workers,
             policy,
             variant,
-            dispatch_lock: Mutex::new(()),
+            dispatch_lock: Mutex::new(Scratch::default()),
             dispatches: AtomicU64::new(0),
             static_dispatches: AtomicU64::new(0),
             stealing_dispatches: AtomicU64::new(0),
@@ -418,22 +443,28 @@ impl WorkerPool {
             }
             return;
         }
-        let tasks = if self.policy == SchedPolicy::Static {
+        // The dispatch lock serializes jobs *and* hands out the reused
+        // scheduling scratch: plans, costs and segments live in
+        // pool-owned buffers, so a steady-state dispatch performs no
+        // heap allocation here either.
+        let mut scratch = lock_pool(&self.dispatch_lock);
+        let Scratch { costs, tasks, segs } = &mut *scratch;
+        if self.policy == SchedPolicy::Static {
             // The static split only counts samples — skip the
-            // O(batch * nnz) cost scan it would never read.
-            static_split(b, out_rows, self.workers)
+            // O(batch) cost scan it would never read.
+            static_split_into(b, out_rows, self.workers, tasks);
         } else {
-            let costs = sample_costs(kernel, out_rows);
-            plan_tasks(&costs, out_rows, self.workers, self.policy)
-        };
-        self.tasks.fetch_add(tasks.len() as u64, Ordering::Relaxed);
-        let steal = tasks.len() > self.workers;
-        let segs: Vec<Segment> = (0..self.workers)
-            .map(|w| Segment {
-                next: AtomicUsize::new(w * tasks.len() / self.workers),
-                end: (w + 1) * tasks.len() / self.workers,
-            })
-            .collect();
+            sample_costs_into(kernel, out_rows, costs);
+            plan_tasks_into(costs, out_rows, self.workers, self.policy, tasks);
+        }
+        let ntasks = tasks.len();
+        self.tasks.fetch_add(ntasks as u64, Ordering::Relaxed);
+        let steal = ntasks > self.workers;
+        segs.clear();
+        segs.extend((0..self.workers).map(|w| Segment {
+            next: AtomicUsize::new(w * ntasks / self.workers),
+            end: (w + 1) * ntasks / self.workers,
+        }));
         let job = Job {
             kernel,
             rhs,
@@ -444,14 +475,14 @@ impl WorkerPool {
             transpose,
             variant: self.variant,
             out: out.as_mut_ptr(),
-            tasks: &tasks,
-            segs: &segs,
+            tasks: tasks.as_slice(),
+            segs: segs.as_slice(),
             steal,
         };
-        if tasks.len() <= 1 {
+        if ntasks <= 1 {
             // Not worth waking anyone: run inline on the caller.
             self.static_dispatches.fetch_add(1, Ordering::Relaxed);
-            for task in &tasks {
+            for task in job.tasks {
                 exec_task(&job, task);
             }
             return;
@@ -462,7 +493,6 @@ impl WorkerPool {
             self.static_dispatches.fetch_add(1, Ordering::Relaxed);
         }
 
-        let _serialize = lock_pool(&self.dispatch_lock);
         {
             let mut g = lock_pool(&self.shared.slot);
             debug_assert_eq!(g.active, 0, "previous job still active");

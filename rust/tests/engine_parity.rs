@@ -8,6 +8,7 @@
 //! the pre-engine inlined implementation (kept here verbatim as the
 //! refactor oracle).
 
+use bspmm::gcn::backward;
 use bspmm::gcn::config::ModelConfig;
 use bspmm::gcn::params::ParamSet;
 use bspmm::gcn::reference;
@@ -16,8 +17,8 @@ use bspmm::sparse::batch::{
     densify_batch, random_dense_batch, PaddedCsrBatch, PaddedEllBatch, PaddedStBatch,
 };
 use bspmm::sparse::engine::{
-    BatchedSpmm, CsrKernel, EllKernel, Executor, GemmKernel, KernelVariant, LANES, Rhs,
-    SchedPolicy, StKernel,
+    AutoThresholds, Backend, BatchedSpmm, CsrKernel, EllKernel, Executor, GemmKernel,
+    KernelBundle, KernelVariant, LANES, Rhs, SchedPolicy, SlotId, SlotInit, StKernel, Workspace,
 };
 use bspmm::sparse::ops;
 use bspmm::sparse::random::{random_batch, random_coo, random_mixed_batch, RandomSpec};
@@ -373,6 +374,150 @@ fn tail_widths_bit_identical_scalar_vs_vectorized_on_every_form() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// Tentpole property (DESIGN.md §11): planned + arena execution —
+/// output drawn from a workspace slot, backend resolved through the
+/// bundle (fixed or `Auto`) — is bit-identical to the direct path for
+/// every backend × thread count × policy, on uniform, skewed and
+/// batch-1 workloads, and steady-state replays never grow the arena.
+#[test]
+fn planned_arena_execution_bit_identical_to_direct_for_every_backend_and_auto() {
+    let mut rng = Rng::new(0xEA);
+    let th = AutoThresholds::default();
+    let uniform = random_batch(&mut rng, &RandomSpec::new(24, 3), 12);
+    let (skew_mats, skew_dim) = skewed_batch(&mut rng);
+    let one = vec![random_coo(&mut rng, &RandomSpec::new(48, 4))];
+    let cases: Vec<(Vec<Coo>, usize, &str)> = vec![
+        (uniform, 24, "uniform"),
+        (skew_mats, skew_dim, "skewed"),
+        (one, 48, "batch1"),
+    ];
+    for (mats, dim, what) in &cases {
+        let dim = *dim;
+        let nb = 7usize;
+        let dense = random_dense_batch(&mut rng, mats.len(), dim, nb);
+        let cap = mats.iter().map(Coo::nnz).max().unwrap();
+        let st = PaddedStBatch::pack(mats, dim, cap).unwrap();
+        let csr = PaddedCsrBatch::pack(mats, dim, cap).unwrap();
+        let ell = PaddedEllBatch::pack_auto(mats, dim).unwrap();
+        let a_dense = densify_batch(mats, dim);
+        let stk = StKernel::new(&st);
+        let csrk = CsrKernel::new(&csr);
+        let ellk = EllKernel::from_padded(&ell);
+        let gemk = GemmKernel::new(&a_dense, mats.len(), dim, dim);
+        let bundle = KernelBundle {
+            st: Some(&stk),
+            csr: Some(&csrk),
+            ell: Some(&ellk),
+            gemm: Some(&gemk),
+            ell_width: Some(ell.width),
+        };
+        let out_len = mats.len() * dim * nb;
+        for backend in [
+            Backend::St,
+            Backend::Csr,
+            Backend::Ell,
+            Backend::Gemm,
+            Backend::Auto,
+        ] {
+            let (chosen, kernel) = bundle.resolve(backend, &th).unwrap();
+            assert_ne!(chosen, Backend::Auto, "auto must resolve to a fixed backend");
+            for threads in THREAD_COUNTS {
+                for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                    let exec = Executor::with_policy(threads, policy);
+                    let direct = exec.spmm(kernel, Rhs::PerSample(&dense), nb).unwrap();
+                    let mut ws = Workspace::new();
+                    let slot = SlotId(0);
+                    for round in 0..2 {
+                        let mut out = ws.take(slot, out_len, SlotInit::Zeroed);
+                        let ran = exec
+                            .dispatch_bundle(
+                                &bundle,
+                                backend,
+                                &th,
+                                Rhs::PerSample(&dense),
+                                nb,
+                                &mut out,
+                            )
+                            .unwrap();
+                        assert_eq!(ran, chosen);
+                        assert_eq!(
+                            out, direct,
+                            "{what}/{backend:?}/t{threads}/{policy:?}/round{round}"
+                        );
+                        ws.put(slot, out);
+                    }
+                    assert_eq!(ws.grows(), 1, "second round regrew the arena");
+                    assert_eq!(ws.reuses(), 1, "second round did not reuse the slot");
+                }
+            }
+        }
+    }
+}
+
+/// The same tentpole property one level up: the planned gcn forward and
+/// train-step replays are bit-identical to the direct
+/// `forward_with_readout` / `grad_with` paths, for every thread count ×
+/// policy, and replays never grow the prepared arena.
+#[test]
+fn planned_gcn_forward_and_train_bit_identical_to_direct() {
+    let cfg = ModelConfig::synthetic("tox21").unwrap();
+    let ps = ParamSet::random_init(&cfg, 0xAB);
+    let d = Dataset::generate(DatasetKind::Tox21, 8, 21);
+    let idx: Vec<usize> = (0..6).collect();
+    let mb = d.pack_batch(&idx, cfg.max_nodes, cfg.ell_width).unwrap();
+    let w_rep = reference::build_w_rep(&cfg, &ps).unwrap();
+    let th = AutoThresholds::default();
+    let fwd_plan = reference::plan_forward(&cfg, &mb, &th).unwrap();
+    let train_plan = backward::plan_train(&cfg, &mb, &th).unwrap();
+    // 17 forward + 22 backward dispatch descriptors for the tox21
+    // geometry (DESIGN.md §8), resolved once at plan build.
+    assert_eq!(fwd_plan.dispatches.len(), 17);
+    assert_eq!(train_plan.dispatches.len(), 39);
+    assert!(fwd_plan
+        .dispatches
+        .iter()
+        .all(|d| d.backend != Backend::Auto));
+    for threads in THREAD_COUNTS {
+        for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+            let exec = Executor::with_policy(threads, policy);
+            let direct = reference::forward_with_readout(&cfg, &ps, &mb, &exec, &w_rep).unwrap();
+            let mut ws = Workspace::new();
+            ws.prepare(&fwd_plan);
+            for round in 0..2 {
+                let planned =
+                    reference::forward_planned(&cfg, &ps, &mb, &exec, &w_rep, &fwd_plan, &mut ws)
+                        .unwrap();
+                assert_eq!(planned, direct, "fwd t{threads}/{policy:?}/round{round}");
+            }
+            assert_eq!(ws.grows(), 0, "prepared forward arena regrew");
+
+            let res = backward::grad_with(&cfg, &ps, &mb, &exec, Some(&w_rep)).unwrap();
+            let mut tws = Workspace::new();
+            tws.prepare(&train_plan);
+            let mut grads = vec![0f32; cfg.n_params];
+            for round in 0..2 {
+                let loss = backward::grad_planned(
+                    &cfg,
+                    &ps,
+                    &mb,
+                    &exec,
+                    &w_rep,
+                    &train_plan,
+                    &mut tws,
+                    &mut grads,
+                )
+                .unwrap();
+                assert_eq!(loss, res.loss, "loss t{threads}/{policy:?}/round{round}");
+                assert_eq!(
+                    grads, res.grads.data,
+                    "grads t{threads}/{policy:?}/round{round}"
+                );
+            }
+            assert_eq!(tws.grows(), 0, "prepared train arena regrew");
         }
     }
 }

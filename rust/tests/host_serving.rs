@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::coordinator::trainer::Trainer;
+use bspmm::gcn::backward;
 use bspmm::gcn::ParamSet;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 
@@ -189,6 +190,86 @@ fn full_train_step_runs_on_exactly_one_pool_with_zero_new_spawns() {
     let s2 = exec.stats();
     assert_eq!(s2.dispatches - s1.dispatches, 39 + 17);
     assert_eq!(s2.spawned_threads, s0.spawned_threads);
+}
+
+#[test]
+fn steady_state_training_builds_one_plan_and_never_grows_the_arena() {
+    // The DESIGN.md §11 acceptance contract: a fixed-geometry training
+    // loop compiles its train plan on step 1 and from step 2 on builds
+    // zero new plans and allocates zero new arena buffers — every
+    // intermediate is a bit-identical replay out of the workspace.
+    let mut tr = Trainer::new_host("tox21", 2).unwrap();
+    let data = Dataset::generate(DatasetKind::Tox21, 8, 23);
+    let idx: Vec<usize> = (0..8).collect();
+    let mb = data
+        .pack_batch(&idx, tr.cfg.max_nodes, tr.cfg.ell_width)
+        .unwrap();
+    assert_eq!(tr.plan_stats().plans_built, 0);
+
+    tr.step_batched(&mb, 0.01).unwrap();
+    let s1 = tr.plan_stats();
+    assert_eq!(s1.plans_built, 1);
+    assert_eq!(s1.replays, 0);
+    assert!(s1.arena_bytes > 0, "step 1 must populate the arena");
+
+    for _ in 0..4 {
+        tr.step_batched(&mb, 0.01).unwrap();
+    }
+    let s2 = tr.plan_stats();
+    assert_eq!(s2.plans_built, 1, "a steady-state step rebuilt a plan");
+    assert_eq!(s2.replays, 4);
+    assert_eq!(
+        s2.arena_bytes, s1.arena_bytes,
+        "a steady-state step allocated a new arena buffer"
+    );
+    assert!(s2.arena_reuses > s1.arena_reuses);
+    assert!(
+        s2.zero_fills_elided > s1.zero_fills_elided,
+        "overwrite-mode slots must skip their redundant zero-fills"
+    );
+}
+
+#[test]
+fn plan_cache_invalidates_on_geometry_change_only() {
+    let mut tr = Trainer::new_host("tox21", 1).unwrap();
+    let data = Dataset::generate(DatasetKind::Tox21, 10, 29);
+    let idx: Vec<usize> = (0..8).collect();
+    let mb8 = data
+        .pack_batch(&idx, tr.cfg.max_nodes, tr.cfg.ell_width)
+        .unwrap();
+    let mb4 = data
+        .pack_batch(&idx[..4], tr.cfg.max_nodes, tr.cfg.ell_width)
+        .unwrap();
+
+    tr.step_batched(&mb8, 0.01).unwrap();
+    assert_eq!(tr.plan_stats().plans_built, 1);
+    // Every SGD step updates the parameters; plans must survive that.
+    tr.step_batched(&mb8, 0.01).unwrap();
+    assert_eq!(tr.plan_stats().plans_built, 1);
+    // Batch-size change is a new geometry -> a second plan.
+    tr.step_batched(&mb4, 0.01).unwrap();
+    assert_eq!(tr.plan_stats().plans_built, 2);
+    // Returning to the first geometry replays its cached plan.
+    let replays = tr.plan_stats().replays;
+    tr.step_batched(&mb8, 0.01).unwrap();
+    let s = tr.plan_stats();
+    assert_eq!(s.plans_built, 2);
+    assert_eq!(s.replays, replays + 1);
+    // Explicit parameter replacement keeps plans too (only w_rep is
+    // parameter-derived).
+    let fresh = ParamSet::random_init(&tr.cfg, 77);
+    tr.set_params(fresh);
+    tr.step_batched(&mb8, 0.01).unwrap();
+    assert_eq!(tr.plan_stats().plans_built, 2);
+    // A node-bucket change is likewise a different geometry at the key
+    // level (a trainer is pinned to one bucket, so check the key).
+    let big = data
+        .pack_batch(&idx, tr.cfg.max_nodes + 10, tr.cfg.ell_width)
+        .unwrap();
+    assert_ne!(
+        backward::train_plan_key(&tr.cfg, &mb8),
+        backward::train_plan_key(&tr.cfg, &big)
+    );
 }
 
 #[test]
