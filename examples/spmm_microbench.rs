@@ -18,6 +18,13 @@
 //!     cargo run --release --example spmm_microbench -- --backend auto
 //!     cargo run --release --example spmm_microbench -- --plan both
 //!     cargo run --release --example spmm_microbench -- --json
+//!     cargo run --release --example spmm_microbench -- --sweep large --json
+//!
+//! `--sweep large` runs the large-graph tier instead (DESIGN.md §12):
+//! power-law graphs at 10^4/10^5/10^6 nodes (CI scale under
+//! `BENCH_QUICK=1`), batch-of-one CSR dispatches comparing the
+//! cache-tiled vs untiled kernels under static vs work-stealing
+//! scheduling; with `--json` the series merge into `BENCH_engine.json`.
 //!
 //! `--json` additionally runs the mixed-batch sweep (fig10, first n_B
 //! point — the load-imbalance case stealing exists for) and writes the
@@ -33,7 +40,7 @@ use std::path::Path;
 
 use bspmm::bench::figures::{
     auto_choices, auto_vs_fixed_summary, engine_speedup_summary, run_engine_bench_backends,
-    run_plan_bench, run_train_step_bench, FigureRunner, ENGINE_SERIES,
+    run_large_graph_bench, run_plan_bench, run_train_step_bench, FigureRunner, ENGINE_SERIES,
 };
 use bspmm::bench::report::save_json_in;
 use bspmm::bench::BenchOpts;
@@ -41,11 +48,16 @@ use bspmm::runtime::artifact::SweepSpec;
 use bspmm::runtime::Runtime;
 use bspmm::sparse::engine::{Backend, Executor};
 use bspmm::util::cli::{parse_or_exit, Cli};
-use bspmm::util::json::{arr, num, obj, s};
+use bspmm::util::json::{arr, num, obj, parse, s, Json};
 
 fn main() -> anyhow::Result<()> {
     let cli = Cli::new("spmm_microbench", "one-point SpMM comparison")
-        .opt("sweep", "fig8b", "sweep key: fig8a|fig8b|fig9a..fig9f|fig10")
+        .opt(
+            "sweep",
+            "fig8b",
+            "sweep key: fig8a|fig8b|fig9a..fig9f|fig10, or 'large' for the \
+             power-law large-graph node-count sweep (tiled vs untiled CSR)",
+        )
         .opt("nb", "64", "dense input width n_B (must exist in the sweep)")
         .opt("threads", "0", "parallel executor threads (0 = one per core)")
         .opt("backend", "all", "engine series: all|st|csr|ell|gemm|auto")
@@ -72,6 +84,39 @@ fn main() -> anyhow::Result<()> {
         }
     };
     let key = args.str("sweep");
+
+    // The large-graph tier sweep (DESIGN.md §12) is a node-count sweep
+    // over generated power-law graphs, not a manifest SweepSpec — so
+    // handle it before the key resolution below (which would bail on
+    // the unknown key). `BENCH_QUICK=1` shrinks the node counts to CI
+    // scale; `--json` merges the figure into the repo-root
+    // `BENCH_engine.json` record instead of clobbering it.
+    if key == "large" {
+        let nodes: Vec<usize> = if std::env::var("BENCH_QUICK").is_ok() {
+            vec![5_000, 20_000]
+        } else {
+            vec![10_000, 100_000, 1_000_000]
+        };
+        let opts = BenchOpts::from_env();
+        let fig = run_large_graph_bench(&nodes, 4, args.usize("nb"), args.usize("threads"), &opts)?;
+        println!("{}", fig.render());
+        if args.flag("json") {
+            let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .unwrap_or_else(|| Path::new("."));
+            let mut record = std::fs::read_to_string(root.join("BENCH_engine.json"))
+                .ok()
+                .and_then(|t| parse(&t).ok())
+                .unwrap_or_else(|| obj(vec![("key", s("BENCH_engine"))]));
+            if let Json::Obj(m) = &mut record {
+                m.insert("large_graph".into(), fig.to_json());
+            }
+            let path = save_json_in(root, "BENCH_engine", &record)?;
+            println!("wrote {}\n", path.display());
+        }
+        return Ok(());
+    }
+
     let mut sw = match &rt {
         Some(rt) => rt.manifest.sweep(key)?,
         None => SweepSpec::builtin(key)?,

@@ -170,6 +170,92 @@ pub fn run_engine_bench_backends(
     })
 }
 
+/// The large-graph tier sweep (DESIGN.md §12): one power-law graph per
+/// x point (node counts in `node_counts`, Barabási–Albert `attach`
+/// edges per node, deterministic seeds), dispatched as a batch-of-one
+/// CSR through the engine in four configurations — untiled vs
+/// cache-tiled kernels (`KernelVariant::Tiled`, tile width from
+/// `BSPMM_TILE_COLS`) × static vs work-stealing scheduling. The
+/// tiled/untiled contrast isolates the GE-SpMM-style column-tiling win
+/// at feature widths where the dense operand overflows L2; the
+/// static/steal contrast shows the degree-bucketed planner riding the
+/// skewed row mass (hub rows land in narrow row blocks instead of
+/// serializing one worker).
+pub fn run_large_graph_bench(
+    node_counts: &[usize],
+    attach: usize,
+    nb: usize,
+    threads: usize,
+    opts: &BenchOpts,
+) -> anyhow::Result<FigureResult> {
+    use crate::graph::powerlaw::power_law_graph;
+    use crate::sparse::batch::random_dense_batch;
+    use crate::sparse::engine::CsrKernel;
+    use crate::util::rng::Rng;
+
+    anyhow::ensure!(!node_counts.is_empty(), "large sweep needs node counts");
+    let t = Executor::resolve_threads(threads);
+    let configs = [
+        ("untiled", SchedPolicy::Static, KernelVariant::Vectorized),
+        ("untiled", SchedPolicy::WorkStealing, KernelVariant::Vectorized),
+        ("tiled", SchedPolicy::Static, KernelVariant::Tiled),
+        ("tiled", SchedPolicy::WorkStealing, KernelVariant::Tiled),
+    ];
+    let mut series: Vec<Series> = configs
+        .iter()
+        .map(|(tile, policy, _)| Series {
+            name: format!(
+                "Engine-CSR({tile},{}-{t}t)",
+                if *policy == SchedPolicy::Static { "static" } else { "steal" }
+            ),
+            values: Vec::new(),
+        })
+        .collect();
+    for (i, &nodes) in node_counts.iter().enumerate() {
+        let g = power_law_graph(nodes, attach, 0xBA5E + i as u64)?;
+        let kernel = CsrKernel::new(g.csr());
+        let mut rng = Rng::new(0xD0_0D + i as u64);
+        let dense = random_dense_batch(&mut rng, 1, nodes, nb);
+        let mut out = vec![0f32; nodes * nb];
+        let gflops = |secs: f64| 2.0 * g.nnz() as f64 * nb as f64 / (secs * 1e9);
+        for (ci, &(_, policy, variant)) in configs.iter().enumerate() {
+            let exec = Executor::with_variant(t, policy, variant);
+            let mut sample_once = || {
+                out.fill(0.0);
+                let t0 = std::time::Instant::now();
+                exec.dispatch(&kernel, Rhs::PerSample(&dense), nb, &mut out)
+                    .expect("large-graph dispatch");
+                t0.elapsed().as_secs_f64()
+            };
+            for _ in 0..opts.warmup {
+                sample_once();
+            }
+            let mut samples: Vec<f64> = Vec::new();
+            let mut total = 0.0;
+            while samples.len() < opts.max_iters.max(1)
+                && (samples.len() < opts.min_iters || total < opts.min_time_s)
+            {
+                let dt = sample_once();
+                samples.push(dt);
+                total += dt;
+            }
+            let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+            series[ci].values.push(gflops(mean));
+        }
+    }
+    Ok(FigureResult {
+        key: "large_engine".into(),
+        title: format!(
+            "Large-graph power-law CSR SpMM (attach={attach}, n_B={nb}, \
+             tiled vs untiled x static vs stealing)"
+        ),
+        x_label: "nodes".into(),
+        xs: node_counts.iter().map(|&n| n as f64).collect(),
+        y_label: "GFLOPS (2*nnz*n_B/t)".into(),
+        series,
+    })
+}
+
 /// Per-backend speedup lines for an engine figure (series arranged in
 /// (scalar, serial, static, steal) quadruples, as `run_engine_bench`
 /// emits them): the scalar → serial ratio is the pure vectorization
@@ -850,6 +936,33 @@ mod tests {
         let only = run_engine_bench_backends(&sw, 1, &opts, &[Backend::Ell]).unwrap();
         assert_eq!(only.series.len(), 4);
         assert!(only.series.iter().all(|s| s.name.starts_with("Engine-ELL")));
+    }
+
+    #[test]
+    fn large_graph_bench_runs_and_carries_tiled_series() {
+        let opts = BenchOpts {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time_s: 0.0,
+        };
+        let f = run_large_graph_bench(&[500, 1_000], 3, 8, 2, &opts).unwrap();
+        assert_eq!(f.key, "large_engine");
+        assert_eq!(f.xs, vec![500.0, 1000.0]);
+        assert_eq!(f.series.len(), 4);
+        assert!(f
+            .series
+            .iter()
+            .all(|s| s.values.len() == 2 && s.values.iter().all(|v| *v > 0.0)));
+        // Both kernel variants and both policies appear by name — the
+        // CI smoke job greps the recorded JSON for these.
+        for needle in ["(untiled,static", "(untiled,steal", "(tiled,static", "(tiled,steal"] {
+            assert!(
+                f.series.iter().any(|s| s.name.contains(needle)),
+                "missing series {needle}"
+            );
+        }
+        assert!(run_large_graph_bench(&[], 3, 8, 1, &opts).is_err());
     }
 
     #[test]

@@ -337,6 +337,27 @@ impl Trainer {
         Ok((loss_sum / b as f64) as f32)
     }
 
+    /// Large-graph training (DESIGN.md §12): stream `steps`
+    /// neighbor-sampled mini-batches from one giant graph through the
+    /// batched path. Every sampled batch has the same geometry, so the
+    /// whole stream replays one compiled train plan; returns the
+    /// per-step losses.
+    pub fn train_sampled(
+        &mut self,
+        sampler: &mut crate::gcn::sampler::NeighborSampler<'_>,
+        steps: usize,
+        batch: usize,
+        lr: f32,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(steps > 0 && batch > 0, "empty sampled training run");
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let mb = sampler.next_batch(batch)?;
+            losses.push(self.step_batched(&mb, lr)?);
+        }
+        Ok(losses)
+    }
+
     /// Train over `idx` (shuffled by the caller) for one epoch;
     /// incomplete trailing minibatches are dropped (paper-style).
     pub fn train_epoch(

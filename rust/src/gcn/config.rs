@@ -104,13 +104,27 @@ impl ModelConfig {
     /// model, parameters initialized in-process instead of loaded from
     /// the AOT init blob.
     pub fn synthetic(name: &str) -> anyhow::Result<ModelConfig> {
-        let (hidden, n_out, loss, train_batch): (Vec<usize>, usize, LossKind, usize) =
-            match name {
-                "tox21" => (vec![64, 64], 12, LossKind::Bce, 50),
-                "reaction100" => (vec![512, 512, 512], 100, LossKind::Softmax, 100),
-                other => anyhow::bail!("no synthetic model config for '{other}'"),
-            };
-        let (max_nodes, feat_dim, channels, n_outs) = (50usize, 16usize, 4usize, n_out);
+        // (hidden, n_out, loss, train_batch, max_nodes, channels,
+        // ell_width).  tox21 / reaction100 keep the molecule-tier
+        // geometry model.py bakes into the AOT artifacts; "largegraph"
+        // is the engine-only large-graph tier (DESIGN.md §12): one
+        // adjacency channel, subgraphs neighbor-sampled from a power-law
+        // graph by `gcn::sampler` — it has no AOT twin.
+        let (hidden, n_out, loss, train_batch, max_nodes, channels, ell_width): (
+            Vec<usize>,
+            usize,
+            LossKind,
+            usize,
+            usize,
+            usize,
+            usize,
+        ) = match name {
+            "tox21" => (vec![64, 64], 12, LossKind::Bce, 50, 50, 4, 12),
+            "reaction100" => (vec![512, 512, 512], 100, LossKind::Softmax, 100, 50, 4, 12),
+            "largegraph" => (vec![32, 32], 8, LossKind::Softmax, 32, 64, 1, 16),
+            other => anyhow::bail!("no synthetic model config for '{other}'"),
+        };
+        let (feat_dim, n_outs) = (16usize, n_out);
         // Parameter layout mirrors model.py::param_specs exactly.
         let mut params = Vec::new();
         let mut off = 0usize;
@@ -143,8 +157,8 @@ impl ModelConfig {
             hidden,
             n_out: n_outs,
             loss,
-            nnz_cap: 128,
-            ell_width: 12,
+            nnz_cap: if channels == 1 { max_nodes * ell_width } else { 128 },
+            ell_width,
             train_batch,
             infer_batch: 200,
             params,
@@ -238,6 +252,12 @@ mod tests {
         let r = ModelConfig::synthetic("reaction100").unwrap();
         assert_eq!(r.hidden.len(), 3);
         assert_eq!(r.loss, LossKind::Softmax);
+        assert_eq!((r.max_nodes, r.channels, r.ell_width), (50, 4, 12));
+        let g = ModelConfig::synthetic("largegraph").unwrap();
+        assert_eq!((g.max_nodes, g.channels, g.ell_width), (64, 1, 16));
+        assert_eq!(g.param("conv0.w").unwrap().shape, vec![1, 16, 32]);
+        assert_eq!(g.param("readout.w").unwrap().shape, vec![32, 8]);
+        assert_eq!(g.loss, LossKind::Softmax);
         assert!(ModelConfig::synthetic("nope").is_err());
     }
 

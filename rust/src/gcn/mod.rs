@@ -32,6 +32,8 @@ pub mod backward;
 pub mod config;
 pub mod params;
 pub mod reference;
+pub mod sampler;
 
 pub use config::{LossKind, ModelConfig, ParamSpec};
 pub use params::ParamSet;
+pub use sampler::NeighborSampler;

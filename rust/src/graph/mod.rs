@@ -9,10 +9,17 @@
 //! deterministic functions of graph structure plus noise, so the E2E
 //! training example has a real learnable signal and a falling loss
 //! curve.
+//!
+//! `powerlaw` adds the opposite workload shape: one 10^4–10^6-node
+//! Barabási–Albert graph for the large-graph tier (DESIGN.md §12),
+//! consumed whole by the tiled CSR kernel or as neighbor-sampled
+//! mini-batches by `gcn::sampler`.
 
 pub mod dataset;
 pub mod featurize;
 pub mod molecule;
+pub mod powerlaw;
 
 pub use dataset::{Dataset, DatasetKind, ModelBatch, Sample};
 pub use molecule::{Molecule, MoleculeSpec};
+pub use powerlaw::{power_law_graph, PowerLawSpec};

@@ -1,0 +1,206 @@
+//! Synthetic power-law graph generator — the large-graph tier workload
+//! (DESIGN.md §12).
+//!
+//! The molecule tier batches thousands of ≤50-node graphs; the
+//! large-graph tier is the opposite regime: ONE graph with 10^4–10^6
+//! nodes and a heavy-tailed degree distribution, the shape citation
+//! graphs and social networks take in the GCN literature (ogbn-arxiv,
+//! Reddit).  We grow it Barabási–Albert style: each new node attaches
+//! `attach` edges to existing nodes with probability proportional to
+//! their current degree, which yields a `P(deg = k) ∝ k^-3` tail —
+//! exactly the hub-dominated profile the degree-bucketed planner and
+//! the cache-tiled CSR kernel are built to handle.
+//!
+//! Everything is deterministic in the spec's seed, and the output is a
+//! [`LargeGraphBatch`]: the symmetric-normalized self-looped adjacency
+//! `Â = D^{-1/2}(A + I)D^{-1/2}` (the standard GCN propagation
+//! operator) packed as an exact batch-of-one CSR.  The builder writes
+//! the CSR arrays directly with a counting pass — no intermediate COO,
+//! so a 10^6-node / ~9M-nnz graph costs two O(nnz) sweeps and no sort.
+
+use crate::sparse::batch::LargeGraphBatch;
+use crate::util::rng::Rng;
+
+/// Shape of a synthetic power-law graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PowerLawSpec {
+    /// Node count; the paper-scale sweep uses 10^4 .. 10^6.
+    pub nodes: usize,
+    /// Edges added per new node (Barabási–Albert `m`).  Mean degree
+    /// converges to `2 * attach`; hubs reach O(sqrt(nodes * attach)).
+    pub attach: usize,
+    /// PRNG seed — same spec, same graph, bit-for-bit.
+    pub seed: u64,
+}
+
+impl PowerLawSpec {
+    pub fn new(nodes: usize, attach: usize, seed: u64) -> Self {
+        Self { nodes, attach, seed }
+    }
+
+    /// Grow the graph and pack its normalized adjacency.
+    pub fn generate(&self) -> anyhow::Result<LargeGraphBatch> {
+        let n = self.nodes;
+        let m = self.attach.max(1);
+        anyhow::ensure!(n > m, "need nodes > attach ({n} <= {m})");
+        anyhow::ensure!(
+            n * (2 * m + 1) < i32::MAX as usize,
+            "nnz would overflow the CSR i32 index space"
+        );
+        let mut rng = Rng::new(self.seed);
+
+        // Preferential attachment via the repeated-endpoints trick: a
+        // uniform draw from the list of all edge endpoints lands on a
+        // node with probability deg(v) / (2 * |E|) — no per-node weight
+        // table or prefix sums needed.
+        let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m);
+        let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m);
+        let mut push_edge = |edges: &mut Vec<(u32, u32)>, endpoints: &mut Vec<u32>, a: u32, b: u32| {
+            edges.push((a, b));
+            endpoints.push(a);
+            endpoints.push(b);
+        };
+        // Seed core: a ring over the first m + 1 nodes so every node
+        // starts with nonzero degree.  At m == 1 the "ring" over two
+        // nodes would traverse the same pair twice, so stop one short —
+        // the path 0–1 already gives both nodes degree ≥ 1.
+        let ring = if m == 1 { 1 } else { m + 1 };
+        for v in 0..ring {
+            let u = (v + 1) % (m + 1);
+            push_edge(&mut edges, &mut endpoints, v as u32, u as u32);
+        }
+        let mut picked: Vec<u32> = Vec::with_capacity(m);
+        for v in (m + 1)..n {
+            picked.clear();
+            for _ in 0..m {
+                // Rejection-sample a target distinct from earlier picks
+                // (self-attachment is impossible: `v`'s endpoints are
+                // pushed only after all picks).  A bounded retry budget
+                // keeps the loop O(1) amortized; the uniform fallback
+                // only matters for tiny dense cores.
+                let mut t = endpoints[rng.below(endpoints.len() as u64) as usize];
+                let mut tries = 0;
+                while picked.contains(&t) && tries < 32 {
+                    t = endpoints[rng.below(endpoints.len() as u64) as usize];
+                    tries += 1;
+                }
+                while picked.contains(&t) {
+                    t = rng.below(v as u64) as u32;
+                }
+                picked.push(t);
+            }
+            for i in 0..picked.len() {
+                push_edge(&mut edges, &mut endpoints, v as u32, picked[i]);
+            }
+        }
+        drop(endpoints);
+
+        // Degrees of A + I (each node carries a self-loop).
+        let mut deg = vec![1u32; n];
+        for &(a, b) in &edges {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let inv_sqrt: Vec<f32> = deg.iter().map(|&d| 1.0 / (d as f32).sqrt()).collect();
+
+        // Counting pass -> row pointers, then a cursor fill.  Each
+        // undirected edge lands in both endpoint rows; the self-loop
+        // takes each row's first slot.
+        let mut rpt: Vec<i32> = Vec::with_capacity(n + 1);
+        rpt.push(0);
+        let mut acc = 0i32;
+        for &d in &deg {
+            acc += d as i32;
+            rpt.push(acc);
+        }
+        let nnz = acc as usize;
+        let mut col_ids = vec![0i32; nnz];
+        let mut vals = vec![0.0f32; nnz];
+        let mut cursor: Vec<i32> = rpt[..n].to_vec();
+        for v in 0..n {
+            let c = cursor[v] as usize;
+            col_ids[c] = v as i32;
+            vals[c] = inv_sqrt[v] * inv_sqrt[v];
+            cursor[v] += 1;
+        }
+        for &(a, b) in &edges {
+            let (a, b) = (a as usize, b as usize);
+            let w = inv_sqrt[a] * inv_sqrt[b];
+            let ca = cursor[a] as usize;
+            col_ids[ca] = b as i32;
+            vals[ca] = w;
+            cursor[a] += 1;
+            let cb = cursor[b] as usize;
+            col_ids[cb] = a as i32;
+            vals[cb] = w;
+            cursor[b] += 1;
+        }
+        LargeGraphBatch::from_csr_parts(n, rpt, col_ids, vals)
+    }
+}
+
+/// One-call convenience for benches and tests.
+pub fn power_law_graph(nodes: usize, attach: usize, seed: u64) -> anyhow::Result<LargeGraphBatch> {
+    PowerLawSpec::new(nodes, attach, seed).generate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        let a = power_law_graph(500, 3, 42).unwrap();
+        let b = power_law_graph(500, 3, 42).unwrap();
+        assert_eq!(a, b);
+        let c = power_law_graph(500, 3, 43).unwrap();
+        assert_ne!(a.csr().col_ids, c.csr().col_ids);
+    }
+
+    #[test]
+    fn adjacency_is_symmetric_normalized_with_self_loops() {
+        let g = power_law_graph(200, 2, 7).unwrap();
+        let csr = g.csr();
+        let n = g.nodes();
+        // Reconstruct (row, col) -> val and per-row degree.
+        let mut entries = std::collections::HashMap::new();
+        let mut deg = vec![0usize; n];
+        for r in 0..n {
+            let mut seen = HashSet::new();
+            for i in csr.rpt[r] as usize..csr.rpt[r + 1] as usize {
+                let c = csr.col_ids[i] as usize;
+                assert!(seen.insert(c), "duplicate column {c} in row {r}");
+                entries.insert((r, c), csr.vals[i]);
+                deg[r] += 1;
+            }
+            assert!(entries.contains_key(&(r, r)), "row {r} missing self-loop");
+        }
+        for (&(r, c), &v) in &entries {
+            // Symmetry of both pattern and value.
+            assert_eq!(entries.get(&(c, r)), Some(&v), "asymmetric at ({r},{c})");
+            // Â[r][c] = 1 / sqrt(deg(r) * deg(c)) with deg over A + I.
+            let want = 1.0 / ((deg[r] * deg[c]) as f32).sqrt();
+            assert!((v - want).abs() < 1e-6, "bad weight at ({r},{c})");
+        }
+        // Mean degree of A (without the self-loop) converges to 2m.
+        let mean = (g.nnz() - n) as f64 / n as f64;
+        assert!((mean - 4.0).abs() < 0.5, "mean degree {mean}");
+    }
+
+    #[test]
+    fn degree_distribution_is_heavy_tailed() {
+        let g = power_law_graph(20_000, 4, 1).unwrap();
+        // Preferential attachment concentrates mass on hubs: max degree
+        // far above the mean, and the log2 histogram keeps a long tail.
+        assert!(g.skew() > 5.0, "skew {} too flat for a power law", g.skew());
+        assert!(
+            g.degree_hist.len() >= 7,
+            "histogram spans {} buckets",
+            g.degree_hist.len()
+        );
+        // A uniform-degree graph would put ~everything in one bucket.
+        let top = *g.degree_hist.iter().max().unwrap();
+        assert!(top < g.nodes(), "degenerate degree histogram");
+    }
+}

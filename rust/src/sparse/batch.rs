@@ -245,6 +245,99 @@ impl PaddedEllBatch {
     }
 }
 
+/// One giant graph packed as a batch of one for the engine's CSR
+/// backend — the large-graph tier's dispatch unit (DESIGN.md §12).
+///
+/// Unlike the molecule buckets there is no padding dimension to
+/// amortize: the wrapped [`PaddedCsrBatch`] has `batch = 1`, `dim =
+/// nodes` and `nnz_cap` equal to the *exact* non-zero count, so the
+/// existing CSR kernel runs it unchanged and every slot is real. The
+/// packing also captures the degree profile (max degree, log2-degree
+/// histogram) once at construction — the skew statistics the
+/// degree-bucketed planner's behavior is judged against, without
+/// rescanning a million-row `rpt` per query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LargeGraphBatch {
+    csr: PaddedCsrBatch,
+    /// Row `r`'s out-degree histogram bucket is `floor(log2(deg)) + 1`
+    /// (`bucket 0` = isolated rows), so `degree_hist[b]` counts rows
+    /// with degree in `[2^(b-1), 2^b)`.
+    pub degree_hist: Vec<usize>,
+    pub max_degree: usize,
+}
+
+impl LargeGraphBatch {
+    /// Wrap one graph's CSR arrays (`rpt` of length `nodes + 1`,
+    /// `col_ids`/`vals` of length `rpt[nodes]`). Validates the row
+    /// pointers and column ids so the kernel's unchecked indexing is
+    /// safe by construction.
+    pub fn from_csr_parts(
+        nodes: usize,
+        rpt: Vec<i32>,
+        col_ids: Vec<i32>,
+        vals: Vec<f32>,
+    ) -> anyhow::Result<LargeGraphBatch> {
+        anyhow::ensure!(nodes > 0, "graph has no nodes");
+        anyhow::ensure!(rpt.len() == nodes + 1, "rpt length {} != nodes + 1", rpt.len());
+        anyhow::ensure!(rpt[0] == 0, "rpt must start at 0");
+        let mut degree_hist = Vec::new();
+        let mut max_degree = 0usize;
+        for r in 0..nodes {
+            anyhow::ensure!(rpt[r] <= rpt[r + 1], "rpt not monotone at row {r}");
+            let deg = (rpt[r + 1] - rpt[r]) as usize;
+            max_degree = max_degree.max(deg);
+            let bucket = (usize::BITS - deg.leading_zeros()) as usize;
+            if degree_hist.len() <= bucket {
+                degree_hist.resize(bucket + 1, 0);
+            }
+            degree_hist[bucket] += 1;
+        }
+        let nnz = rpt[nodes] as usize;
+        anyhow::ensure!(col_ids.len() == nnz, "col_ids length {} != nnz {nnz}", col_ids.len());
+        anyhow::ensure!(vals.len() == nnz, "vals length {} != nnz {nnz}", vals.len());
+        anyhow::ensure!(
+            col_ids.iter().all(|&c| (c as usize) < nodes && c >= 0),
+            "column id out of range"
+        );
+        Ok(LargeGraphBatch {
+            csr: PaddedCsrBatch {
+                batch: 1,
+                dim: nodes,
+                nnz_cap: nnz.max(1),
+                rpt,
+                col_ids,
+                vals,
+            },
+            degree_hist,
+            max_degree,
+        })
+    }
+
+    /// The batch-of-one CSR view the engine's `CsrKernel` dispatches.
+    pub fn csr(&self) -> &PaddedCsrBatch {
+        &self.csr
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.csr.dim
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.csr.rpt[self.csr.dim] as usize
+    }
+
+    /// Degree skew `max_degree / mean_degree` — > ~3 is the power-law
+    /// regime where the degree-bucketed row split pays (DESIGN.md §12).
+    pub fn skew(&self) -> f64 {
+        let mean = self.nnz() as f64 / self.nodes() as f64;
+        if mean > 0.0 {
+            self.max_degree as f64 / mean
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Densified adjacency batch `[B, dim, dim]` — the GEMM baseline input.
 pub fn densify_batch(mats: &[Coo], dim: usize) -> Vec<f32> {
     let mut out = vec![0f32; mats.len() * dim * dim];
@@ -397,6 +490,33 @@ mod tests {
                 ell.vals.iter().filter(|v| **v != 0.0).count()
             );
         }
+    }
+
+    #[test]
+    fn large_graph_batch_wraps_exact_csr_and_profiles_degrees() {
+        // 5-node graph: degrees [3, 1, 0, 2, 1].
+        let rpt = vec![0, 3, 4, 4, 6, 7];
+        let col_ids = vec![0, 1, 3, 0, 2, 4, 3];
+        let vals = vec![1.0f32; 7];
+        let g = LargeGraphBatch::from_csr_parts(5, rpt, col_ids, vals).unwrap();
+        assert_eq!(g.nodes(), 5);
+        assert_eq!(g.nnz(), 7);
+        assert_eq!(g.max_degree, 3);
+        // buckets: 0 -> deg 0 (1 row), 1 -> deg 1 (2 rows), 2 -> deg
+        // 2..3 (2 rows).
+        assert_eq!(g.degree_hist, vec![1, 2, 2]);
+        assert!((g.skew() - 3.0 / (7.0 / 5.0)).abs() < 1e-12);
+        let csr = g.csr();
+        assert_eq!((csr.batch, csr.dim, csr.nnz_cap), (1, 5, 7));
+
+        // Validation rejects malformed parts.
+        assert!(LargeGraphBatch::from_csr_parts(2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(
+            LargeGraphBatch::from_csr_parts(2, vec![0, 2, 1], vec![0, 1], vec![1.0; 2]).is_err()
+        );
+        assert!(
+            LargeGraphBatch::from_csr_parts(2, vec![0, 1, 2], vec![0, 5], vec![1.0; 2]).is_err()
+        );
     }
 
     #[test]

@@ -107,6 +107,18 @@ pub enum KernelVariant {
     /// for `n % LANES`). The default.
     #[default]
     Vectorized,
+    /// Cache-tiled twin of [`KernelVariant::Vectorized`] for the
+    /// large-graph regime (DESIGN.md §12): forward dispatches run
+    /// [`BatchedSpmm::spmm_sample_tiled`], which walks the dense
+    /// feature matrix in column tiles (width from `BSPMM_TILE_COLS` or
+    /// the L2 heuristic) so the gathered `rhs` rows stay hot across the
+    /// non-zeros of a tile — GE-SpMM's row-reuse idea on CPU caches.
+    /// Backends without a tiled override, and all transpose dispatches,
+    /// fall back to the vectorized loops. Tiling regroups only
+    /// independent output elements (each element's accumulation chain
+    /// over the non-zeros is untouched), so output is bit-identical to
+    /// the other variants for any tile width.
+    Tiled,
 }
 
 /// Right-hand-side operand layout for one engine dispatch.
@@ -258,6 +270,37 @@ pub trait BatchedSpmm: Sync {
         n: usize,
         out: &mut [f32],
     );
+
+    /// Cache-tiled twin of [`spmm_sample`](BatchedSpmm::spmm_sample)
+    /// ([`KernelVariant::Tiled`], DESIGN.md §12): iterate the sample's
+    /// non-zeros once per column tile of the dense operand so the
+    /// gathered `rhs` rows stay resident in cache across a tile. Must
+    /// be bit-identical to the untiled form — tiling only regroups
+    /// independent output elements. The default delegates to the
+    /// vectorized kernel; only backends where tiling pays (row-major
+    /// CSR over large graphs) override it.
+    fn spmm_sample_tiled(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.spmm_sample(b, rhs, n, out)
+    }
+
+    /// Tiled twin of [`spmm_sample_rows`](BatchedSpmm::spmm_sample_rows)
+    /// — the row-blocked form the pool's (sample, row-block) tasks run
+    /// under [`KernelVariant::Tiled`]. Same bit-identity contract and
+    /// vectorized default as
+    /// [`spmm_sample_tiled`](BatchedSpmm::spmm_sample_tiled).
+    fn spmm_sample_rows_tiled(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.spmm_sample_rows(b, row0, rhs, n, out)
+    }
+
+    /// Real non-zeros of sample `b` restricted to output rows
+    /// `r0..r1`, in O(1), when the layout can answer that (CSR: a row
+    /// pointer difference). `None` means the pool's planner falls back
+    /// to equal-row block boundaries; `Some` enables the
+    /// degree-bucketed nnz-balanced row split for single-giant-graph
+    /// dispatches (DESIGN.md §12).
+    fn rows_nnz(&self, _b: usize, _r0: usize, _r1: usize) -> Option<usize> {
+        None
+    }
 }
 
 /// References to kernels are kernels: this is what lets the executor
@@ -333,5 +376,24 @@ impl<K: BatchedSpmm + ?Sized> BatchedSpmm for &K {
         out: &mut [f32],
     ) {
         (**self).spmm_sample_t_rows_scalar(b, row0, rhs, n, out)
+    }
+
+    fn spmm_sample_tiled(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_tiled(b, rhs, n, out)
+    }
+
+    fn spmm_sample_rows_tiled(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        (**self).spmm_sample_rows_tiled(b, row0, rhs, n, out)
+    }
+
+    fn rows_nnz(&self, b: usize, r0: usize, r1: usize) -> Option<usize> {
+        (**self).rows_nnz(b, r0, r1)
     }
 }

@@ -308,6 +308,35 @@ mod tests {
     }
 
     #[test]
+    fn tiled_variant_is_bitwise_identical_to_vectorized() {
+        // KernelVariant::Tiled through the full executor path — serial
+        // fast path, pooled tasks, and both transpose forms (transpose
+        // falls back to the vectorized loops) — must match the default
+        // variant bit for bit (DESIGN.md §12).
+        use crate::sparse::batch::PaddedCsrBatch;
+        use crate::sparse::engine::kernels::CsrKernel;
+        let mut rng = Rng::new(0x71D);
+        let (batch, dim, nb) = (7usize, 16usize, 11usize);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, 3), batch);
+        let csr = PaddedCsrBatch::pack(&mats, dim, dim * 3).unwrap();
+        let dense = random_dense_batch(&mut rng, batch, dim, nb);
+        let k = CsrKernel::new(&csr).with_tile_cols(4);
+        let vec_fwd = Executor::serial().spmm(&k, Rhs::PerSample(&dense), nb).unwrap();
+        let vec_bwd = Executor::serial()
+            .spmm_t(&k, Rhs::PerSample(&dense), nb)
+            .unwrap();
+        for threads in [1, 4] {
+            let tiled =
+                Executor::with_variant(threads, SchedPolicy::WorkStealing, KernelVariant::Tiled);
+            assert_eq!(tiled.variant(), KernelVariant::Tiled);
+            let tf = tiled.spmm(&k, Rhs::PerSample(&dense), nb).unwrap();
+            let tb = tiled.spmm_t(&k, Rhs::PerSample(&dense), nb).unwrap();
+            assert_eq!(tf, vec_fwd, "threads={threads}");
+            assert_eq!(tb, vec_bwd, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn shared_handle_reuses_one_pool() {
         let (st, dense) = workload(6, 8, 4);
         let k = StKernel::new(&st);

@@ -48,6 +48,34 @@ use crate::sparse::batch::{PaddedCsrBatch, PaddedEllBatch, PaddedStBatch};
 /// blocks the compiler can keep in registers.
 pub const LANES: usize = 8;
 
+/// Default column-tile width of the cache-tiled CSR path
+/// ([`KernelVariant::Tiled`], DESIGN.md §12). 256 f32 columns = 1 KiB
+/// per dense row, so a tile keeps roughly 256 gathered `rhs` rows
+/// resident in a 256 KiB L2 — the regime where GE-SpMM-style row reuse
+/// pays on 10^5–10^6-node power-law graphs. Tiny-graph dispatches
+/// (feature widths ≤ the tile) degenerate to the untiled loop, so the
+/// default is safe to leave on everywhere.
+///
+/// [`KernelVariant::Tiled`]: super::KernelVariant::Tiled
+pub const DEFAULT_TILE_COLS: usize = 256;
+
+/// Resolve the process-wide column-tile width: `BSPMM_TILE_COLS` when
+/// set to a positive integer, else [`DEFAULT_TILE_COLS`]; either way
+/// clamped to at least [`LANES`] so a tile never degenerates below one
+/// vector block. Read once per process (the env var is a launch-time
+/// calibration knob, not a per-dispatch one).
+pub fn tile_cols_from_env() -> usize {
+    static TILE_COLS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *TILE_COLS.get_or_init(|| {
+        std::env::var("BSPMM_TILE_COLS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or(DEFAULT_TILE_COLS)
+            .max(LANES)
+    })
+}
+
 /// `dst[l] += val * src[l]` over one fixed-width block. The fixed
 /// `[f32; LANES]` shape is what lets the compiler emit one vector
 /// multiply-add sequence with no bounds checks or trip-count logic.
@@ -294,13 +322,52 @@ impl BatchedSpmm for StKernel<'_> {
 /// CSR backend (paper Fig. 4): row-major, race-free by construction.
 /// Padded rows repeat the final row pointer, so their inner loop is
 /// empty.
+///
+/// The only backend with a real cache-tiled override
+/// ([`BatchedSpmm::spmm_sample_tiled`], DESIGN.md §12): its row-major
+/// non-zero order makes tiling the dense operand's columns a pure
+/// regrouping, and its row pointers answer the planner's
+/// [`BatchedSpmm::rows_nnz`] range queries in O(1) — the two hooks the
+/// large-graph tier rides on.
 pub struct CsrKernel<'a> {
     csr: &'a PaddedCsrBatch,
+    /// Column-tile width of the tiled path; `0` = resolve from
+    /// `BSPMM_TILE_COLS` / the L2 heuristic at dispatch time.
+    tile_cols: usize,
+    /// Batch-total real nnz, summed once at construction so `real_nnz`
+    /// (the cost model's FLOP numerator) stays O(1) per call even on
+    /// raw views over million-row graphs (DESIGN.md §10).
+    total_nnz: usize,
 }
 
 impl<'a> CsrKernel<'a> {
     pub fn new(csr: &'a PaddedCsrBatch) -> CsrKernel<'a> {
-        CsrKernel { csr }
+        let m1 = csr.dim + 1;
+        let total_nnz = (0..csr.batch)
+            .map(|b| csr.rpt[b * m1 + csr.dim] as usize)
+            .sum();
+        CsrKernel {
+            csr,
+            tile_cols: 0,
+            total_nnz,
+        }
+    }
+
+    /// Pin an explicit column-tile width for the tiled path (any value
+    /// ≥ 1; the parity tests sweep degenerate widths like 1 and 7).
+    /// Without this, the width comes from [`tile_cols_from_env`].
+    pub fn with_tile_cols(mut self, tile_cols: usize) -> CsrKernel<'a> {
+        self.tile_cols = tile_cols.max(1);
+        self
+    }
+
+    #[inline]
+    fn resolve_tile_cols(&self) -> usize {
+        if self.tile_cols > 0 {
+            self.tile_cols
+        } else {
+            tile_cols_from_env()
+        }
     }
 }
 
@@ -322,10 +389,8 @@ impl BatchedSpmm for CsrKernel<'_> {
     }
 
     fn real_nnz(&self) -> usize {
-        let m1 = self.csr.dim + 1;
-        (0..self.csr.batch)
-            .map(|b| self.csr.rpt[b * m1 + self.csr.dim] as usize)
-            .sum()
+        // O(1): summed once at construction (DESIGN.md §10).
+        self.total_nnz
     }
 
     fn spmm_sample(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
@@ -398,6 +463,78 @@ impl BatchedSpmm for CsrKernel<'_> {
                 axpy_row(&mut out[(cid - row0) * n..(cid - row0 + 1) * n], val, src);
             }
         }
+    }
+
+    fn spmm_sample_tiled(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // GE-SpMM's row reuse as column tiles (DESIGN.md §12): the
+        // outer loop fixes a column range [j0, j1) of the dense
+        // operand, and the whole row/nnz traversal runs inside it, so
+        // the `rhs` rows gathered for a tile are touched again by every
+        // non-zero sharing a column — before they can be evicted. Each
+        // output element (r, j) lives in exactly one tile and receives
+        // its contributions in row-pointer order, identical to the
+        // untiled loop, so the regrouping is bit-exact for any width.
+        let tc = self.resolve_tile_cols();
+        if tc >= n {
+            return self.spmm_sample(b, rhs, n, out);
+        }
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + tc).min(n);
+            for r in 0..self.csr.dim {
+                let dst = &mut out[r * n + j0..r * n + j1];
+                for i in rpt[r] as usize..rpt[r + 1] as usize {
+                    let val = self.csr.vals[base + i];
+                    let cid = self.csr.col_ids[base + i] as usize;
+                    axpy_row(dst, val, &rhs[cid * n + j0..cid * n + j1]);
+                }
+            }
+            j0 = j1;
+        }
+    }
+
+    fn spmm_sample_rows_tiled(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        // The row-blocked form the pool's degree-bucketed tasks run:
+        // same column tiling, restricted to output rows [row0, row1).
+        let tc = self.resolve_tile_cols();
+        if tc >= n {
+            return self.spmm_sample_rows(b, row0, rhs, n, out);
+        }
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + tc).min(n);
+            for r in row0..row1 {
+                let dst = &mut out[(r - row0) * n + j0..(r - row0) * n + j1];
+                for i in rpt[r] as usize..rpt[r + 1] as usize {
+                    let val = self.csr.vals[base + i];
+                    let cid = self.csr.col_ids[base + i] as usize;
+                    axpy_row(dst, val, &rhs[cid * n + j0..cid * n + j1]);
+                }
+            }
+            j0 = j1;
+        }
+    }
+
+    fn rows_nnz(&self, b: usize, r0: usize, r1: usize) -> Option<usize> {
+        // Row pointers make any row range an O(1) difference — the
+        // oracle the planner's degree-bucketed nnz-balanced row split
+        // binary-searches against (DESIGN.md §12).
+        let m1 = self.csr.dim + 1;
+        Some((self.csr.rpt[b * m1 + r1] - self.csr.rpt[b * m1 + r0]) as usize)
     }
 
     fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
@@ -505,18 +642,24 @@ pub struct EllKernel<'a> {
     /// Per-sample real-nnz counts cached at pack time, when the view's
     /// backing batch carries them: sample `b`'s count sits at
     /// `nnz[nnz_offset + b * nnz_stride]`. `None` (raw-array views)
-    /// falls back to the O(rows * width) scan.
+    /// falls back to the counts in `owned_nnz`.
     nnz: Option<&'a [u32]>,
     nnz_offset: usize,
     nnz_stride: usize,
+    /// Construction-time per-sample counts for raw-array views, which
+    /// have no pack-time cache to borrow: [`EllKernel::new`] scans the
+    /// value planes exactly once, so `sample_nnz` stays O(1) on every
+    /// later cost-model query instead of rescanning `rows * width`
+    /// slots per dispatch (DESIGN.md §10). Empty when `nnz` borrows a
+    /// pack-time cache.
+    owned_nnz: Vec<u32>,
 }
 
 impl<'a> EllKernel<'a> {
-    /// Contiguous `[batch, rows, width]` view over raw ELL arrays. No
-    /// cached nnz counts travel with raw arrays, so `sample_nnz` scans;
-    /// prefer [`EllKernel::from_padded`] / [`EllKernel::channel`] on the
-    /// packed formats, which count once at pack time.
-    pub fn new(
+    /// The raw contiguous view with no nnz source attached — the shared
+    /// scaffolding [`EllKernel::new`] / [`EllKernel::from_padded`]
+    /// finish off with their respective count caches.
+    fn view(
         cols: &'a [i32],
         vals: &'a [f32],
         batch: usize,
@@ -536,13 +679,38 @@ impl<'a> EllKernel<'a> {
             nnz: None,
             nnz_offset: 0,
             nnz_stride: 1,
+            owned_nnz: Vec::new(),
         }
+    }
+
+    /// Contiguous `[batch, rows, width]` view over raw ELL arrays. Raw
+    /// arrays carry no pack-time nnz cache, so construction counts each
+    /// sample's real non-zeros once — one O(batch · rows · width) scan
+    /// here instead of one per cost-model query on every dispatch.
+    pub fn new(
+        cols: &'a [i32],
+        vals: &'a [f32],
+        batch: usize,
+        rows: usize,
+        width: usize,
+    ) -> EllKernel<'a> {
+        let mut k = EllKernel::view(cols, vals, batch, rows, width);
+        let per = rows * width;
+        k.owned_nnz = (0..batch)
+            .map(|b| {
+                vals[b * per..(b + 1) * per]
+                    .iter()
+                    .filter(|v| **v != 0.0)
+                    .count() as u32
+            })
+            .collect();
+        k
     }
 
     pub fn from_padded(ell: &'a PaddedEllBatch) -> EllKernel<'a> {
         EllKernel {
             nnz: Some(&ell.nnz_per_sample),
-            ..EllKernel::new(&ell.cols, &ell.vals, ell.batch, ell.dim, ell.width)
+            ..EllKernel::view(&ell.cols, &ell.vals, ell.batch, ell.dim, ell.width)
         }
     }
 
@@ -563,6 +731,7 @@ impl<'a> EllKernel<'a> {
             nnz: Some(&mb.ell_nnz),
             nnz_offset: ch,
             nnz_stride: mb.channels,
+            owned_nnz: Vec::new(),
         }
     }
 }
@@ -589,15 +758,8 @@ impl BatchedSpmm for EllKernel<'_> {
             Some(counts) => (0..self.batch)
                 .map(|b| counts[self.nnz_offset + b * self.nnz_stride] as usize)
                 .sum(),
-            None => (0..self.batch)
-                .map(|b| {
-                    let base = self.offset + b * self.stride;
-                    self.vals[base..base + self.rows * self.width]
-                        .iter()
-                        .filter(|v| **v != 0.0)
-                        .count()
-                })
-                .sum(),
+            // Raw views: counted once at construction (DESIGN.md §10).
+            None => self.owned_nnz.iter().map(|&c| c as usize).sum(),
         }
     }
 
@@ -637,15 +799,10 @@ impl BatchedSpmm for EllKernel<'_> {
 
     fn sample_nnz(&self, b: usize) -> usize {
         match self.nnz {
-            // O(1): counted at pack time (DESIGN.md §10).
+            // O(1) either way: counted at pack time, or once at view
+            // construction for raw arrays (DESIGN.md §10).
             Some(counts) => counts[self.nnz_offset + b * self.nnz_stride] as usize,
-            None => {
-                let base = self.offset + b * self.stride;
-                self.vals[base..base + self.rows * self.width]
-                    .iter()
-                    .filter(|v| **v != 0.0)
-                    .count()
-            }
+            None => self.owned_nnz[b] as usize,
         }
     }
 
@@ -1202,6 +1359,73 @@ mod tests {
             }
             assert_eq!(vec_out, ref_out, "n={n}");
         }
+    }
+
+    #[test]
+    fn tiled_csr_is_bit_identical_across_tile_widths() {
+        // Column tiling regroups only independent output elements, so
+        // every width — including degenerate 1-wide tiles and tiles
+        // wider than the feature dimension — must reproduce the untiled
+        // result bit for bit, in both the full-sample and row-blocked
+        // forms (DESIGN.md §12).
+        let mut rng = Rng::new(0x7137);
+        let (dim, z, batch, nb) = (17usize, 3usize, 3usize, 13usize);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, z), batch);
+        let csr = PaddedCsrBatch::pack(&mats, dim, dim * z).unwrap();
+        let rhs: Vec<f32> = (0..dim * nb).map(|_| rng.normal()).collect();
+        let plain = CsrKernel::new(&csr);
+        let cuts = [0usize, 2, 5, 11, dim];
+        for tc in [1usize, 3, 7, LANES, nb, 64, 4096] {
+            let tiled = CsrKernel::new(&csr).with_tile_cols(tc);
+            for b in 0..batch {
+                let mut want = vec![0.5f32; dim * nb];
+                plain.spmm_sample(b, &rhs, nb, &mut want);
+                let mut got = vec![0.5f32; dim * nb];
+                tiled.spmm_sample_tiled(b, &rhs, nb, &mut got);
+                assert_eq!(want, got, "tc={tc} sample {b}");
+                let mut blocked = vec![0.5f32; dim * nb];
+                for w in cuts.windows(2) {
+                    let block = &mut blocked[w[0] * nb..w[1] * nb];
+                    tiled.spmm_sample_rows_tiled(b, w[0], &rhs, nb, block);
+                }
+                assert_eq!(want, blocked, "tc={tc} sample {b} row-blocked");
+            }
+        }
+        // The default (no override) resolves env/heuristic and must
+        // stay bit-identical too.
+        let mut want = vec![0f32; dim * nb];
+        plain.spmm_sample(0, &rhs, nb, &mut want);
+        let mut got = vec![0f32; dim * nb];
+        plain.spmm_sample_tiled(0, &rhs, nb, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn csr_rows_nnz_is_exact_on_every_range() {
+        let mut rng = Rng::new(0xD3);
+        let dim = 19;
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, 2), 4);
+        let csr = PaddedCsrBatch::pack(&mats, dim, dim * 2).unwrap();
+        let k = CsrKernel::new(&csr);
+        for b in 0..4 {
+            for r0 in 0..dim {
+                for r1 in r0..=dim {
+                    // Recount from the COO rows.
+                    let want = mats[b]
+                        .row_ids
+                        .iter()
+                        .filter(|&&r| (r as usize) >= r0 && (r as usize) < r1)
+                        .count();
+                    assert_eq!(k.rows_nnz(b, r0, r1), Some(want), "b={b} [{r0},{r1})");
+                }
+            }
+            assert_eq!(k.rows_nnz(b, 0, dim), Some(k.sample_nnz(b)));
+        }
+        // The construction-time total must match the per-sample sums.
+        assert_eq!(
+            k.real_nnz(),
+            (0..4).map(|b| k.sample_nnz(b)).sum::<usize>()
+        );
     }
 
     #[test]

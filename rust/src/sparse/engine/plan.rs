@@ -37,6 +37,13 @@
 //!   geometry changes build a new entry, parameter updates never
 //!   invalidate a plan.
 //!
+//! Plans describe *what* runs (backend, transpose form, shapes) —
+//! never *how* the executor runs it: the kernel variant
+//! (scalar / vectorized / cache-tiled, DESIGN.md §10/§12) is an
+//! executor-level setting, deliberately absent from [`DispatchDesc`]
+//! and [`GeometryKey`], so the same cached plan replays bit-identically
+//! under any variant.
+//!
 //! Determinism: planning changes where buffers live and which backend
 //! runs — never an element's accumulation order — so planned execution
 //! is bit-identical to the direct path for every backend × thread

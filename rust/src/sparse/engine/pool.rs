@@ -16,8 +16,14 @@
 //!    batch into near-equal-cost [`Task`]s — contiguous sample chunks,
 //!    plus per-sample *row blocks* when a single sample dominates (that
 //!    is what lets a batch-1 `dW = X^T·dU` dispatch use every worker).
-//!    Uniform batches with enough samples keep the legacy contiguous
-//!    count split: at most one task per worker, the static fast path.
+//!    When the kernel answers row-range nnz queries in O(1)
+//!    ([`BatchedSpmm::rows_nnz`], CSR row pointers), the row-block
+//!    boundaries are *degree-bucketed* — placed where the non-zero mass
+//!    divides evenly ([`balanced_row_cuts`]) rather than the row count,
+//!    which is what keeps a single power-law giant graph load-balanced
+//!    (DESIGN.md §12). Uniform batches with enough samples keep the
+//!    legacy contiguous count split: at most one task per worker, the
+//!    static fast path.
 //! 2. **Assign**: tasks are handed to workers as contiguous,
 //!    count-balanced segments. The assignment is deliberately *not*
 //!    cost-balanced — the cost model only sets task granularity, and
@@ -125,19 +131,95 @@ pub fn plan_tasks(
     workers: usize,
     policy: SchedPolicy,
 ) -> Vec<Task> {
+    plan_tasks_with(costs, out_rows, workers, policy, &|_, _, _| None)
+}
+
+/// [`plan_tasks`] with a per-sample row-range nnz oracle
+/// (`row_nnz(s, r0, r1)` = real non-zeros of sample `s` in output rows
+/// `r0..r1`, O(1) on CSR via [`BatchedSpmm::rows_nnz`]). When the
+/// oracle answers, dominant samples are row-split at *nnz-balanced*
+/// boundaries instead of equal row counts — the degree-bucketed task
+/// shaping that keeps power-law graphs load-balanced (Accel-GCN's
+/// degree-aware warp allocation as task sizing, DESIGN.md §12). Blocks
+/// stay contiguous row-range partitions, so the split is bit-identical
+/// to any other by the §9 argument; only the balance changes.
+pub fn plan_tasks_with(
+    costs: &[u64],
+    out_rows: usize,
+    workers: usize,
+    policy: SchedPolicy,
+    row_nnz: &dyn Fn(usize, usize, usize) -> Option<usize>,
+) -> Vec<Task> {
     let mut tasks = Vec::new();
-    plan_tasks_into(costs, out_rows, workers, policy, &mut tasks);
+    plan_tasks_into(costs, out_rows, workers, policy, row_nnz, &mut tasks);
     tasks
 }
 
-/// [`plan_tasks`] writing into a caller-held buffer — the pool reuses
-/// one task vector across dispatches (under the dispatch lock) so
-/// steady-state dispatches allocate no scheduling metadata.
+/// Boundaries of `k` contiguous row blocks over `0..out_rows` with
+/// near-equal non-zero mass: returns `k + 1` strictly increasing cuts
+/// starting at 0 and ending at `out_rows`. `cum_nnz(r)` is the non-zero
+/// count of rows `0..r` (monotone; CSR answers it in O(1)). Cut `i` is
+/// binary-searched to where the cumulative mass crosses `i/k` of the
+/// total, then snapped to whichever neighboring row lands closer to
+/// that target — so a power-law hub's heavy head ends up in narrow
+/// blocks and the long sparse tail in wide ones, and no block exceeds
+/// its fair share by more than one (indivisible) row's mass. Every
+/// block keeps at least one row, which bounds the search window and
+/// guarantees the partition regardless of how degenerate the profile
+/// is (all mass in one row, trailing empty rows, ...).
+pub fn balanced_row_cuts(
+    k: usize,
+    out_rows: usize,
+    cum_nnz: &dyn Fn(usize) -> usize,
+) -> Vec<usize> {
+    let k = k.clamp(1, out_rows.max(1));
+    let total = cum_nnz(out_rows) as u64;
+    let kk = k as u64;
+    let mut cuts = Vec::with_capacity(k + 1);
+    cuts.push(0usize);
+    let mut prev = 0usize;
+    for i in 1..k {
+        // Scaled target: cut where k * cum crosses i * total (exact
+        // integer arithmetic; cum * k stays far below u64 range).
+        let want = i as u64 * total;
+        // Smallest r in [prev + 1, out_rows - (k - i)] with
+        // k * cum_nnz(r) >= want; the upper clamp reserves one row for
+        // each remaining block.
+        let mut lo = prev + 1;
+        let mut hi = out_rows - (k - i);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if cum_nnz(mid) as u64 * kk >= want {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        // Snap to the nearer side of the crossing (ties to the smaller
+        // row, keeping heavy rows out of the earlier block).
+        let here = cum_nnz(lo) as u64 * kk;
+        if lo > prev + 1 && here > want {
+            let before = cum_nnz(lo - 1) as u64 * kk;
+            if want - before <= here - want {
+                lo -= 1;
+            }
+        }
+        cuts.push(lo);
+        prev = lo;
+    }
+    cuts.push(out_rows);
+    cuts
+}
+
+/// [`plan_tasks_with`] writing into a caller-held buffer — the pool
+/// reuses one task vector across dispatches (under the dispatch lock)
+/// so steady-state dispatches allocate no scheduling metadata.
 fn plan_tasks_into(
     costs: &[u64],
     out_rows: usize,
     workers: usize,
     policy: SchedPolicy,
+    row_nnz: &dyn Fn(usize, usize, usize) -> Option<usize>,
     tasks: &mut Vec<Task>,
 ) {
     tasks.clear();
@@ -170,13 +252,35 @@ fn plan_tasks_into(
             // scatter-shaped kernels rescan the sample's non-zeros per
             // block, so every extra block is a full extra scan.
             let k = (c.div_ceil(target) as usize).min(out_rows).min(t);
-            for i in 0..k {
-                tasks.push(Task {
-                    s0: s as u32,
-                    s1: (s + 1) as u32,
-                    row0: (i * out_rows / k) as u32,
-                    row1: ((i + 1) * out_rows / k) as u32,
-                });
+            // Degree-bucketed boundaries (DESIGN.md §12): when the
+            // kernel can answer row-range nnz queries in O(1), place
+            // the cuts where the non-zero mass divides evenly instead
+            // of where the row count does — on a power-law giant graph
+            // the equal-row split hands one worker all the hubs.
+            let balanced = row_nnz(s, 0, out_rows).filter(|&tot| tot > 0 && k > 1);
+            match balanced {
+                Some(_) => {
+                    let cum = |r: usize| row_nnz(s, 0, r).unwrap_or(0);
+                    let cuts = balanced_row_cuts(k, out_rows, &cum);
+                    for w in cuts.windows(2) {
+                        tasks.push(Task {
+                            s0: s as u32,
+                            s1: (s + 1) as u32,
+                            row0: w[0] as u32,
+                            row1: w[1] as u32,
+                        });
+                    }
+                }
+                None => {
+                    for i in 0..k {
+                        tasks.push(Task {
+                            s0: s as u32,
+                            s1: (s + 1) as u32,
+                            row0: (i * out_rows / k) as u32,
+                            row1: ((i + 1) * out_rows / k) as u32,
+                        });
+                    }
+                }
             }
             open = s + 1;
             acc = 0;
@@ -439,6 +543,15 @@ impl WorkerPool {
                     (KernelVariant::Scalar, true) => {
                         kernel.spmm_sample_t_scalar(s, rhs_s, n, sample_out)
                     }
+                    (KernelVariant::Tiled, false) => {
+                        kernel.spmm_sample_tiled(s, rhs_s, n, sample_out)
+                    }
+                    // Tiling targets the forward row-major gather; the
+                    // transpose scatter falls back to the vectorized
+                    // loops (bit-identical either way).
+                    (KernelVariant::Tiled, true) => {
+                        kernel.spmm_sample_t(s, rhs_s, n, sample_out)
+                    }
                 }
             }
             return;
@@ -455,7 +568,18 @@ impl WorkerPool {
             static_split_into(b, out_rows, self.workers, tasks);
         } else {
             sample_costs_into(kernel, out_rows, costs);
-            plan_tasks_into(costs, out_rows, self.workers, self.policy, tasks);
+            // Row-range nnz oracle for degree-bucketed row splits.
+            // `rows_nnz` describes the kernel's forward output rows, so
+            // transpose dispatches (out rows = A's columns) plan with
+            // the equal-row fallback.
+            let oracle = |s: usize, r0: usize, r1: usize| {
+                if transpose {
+                    None
+                } else {
+                    kernel.rows_nnz(s, r0, r1)
+                }
+            };
+            plan_tasks_into(costs, out_rows, self.workers, self.policy, &oracle, tasks);
         }
         let ntasks = tasks.len();
         self.tasks.fetch_add(ntasks as u64, Ordering::Relaxed);
@@ -616,7 +740,7 @@ fn run_job(job: &Job, me: usize, shared: &Shared) {
 /// construction in [`plan_tasks`]) and each task is claimed exactly
 /// once, so no two threads ever touch the same element.
 fn exec_task(job: &Job, task: &Task) {
-    use KernelVariant::{Scalar, Vectorized};
+    use KernelVariant::{Scalar, Tiled, Vectorized};
     let n = job.n;
     let full = task.row0 == 0 && task.row1 as usize == job.out_rows;
     let row0 = task.row0 as usize;
@@ -635,6 +759,13 @@ fn exec_task(job: &Job, task: &Task) {
             (Scalar, false, false) => job.kernel.spmm_sample_rows_scalar(s, row0, rhs, n, out),
             (Scalar, true, true) => job.kernel.spmm_sample_t_scalar(s, rhs, n, out),
             (Scalar, true, false) => job.kernel.spmm_sample_t_rows_scalar(s, row0, rhs, n, out),
+            (Tiled, false, true) => job.kernel.spmm_sample_tiled(s, rhs, n, out),
+            (Tiled, false, false) => job.kernel.spmm_sample_rows_tiled(s, row0, rhs, n, out),
+            // Tiling targets the forward row-major gather; transpose
+            // dispatches fall back to the vectorized scatter loops
+            // (bit-identical either way).
+            (Tiled, true, true) => job.kernel.spmm_sample_t(s, rhs, n, out),
+            (Tiled, true, false) => job.kernel.spmm_sample_t_rows(s, row0, rhs, n, out),
         }
     }
 }
@@ -738,5 +869,170 @@ mod tests {
     fn empty_batch_plans_no_tasks() {
         assert!(plan_tasks(&[], 8, 4, SchedPolicy::WorkStealing).is_empty());
         assert!(plan_tasks(&[5], 0, 4, SchedPolicy::WorkStealing).is_empty());
+    }
+
+    /// A power-law per-row nnz profile: row degrees ~ heavy-tailed with
+    /// a handful of hubs, the Barabási–Albert shape the large-graph
+    /// tier dispatches (DESIGN.md §12).
+    fn power_law_rows(rng: &mut crate::util::rng::Rng, rows: usize) -> Vec<usize> {
+        (0..rows)
+            .map(|_| {
+                if rng.bool(0.03) {
+                    rng.range(200, 2000) // hub
+                } else {
+                    rng.range(0, 8) // tail (empty rows allowed)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn balanced_cuts_partition_and_balance_power_law_profiles() {
+        let mut rng = crate::util::rng::Rng::new(0xBA1A);
+        for case in 0..100 {
+            let rows = rng.range(1, 400);
+            let k = rng.range(1, 16);
+            let deg = power_law_rows(&mut rng, rows);
+            let mut cum = vec![0usize; rows + 1];
+            for r in 0..rows {
+                cum[r + 1] = cum[r] + deg[r];
+            }
+            let total = cum[rows];
+            let cuts = balanced_row_cuts(k, rows, &|r| cum[r]);
+            // Strictly increasing boundaries from 0 to rows: a
+            // contiguous partition with no empty block.
+            assert_eq!(*cuts.first().unwrap(), 0, "case {case}");
+            assert_eq!(*cuts.last().unwrap(), rows, "case {case}");
+            assert!(cuts.windows(2).all(|w| w[0] < w[1]), "case {case}: {cuts:?}");
+            assert_eq!(cuts.len() - 1, k.min(rows), "case {case}");
+            // Balance: no block exceeds its fair share by more than the
+            // largest single row (a row is indivisible).
+            let maxrow = deg.iter().copied().max().unwrap_or(0);
+            let keff = (cuts.len() - 1) as usize;
+            for w in cuts.windows(2) {
+                let mass = cum[w[1]] - cum[w[0]];
+                assert!(
+                    mass <= total.div_ceil(keff) + maxrow,
+                    "case {case}: block {w:?} mass {mass} vs total {total} / k {keff}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degree_bucketed_plans_partition_and_bound_block_mass() {
+        // plan_tasks_with + a power-law oracle must (a) still partition
+        // the output exactly, and (b) bound every row block's non-zero
+        // mass by its fair share plus one indivisible row.
+        let mut rng = crate::util::rng::Rng::new(0xACCE1);
+        for case in 0..60 {
+            let rows = rng.range(32, 300);
+            let workers = rng.range(2, 12);
+            let deg = power_law_rows(&mut rng, rows);
+            let mut cum = vec![0u64; rows + 1];
+            for r in 0..rows {
+                cum[r + 1] = cum[r] + deg[r] as u64;
+            }
+            let total = cum[rows] as usize;
+            // Batch of one giant sample — the large-graph dispatch shape.
+            let costs = vec![total as u64 + rows as u64 + 1];
+            let oracle = |s: usize, r0: usize, r1: usize| {
+                assert_eq!(s, 0);
+                Some((cum[r1] - cum[r0]) as usize)
+            };
+            let bucketed = plan_tasks_with(
+                &costs,
+                rows,
+                workers,
+                SchedPolicy::WorkStealing,
+                &oracle,
+            );
+            assert_partition(&bucketed, 1, rows);
+            let maxrow = deg.iter().copied().max().unwrap_or(0);
+            let k = bucketed.len();
+            for t in &bucketed {
+                let mass = (cum[t.row1 as usize] - cum[t.row0 as usize]) as usize;
+                assert!(
+                    mass <= total.div_ceil(k) + maxrow,
+                    "case {case}: block {t:?} mass {mass}, total {total}, k {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degree_bucketed_split_isolates_a_front_hub() {
+        // The shape the equal-row fallback handles worst: one hub row
+        // holding ~all the mass at the front of a long sparse tail.
+        // Equal-row boundaries hand the hub's block a quarter of the
+        // remaining rows on top of the hub; nnz-balanced boundaries cut
+        // right after the hub.
+        let rows = 128usize;
+        let workers = 4usize;
+        let mut deg = vec![1u64; rows];
+        deg[0] = 10_000;
+        let mut cum = vec![0u64; rows + 1];
+        for r in 0..rows {
+            cum[r + 1] = cum[r] + deg[r];
+        }
+        let total = cum[rows];
+        let costs = vec![total + rows as u64 + 1];
+        let oracle = |_: usize, r0: usize, r1: usize| Some((cum[r1] - cum[r0]) as usize);
+        let bucketed =
+            plan_tasks_with(&costs, rows, workers, SchedPolicy::WorkStealing, &oracle);
+        assert_partition(&bucketed, 1, rows);
+        let fallback = plan_tasks(&costs, rows, workers, SchedPolicy::WorkStealing);
+        assert_partition(&fallback, 1, rows);
+        let tail_mass = |tasks: &[Task]| {
+            // Mass of the hub's block beyond the hub row itself: extra
+            // work serialized behind the heaviest row.
+            tasks
+                .iter()
+                .find(|t| t.row0 == 0)
+                .map(|t| (cum[t.row1 as usize] - cum[1]) as usize)
+                .unwrap()
+        };
+        // nnz-balanced boundaries put the cut directly after the hub...
+        assert_eq!(tail_mass(&bucketed), 0, "{bucketed:?}");
+        // ...while equal-row boundaries serialize a full share of the
+        // tail behind it.
+        assert!(tail_mass(&fallback) >= (rows - 1) / workers - 1, "{fallback:?}");
+    }
+
+    #[test]
+    fn oracle_plans_still_partition_on_random_mixed_batches() {
+        // The full planner with an oracle over multi-sample skewed
+        // batches: partition must hold for any profile, worker count
+        // and policy (transpose dispatches pass no oracle, so plain
+        // plan_tasks covers that side).
+        let mut rng = crate::util::rng::Rng::new(0x0DD);
+        for _ in 0..120 {
+            let b = rng.range(1, 16);
+            let out_rows = rng.range(1, 120);
+            let workers = rng.range(1, 10);
+            let rowdeg: Vec<Vec<usize>> = (0..b)
+                .map(|_| power_law_rows(&mut rng, out_rows))
+                .collect();
+            let cums: Vec<Vec<usize>> = rowdeg
+                .iter()
+                .map(|deg| {
+                    let mut cum = vec![0usize; out_rows + 1];
+                    for r in 0..out_rows {
+                        cum[r + 1] = cum[r] + deg[r];
+                    }
+                    cum
+                })
+                .collect();
+            let costs: Vec<u64> = cums
+                .iter()
+                .map(|cum| cum[out_rows] as u64 + out_rows as u64 + 1)
+                .collect();
+            let oracle =
+                |s: usize, r0: usize, r1: usize| Some(cums[s][r1] - cums[s][r0]);
+            for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                let tasks = plan_tasks_with(&costs, out_rows, workers, policy, &oracle);
+                assert_partition(&tasks, b, out_rows);
+            }
+        }
     }
 }

@@ -28,7 +28,7 @@ pub mod ops;
 pub mod random;
 pub mod sparse_tensor;
 
-pub use batch::{PaddedCsrBatch, PaddedEllBatch, PaddedStBatch};
+pub use batch::{LargeGraphBatch, PaddedCsrBatch, PaddedEllBatch, PaddedStBatch};
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;

@@ -302,6 +302,55 @@ fn vectorized_kernels_bit_identical_to_scalar_reference_everywhere() {
     check_scalar_vs_vectorized(&one, 48, 5, &dense, "batch1");
 }
 
+/// Large-graph tentpole property (DESIGN.md §12): the cache-tiled CSR
+/// kernel is bit-identical to the untiled vectorized kernel AND the
+/// scalar oracle for EVERY tile width — sub-lane (1), odd (7), exactly
+/// n_B (14 > n), the L2 default scale (64) and absurdly large (4096) —
+/// at every thread count and both scheduling policies, in both
+/// transpose forms. Tiling only regroups independent output columns;
+/// each element's nnz accumulation chain is untouched, so equality is
+/// exact, not approximate.
+#[test]
+fn tiled_csr_bit_identical_to_untiled_and_scalar_across_widths_threads_policies() {
+    let mut rng = Rng::new(0xEB);
+    let (skew_mats, skew_dim) = skewed_batch(&mut rng);
+    let one = vec![random_coo(&mut rng, &RandomSpec::new(48, 4))];
+    let cases: Vec<(Vec<Coo>, usize, &str)> =
+        vec![(skew_mats, skew_dim, "skewed"), (one, 48, "batch1")];
+    let nb = 13usize; // not a LANES multiple: scalar tail stays live
+    for (mats, dim, what) in &cases {
+        let dim = *dim;
+        let dense = random_dense_batch(&mut rng, mats.len(), dim, nb);
+        let cap = mats.iter().map(Coo::nnz).max().unwrap();
+        let csr = PaddedCsrBatch::pack(mats, dim, cap).unwrap();
+        let base = CsrKernel::new(&csr);
+        let scalar = Executor::with_variant(1, SchedPolicy::WorkStealing, KernelVariant::Scalar);
+        let want_fwd = scalar.spmm(&base, Rhs::PerSample(&dense), nb).unwrap();
+        let want_bwd = scalar.spmm_t(&base, Rhs::PerSample(&dense), nb).unwrap();
+        // Anchor the chain: untiled vectorized serial == scalar oracle.
+        let serial = Executor::serial();
+        assert_eq!(
+            serial.spmm(&base, Rhs::PerSample(&dense), nb).unwrap(),
+            want_fwd,
+            "{what} untiled fwd"
+        );
+        for tc in [1usize, 7, 14, 64, 4096] {
+            let k = CsrKernel::new(&csr).with_tile_cols(tc);
+            for threads in THREAD_COUNTS {
+                for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                    let exec = Executor::with_variant(threads, policy, KernelVariant::Tiled);
+                    let pf = exec.spmm(&k, Rhs::PerSample(&dense), nb).unwrap();
+                    assert_eq!(pf, want_fwd, "{what}/tc{tc}/t{threads}/{policy:?} fwd");
+                    // Transpose dispatches fall back to the untiled
+                    // vectorized path — still bit-exact vs scalar.
+                    let pb = exec.spmm_t(&k, Rhs::PerSample(&dense), nb).unwrap();
+                    assert_eq!(pb, want_bwd, "{what}/tc{tc}/t{threads}/{policy:?} bwd");
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn tail_widths_bit_identical_scalar_vs_vectorized_on_every_form() {
     // The tox21/reaction100 feature widths are not multiples of LANES,
