@@ -1,0 +1,116 @@
+//! AOT step-plan artifact round trip (DESIGN.md §13): compile a
+//! model's forward + train plans, dump them as versioned,
+//! content-hashed `*.plan.json` artifacts, warm-start a fresh trainer
+//! from them, and prove the cold-start contract — the warm trainer
+//! compiles zero plans (`plans_built == 0`) and trains bit-identically
+//! to a cold boot.
+//!
+//!     cargo run --release --example plan_aot
+//!     cargo run --release --example plan_aot -- --dir artifacts/plans
+//!     cargo run --release --example plan_aot -- --model tox21 --batch 50 --steps 5
+//!
+//! Without `--dir` the artifacts go to a process-scoped temp directory
+//! that is removed on success; with `--dir` they are written there and
+//! kept, ready for a server boot with
+//! `BSPMM_PLAN_ARTIFACTS=<dir>` (the Trainer/HostDispatcher
+//! constructors warm-start from that env var).
+
+use std::path::PathBuf;
+
+use bspmm::coordinator::trainer::Trainer;
+use bspmm::graph::dataset::{Dataset, DatasetKind};
+use bspmm::util::cli::{parse_or_exit, Cli};
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "plan_aot",
+        "AOT step-plan artifact dump/load round trip (DESIGN.md §13)",
+    )
+    .opt(
+        "dir",
+        "",
+        "artifact directory; written there and kept when given, else a \
+         temp directory removed on success",
+    )
+    .opt("model", "tox21", "synthetic model config: tox21|reaction100")
+    .opt("batch", "4", "minibatch size (any geometry works)")
+    .opt("threads", "1", "executor threads (0 = one per core)")
+    .opt("steps", "3", "parity train steps run on each side")
+    .flag("keep", "keep a temp artifact directory instead of removing it");
+    let args = parse_or_exit(&cli);
+    let model = args.str("model");
+    let batch = args.usize("batch");
+    let steps = args.usize("steps").max(1);
+    let threads = args.usize("threads");
+    let (dir, ephemeral): (PathBuf, bool) = match args.str("dir") {
+        "" => (
+            std::env::temp_dir().join(format!("bspmm_plan_aot_{}", std::process::id())),
+            true,
+        ),
+        d => (PathBuf::from(d), false),
+    };
+    let kind = match model {
+        "tox21" => DatasetKind::Tox21,
+        "reaction100" => DatasetKind::Reaction100,
+        other => anyhow::bail!("no dataset for model '{other}'"),
+    };
+    let data = Dataset::generate(kind, batch, 77);
+    let idx: Vec<usize> = (0..batch).collect();
+    let lr = 1e-3f32;
+
+    // Dump side: compile this geometry's forward and train plans, then
+    // export every cached plan as an artifact.
+    let mut producer = Trainer::new_host(model, threads)?;
+    let mb = data.pack_batch(&idx, producer.cfg.max_nodes, producer.cfg.ell_width)?;
+    producer.forward(&mb)?;
+    producer.step_batched(&mb, lr)?;
+    let n = producer.export_plans(&dir)?;
+    println!("dumped {n} plan artifact(s) to {}", dir.display());
+
+    // Load side: a fresh trainer warm-starts from the artifacts ...
+    let mut warm = Trainer::new_host(model, threads)?;
+    let report = warm.warm_start_plans(&dir)?;
+    println!("{}", report.summary());
+    // Duplicates count as warmed: with `BSPMM_PLAN_ARTIFACTS` pointing
+    // at `dir`, the constructor already loaded these artifacts and the
+    // explicit pass sees them as cache hits.
+    anyhow::ensure!(
+        report.loaded + report.skipped_duplicate >= 1,
+        "warm start found no usable artifacts"
+    );
+
+    // ... and must match a cold boot bit-for-bit while compiling
+    // nothing: same seed parameters, same minibatch, so the loss
+    // stream, parameters, and logits are all exactly comparable.
+    let mut cold = Trainer::new_host(model, threads)?;
+    for step in 0..steps {
+        let a = cold.step_batched(&mb, lr)?;
+        let b = warm.step_batched(&mb, lr)?;
+        anyhow::ensure!(
+            a.to_bits() == b.to_bits(),
+            "step {step}: cold loss {a} != warm loss {b}"
+        );
+    }
+    anyhow::ensure!(
+        cold.params.data == warm.params.data,
+        "parameters diverged between cold and warm training"
+    );
+    let cf = cold.forward(&mb)?;
+    let wf = warm.forward(&mb)?;
+    anyhow::ensure!(cf == wf, "forward logits diverged");
+    let ws = warm.plan_stats();
+    anyhow::ensure!(
+        ws.plans_built == 0,
+        "warm trainer compiled {} plan(s) — the artifacts did not cover its geometries",
+        ws.plans_built
+    );
+    println!(
+        "round trip OK: {} warmed plan(s), plans_built=0, {} replays, bit-identical \
+         across {steps} train steps + forward",
+        ws.plans_warmed, ws.replays
+    );
+    if ephemeral && !args.flag("keep") {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    Ok(())
+}

@@ -17,6 +17,7 @@
 //!     cargo run --release --example spmm_microbench -- --threads 4
 //!     cargo run --release --example spmm_microbench -- --backend auto
 //!     cargo run --release --example spmm_microbench -- --plan both
+//!     cargo run --release --example spmm_microbench -- --plan aot
 //!     cargo run --release --example spmm_microbench -- --json
 //!     cargo run --release --example spmm_microbench -- --sweep large --json
 //!
@@ -26,12 +27,18 @@
 //! cache-tiled vs untiled kernels under static vs work-stealing
 //! scheduling; with `--json` the series merge into `BENCH_engine.json`.
 //!
+//! `--plan aot` exercises the AOT plan-artifact round trip
+//! (DESIGN.md §13): a producer trainer dumps its compiled plans, a
+//! fresh trainer warm-starts from them, and the line reports the
+//! cold-vs-warm first-step times plus the cold-start contract —
+//! `plans_built=0` and bit-identical training.
+//!
 //! `--json` additionally runs the mixed-batch sweep (fig10, first n_B
 //! point — the load-imbalance case stealing exists for) and writes the
 //! whole scalar / serial / static / work-stealing comparison — auto
-//! backend, train_step and cold-vs-cached plan_reuse lines included —
-//! to `BENCH_engine.json` at the repository root so the perf
-//! trajectory is machine-recorded across PRs.
+//! backend, train_step, cold-vs-cached plan_reuse and aot_warmstart
+//! lines included — to `BENCH_engine.json` at the repository root so
+//! the perf trajectory is machine-recorded across PRs.
 //!
 //! No artifacts are required for the engine, train_step or plan series:
 //! sweep geometry falls back to the built-in copy of the aot.py table.
@@ -39,8 +46,9 @@
 use std::path::Path;
 
 use bspmm::bench::figures::{
-    auto_choices, auto_vs_fixed_summary, engine_speedup_summary, run_engine_bench_backends,
-    run_large_graph_bench, run_plan_bench, run_train_step_bench, FigureRunner, ENGINE_SERIES,
+    auto_choices, auto_vs_fixed_summary, engine_speedup_summary, run_aot_warmstart_bench,
+    run_engine_bench_backends, run_large_graph_bench, run_plan_bench, run_train_step_bench,
+    FigureRunner, ENGINE_SERIES,
 };
 use bspmm::bench::report::save_json_in;
 use bspmm::bench::BenchOpts;
@@ -64,9 +72,11 @@ fn main() -> anyhow::Result<()> {
         .opt(
             "plan",
             "cached",
-            "train-step plan regime: cached|cold|both. cached (default) skips the \
+            "train-step plan regime: cached|cold|both|aot. cached (default) skips the \
              plan_reuse line unless --json; cold and both are synonyms that run the \
-             cold-vs-cached comparison (the speedup line needs both regimes)",
+             cold-vs-cached comparison (the speedup line needs both regimes); aot \
+             round-trips compiled plans through AOT artifacts and warm-starts a \
+             fresh trainer from them (DESIGN.md §13)",
         )
         .opt("train_model", "tox21", "model for the train_step line")
         .opt("train_batch", "50", "train_step minibatch size (0 = skip)")
@@ -177,19 +187,34 @@ fn main() -> anyhow::Result<()> {
     let tb = args.usize("train_batch");
     let mut train = None;
     let mut plan_bench = None;
+    let mut aot_bench = None;
     if tb > 0 {
         let t = run_train_step_bench(args.str("train_model"), tb, threads, &opts)?;
         print!("{}", t.render());
         train = Some(t);
         let plan_mode = args.str("plan");
         anyhow::ensure!(
-            matches!(plan_mode, "cached" | "cold" | "both"),
-            "--plan must be cached|cold|both, got '{plan_mode}'"
+            matches!(plan_mode, "cached" | "cold" | "both" | "aot"),
+            "--plan must be cached|cold|both|aot, got '{plan_mode}'"
         );
-        if plan_mode != "cached" || args.flag("json") {
+        if matches!(plan_mode, "cold" | "both") || args.flag("json") {
             let p = run_plan_bench(args.str("train_model"), tb, threads, &opts)?;
             print!("{}", p.render());
             plan_bench = Some(p);
+        }
+        // The AOT round trip: dump compiled plans as artifacts, boot a
+        // fresh trainer from them, assert plans_built == 0 with
+        // bit-identical training (the §13 cold-start contract).
+        if plan_mode == "aot" || args.flag("json") {
+            let a = run_aot_warmstart_bench(args.str("train_model"), tb, threads, &opts)?;
+            print!("{}", a.render());
+            anyhow::ensure!(
+                a.plans_built == 0 && a.bit_identical,
+                "AOT warm-start contract violated: plans_built={}, bit_identical={}",
+                a.plans_built,
+                a.bit_identical
+            );
+            aot_bench = Some(a);
         }
         println!();
     }
@@ -211,6 +236,9 @@ fn main() -> anyhow::Result<()> {
         }
         if let Some(p) = &plan_bench {
             fields.push(("plan_reuse", p.to_json()));
+        }
+        if let Some(a) = &aot_bench {
+            fields.push(("aot_warmstart", a.to_json()));
         }
         // CARGO_MANIFEST_DIR is rust/, so the repo root is its parent —
         // stable regardless of the invoking working directory.

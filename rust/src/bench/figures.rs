@@ -475,11 +475,174 @@ pub fn run_plan_bench(
         cached_secs: mean(cached_samples),
         stats: PlanStats {
             plans_built: s1.plans_built - s0.plans_built,
+            plans_warmed: s1.plans_warmed - s0.plans_warmed,
             replays: s1.replays - s0.replays,
             arena_bytes: s1.arena_bytes,
             arena_reuses: s1.arena_reuses - s0.arena_reuses,
             zero_fills_elided: s1.zero_fills_elided - s0.zero_fills_elided,
         },
+    })
+}
+
+/// AOT warm-start check ([`run_aot_warmstart_bench`], DESIGN.md §13):
+/// dump a trainer's compiled plans as artifacts, boot a fresh trainer
+/// from them, and verify the fleet cold-start contract — the warm
+/// trainer compiles zero plans and its training stream is bit-identical
+/// to a cold boot's.
+#[derive(Clone, Debug)]
+pub struct AotWarmstartBench {
+    pub model: String,
+    pub batch: usize,
+    /// First-step wall seconds on a cold boot (plan compiled inline).
+    pub cold_first_secs: f64,
+    /// First-step wall seconds on a warm boot (plan replayed straight
+    /// from the deserialized artifact).
+    pub warm_first_secs: f64,
+    /// Mean steady-state seconds per step on the warm trainer.
+    pub steady_secs: f64,
+    /// Plans the warm trainer compiled across the whole run. The
+    /// contract is 0 — every geometry it ran shipped as an artifact.
+    pub plans_built: u64,
+    /// Plans installed from artifacts at boot.
+    pub plans_warmed: u64,
+    /// Warm losses and final parameters bit-identical to the cold run.
+    pub bit_identical: bool,
+}
+
+impl AotWarmstartBench {
+    /// The printable summary line the microbench and CI quote.
+    pub fn render(&self) -> String {
+        format!(
+            "aot_warmstart[{}, B={}]: cold first step {:.2} ms -> warm {:.2} ms \
+             (steady {:.2} ms/step; plans_built={}, plans_warmed={}, {})\n",
+            self.model,
+            self.batch,
+            self.cold_first_secs * 1e3,
+            self.warm_first_secs * 1e3,
+            self.steady_secs * 1e3,
+            self.plans_built,
+            self.plans_warmed,
+            if self.bit_identical {
+                "bit-identical"
+            } else {
+                "OUTPUT MISMATCH"
+            },
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s(&self.model)),
+            ("batch", num(self.batch as f64)),
+            (
+                "points",
+                arr(vec![
+                    obj(vec![
+                        ("label", s("cold-first-step")),
+                        ("secs_per_step", num(self.cold_first_secs)),
+                    ]),
+                    obj(vec![
+                        ("label", s("warm-first-step")),
+                        ("secs_per_step", num(self.warm_first_secs)),
+                    ]),
+                    obj(vec![
+                        ("label", s("warm-steady")),
+                        ("secs_per_step", num(self.steady_secs)),
+                    ]),
+                ]),
+            ),
+            ("plans_built", num(self.plans_built as f64)),
+            ("plans_warmed", num(self.plans_warmed as f64)),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+        ])
+    }
+}
+
+/// Round-trip the AOT plan-artifact flow end to end: a producer trainer
+/// compiles this geometry's train plan and [`Trainer::export_plans`]
+/// dumps it; a cold and a warm consumer (same seed) then train the same
+/// minibatch stream, and the warm one must report `plans_built == 0`
+/// with bit-identical losses and parameters. Artifacts go under a
+/// process-scoped temp directory that is removed afterwards.
+pub fn run_aot_warmstart_bench(
+    model: &str,
+    batch: usize,
+    threads: usize,
+    opts: &BenchOpts,
+) -> anyhow::Result<AotWarmstartBench> {
+    anyhow::ensure!(batch >= 1, "aot warm-start bench needs batch >= 1");
+    let kind = match model {
+        "tox21" => DatasetKind::Tox21,
+        "reaction100" => DatasetKind::Reaction100,
+        other => anyhow::bail!("no dataset for model '{other}'"),
+    };
+    let data = Dataset::generate(kind, batch, 77);
+    let idx: Vec<usize> = (0..batch).collect();
+    let t = Executor::resolve_threads(threads);
+    let lr = 1e-3f32;
+    let dir = std::env::temp_dir().join(format!(
+        "bspmm_aot_warmstart_{}_{model}_b{batch}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Producer: pay the compile once, ship it. Its first step doubles
+    // as the cold-first-step timing.
+    let mut producer = Trainer::new_host(model, t)?;
+    let mb = data.pack_batch(&idx, producer.cfg.max_nodes, producer.cfg.ell_width)?;
+    let (cold_first_secs, step) = timer::time_once(|| producer.step_batched(&mb, lr));
+    step?;
+    let exported = producer.export_plans(&dir)?;
+    anyhow::ensure!(exported >= 1, "producer exported no plans");
+
+    // Parity streams: cold and warm consumers start from identical
+    // seed parameters, so their losses and parameters must stay
+    // bit-for-bit equal if (and only if) artifact replay is exact.
+    let steps = opts.min_iters.max(3);
+    let mut cold = Trainer::new_host(model, t)?;
+    let mut cold_losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        cold_losses.push(cold.step_batched(&mb, lr)?);
+    }
+
+    let mut warm = Trainer::new_host(model, t)?;
+    let report = warm.warm_start_plans(&dir)?;
+    anyhow::ensure!(
+        report.loaded >= 1,
+        "warm start loaded nothing: {}",
+        report.summary()
+    );
+    let (warm_first_secs, first) = timer::time_once(|| warm.step_batched(&mb, lr));
+    let mut warm_losses = vec![first?];
+    for _ in 1..steps {
+        warm_losses.push(warm.step_batched(&mb, lr)?);
+    }
+    // Compare while both trainers have taken exactly `steps` steps —
+    // the steady timing below keeps stepping the warm one.
+    let bit_identical = cold_losses == warm_losses && cold.params.data == warm.params.data;
+
+    let steady_samples = timer::bench_adaptive(
+        0,
+        opts.min_iters,
+        opts.max_iters.max(1),
+        opts.min_time_s,
+        || {
+            warm.step_batched(&mb, lr).expect("warm steady step");
+        },
+    );
+    let steady_secs = steady_samples.iter().sum::<f64>() / steady_samples.len() as f64;
+
+    let ws = warm.plan_stats();
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(AotWarmstartBench {
+        model: model.to_string(),
+        batch,
+        cold_first_secs,
+        warm_first_secs,
+        steady_secs,
+        plans_built: ws.plans_built,
+        plans_warmed: ws.plans_warmed,
+        bit_identical,
     })
 }
 
@@ -984,5 +1147,26 @@ mod tests {
         assert_eq!(bench.stats.plans_built, 0, "{:?}", bench.stats);
         assert!(bench.to_json().to_string().contains("cached-plan"));
         assert!(run_plan_bench("nope", 4, 1, &opts).is_err());
+    }
+
+    #[test]
+    fn aot_warmstart_bench_holds_the_cold_start_contract() {
+        let opts = BenchOpts {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time_s: 0.0,
+        };
+        let bench = run_aot_warmstart_bench("tox21", 4, 1, &opts).unwrap();
+        assert_eq!(bench.plans_built, 0, "warm trainer compiled a plan");
+        assert!(bench.plans_warmed >= 1);
+        assert!(bench.bit_identical, "warm replay diverged from cold run");
+        assert!(bench.cold_first_secs > 0.0 && bench.steady_secs > 0.0);
+        let line = bench.render();
+        assert!(line.contains("aot_warmstart[tox21, B=4]"), "{line}");
+        assert!(line.contains("bit-identical"), "{line}");
+        let json = bench.to_json().to_string();
+        assert!(json.contains("warm-first-step") && json.contains("plans_warmed"));
+        assert!(run_aot_warmstart_bench("nope", 4, 1, &opts).is_err());
     }
 }

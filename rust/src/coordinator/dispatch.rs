@@ -36,6 +36,7 @@ use crate::gcn::config::ModelConfig;
 use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
 use crate::graph::dataset::ModelBatch;
+use crate::runtime::plan_artifact::{self, WarmStartReport};
 use crate::sparse::engine::{AutoThresholds, Executor, PlanCache, PlanStats};
 
 /// In-process model execution over the batched-SpMM engine.
@@ -64,16 +65,44 @@ pub struct HostDispatcher {
 
 impl HostDispatcher {
     /// `threads = 0` means one thread per core.
+    ///
+    /// When `$BSPMM_PLAN_ARTIFACTS` is set the plan cache warm-starts
+    /// from that directory (best-effort — this constructor is
+    /// infallible, so a bad artifact directory loads nothing and every
+    /// geometry compiles at runtime; use
+    /// [`HostDispatcher::warm_start_plans`] when you want the report).
     pub fn new(cfg: ModelConfig, params: ParamSet, threads: usize) -> HostDispatcher {
+        let thresholds = AutoThresholds::from_env();
+        let mut plans = PlanCache::new();
+        let _ = plan_artifact::warm_start_from_env(&mut plans, &thresholds);
         HostDispatcher {
             cfg,
             params,
             exec: Executor::auto(threads),
             w_rep: None,
-            plans: PlanCache::new(),
-            thresholds: AutoThresholds::from_env(),
+            plans,
+            thresholds,
             dispatches: 0,
         }
+    }
+
+    /// Warm-start the plan cache from `dir`'s `*.plan.json` artifacts
+    /// (DESIGN.md §13). Threshold-mismatched or invalid artifacts are
+    /// skipped — those geometries fall back to runtime compilation.
+    pub fn warm_start_plans(&mut self, dir: &std::path::Path) -> anyhow::Result<WarmStartReport> {
+        plan_artifact::warm_start(&mut self.plans, dir, &self.thresholds)
+    }
+
+    /// Dump every cached plan to `dir` as AOT artifacts (the producer
+    /// side of [`HostDispatcher::warm_start_plans`]); returns how many
+    /// were written.
+    pub fn export_plans(&self, dir: &std::path::Path) -> anyhow::Result<usize> {
+        let mut n = 0;
+        for plan in self.plans.plans() {
+            plan_artifact::save(plan, &self.thresholds, dir)?;
+            n += 1;
+        }
+        Ok(n)
     }
 
     /// Manifest-free construction from the named synthetic model config.

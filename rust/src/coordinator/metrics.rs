@@ -17,9 +17,11 @@ struct Inner {
     batch_capacity: u64,
     device_busy_us: u64,
     /// Latest plan-cache accounting from the host-engine backend
-    /// (DESIGN.md §11): compiled step plans and cached replays. Zero on
-    /// the PJRT backend.
+    /// (DESIGN.md §11/§13): compiled step plans, plans warm-started
+    /// from AOT artifacts, and cached replays. Zero on the PJRT
+    /// backend.
     plans_built: u64,
+    plans_warmed: u64,
     plan_replays: u64,
     started: Option<Instant>,
     finished: Option<Instant>,
@@ -44,7 +46,12 @@ pub struct MetricsSnapshot {
     pub mean_occupancy: f64,
     pub device_busy_us: u64,
     /// Step plans compiled by the host-engine backend (0 on PJRT).
+    /// A server warm-started from AOT artifacts (DESIGN.md §13) serves
+    /// steady state with this at 0.
     pub plans_built: u64,
+    /// Plans installed from AOT artifacts at boot (0 on PJRT and on
+    /// cold boots).
+    pub plans_warmed: u64,
     /// Forwards served by replaying a cached plan (0 on PJRT).
     pub plan_replays: u64,
     pub wall_secs: f64,
@@ -84,9 +91,10 @@ impl Metrics {
 
     /// Store the latest plan-cache counters (cumulative on the source
     /// side, so the newest snapshot wins).
-    pub fn record_plans(&self, plans_built: u64, plan_replays: u64) {
+    pub fn record_plans(&self, plans_built: u64, plans_warmed: u64, plan_replays: u64) {
         let mut g = self.inner.lock().unwrap();
         g.plans_built = plans_built;
+        g.plans_warmed = plans_warmed;
         g.plan_replays = plan_replays;
     }
 
@@ -116,6 +124,7 @@ impl Metrics {
             },
             device_busy_us: g.device_busy_us,
             plans_built: g.plans_built,
+            plans_warmed: g.plans_warmed,
             plan_replays: g.plan_replays,
             wall_secs: wall,
             throughput_rps: if wall > 0.0 {
@@ -138,12 +147,12 @@ mod tests {
         m.record_request(1000, 200);
         m.record_request(3000, 600);
         m.record_batch(2, 4, 1500);
-        m.record_plans(1, 7);
+        m.record_plans(1, 2, 7);
         m.mark_finish();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
-        assert_eq!((s.plans_built, s.plan_replays), (1, 7));
+        assert_eq!((s.plans_built, s.plans_warmed, s.plan_replays), (1, 2, 7));
         assert!((s.mean_latency_us - 2000.0).abs() < 1.0);
         assert!((s.mean_batch_size - 2.0).abs() < 1e-12);
         assert!((s.mean_occupancy - 0.5).abs() < 1e-12);

@@ -16,7 +16,11 @@
 //!   count is the CPU speedup knob. Forwards replay compiled step
 //!   plans from the dispatcher's per-geometry cache (DESIGN.md §11);
 //!   the cache's accounting is surfaced in
-//!   [`MetricsSnapshot::plans_built`] / `plan_replays`.
+//!   [`MetricsSnapshot::plans_built`] / `plans_warmed` /
+//!   `plan_replays`. With `$BSPMM_PLAN_ARTIFACTS` set, the dispatcher
+//!   warm-starts its plan cache from AOT artifacts at boot
+//!   (DESIGN.md §13) and steady-state serving reports
+//!   `plans_built == 0`.
 //!
 //! The device thread structure (everything backend-facing on one
 //! thread, clients talking over channels) is forced by the `xla`
@@ -307,9 +311,11 @@ fn serve_chunk(
             let device_us = t0.elapsed().as_micros() as u64;
             // Surface the dispatcher's plan-cache accounting: a steady
             // stream of same-capacity batches shows plans_built frozen
-            // and plan_replays tracking the batch count (DESIGN.md §11).
+            // and plan_replays tracking the batch count (DESIGN.md §11);
+            // after an AOT warm start (DESIGN.md §13) plans_built stays
+            // 0 outright and plans_warmed names the boot's artifacts.
             let ps = hd.plan_stats();
-            metrics.record_plans(ps.plans_built, ps.replays);
+            metrics.record_plans(ps.plans_built, ps.plans_warmed, ps.replays);
             (hd.cfg.n_out, logits, device_us)
         }
     };

@@ -40,6 +40,7 @@ use crate::gcn::config::ModelConfig;
 use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
 use crate::graph::dataset::{Dataset, ModelBatch};
+use crate::runtime::plan_artifact::{self, WarmStartReport};
 use crate::runtime::{Runtime, Tensor};
 use crate::sparse::engine::{AutoThresholds, Executor, PlanCache, PlanStats};
 use crate::sparse::ops::axpy;
@@ -143,9 +144,18 @@ impl Trainer {
     /// backward pass is `gcn::backward`, the SGD apply is in-process.
     /// Constructs the trainer's one long-lived worker pool here;
     /// `threads = 0` means one thread per core.
+    ///
+    /// When `$BSPMM_PLAN_ARTIFACTS` is set the plan cache warm-starts
+    /// from that directory (DESIGN.md §13), so steady-state steps
+    /// report `plans_built == 0`; geometries without a (valid,
+    /// threshold-matching) artifact compile at runtime exactly as
+    /// before.
     pub fn new_host(model: &str, threads: usize) -> anyhow::Result<Trainer> {
         let cfg = ModelConfig::synthetic(model)?;
         let params = ParamSet::random_init(&cfg, 0x5EED);
+        let thresholds = AutoThresholds::from_env();
+        let mut plans = PlanCache::new();
+        plan_artifact::warm_start_from_env(&mut plans, &thresholds)?;
         Ok(Trainer {
             rt: None,
             host_exec: Some(Executor::auto(threads)),
@@ -153,10 +163,32 @@ impl Trainer {
             params,
             dispatches: 0,
             w_rep: None,
-            plans: PlanCache::new(),
-            thresholds: AutoThresholds::from_env(),
+            plans,
+            thresholds,
             grad_buf: Vec::new(),
         })
+    }
+
+    /// Warm-start the plan cache from `dir`'s `*.plan.json` artifacts
+    /// (the explicit-path form of the `$BSPMM_PLAN_ARTIFACTS` boot).
+    /// Artifacts compiled under other [`AutoThresholds`] are skipped —
+    /// their frozen `Backend::Auto` resolutions may disagree with this
+    /// host's — and those geometries fall back to runtime compilation.
+    pub fn warm_start_plans(&mut self, dir: &Path) -> anyhow::Result<WarmStartReport> {
+        plan_artifact::warm_start(&mut self.plans, dir, &self.thresholds)
+    }
+
+    /// Dump every cached plan to `dir` as AOT artifacts (the producer
+    /// side of [`Trainer::warm_start_plans`]); returns how many were
+    /// written. Run the geometries you want to ship first — only
+    /// compiled (or already-warmed) plans exist to export.
+    pub fn export_plans(&self, dir: &Path) -> anyhow::Result<usize> {
+        let mut n = 0;
+        for plan in self.plans.plans() {
+            plan_artifact::save(plan, &self.thresholds, dir)?;
+            n += 1;
+        }
+        Ok(n)
     }
 
     fn pjrt(&self) -> anyhow::Result<&Runtime> {

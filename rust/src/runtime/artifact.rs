@@ -8,6 +8,16 @@ use crate::gcn::config::ModelConfig;
 use crate::runtime::tensor::DType;
 use crate::util::json::{parse, Json};
 
+/// Root artifact directory every loader resolves the same way:
+/// `$BSPMM_ARTIFACTS`, else `./artifacts`. Shared by [`Manifest::load_default`]
+/// and the AOT plan-artifact loader (`runtime::plan_artifact`) so the
+/// env lookup lives in exactly one place.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("BSPMM_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into())
+        .into()
+}
+
 /// Declared shape/dtype of one artifact input or output.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
@@ -78,10 +88,10 @@ impl Manifest {
         Self::parse_str(&text, dir)
     }
 
-    /// Default artifacts directory: $BSPMM_ARTIFACTS or ./artifacts.
+    /// Default artifacts directory: [`default_artifacts_dir`]
+    /// (`$BSPMM_ARTIFACTS` or `./artifacts`).
     pub fn load_default() -> anyhow::Result<Manifest> {
-        let dir = std::env::var("BSPMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::load(Path::new(&dir))
+        Self::load(&default_artifacts_dir())
     }
 
     pub fn parse_str(text: &str, dir: &Path) -> anyhow::Result<Manifest> {

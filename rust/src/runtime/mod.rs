@@ -2,6 +2,9 @@
 //! (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client.
 //!
 //! * [`artifact`] — the manifest (artifact ABI) parser.
+//! * [`plan_artifact`] — AOT `StepPlan` artifacts: versioned,
+//!   content-hashed JSON plans + the `PlanCache` warm-start loader
+//!   (DESIGN.md §13).
 //! * [`tensor`] — host-side tensors and literal marshalling.
 //! * [`executable`] — one compiled artifact + typed execute.
 //! * [`client`] — the `Runtime`: client + lazy executable pool.
@@ -15,9 +18,11 @@
 pub mod artifact;
 pub mod client;
 pub mod executable;
+pub mod plan_artifact;
 pub mod tensor;
 
-pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use artifact::{default_artifacts_dir, ArtifactSpec, Manifest, TensorSpec};
+pub use plan_artifact::{PlanArtifact, WarmStartReport};
 pub use client::Runtime;
 pub use executable::Executable;
 pub use tensor::Tensor;

@@ -1,0 +1,692 @@
+//! AOT `StepPlan` artifacts: serialize compiled plans for fleet
+//! cold-start (DESIGN.md §13).
+//!
+//! PR 5's plan/execute split compiles a [`StepPlan`] per geometry at
+//! runtime; a fleet serving millions of users wants those plans ahead
+//! of time so a freshly booted host replays from step one. This module
+//! is that persistence layer: versioned, content-hashed JSON artifacts
+//! over the crate's canonical writer ([`Json::to_string`]), one file
+//! per geometry, plus the [`PlanCache`] warm-start loader.
+//!
+//! Format (`*.plan.json`, canonical key order):
+//!
+//! ```json
+//! {"content_hash":"<fnv1a64 hex>",
+//!  "dispatches":[{"backend":"ell","n":64,"out":1,"rhs":"per_sample","transpose":false},...],
+//!  "format_version":1,
+//!  "key":[1,4,50,16,4,12,12,64,64],
+//!  "kind":"bspmm_step_plan",
+//!  "params":[{"len":4096,"offset":0},...],
+//!  "slots":[12800,...],
+//!  "thresholds":{"ell_waste":3,"gemm_density":0.25}}
+//! ```
+//!
+//! * **Versioning** — [`FORMAT_VERSION`] is bumped on any schema or
+//!   canonical-encoding change; a mismatched version is rejected with
+//!   an error naming both versions, never reinterpreted.
+//! * **Content hash** — FNV-1a 64 over the canonical encoding *without*
+//!   the `content_hash` field, stored as 16 lowercase hex digits.
+//!   [`decode`] recomputes and compares before trusting any field, so
+//!   bit rot and hand edits are caught up front.
+//! * **Thresholds** — the [`AutoThresholds`] in effect at compile time
+//!   are part of the artifact: a frozen plan bakes in its
+//!   `Backend::Auto` resolutions, so a host running *different*
+//!   thresholds must not adopt it ([`warm_start`] skips it and the
+//!   geometry falls back to runtime compilation).
+//! * **Parity discipline** — a warmed plan must replay bit-identically
+//!   to a freshly compiled one. `tests/plan_artifact_golden.rs` pins
+//!   this against checked-in golden fixtures across backends, thread
+//!   counts, and policies; steady-state serving after a warm start
+//!   reports `plans_built == 0`.
+//!
+//! Fallback semantics: [`warm_start`] never fails the boot on a bad
+//! artifact — unreadable, corrupt, version- or threshold-mismatched
+//! files are recorded in the [`WarmStartReport`] and skipped, and any
+//! geometry that did not warm-start simply compiles at runtime exactly
+//! as before. Artifacts can make a boot faster, never wrong.
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::artifact::default_artifacts_dir;
+use crate::sparse::engine::{
+    AutoThresholds, Backend, DispatchDesc, GeometryKey, ParamRef, PlanCache, RhsKind, SlotId,
+    StepPlan,
+};
+use crate::util::json::{arr, num, obj, parse, s, Json};
+
+/// Bumped on any schema or canonical-encoding change. Readers reject
+/// every other version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// The `kind` tag distinguishing plan artifacts from the other JSON
+/// files under the artifact root (manifest, bench reports).
+pub const KIND: &str = "bspmm_step_plan";
+
+/// File suffix the directory scan selects on.
+pub const FILE_SUFFIX: &str = ".plan.json";
+
+/// Env var naming the plan-artifact directory. When set, `Trainer` /
+/// `HostDispatcher` warm-start from it at construction; when unset the
+/// conventional location is `<artifacts>/plans` ([`default_plan_dir`])
+/// but nothing is loaded implicitly — boots stay deterministic unless
+/// the operator opts in.
+pub const ENV_PLAN_DIR: &str = "BSPMM_PLAN_ARTIFACTS";
+
+/// FNV-1a 64-bit — tiny, dependency-free, and stable across platforms;
+/// collision resistance is not a goal (the hash detects corruption,
+/// not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One decoded artifact: the plan, the thresholds it was compiled
+/// under, and its (verified) content hash.
+#[derive(Clone, Debug)]
+pub struct PlanArtifact {
+    pub plan: StepPlan,
+    pub thresholds: AutoThresholds,
+    pub content_hash: String,
+}
+
+// ---------------------------------------------------------------------
+// Encode
+// ---------------------------------------------------------------------
+
+fn slot_json(id: SlotId) -> Json {
+    if id == SlotId::NONE {
+        Json::Null
+    } else {
+        num(id.0 as f64)
+    }
+}
+
+/// The artifact object *without* `content_hash` — the exact bytes the
+/// hash is defined over are this object's canonical encoding.
+fn body(plan: &StepPlan, th: &AutoThresholds) -> Json {
+    obj(vec![
+        (
+            "dispatches",
+            arr(plan
+                .dispatches
+                .iter()
+                .map(|d| {
+                    obj(vec![
+                        ("backend", s(d.backend.name())),
+                        ("n", num(d.n as f64)),
+                        ("out", slot_json(d.out)),
+                        ("rhs", s(d.rhs.name())),
+                        ("transpose", Json::Bool(d.transpose)),
+                    ])
+                })
+                .collect()),
+        ),
+        ("format_version", num(FORMAT_VERSION as f64)),
+        (
+            "key",
+            arr(plan.key.0.iter().map(|&v| num(v as f64)).collect()),
+        ),
+        ("kind", s(KIND)),
+        (
+            "params",
+            arr(plan
+                .params
+                .iter()
+                .map(|p| {
+                    obj(vec![
+                        ("len", num(p.len as f64)),
+                        ("offset", num(p.offset as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+        (
+            "slots",
+            arr(plan.slots.iter().map(|&l| num(l as f64)).collect()),
+        ),
+        (
+            "thresholds",
+            obj(vec![
+                ("ell_waste", num(th.ell_waste)),
+                ("gemm_density", num(th.gemm_density)),
+            ]),
+        ),
+    ])
+}
+
+/// Canonical artifact text for `plan` (no trailing newline —
+/// [`save`] appends one).
+pub fn encode(plan: &StepPlan, th: &AutoThresholds) -> String {
+    let mut o = body(plan, th);
+    let hash = fnv1a64(o.to_string().as_bytes());
+    if let Json::Obj(m) = &mut o {
+        m.insert("content_hash".into(), Json::Str(format!("{hash:016x}")));
+    }
+    o.to_string()
+}
+
+/// Stable artifact file name for a geometry:
+/// `plan_<fnv1a64(key le-bytes)>.plan.json`.
+pub fn file_name(key: &GeometryKey) -> String {
+    let mut bytes = Vec::with_capacity(key.0.len() * 4);
+    for v in &key.0 {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    format!("plan_{:016x}{FILE_SUFFIX}", fnv1a64(&bytes))
+}
+
+/// Write `plan` under `dir` (created if absent) at its
+/// [`file_name`]; returns the path. The file is the canonical
+/// encoding plus a trailing newline.
+pub fn save(plan: &StepPlan, th: &AutoThresholds, dir: &Path) -> anyhow::Result<PathBuf> {
+    plan.validate()?;
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+    let path = dir.join(file_name(&plan.key));
+    let mut text = encode(plan, th);
+    text.push('\n');
+    std::fs::write(&path, text)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------
+// Decode
+// ---------------------------------------------------------------------
+
+fn req_u32(j: &Json, key: &str) -> anyhow::Result<u32> {
+    let n = j.req_f64(key)?;
+    anyhow::ensure!(
+        n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&n),
+        "field '{key}' is not a u32 (got {n})"
+    );
+    Ok(n as u32)
+}
+
+fn req_bool(j: &Json, key: &str) -> anyhow::Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow::anyhow!("missing boolean field '{key}'"))
+}
+
+fn as_u32(j: &Json, what: &str) -> anyhow::Result<u32> {
+    let n = j
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("{what} is not a number"))?;
+    anyhow::ensure!(
+        n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&n),
+        "{what} is not a u32 (got {n})"
+    );
+    Ok(n as u32)
+}
+
+/// Parse and verify one artifact. Checks run outermost-first so the
+/// error names the *actual* problem: JSON validity → `kind` →
+/// `format_version` → content hash → field decode →
+/// [`StepPlan::validate`]. Never panics on malformed input.
+pub fn decode(text: &str) -> anyhow::Result<PlanArtifact> {
+    let j = parse(text).map_err(|e| anyhow::anyhow!("plan artifact is not valid JSON: {e}"))?;
+    anyhow::ensure!(
+        j.as_obj().is_some(),
+        "plan artifact is not a JSON object"
+    );
+    let kind = j.req_str("kind")?;
+    anyhow::ensure!(
+        kind == KIND,
+        "not a step-plan artifact: kind is '{kind}', expected '{KIND}'"
+    );
+    let version = req_u32(&j, "format_version")?;
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "plan artifact format_version {version} but this build reads {FORMAT_VERSION} — \
+         regenerate the artifact (examples/plan_aot.rs dump) with a matching build"
+    );
+    let stored_hash = j.req_str("content_hash")?.to_string();
+    let mut without_hash = j.clone();
+    if let Json::Obj(m) = &mut without_hash {
+        m.remove("content_hash");
+    }
+    let actual = format!("{:016x}", fnv1a64(without_hash.to_string().as_bytes()));
+    anyhow::ensure!(
+        actual == stored_hash,
+        "plan artifact content hash mismatch: file says {stored_hash}, canonical content \
+         hashes to {actual} — the artifact is corrupt or was hand-edited; regenerate it"
+    );
+
+    let th = j
+        .get("thresholds")
+        .ok_or_else(|| anyhow::anyhow!("missing object field 'thresholds'"))?;
+    let thresholds = AutoThresholds {
+        gemm_density: th.req_f64("gemm_density")?,
+        ell_waste: th.req_f64("ell_waste")?,
+    };
+
+    let key = GeometryKey(
+        j.req_arr("key")?
+            .iter()
+            .map(|v| as_u32(v, "geometry key entry"))
+            .collect::<anyhow::Result<_>>()?,
+    );
+    let slots = j
+        .req_arr("slots")?
+        .iter()
+        .map(|v| Ok(as_u32(v, "slot length")? as usize))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let dispatches = j
+        .req_arr("dispatches")?
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            (|| -> anyhow::Result<DispatchDesc> {
+                Ok(DispatchDesc {
+                    backend: Backend::parse(d.req_str("backend")?)?,
+                    transpose: req_bool(d, "transpose")?,
+                    rhs: RhsKind::parse(d.req_str("rhs")?)?,
+                    n: req_u32(d, "n")?,
+                    out: match d.get("out") {
+                        Some(Json::Null) | None => SlotId::NONE,
+                        Some(v) => SlotId(as_u32(v, "out slot")?),
+                    },
+                })
+            })()
+            .map_err(|e| anyhow::anyhow!("dispatch {i}: {e}"))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let params = j
+        .req_arr("params")?
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            (|| -> anyhow::Result<ParamRef> {
+                Ok(ParamRef {
+                    offset: req_u32(p, "offset")?,
+                    len: req_u32(p, "len")?,
+                })
+            })()
+            .map_err(|e| anyhow::anyhow!("param ref {i}: {e}"))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    let plan = StepPlan {
+        key,
+        slots,
+        dispatches,
+        params,
+    };
+    plan.validate()?;
+    Ok(PlanArtifact {
+        plan,
+        thresholds,
+        content_hash: stored_hash,
+    })
+}
+
+/// Read and [`decode`] one artifact file.
+pub fn load(path: &Path) -> anyhow::Result<PlanArtifact> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    decode(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------------
+// Warm start
+// ---------------------------------------------------------------------
+
+/// What a [`warm_start`] scan did, per outcome. `errors` holds one
+/// message per rejected file (already prefixed with the path); none of
+/// them abort the boot — affected geometries compile at runtime.
+#[derive(Clone, Debug, Default)]
+pub struct WarmStartReport {
+    /// Plans installed into the cache.
+    pub loaded: usize,
+    /// Valid artifacts skipped because their compile-time thresholds
+    /// differ from this host's (a frozen `Backend::Auto` resolution
+    /// under other thresholds must not be adopted).
+    pub skipped_thresholds: usize,
+    /// Valid artifacts whose geometry was already cached.
+    pub skipped_duplicate: usize,
+    /// Rejected files (unreadable / corrupt / wrong version / invalid
+    /// plan), with the reason.
+    pub errors: Vec<String>,
+}
+
+impl WarmStartReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "warm-started {} plan(s) ({} threshold-skipped, {} duplicate, {} rejected)",
+            self.loaded,
+            self.skipped_thresholds,
+            self.skipped_duplicate,
+            self.errors.len()
+        )
+    }
+}
+
+fn same_thresholds(a: &AutoThresholds, b: &AutoThresholds) -> bool {
+    a.gemm_density.to_bits() == b.gemm_density.to_bits()
+        && a.ell_waste.to_bits() == b.ell_waste.to_bits()
+}
+
+/// Scan `dir` for `*.plan.json` files (in sorted name order, so boots
+/// are deterministic) and install every valid, threshold-matching plan
+/// into `cache` via [`PlanCache::insert_warm`]. A missing directory is
+/// an empty scan, and bad files are recorded, never fatal — see the
+/// module docs' fallback semantics.
+pub fn warm_start(
+    cache: &mut PlanCache,
+    dir: &Path,
+    th: &AutoThresholds,
+) -> anyhow::Result<WarmStartReport> {
+    let mut report = WarmStartReport::default();
+    if !dir.is_dir() {
+        return Ok(report);
+    }
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("cannot scan {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.ends_with(FILE_SUFFIX))
+        })
+        .collect();
+    paths.sort();
+    for path in paths {
+        match load(&path) {
+            Err(e) => report.errors.push(format!("{e:#}")),
+            Ok(art) => {
+                if !same_thresholds(&art.thresholds, th) {
+                    report.skipped_thresholds += 1;
+                } else if cache.insert_warm(art.plan) {
+                    report.loaded += 1;
+                } else {
+                    report.skipped_duplicate += 1;
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Warm-start from [`ENV_PLAN_DIR`] when it is set; `None` when it is
+/// not (the common case — boots load nothing implicitly).
+pub fn warm_start_from_env(
+    cache: &mut PlanCache,
+    th: &AutoThresholds,
+) -> anyhow::Result<Option<WarmStartReport>> {
+    match std::env::var(ENV_PLAN_DIR) {
+        Err(_) => Ok(None),
+        Ok(dir) => warm_start(cache, Path::new(&dir), th).map(Some),
+    }
+}
+
+/// Conventional plan directory when [`ENV_PLAN_DIR`] is unset:
+/// `<artifacts>/plans` under the shared artifact root
+/// ([`default_artifacts_dir`]).
+pub fn default_plan_dir() -> PathBuf {
+    match std::env::var(ENV_PLAN_DIR) {
+        Ok(dir) => PathBuf::from(dir),
+        Err(_) => default_artifacts_dir().join("plans"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::prop_assert;
+
+    fn sample_plan() -> StepPlan {
+        let mut p = StepPlan::new(GeometryKey(vec![1, 4, 50, 16, 4, 12, 12, 64, 64]));
+        let a = p.add_slot(12800);
+        let b = p.add_slot(48);
+        p.add_dispatch(DispatchDesc {
+            backend: Backend::Gemm,
+            transpose: false,
+            rhs: RhsKind::Shared,
+            n: 64,
+            out: a,
+        });
+        p.add_dispatch(DispatchDesc {
+            backend: Backend::Ell,
+            transpose: true,
+            rhs: RhsKind::PerSample,
+            n: 64,
+            out: b,
+        });
+        p.add_dispatch(DispatchDesc {
+            backend: Backend::Csr,
+            transpose: false,
+            rhs: RhsKind::SharedTransposed,
+            n: 12,
+            out: SlotId::NONE,
+        });
+        p.add_dispatch(DispatchDesc {
+            backend: Backend::St,
+            transpose: true,
+            rhs: RhsKind::Shared,
+            n: 7,
+            out: a,
+        });
+        p.add_param(0, 4096);
+        p.add_param(4096, 256);
+        p
+    }
+
+    fn rehash(text: &str) -> String {
+        // Recompute the content hash of a (possibly tampered) artifact
+        // so tests can separate "hash mismatch" from later checks.
+        let mut j = parse(text).unwrap();
+        if let Json::Obj(m) = &mut j {
+            m.remove("content_hash");
+        }
+        let h = fnv1a64(j.to_string().as_bytes());
+        if let Json::Obj(m) = &mut j {
+            m.insert("content_hash".into(), Json::Str(format!("{h:016x}")));
+        }
+        j.to_string()
+    }
+
+    #[test]
+    fn round_trip_preserves_every_field() {
+        let plan = sample_plan();
+        let th = AutoThresholds::default();
+        let text = encode(&plan, &th);
+        let art = decode(&text).unwrap();
+        assert_eq!(art.plan, plan);
+        assert_eq!(art.thresholds.gemm_density.to_bits(), th.gemm_density.to_bits());
+        assert_eq!(art.thresholds.ell_waste.to_bits(), th.ell_waste.to_bits());
+        // serialize → deserialize → serialize is byte-identical.
+        assert_eq!(encode(&art.plan, &art.thresholds), text);
+        // The stored hash is the canonical-content hash.
+        assert_eq!(rehash(&text), text);
+    }
+
+    #[test]
+    fn content_hash_changes_with_content_and_is_stable() {
+        let th = AutoThresholds::default();
+        let a = encode(&sample_plan(), &th);
+        assert_eq!(a, encode(&sample_plan(), &th), "encoding must be deterministic");
+        let mut other = sample_plan();
+        other.slots[1] = 64;
+        let b = encode(&other, &th);
+        assert_ne!(
+            decode(&a).unwrap().content_hash,
+            decode(&b).unwrap().content_hash
+        );
+    }
+
+    #[test]
+    fn property_random_plans_round_trip_byte_identical() {
+        prop::run(60, |rng| {
+            let mut plan = StepPlan::new(GeometryKey(
+                (0..rng.range(1, 8)).map(|_| rng.below(1 << 20) as u32).collect(),
+            ));
+            for _ in 0..rng.range(1, 6) {
+                plan.add_slot(rng.range(1, 1 << 16));
+            }
+            let n_slots = plan.slots.len() as u32;
+            for _ in 0..rng.range(1, 12) {
+                plan.add_dispatch(DispatchDesc {
+                    backend: Backend::FIXED[rng.range(0, 4)],
+                    transpose: rng.bool(0.5),
+                    rhs: [RhsKind::Shared, RhsKind::PerSample, RhsKind::SharedTransposed]
+                        [rng.range(0, 3)],
+                    n: rng.range(1, 512) as u32,
+                    out: if rng.bool(0.25) {
+                        SlotId::NONE
+                    } else {
+                        SlotId(rng.below(n_slots as u64) as u32)
+                    },
+                });
+            }
+            for _ in 0..rng.range(0, 5) {
+                let off = rng.below(1 << 24) as usize;
+                plan.add_param(off, rng.range(1, 1 << 16));
+            }
+            let th = AutoThresholds {
+                gemm_density: rng.f32_range(0.01, 0.9) as f64,
+                ell_waste: rng.f32_range(1.0, 8.0) as f64,
+            };
+            let text = encode(&plan, &th);
+            let art = decode(&text).map_err(|e| format!("decode failed: {e}"))?;
+            prop_assert!(art.plan == plan, "plan fields not preserved");
+            prop_assert!(
+                art.thresholds.gemm_density.to_bits() == th.gemm_density.to_bits()
+                    && art.thresholds.ell_waste.to_bits() == th.ell_waste.to_bits(),
+                "thresholds not preserved"
+            );
+            let again = encode(&art.plan, &art.thresholds);
+            prop_assert!(again == text, "re-encoding is not byte-identical");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_truncated_and_corrupt_artifacts() {
+        let text = encode(&sample_plan(), &AutoThresholds::default());
+        let truncated = &text[..text.len() / 2];
+        let e = decode(truncated).unwrap_err().to_string();
+        assert!(e.contains("not valid JSON"), "unexpected error: {e}");
+        let e = decode("not json at all").unwrap_err().to_string();
+        assert!(e.contains("not valid JSON"), "unexpected error: {e}");
+        let e = decode("[1,2,3]").unwrap_err().to_string();
+        assert!(e.contains("not a JSON object"), "unexpected error: {e}");
+        // A manifest-like object is not a plan artifact.
+        let e = decode(r#"{"kind":"manifest","format_version":1}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("kind is 'manifest'"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn rejects_wrong_format_version_even_with_valid_hash() {
+        let text = encode(&sample_plan(), &AutoThresholds::default());
+        let mut j = parse(&text).unwrap();
+        if let Json::Obj(m) = &mut j {
+            m.insert("format_version".into(), num(2.0));
+        }
+        let tampered = rehash(&j.to_string());
+        let e = decode(&tampered).unwrap_err().to_string();
+        assert!(
+            e.contains("format_version 2") && e.contains("reads 1"),
+            "unexpected error: {e}"
+        );
+    }
+
+    #[test]
+    fn rejects_content_hash_mismatch() {
+        let text = encode(&sample_plan(), &AutoThresholds::default());
+        // Tamper a slot length without recomputing the hash.
+        let tampered = text.replacen("12800", "12801", 1);
+        assert_ne!(tampered, text);
+        let e = decode(&tampered).unwrap_err().to_string();
+        assert!(e.contains("content hash mismatch"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn rejects_structurally_invalid_plans() {
+        let th = AutoThresholds::default();
+        // An Auto backend must never be frozen into an artifact.
+        let text = encode(&sample_plan(), &th).replacen("\"gemm\"", "\"auto\"", 1);
+        let e = decode(&rehash(&text)).unwrap_err().to_string();
+        assert!(e.contains("Backend::Auto"), "unexpected error: {e}");
+        // An out-slot past the slot table is rejected, not replayed OOB.
+        let mut bad = sample_plan();
+        bad.dispatches[0].out = SlotId(99);
+        let text = encode(&bad, &th);
+        let e = decode(&text).unwrap_err().to_string();
+        assert!(e.contains("slot 99"), "unexpected error: {e}");
+        // Unknown backend / rhs names are named in the error.
+        let text = encode(&sample_plan(), &th).replacen("\"ell\"", "\"cuda\"", 1);
+        let e = decode(&rehash(&text)).unwrap_err().to_string();
+        assert!(e.contains("unknown backend 'cuda'"), "unexpected error: {e}");
+    }
+
+    #[test]
+    fn save_load_warm_start_round_trip() {
+        let dir = std::env::temp_dir().join("bspmm_plan_artifact_warmstart");
+        let _ = std::fs::remove_dir_all(&dir);
+        let th = AutoThresholds::default();
+        let plan_a = sample_plan();
+        let mut plan_b = sample_plan();
+        plan_b.key = GeometryKey(vec![2, 4, 50, 16, 4, 12, 12, 64, 64]);
+        let path_a = save(&plan_a, &th, &dir).unwrap();
+        save(&plan_b, &th, &dir).unwrap();
+        assert!(path_a.file_name().unwrap().to_str().unwrap().ends_with(FILE_SUFFIX));
+        assert_eq!(load(&path_a).unwrap().plan, plan_a);
+
+        let mut cache = PlanCache::new();
+        let report = warm_start(&mut cache, &dir, &th).unwrap();
+        assert_eq!(report.loaded, 2, "{}", report.summary());
+        assert!(report.errors.is_empty());
+        assert!(cache.contains(&plan_a.key) && cache.contains(&plan_b.key));
+        let stats = cache.stats();
+        assert_eq!(stats.plans_warmed, 2);
+        assert_eq!(stats.plans_built, 0, "warm start must not count as building");
+        // Second scan: both geometries already cached.
+        let report = warm_start(&mut cache, &dir, &th).unwrap();
+        assert_eq!((report.loaded, report.skipped_duplicate), (0, 2));
+
+        // Threshold mismatch: skip, don't adopt.
+        let other = AutoThresholds {
+            gemm_density: 0.5,
+            ell_waste: 2.0,
+        };
+        let mut fresh = PlanCache::new();
+        let report = warm_start(&mut fresh, &dir, &other).unwrap();
+        assert_eq!((report.loaded, report.skipped_thresholds), (0, 2));
+        assert!(fresh.is_empty(), "mismatched artifacts must fall back to runtime compile");
+
+        // A corrupt file is reported but doesn't block the others.
+        std::fs::write(dir.join("broken.plan.json"), "{oops").unwrap();
+        let mut fresh = PlanCache::new();
+        let report = warm_start(&mut fresh, &dir, &th).unwrap();
+        assert_eq!(report.loaded, 2);
+        assert_eq!(report.errors.len(), 1);
+        assert!(report.errors[0].contains("broken.plan.json"));
+
+        // Missing directory is an empty scan, not an error.
+        let report = warm_start(
+            &mut PlanCache::new(),
+            &dir.join("does_not_exist"),
+            &th,
+        )
+        .unwrap();
+        assert_eq!(report.loaded, 0);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_names_are_stable_per_geometry() {
+        let a = file_name(&GeometryKey(vec![1, 4, 50]));
+        assert_eq!(a, file_name(&GeometryKey(vec![1, 4, 50])));
+        assert_ne!(a, file_name(&GeometryKey(vec![2, 4, 50])));
+        assert!(a.starts_with("plan_") && a.ends_with(FILE_SUFFIX));
+    }
+}

@@ -463,9 +463,32 @@ pub enum RhsKind {
     SharedTransposed,
 }
 
+impl RhsKind {
+    /// Stable artifact name (`runtime::plan_artifact` encoding).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RhsKind::Shared => "shared",
+            RhsKind::PerSample => "per_sample",
+            RhsKind::SharedTransposed => "shared_transposed",
+        }
+    }
+
+    /// Parse an artifact name back ([`RhsKind::name`] inverse).
+    pub fn parse(s: &str) -> anyhow::Result<RhsKind> {
+        Ok(match s {
+            "shared" => RhsKind::Shared,
+            "per_sample" => RhsKind::PerSample,
+            "shared_transposed" => RhsKind::SharedTransposed,
+            other => anyhow::bail!(
+                "unknown rhs kind '{other}' (shared|per_sample|shared_transposed)"
+            ),
+        })
+    }
+}
+
 /// One compiled dispatch: everything a replay needs that the direct
 /// path re-derives per call.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DispatchDesc {
     /// Concrete backend (never [`Backend::Auto`] — resolution happens
     /// at plan build).
@@ -482,7 +505,7 @@ pub struct DispatchDesc {
 /// Cached parameter-table entry: flat (offset, len) into the
 /// [`ParamSet`](crate::gcn::ParamSet) data vector, resolved once at
 /// plan build so replays never run name lookups or `format!`.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParamRef {
     pub offset: u32,
     pub len: u32,
@@ -496,8 +519,10 @@ impl ParamRef {
 }
 
 /// The compiled form of one forward or train step. Built once per
-/// geometry, replayed every iteration after that.
-#[derive(Clone, Debug)]
+/// geometry, replayed every iteration after that. `PartialEq` is
+/// field-exact — the AOT golden tests compare a deserialized plan
+/// against a freshly compiled one with `==`.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StepPlan {
     pub key: GeometryKey,
     /// Required maximum length of each workspace slot.
@@ -546,6 +571,40 @@ impl StepPlan {
     pub fn param(&self, idx: usize) -> ParamRef {
         self.params[idx]
     }
+
+    /// Structural invariants every plan must satisfy — checked on every
+    /// deserialized artifact before it may enter a [`PlanCache`]
+    /// (`runtime::plan_artifact`), so a corrupt or hand-edited artifact
+    /// is rejected with an actionable error instead of replaying out of
+    /// bounds. Freshly compiled plans satisfy this by construction.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.key.0.is_empty(), "plan has an empty geometry key");
+        anyhow::ensure!(
+            !self.dispatches.is_empty(),
+            "plan has no dispatch descriptors"
+        );
+        for (i, d) in self.dispatches.iter().enumerate() {
+            anyhow::ensure!(
+                d.backend != Backend::Auto,
+                "dispatch {i} stores Backend::Auto — plans must freeze \
+                 the resolved backend at compile time"
+            );
+            anyhow::ensure!(d.n >= 1, "dispatch {i} has dense width 0");
+            anyhow::ensure!(
+                d.out == SlotId::NONE || (d.out.0 as usize) < self.slots.len(),
+                "dispatch {i} writes slot {} but the plan declares only {} slots",
+                d.out.0,
+                self.slots.len()
+            );
+        }
+        for (i, p) in self.params.iter().enumerate() {
+            anyhow::ensure!(
+                p.offset.checked_add(p.len).is_some(),
+                "param ref {i} overflows the parameter table"
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Sequential reader over a plan's dispatch descriptors; replays
@@ -591,8 +650,13 @@ impl<'a> PlanCursor<'a> {
 /// `plans_built` frozen and `arena_bytes` constant from step 2 on.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PlanStats {
-    /// Plans compiled (one per geometry seen).
+    /// Plans compiled (one per geometry seen). Warm-started entries do
+    /// NOT count here — the AOT cold-start contract is precisely
+    /// `plans_built == 0` in steady state after a warm start.
     pub plans_built: u64,
+    /// Plans installed from deserialized AOT artifacts
+    /// ([`PlanCache::insert_warm`], `runtime::plan_artifact`).
+    pub plans_warmed: u64,
     /// Steps served from a cached plan.
     pub replays: u64,
     /// Bytes currently backing all cached workspaces.
@@ -617,6 +681,7 @@ pub struct PlanCache {
     entries: Vec<CacheEntry>,
     cap: usize,
     plans_built: u64,
+    plans_warmed: u64,
     replays: u64,
 }
 
@@ -634,8 +699,45 @@ impl PlanCache {
             // of eval/serve batch shapes) without unbounded growth.
             cap: 8,
             plans_built: 0,
+            plans_warmed: 0,
             replays: 0,
         }
+    }
+
+    /// Whether a plan for `key` is cached (warm-started or compiled).
+    pub fn contains(&self, key: &GeometryKey) -> bool {
+        self.entries.iter().any(|e| e.key == *key)
+    }
+
+    /// Iterate the cached plans (dump side of the AOT artifact flow —
+    /// `runtime::plan_artifact::save` serializes each one).
+    pub fn plans(&self) -> impl Iterator<Item = &StepPlan> {
+        self.entries.iter().map(|e| &e.plan)
+    }
+
+    /// Install a pre-compiled plan (deserialized from an AOT artifact)
+    /// with a prepared workspace, so the first live step of this
+    /// geometry replays instead of compiling. Counts in
+    /// [`PlanStats::plans_warmed`], never in `plans_built` — the
+    /// fleet-cold-start contract is `plans_built == 0` at steady state.
+    /// A key already cached is left untouched (returns `false`): live
+    /// entries are never clobbered by artifacts.
+    pub fn insert_warm(&mut self, plan: StepPlan) -> bool {
+        if self.contains(&plan.key) {
+            return false;
+        }
+        let mut ws = Workspace::new();
+        ws.prepare(&plan);
+        self.plans_warmed += 1;
+        if self.entries.len() == self.cap {
+            self.entries.remove(0);
+        }
+        self.entries.push(CacheEntry {
+            key: plan.key.clone(),
+            plan,
+            ws,
+        });
+        true
     }
 
     /// The cached plan + workspace for `key`, building (and preparing
@@ -679,6 +781,7 @@ impl PlanCache {
     pub fn stats(&self) -> PlanStats {
         let mut s = PlanStats {
             plans_built: self.plans_built,
+            plans_warmed: self.plans_warmed,
             replays: self.replays,
             ..PlanStats::default()
         };

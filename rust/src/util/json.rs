@@ -89,6 +89,12 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
     }
 
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
+    }
+
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .and_then(Json::as_arr)
@@ -97,6 +103,13 @@ impl Json {
 
     // ---- writer ----------------------------------------------------------
 
+    /// Canonical encoding: this writer is deterministic — object keys
+    /// in sorted (`BTreeMap`) order, no whitespace, integers (`fract()
+    /// == 0`, |n| < 1e15) as `i64` digits, other numbers in Rust's
+    /// shortest-roundtrip float form. The AOT plan-artifact content
+    /// hash (`runtime::plan_artifact`) is defined over exactly this
+    /// encoding; changing the writer is a format break that must bump
+    /// the artifact `format_version`.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -413,6 +426,26 @@ mod tests {
     fn utf8_passthrough() {
         let j = parse("\"héllo — ☃\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo — ☃"));
+    }
+
+    #[test]
+    fn canonical_encoding_is_stable() {
+        // The plan-artifact content hash depends on every one of these
+        // properties; a failure here means the artifact format broke.
+        // Integral floats render as integers, fractions roundtrip
+        // shortest-form.
+        assert_eq!(num(3.0).to_string(), "3");
+        assert_eq!(num(-0.0).to_string(), "0");
+        assert_eq!(num(0.25).to_string(), "0.25");
+        assert_eq!(num(1e15).to_string(), "1000000000000000");
+        // Keys sort regardless of insertion order, output is compact.
+        let a = obj(vec![("b", num(2.0)), ("a", num(1.0))]);
+        let b = obj(vec![("a", num(1.0)), ("b", num(2.0))]);
+        assert_eq!(a.to_string(), r#"{"a":1,"b":2}"#);
+        assert_eq!(a.to_string(), b.to_string());
+        // Parse → emit is a fixed point on canonical input.
+        let canon = r#"{"ell_waste":3,"gemm_density":0.25,"key":[1,4,50]}"#;
+        assert_eq!(parse(canon).unwrap().to_string(), canon);
     }
 
     #[test]

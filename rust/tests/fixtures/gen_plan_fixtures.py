@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Regenerate the golden plan-artifact fixtures in this directory.
+
+Mirrors the canonical JSON writer (`util::json::Json::to_string`: BTreeMap
+key order, no whitespace, integral floats rendered as integers) and the
+FNV-1a 64 content hash of `runtime::plan_artifact`. The fixture bytes are
+asserted byte-identical to `plan_artifact::encode(...)` of freshly
+compiled plans in `tests/plan_artifact_golden.rs` — if that suite fails
+after an intentional format change, bump `FORMAT_VERSION` there and in
+`plan_artifact.rs` together, then rerun this script.
+
+Plan shapes below are transcriptions of the compilers they pin:
+`reference::plan_forward` / `backward::plan_train` for the tox21 B=4
+geometry (slots, params and dispatches in construction order), and the
+hand-built single-backend engine plans from the golden suite.
+"""
+
+import os
+
+FORMAT_VERSION = 1
+KIND = "bspmm_step_plan"
+# AutoThresholds::default(), baked into every fixture.
+THRESHOLDS = {"ell_waste": 3.0, "gemm_density": 0.25}
+
+OUT_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def canon(v) -> str:
+    """Canonical encoding, byte-for-byte `Json::to_string`."""
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        f = float(v)
+        if f == int(f) and abs(f) < 1e15:
+            return str(int(f))
+        r = repr(f)
+        assert r == "0.25", f"float {f}: verify repr matches Rust's writer"
+        return r
+    if isinstance(v, str):
+        assert all(c not in '"\\' and ord(c) >= 0x20 for c in v), v
+        return '"' + v + '"'
+    if isinstance(v, list):
+        return "[" + ",".join(canon(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(canon(k) + ":" + canon(v[k]) for k in sorted(v)) + "}"
+    raise TypeError(type(v))
+
+
+def dispatch(backend, transpose, rhs, n, out):
+    return {"backend": backend, "n": n, "out": out, "rhs": rhs, "transpose": transpose}
+
+
+def artifact(key, slots, dispatches, params):
+    body = {
+        "dispatches": dispatches,
+        "format_version": FORMAT_VERSION,
+        "key": key,
+        "kind": KIND,
+        "params": [{"len": ln, "offset": off} for (off, ln) in params],
+        "slots": slots,
+        "thresholds": THRESHOLDS,
+    }
+    body["content_hash"] = "%016x" % fnv1a64(canon(body).encode())
+    return canon(body) + "\n"
+
+
+# --- tox21 B=4: hidden=[64,64], feat=16, ch=4, m=50, n_out=12 --------------
+
+B, M, FEAT, CH, ELLW, NOUT = 4, 50, 16, 4, 12, 12
+HIDDEN = [64, 64]
+KEY_TAIL = [B, M, FEAT, CH, ELLW, NOUT] + HIDDEN
+# ModelConfig::synthetic("tox21") parameter table: (offset, len) in
+# plan_forward_into's push order, readout.w appended by plan_train.
+FWD_PARAMS = [
+    (0, 4096), (4096, 256), (4352, 64), (4416, 64),          # conv0 w,b,gamma,beta
+    (4480, 16384), (20864, 256), (21120, 64), (21184, 64),   # conv1
+    (22016, 12),                                             # readout.b
+]
+READOUT_W = (21248, 768)
+
+# Forward slots: U scratch, one activation per layer, logits.
+FWD_SLOTS = [B * M * 64, B * M * 64, B * M * 64, B * NOUT]
+# Forward dispatches: per (layer, channel) the XW GEMM into U then the
+# adjacency ELL SpMM into act[layer]; readout GEMM last.
+FWD_DISPATCHES = []
+for li in range(len(HIDDEN)):
+    for _ch in range(CH):
+        FWD_DISPATCHES.append(dispatch("gemm", False, "shared", 64, 0))
+        FWD_DISPATCHES.append(dispatch("ell", False, "per_sample", 64, 1 + li))
+FWD_DISPATCHES.append(dispatch("gemm", False, "shared", NOUT, 3))
+
+# Train plan: forward + backward slots (ypre x2, dlogits, pooled, drow,
+# dh, dx, du, dypre, wt, hn, dhat) and the 22 backward dispatches in
+# backward::plan_train's issue order. Slot ids: du=11, dx=10, drow=8.
+TRAIN_SLOTS = FWD_SLOTS + [
+    B * M * 64, B * M * 64,        # ypre per layer
+    B * NOUT, B * 64, B * 64,      # dlogits, pooled, drow
+    B * M * 64, B * M * 64, B * M * 64, B * M * 64,  # dh, dx, du, dypre
+    64 * 64, M, M,                 # wt (widest weight), hn, dhat
+]
+TRAIN_DISPATCHES = list(FWD_DISPATCHES)
+TRAIN_DISPATCHES.append(dispatch("gemm", True, "shared", NOUT, None))  # dW_out
+TRAIN_DISPATCHES.append(dispatch("gemm", False, "shared_transposed", 64, 8))
+for li in (1, 0):
+    for _ch in range(CH):
+        TRAIN_DISPATCHES.append(dispatch("ell", True, "per_sample", 64, 11))
+        TRAIN_DISPATCHES.append(dispatch("gemm", True, "shared", 64, None))
+        if li > 0:
+            TRAIN_DISPATCHES.append(dispatch("gemm", False, "shared_transposed", 64, 10))
+
+FIXTURES = {
+    "tox21_fwd_b4.plan.json": artifact([1] + KEY_TAIL, FWD_SLOTS, FWD_DISPATCHES, FWD_PARAMS),
+    "tox21_train_b4.plan.json": artifact(
+        [2] + KEY_TAIL, TRAIN_SLOTS, TRAIN_DISPATCHES, FWD_PARAMS + [READOUT_W]
+    ),
+}
+
+# --- engine-level single-backend plans (batch=2, dim=8, nb=4) --------------
+# One forward + one transpose dispatch into slot 0; key tag 100+idx keeps
+# these clear of real geometry keys. engine_auto freezes what
+# choose_backend resolves for the golden suite's pinned dense (gemm) and
+# sparse row-regular (ell) profiles.
+
+EB, EDIM, ENB = 2, 8, 4
+for idx, bk in enumerate(["st", "csr", "ell", "gemm"]):
+    FIXTURES[f"engine_{bk}.plan.json"] = artifact(
+        [100 + idx, EB, EDIM, EDIM, ENB],
+        [EB * EDIM * ENB],
+        [
+            dispatch(bk, False, "per_sample", ENB, 0),
+            dispatch(bk, True, "per_sample", ENB, 0),
+        ],
+        [],
+    )
+FIXTURES["engine_auto.plan.json"] = artifact(
+    [104, EB, EDIM, EDIM, ENB],
+    [EB * EDIM * ENB],
+    [
+        dispatch("gemm", False, "per_sample", ENB, 0),
+        dispatch("ell", False, "per_sample", ENB, 0),
+    ],
+    [],
+)
+
+if __name__ == "__main__":
+    for name, text in FIXTURES.items():
+        path = os.path.join(OUT_DIR, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name} ({len(text)} bytes, hash {text.split('content_hash')[1][3:19]})")
