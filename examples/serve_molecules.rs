@@ -13,6 +13,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
+use bspmm::coordinator::CloseRule;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::util::cli::{parse_or_exit, Cli};
 
@@ -34,6 +35,9 @@ fn run_mode(
         backend: ServeBackend::Pjrt,
         max_batch,
         max_wait: Duration::from_millis(wait_ms),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
         params_path: params,
     })?;
     // Warmup (compile + first dispatch) outside the measurement.

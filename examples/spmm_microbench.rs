@@ -20,6 +20,13 @@
 //!     cargo run --release --example spmm_microbench -- --plan aot
 //!     cargo run --release --example spmm_microbench -- --json
 //!     cargo run --release --example spmm_microbench -- --sweep large --json
+//!     cargo run --release --example spmm_microbench -- --serve
+//!
+//! `--serve` runs the serving bench instead (DESIGN.md §14): offered
+//! load × batch-close policy (fixed-size vs size-or-age) on the
+//! host-engine server under a deterministic open-loop Poisson trace,
+//! recording throughput-vs-latency curves (p50/p99/p99.9, shed counts,
+//! occupancy) into `BENCH_serving.json` at the repo root.
 //!
 //! `--sweep large` runs the large-graph tier instead (DESIGN.md §12):
 //! power-law graphs at 10^4/10^5/10^6 nodes (CI scale under
@@ -47,8 +54,8 @@ use std::path::Path;
 
 use bspmm::bench::figures::{
     auto_choices, auto_vs_fixed_summary, engine_speedup_summary, run_aot_warmstart_bench,
-    run_engine_bench_backends, run_large_graph_bench, run_plan_bench, run_train_step_bench,
-    FigureRunner, ENGINE_SERIES,
+    run_engine_bench_backends, run_large_graph_bench, run_plan_bench, run_serving_bench,
+    run_train_step_bench, FigureRunner, ENGINE_SERIES,
 };
 use bspmm::bench::report::save_json_in;
 use bspmm::bench::BenchOpts;
@@ -83,8 +90,29 @@ fn main() -> anyhow::Result<()> {
         .flag(
             "json",
             "also run the fig10 mixed sweep and write BENCH_engine.json at the repo root",
+        )
+        .flag(
+            "serve",
+            "run the serving bench instead: offered load x batch policy on the \
+             host-engine server, writing BENCH_serving.json at the repo root",
         );
     let args = parse_or_exit(&cli);
+
+    // The serving bench (DESIGN.md §14) drives a live host-engine
+    // server under open-loop load — a different harness from the
+    // kernel sweeps, so it short-circuits like `--sweep large`. It
+    // always writes its own JSON record (BENCH_serving.json), merge
+    // semantics unneeded: the file has a single producer.
+    if args.flag("serve") {
+        let bench = run_serving_bench(args.str("train_model"), args.usize("threads"))?;
+        print!("{}", bench.render());
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap_or_else(|| Path::new("."));
+        let path = save_json_in(root, "BENCH_serving", &bench.to_json())?;
+        println!("wrote {}\n", path.display());
+        return Ok(());
+    }
 
     let rt = match Runtime::new_default() {
         Ok(rt) => Some(rt),

@@ -16,6 +16,7 @@ use bspmm::bench::report::{render_comparison, save_json};
 use bspmm::bench::workload::SpmmWorkload;
 use bspmm::bench::BenchOpts;
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
+use bspmm::coordinator::CloseRule;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::runtime::artifact::SweepSpec;
 use bspmm::runtime::Runtime;
@@ -117,6 +118,9 @@ fn a3_batcher_deadline() -> anyhow::Result<Json> {
             backend: ServeBackend::Pjrt,
             max_batch: 50,
             max_wait: Duration::from_millis(wait_ms),
+            close: CloseRule::SizeOrAge,
+            queue_bound: 0,
+            deadline: None,
             params_path: None,
         })?;
         let data = Dataset::generate(DatasetKind::Tox21, 300, 0xAB);

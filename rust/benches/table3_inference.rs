@@ -15,6 +15,7 @@ use std::time::Duration;
 
 use bspmm::bench::report::{render_comparison, save_json};
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
+use bspmm::coordinator::CloseRule;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::util::json::{num, obj, Json};
 
@@ -41,6 +42,9 @@ fn run_mode(
         backend: ServeBackend::Pjrt,
         max_batch,
         max_wait: Duration::from_millis(5),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
         params_path: None,
     })?;
     let data = Dataset::generate(kind, n, 0xCAFE);

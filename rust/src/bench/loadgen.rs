@@ -1,0 +1,231 @@
+//! Open-loop load generation for the serving bench (DESIGN.md §14).
+//!
+//! An *open-loop* generator fixes the arrival process up front and
+//! submits on that schedule regardless of how the server is doing —
+//! unlike closed-loop clients, it keeps offering load while the server
+//! falls behind, which is what exposes queueing collapse and makes
+//! shedding observable. The whole trace (arrival offsets *and* request
+//! payloads) is a pure function of the seed: two runs with the same
+//! seed offer byte-identical traffic, so a fixed-size vs size-or-age
+//! comparison at "equal offered load" really is equal.
+//!
+//! No wall clock enters trace *generation* — entries carry [`Duration`]
+//! offsets from an abstract start. Only [`submit_trace`] touches real
+//! time, sleeping each entry to its offset against one anchor
+//! `Instant` (absolute offsets, so sleep jitter never accumulates).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::InferResponse;
+use crate::coordinator::server::Server;
+use crate::graph::molecule::{Molecule, MoleculeSpec};
+use crate::util::rng::Rng;
+
+/// The arrival process shaping a trace.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Memoryless arrivals at `rate_rps`: exponential inter-arrival
+    /// gaps, the standard open-loop serving model.
+    Poisson { rate_rps: f64 },
+    /// On/off bursts: groups of `burst` requests arrive Poisson at
+    /// `peak_rps`, separated by idle gaps sized so the long-run mean
+    /// rate is still `rate_rps`. Stresses the admission queue with
+    /// depth spikes a smooth Poisson stream at the same mean never
+    /// produces.
+    Bursty {
+        rate_rps: f64,
+        peak_rps: f64,
+        burst: usize,
+    },
+}
+
+impl Arrivals {
+    /// Long-run mean offered load of the process.
+    pub fn rate_rps(&self) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate_rps } => rate_rps,
+            Arrivals::Bursty { rate_rps, .. } => rate_rps,
+        }
+    }
+}
+
+/// One scheduled request: when it is offered and what it carries.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    /// Arrival offset from the (abstract) trace start.
+    pub at: Duration,
+    pub mol: Molecule,
+}
+
+/// A fully materialized open-loop request schedule.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+    /// Long-run mean rate the trace was generated for.
+    pub offered_rps: f64,
+    pub seed: u64,
+}
+
+impl Trace {
+    /// Arrival offset of the last entry (zero for an empty trace).
+    pub fn span(&self) -> Duration {
+        self.entries.last().map(|e| e.at).unwrap_or(Duration::ZERO)
+    }
+}
+
+/// Mixed request sizes: roughly half the trace is small molecules
+/// (cheap pack, low padding), half the full Table-I size range — so a
+/// batch's cost is not a pure function of its occupancy and the bench
+/// sees realistic per-request variance.
+fn small_spec() -> MoleculeSpec {
+    MoleculeSpec {
+        min_atoms: 4,
+        max_atoms: 12,
+        ..MoleculeSpec::default()
+    }
+}
+
+/// One exponential inter-arrival gap at `rate` req/s. The uniform draw
+/// is clamped away from 0 so `ln` stays finite.
+fn exp_gap(rng: &mut Rng, rate: f64) -> Duration {
+    let u = (rng.f32() as f64).max(1e-9);
+    Duration::from_secs_f64(-u.ln() / rate)
+}
+
+/// Generate `n` arrivals under the given process, deterministically in
+/// `seed`: same `(arrivals, n, seed)` → the identical trace, entry for
+/// entry, molecule for molecule.
+pub fn generate_trace(arrivals: Arrivals, n: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let small = small_spec();
+    let full = MoleculeSpec::default();
+    let mut entries = Vec::with_capacity(n);
+    let mut at = Duration::ZERO;
+    let mut in_burst = 0usize;
+    for _ in 0..n {
+        match arrivals {
+            Arrivals::Poisson { rate_rps } => {
+                at += exp_gap(&mut rng, rate_rps);
+            }
+            Arrivals::Bursty {
+                rate_rps,
+                peak_rps,
+                burst,
+            } => {
+                debug_assert!(peak_rps >= rate_rps && burst >= 1);
+                if in_burst == 0 {
+                    // Idle gap: the schedule time a burst "saves" by
+                    // arriving at peak_rps instead of rate_rps, handed
+                    // back as silence so the long-run mean stays
+                    // rate_rps.
+                    let off = burst as f64 * (1.0 / rate_rps - 1.0 / peak_rps);
+                    at += Duration::from_secs_f64(off.max(0.0));
+                    in_burst = burst;
+                }
+                at += exp_gap(&mut rng, peak_rps);
+                in_burst -= 1;
+            }
+        }
+        let spec = if rng.bool(0.5) { &small } else { &full };
+        entries.push(TraceEntry {
+            at,
+            mol: Molecule::random(&mut rng, spec),
+        });
+    }
+    Trace {
+        entries,
+        offered_rps: arrivals.rate_rps(),
+        seed,
+    }
+}
+
+/// Drive a trace against a live server, open-loop: sleep to each
+/// entry's absolute offset and submit, never waiting for responses.
+/// Returns the per-request response channels in submission order —
+/// collect them *after* [`Server::shutdown`] so the drain has answered
+/// every admitted request (under the fixed-size close rule a trailing
+/// partial batch is only emitted by that drain).
+pub fn submit_trace(server: &Server, trace: &Trace) -> Vec<mpsc::Receiver<InferResponse>> {
+    let start = Instant::now();
+    let mut rxs = Vec::with_capacity(trace.entries.len());
+    for e in &trace.entries {
+        if let Some(wait) = e.at.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        rxs.push(server.submit(e.mol.clone()));
+    }
+    rxs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fingerprint(t: &Trace) -> Vec<(u128, usize, usize)> {
+        t.entries
+            .iter()
+            .map(|e| (e.at.as_nanos(), e.mol.n_atoms, e.mol.bonds.len()))
+            .collect()
+    }
+
+    #[test]
+    fn trace_is_deterministic_in_seed() {
+        let a = Arrivals::Poisson { rate_rps: 500.0 };
+        let t1 = generate_trace(a, 64, 0x10AD);
+        let t2 = generate_trace(a, 64, 0x10AD);
+        assert_eq!(fingerprint(&t1), fingerprint(&t2));
+        let t3 = generate_trace(a, 64, 7);
+        assert_ne!(fingerprint(&t1), fingerprint(&t3));
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_sane() {
+        let n = 4000usize;
+        let t = generate_trace(Arrivals::Poisson { rate_rps: 1000.0 }, n, 42);
+        assert_eq!(t.entries.len(), n);
+        // Arrival offsets are nondecreasing.
+        assert!(t.entries.windows(2).all(|w| w[0].at <= w[1].at));
+        // Realized mean rate within 10% of offered (n is large).
+        let realized = n as f64 / t.span().as_secs_f64();
+        assert!(
+            (realized - 1000.0).abs() < 100.0,
+            "realized {realized} rps vs offered 1000"
+        );
+        // Mixed sizes actually mixed: both small and large molecules.
+        assert!(t.entries.iter().any(|e| e.mol.n_atoms <= 12));
+        assert!(t.entries.iter().any(|e| e.mol.n_atoms > 12));
+    }
+
+    #[test]
+    fn bursty_keeps_mean_rate_but_spikes_peak() {
+        let n = 2000usize;
+        let t = generate_trace(
+            Arrivals::Bursty {
+                rate_rps: 500.0,
+                peak_rps: 5000.0,
+                burst: 20,
+            },
+            n,
+            9,
+        );
+        let realized = n as f64 / t.span().as_secs_f64();
+        assert!(
+            (realized - 500.0).abs() < 75.0,
+            "realized {realized} rps vs offered mean 500"
+        );
+        // Within-burst gaps run at the peak rate: the median gap is far
+        // below the mean-rate gap (2ms at 500 rps).
+        let mut gaps: Vec<u128> = t
+            .entries
+            .windows(2)
+            .map(|w| (w[1].at - w[0].at).as_nanos())
+            .collect();
+        gaps.sort_unstable();
+        let median_us = gaps[gaps.len() / 2] as f64 / 1e3;
+        assert!(
+            median_us < 1000.0,
+            "median gap {median_us}us shows no burst structure"
+        );
+    }
+}

@@ -8,10 +8,13 @@
 //! * [`workload`] — deterministic packed inputs for a sweep point,
 //! * [`figures`] — the five-series SpMM comparison (measured CPU-PJRT
 //!   *and* simulated P100) for Figs. 8/9/10,
+//! * [`loadgen`] — deterministic open-loop arrival traces (Poisson /
+//!   bursty) for the serving bench (DESIGN.md §14),
 //! * [`report`] — human-readable tables + JSON result dumps under
 //!   `target/bench_results/` (EXPERIMENTS.md is assembled from these).
 
 pub mod figures;
+pub mod loadgen;
 pub mod report;
 pub mod workload;
 

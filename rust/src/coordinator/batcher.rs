@@ -8,11 +8,27 @@
 //!   * no request is lost or duplicated,
 //!   * FIFO order within and across batches,
 //!   * batches never exceed `max_batch`,
-//!   * a non-empty queue is flushed no later than `max_wait` after its
-//!     oldest entry arrived.
+//!   * under [`CloseRule::SizeOrAge`], a non-empty queue is flushed no
+//!     later than `max_wait` after its oldest entry arrived; under
+//!     [`CloseRule::FixedSize`] only a full batch (or the shutdown
+//!     drain) closes.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+/// When a partially-filled batch is allowed to leave the assembler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloseRule {
+    /// Close only when `max_batch` requests are queued. Maximum
+    /// occupancy, unbounded tail latency under trickle arrivals — the
+    /// throughput-first baseline the serving bench contrasts against.
+    FixedSize,
+    /// Close on size *or* oldest-request age (`max_wait`), whichever
+    /// fires first — the deadline-aware adaptive policy. The age knob
+    /// is env-calibratable on the serving path via `BSPMM_BATCH_AGE_US`
+    /// ([`age_from_env`]).
+    SizeOrAge,
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -20,18 +36,45 @@ pub struct BatchPolicy {
     /// batch capacity).
     pub max_batch: usize,
     /// Flush a non-empty queue once its oldest request has waited this
-    /// long.
+    /// long (ignored under [`CloseRule::FixedSize`]).
     pub max_wait: Duration,
+    /// Which triggers may close a batch.
+    pub close: CloseRule,
 }
 
 impl BatchPolicy {
+    /// The default size-or-age policy (every prior call site keeps its
+    /// size-or-deadline semantics).
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch >= 1);
         Self {
             max_batch,
             max_wait,
+            close: CloseRule::SizeOrAge,
         }
     }
+
+    /// Fixed-size policy: only a full batch (or shutdown drain) closes.
+    pub fn fixed_size(max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        Self {
+            max_batch,
+            max_wait: Duration::MAX,
+            close: CloseRule::FixedSize,
+        }
+    }
+}
+
+/// Resolve the batch age cap: `BSPMM_BATCH_AGE_US` (integer
+/// microseconds) when set and parseable, else `fallback`.
+pub fn age_from_env(fallback: Duration) -> Duration {
+    parse_age_us(std::env::var("BSPMM_BATCH_AGE_US").ok().as_deref(), fallback)
+}
+
+fn parse_age_us(var: Option<&str>, fallback: Duration) -> Duration {
+    var.and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_micros)
+        .unwrap_or(fallback)
 }
 
 /// Queue entry: the item plus its arrival time.
@@ -72,9 +115,22 @@ impl<T> BatchAssembler<T> {
         self.queue.is_empty()
     }
 
-    /// Time until the deadline flush would fire (None if queue empty).
-    /// The server uses this as its `recv_timeout`.
+    /// Age of the oldest queued request (zero when empty).
+    pub fn oldest_age(&self, now: Instant) -> Duration {
+        self.queue
+            .front()
+            .map(|e| now.saturating_duration_since(e.arrived))
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Time until the deadline flush would fire (None if queue empty,
+    /// or if the close rule is [`CloseRule::FixedSize`] — age never
+    /// closes a fixed-size batch). The server uses this as its
+    /// `recv_timeout`.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        if self.policy.close == CloseRule::FixedSize {
+            return None;
+        }
         self.queue.front().map(|e| {
             let elapsed = now.saturating_duration_since(e.arrived);
             self.policy.max_wait.saturating_sub(elapsed)
@@ -87,11 +143,12 @@ impl<T> BatchAssembler<T> {
             return None;
         }
         let full = self.queue.len() >= self.policy.max_batch;
-        let expired = self
-            .queue
-            .front()
-            .map(|e| now.saturating_duration_since(e.arrived) >= self.policy.max_wait)
-            .unwrap_or(false);
+        let expired = self.policy.close == CloseRule::SizeOrAge
+            && self
+                .queue
+                .front()
+                .map(|e| now.saturating_duration_since(e.arrived) >= self.policy.max_wait)
+                .unwrap_or(false);
         if !(full || expired) {
             return None;
         }
@@ -246,6 +303,45 @@ mod tests {
             prop_assert!(b.poll(now + wait).is_some(), "deadline flush missed");
             Ok(())
         });
+    }
+
+    #[test]
+    fn age_close_fires_before_size_close_under_slow_arrivals() {
+        // Two requests trickle into a batch-100 assembler; the age cap
+        // closes the pair long before the size trigger could.
+        let mut b = BatchAssembler::new(BatchPolicy::new(100, Duration::from_millis(2)));
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now + Duration::from_millis(1));
+        assert!(b.poll(now + Duration::from_millis(1)).is_none());
+        assert_eq!(b.poll(now + Duration::from_millis(2)), Some(vec![1, 2]));
+    }
+
+    #[test]
+    fn fixed_size_never_closes_on_age() {
+        let mut b = BatchAssembler::new(BatchPolicy::fixed_size(3));
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now);
+        // Arbitrarily far in the future: still no partial batch.
+        let later = now + Duration::from_secs(3600);
+        assert!(b.poll(later).is_none());
+        assert!(b.time_to_deadline(later).is_none());
+        // The size trigger still fires, and shutdown still drains.
+        b.push(3, later);
+        assert_eq!(b.poll(later), Some(vec![1, 2, 3]));
+        b.push(4, later);
+        assert_eq!(b.drain_all(), vec![4]);
+    }
+
+    #[test]
+    fn age_knob_parsing() {
+        let fb = Duration::from_micros(500);
+        assert_eq!(parse_age_us(None, fb), fb);
+        assert_eq!(parse_age_us(Some("250"), fb), Duration::from_micros(250));
+        assert_eq!(parse_age_us(Some(" 250 "), fb), Duration::from_micros(250));
+        assert_eq!(parse_age_us(Some("junk"), fb), fb);
+        assert_eq!(parse_age_us(Some(""), fb), fb);
     }
 
     #[test]

@@ -16,6 +16,14 @@ struct Inner {
     batch_slots: u64,
     batch_capacity: u64,
     device_busy_us: u64,
+    /// Requests refused without execution (admission bounce or
+    /// deadline drop).
+    shed: u64,
+    /// Highest admitted-but-unanswered depth ever observed.
+    queue_depth_hwm: u64,
+    /// `batch_size_counts[s]` = number of emitted batches of exactly
+    /// `s` requests (index 0 unused; grown on demand).
+    batch_size_counts: Vec<u64>,
     /// Latest plan-cache accounting from the host-engine backend
     /// (DESIGN.md §11/§13): compiled step plans, plans warm-started
     /// from AOT artifacts, and cached replays. Zero on the PJRT
@@ -39,9 +47,24 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub mean_latency_us: f64,
+    /// SLO quantiles from the power-of-two latency histogram
+    /// (conservative bucket upper bounds, `LatencyHistogram`
+    /// semantics).
+    pub p50_latency_us: u64,
     pub p95_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub p999_latency_us: u64,
     pub max_latency_us: u64,
     pub mean_queue_wait_us: f64,
+    /// Requests shed (admission bounce or deadline drop) — these never
+    /// executed and are not in `requests` or the latency histogram.
+    pub shed: u64,
+    /// High-water mark of admitted-but-unanswered requests. With a
+    /// bounded admission queue this never exceeds the bound.
+    pub queue_depth_hwm: u64,
+    /// Per-batch-size occupancy: `(size, batches_of_that_size)` pairs,
+    /// ascending by size, zero-count sizes omitted.
+    pub batch_size_counts: Vec<(usize, u64)>,
     pub mean_batch_size: f64,
     pub mean_occupancy: f64,
     pub device_busy_us: u64,
@@ -87,6 +110,22 @@ impl Metrics {
         g.batch_slots += size as u64;
         g.batch_capacity += capacity as u64;
         g.device_busy_us += device_us;
+        if g.batch_size_counts.len() <= size {
+            g.batch_size_counts.resize(size + 1, 0);
+        }
+        g.batch_size_counts[size] += 1;
+    }
+
+    /// One request refused without execution.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Observe the current admitted-but-unanswered depth; keeps the
+    /// high-water mark.
+    pub fn record_queue_depth(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_depth_hwm = g.queue_depth_hwm.max(depth as u64);
     }
 
     /// Store the latest plan-cache counters (cumulative on the source
@@ -109,9 +148,21 @@ impl Metrics {
             requests: g.requests,
             batches: g.batches,
             mean_latency_us: g.latency.mean_us(),
+            p50_latency_us: g.latency.quantile_us(0.50),
             p95_latency_us: g.latency.quantile_us(0.95),
+            p99_latency_us: g.latency.quantile_us(0.99),
+            p999_latency_us: g.latency.quantile_us(0.999),
             max_latency_us: g.latency.max_us(),
             mean_queue_wait_us: g.queue_wait.mean_us(),
+            shed: g.shed,
+            queue_depth_hwm: g.queue_depth_hwm,
+            batch_size_counts: g
+                .batch_size_counts
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(s, &c)| (s, c))
+                .collect(),
             mean_batch_size: if g.batches == 0 {
                 0.0
             } else {
@@ -158,6 +209,30 @@ mod tests {
         assert!((s.mean_occupancy - 0.5).abs() < 1e-12);
         assert!(s.throughput_rps > 0.0);
         assert_eq!(s.device_busy_us, 1500);
+        assert_eq!(s.batch_size_counts, vec![(2, 1)]);
+        // Quantiles are conservative bucket upper bounds and monotone.
+        assert!(s.p50_latency_us >= 1000 && s.p50_latency_us <= s.p99_latency_us);
+        assert!(s.p99_latency_us <= s.p999_latency_us);
+        assert!(s.p999_latency_us >= 3000);
+    }
+
+    #[test]
+    fn shed_and_depth_accounting() {
+        let m = Metrics::new();
+        m.record_queue_depth(3);
+        m.record_queue_depth(9);
+        m.record_queue_depth(2);
+        m.record_shed();
+        m.record_shed();
+        m.record_batch(4, 4, 10);
+        m.record_batch(4, 4, 10);
+        m.record_batch(1, 4, 10);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.queue_depth_hwm, 9);
+        assert_eq!(s.batch_size_counts, vec![(1, 1), (4, 2)]);
+        // Shed requests never enter the request count or histogram.
+        assert_eq!(s.requests, 0);
     }
 
     #[test]

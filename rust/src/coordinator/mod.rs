@@ -2,8 +2,9 @@
 //! the paper's batching contribution.
 //!
 //! * [`request`] — inference request/response types.
-//! * [`batcher`] — the dynamic batch assembler (size + deadline policy);
-//!   pure data structure, property-tested.
+//! * [`batcher`] — the dynamic batch assembler (fixed-size vs
+//!   size-or-age close rules, age env-calibratable via
+//!   `BSPMM_BATCH_AGE_US`); pure data structure, property-tested.
 //! * [`dispatch`] — the host-engine forward path: model execution over
 //!   the batched-SpMM engine (`sparse::engine`), no artifacts needed,
 //!   with the tiled readout weight cached per parameter set.
@@ -39,7 +40,7 @@ pub mod request;
 pub mod server;
 pub mod trainer;
 
-pub use batcher::{BatchAssembler, BatchPolicy};
+pub use batcher::{BatchAssembler, BatchPolicy, CloseRule};
 pub use dispatch::HostDispatcher;
 pub use request::{InferRequest, InferResponse};
 pub use server::{DispatchMode, ServeBackend, Server, ServerConfig};

@@ -22,11 +22,31 @@ pub struct InferRequest {
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub id: RequestId,
-    /// Model logits for this molecule.
+    /// Model logits for this molecule. Empty when `shed`.
     pub logits: Vec<f32>,
-    /// End-to-end latency (enqueue -> response ready).
+    /// End-to-end latency (enqueue -> response ready). For shed
+    /// requests: time from submit to the shed decision.
     pub latency_us: u64,
     /// Size of the device batch this request rode in (1 in non-batched
-    /// mode) — the occupancy signal for the Table III analysis.
+    /// mode, 0 when `shed`) — the occupancy signal for the Table III
+    /// analysis.
     pub batch_size: usize,
+    /// True when the server refused the request instead of executing it
+    /// — either bounced at admission (queue at `queue_bound`) or
+    /// dropped at batch assembly (older than `deadline`). Shed requests
+    /// never reach the engine; `logits` is empty.
+    pub shed: bool,
+}
+
+impl InferResponse {
+    /// A load-shedding refusal: no logits, never executed.
+    pub fn shed(id: RequestId, latency_us: u64) -> Self {
+        Self {
+            id,
+            logits: Vec::new(),
+            latency_us,
+            batch_size: 0,
+            shed: true,
+        }
+    }
 }

@@ -26,14 +26,24 @@
 //! thread, clients talking over channels) is forced by the `xla`
 //! crate's `Rc`-based client, and is also how real GPU serving stacks
 //! arrange their dispatch thread.
+//!
+//! Under load the server defends itself twice (DESIGN.md §14): a
+//! bounded admission queue ([`ServerConfig::queue_bound`]) refuses
+//! submits once the admitted-but-unanswered depth hits the bound, and
+//! a per-request deadline ([`ServerConfig::deadline`]) sheds requests
+//! that are already stale when their batch is assembled. Both paths
+//! answer the client immediately with a shed response — a refused
+//! request never touches the engine. Batch close policy is
+//! [`CloseRule`]: size-or-age (adaptive, the default) vs fixed-size
+//! (the throughput-first baseline the serving bench contrasts).
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{BatchAssembler, BatchPolicy};
+use crate::coordinator::batcher::{age_from_env, BatchAssembler, BatchPolicy, CloseRule};
 use crate::coordinator::dispatch::HostDispatcher;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferRequest, InferResponse};
@@ -75,7 +85,24 @@ pub struct ServerConfig {
     /// the host engine accepts any capacity >= 1. Forced to 1 in
     /// PerSample mode.
     pub max_batch: usize,
+    /// Age cap for [`CloseRule::SizeOrAge`]: a non-empty batch closes
+    /// once its oldest request has waited this long. Overridable at
+    /// startup via `BSPMM_BATCH_AGE_US` (integer microseconds).
+    /// Ignored under [`CloseRule::FixedSize`].
     pub max_wait: Duration,
+    /// Which triggers may close a batch (size-or-age is the default
+    /// adaptive policy; fixed-size is the throughput-first baseline).
+    pub close: CloseRule,
+    /// Bounded admission queue: maximum requests admitted but not yet
+    /// answered. A submit beyond the bound is refused immediately with
+    /// a shed response (backpressure at the front door). `0` =
+    /// unbounded (the depth high-water mark is still tracked).
+    pub queue_bound: usize,
+    /// Per-request deadline: a request older than this when its batch
+    /// is assembled is shed instead of executed (it would miss its SLO
+    /// anyway — spending device time on it only delays the rest).
+    /// `None` = never deadline-shed.
+    pub deadline: Option<Duration>,
     /// Optional trained parameter blob (defaults to the init params on
     /// PJRT, to a deterministic random init on the host engine).
     pub params_path: Option<PathBuf>,
@@ -92,6 +119,10 @@ pub struct Server {
     handle: Option<JoinHandle<anyhow::Result<()>>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Admitted-but-unanswered requests, shared with the device thread
+    /// (incremented at admission, decremented at reply or shed).
+    depth: Arc<AtomicUsize>,
+    queue_bound: usize,
 }
 
 impl Server {
@@ -99,12 +130,15 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let d2 = depth.clone();
+        let queue_bound = cfg.queue_bound;
         // Startup errors (bad artifacts dir, unknown model) must surface
         // to the caller, so the device thread reports readiness first.
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
         let handle = std::thread::Builder::new()
             .name("device".into())
-            .spawn(move || device_thread(cfg, rx, m2, ready_tx))?;
+            .spawn(move || device_thread(cfg, rx, m2, d2, ready_tx))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("device thread died during startup"))??;
@@ -113,22 +147,48 @@ impl Server {
             handle: Some(handle),
             metrics,
             next_id: AtomicU64::new(0),
+            depth,
+            queue_bound,
         })
     }
 
-    /// Submit one molecule; returns the channel the response arrives on.
+    /// Submit one molecule; returns the channel the response arrives
+    /// on. With a nonzero `queue_bound`, a submit that would push the
+    /// admitted-but-unanswered depth past the bound is refused right
+    /// here: a shed [`InferResponse`] arrives on the channel
+    /// immediately and the request never reaches the device thread.
     pub fn submit(&self, mol: Molecule) -> mpsc::Receiver<InferResponse> {
         let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Reserve a queue slot first, then check the bound on the value
+        // we displaced: concurrent submitters each see a distinct prior
+        // depth, so the bound is never exceeded even under races.
+        let prev = self.depth.fetch_add(1, Ordering::AcqRel);
+        if self.queue_bound > 0 && prev >= self.queue_bound {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            self.metrics.record_shed();
+            let _ = reply.send(InferResponse::shed(id, 0));
+            return rx;
+        }
+        self.metrics.record_queue_depth(prev + 1);
         let req = InferRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             mol,
             submitted: Instant::now(),
             reply,
         };
         // A send failure means the device thread is gone; the caller
         // notices via the closed response channel.
-        let _ = self.tx.send(Msg::Infer(req));
+        if self.tx.send(Msg::Infer(req)).is_err() {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+        }
         rx
+    }
+
+    /// Current admitted-but-unanswered depth (racy by nature; exact at
+    /// quiescence).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -169,6 +229,7 @@ fn device_thread(
     cfg: ServerConfig,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
     ready: mpsc::Sender<anyhow::Result<()>>,
 ) -> anyhow::Result<()> {
     // ---- startup: backend + params + capacity selection ----------------
@@ -235,7 +296,12 @@ fn device_thread(
             return Ok(());
         }
     };
-    let policy = BatchPolicy::new(capacity, cfg.max_wait);
+    let policy = match cfg.close {
+        // The age cap is env-calibratable: BSPMM_BATCH_AGE_US overrides
+        // the configured max_wait at startup (DESIGN.md §14).
+        CloseRule::SizeOrAge => BatchPolicy::new(capacity, age_from_env(cfg.max_wait)),
+        CloseRule::FixedSize => BatchPolicy::fixed_size(capacity),
+    };
     let mut assembler: BatchAssembler<InferRequest> = BatchAssembler::new(policy);
     metrics.mark_start();
 
@@ -263,10 +329,35 @@ fn device_thread(
                     Some(rest)
                 }
             };
-            let Some(batch) = batch else { break };
+            let Some(mut batch) = batch else { break };
+            // Deadline shedding happens here, at assembly — once a
+            // request has waited past its deadline it would miss its
+            // SLO anyway, and executing it only delays the requests
+            // behind it. Shed requests are answered (shed=true, no
+            // logits) but never reach the engine. The shutdown drain
+            // sheds too: a stale request does not get fresher by the
+            // server stopping.
+            if let Some(deadline) = cfg.deadline {
+                let now = Instant::now();
+                batch.retain(|req| {
+                    let waited = now.saturating_duration_since(req.submitted);
+                    if waited <= deadline {
+                        return true;
+                    }
+                    metrics.record_shed();
+                    depth.fetch_sub(1, Ordering::AcqRel);
+                    let _ = req
+                        .reply
+                        .send(InferResponse::shed(req.id, waited.as_micros() as u64));
+                    false
+                });
+                if batch.is_empty() {
+                    continue;
+                }
+            }
             // PerSample capacity is 1, so each "batch" is one request.
             for chunk in batch.chunks(capacity) {
-                serve_chunk(&mut engine, cfg.mode, capacity, chunk, &metrics)?;
+                serve_chunk(&mut engine, cfg.mode, capacity, chunk, &metrics, &depth)?;
             }
         }
     }
@@ -280,6 +371,7 @@ fn serve_chunk(
     capacity: usize,
     chunk: &[InferRequest],
     metrics: &Arc<Metrics>,
+    depth: &Arc<AtomicUsize>,
 ) -> anyhow::Result<()> {
     let mols: Vec<&Molecule> = chunk.iter().map(|r| &r.mol).collect();
     let (n_out, logits, device_us) = match engine {
@@ -325,11 +417,13 @@ fn serve_chunk(
         let latency_us = done.duration_since(req.submitted).as_micros() as u64;
         let queue_us = latency_us.saturating_sub(device_us);
         metrics.record_request(latency_us, queue_us);
+        depth.fetch_sub(1, Ordering::AcqRel);
         let _ = req.reply.send(InferResponse {
             id: req.id,
             logits: logits[bi * n_out..(bi + 1) * n_out].to_vec(),
             latency_us,
             batch_size: chunk.len(),
+            shed: false,
         });
     }
     Ok(())

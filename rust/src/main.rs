@@ -5,6 +5,7 @@
 //!   gen-data   — generate + describe the synthetic datasets (Table I)
 //!   train      — train a model (batched or non-batched dispatch)
 //!   serve      — run the serving coordinator over a synthetic workload
+//!   plans      — list/verify/dump AOT step-plan artifacts (no trainer)
 //!   timeline   — print the Fig. 11 simulated layer timeline
 //!   sim        — print the simulated-P100 five-series sweep for a figure
 
@@ -13,14 +14,16 @@ use std::time::Duration;
 
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::coordinator::trainer::{TrainMode, Trainer};
+use bspmm::coordinator::CloseRule;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
-use bspmm::runtime::Runtime;
+use bspmm::runtime::{plan_artifact, Runtime};
 use bspmm::simulator::cost::CostModel;
 use bspmm::simulator::timeline::{render_timeline, simulate_layer};
 use bspmm::util::cli::{Args, Cli};
+use bspmm::util::json::parse as json_parse;
 use bspmm::util::rng::Rng;
 
-const USAGE: &str = "chemgcn <info|gen-data|train|serve|timeline|sim> [options]
+const USAGE: &str = "chemgcn <info|gen-data|train|serve|plans|timeline|sim> [options]
   run `chemgcn <cmd> --help` for per-command options";
 
 fn main() {
@@ -35,6 +38,7 @@ fn main() {
         "gen-data" => cmd_gen_data(rest),
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
+        "plans" => cmd_plans(rest),
         "timeline" => cmd_timeline(rest),
         "sim" => cmd_sim(rest),
         "--help" | "-h" => {
@@ -161,7 +165,18 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .opt("model", "tox21", "model")
         .opt("requests", "400", "request count")
         .opt("batch", "200", "batch capacity")
-        .opt("wait-ms", "5", "batcher deadline")
+        .opt("wait-ms", "5", "batch age cap (size-or-age close rule)")
+        .opt("policy", "size-or-age", "batch close rule: size-or-age | fixed-size")
+        .opt(
+            "queue-bound",
+            "0",
+            "bounded admission queue: max in-flight requests (0 = unbounded)",
+        )
+        .opt(
+            "deadline-ms",
+            "0",
+            "per-request deadline; stale requests are shed, never executed (0 = off)",
+        )
         .opt("mode", "batched", "batched | per-sample")
         .opt("backend", "pjrt", "pjrt | host (in-process batched-SpMM engine)")
         .opt("threads", "0", "host-engine threads (0 = one per core)");
@@ -178,6 +193,15 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         },
         other => anyhow::bail!("unknown backend {other}"),
     };
+    let close = match args.str("policy") {
+        "size-or-age" => CloseRule::SizeOrAge,
+        "fixed-size" => CloseRule::FixedSize,
+        other => anyhow::bail!("unknown policy {other}"),
+    };
+    let deadline = match args.u64("deadline-ms") {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
     let srv = Server::start(ServerConfig {
         artifacts_dir: PathBuf::from(args.str("artifacts")),
         model: args.str("model").into(),
@@ -185,6 +209,9 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         backend,
         max_batch: args.usize("batch"),
         max_wait: Duration::from_millis(args.u64("wait-ms")),
+        close,
+        queue_bound: args.usize("queue-bound"),
+        deadline,
         params_path: None,
     })?;
     let kind = match args.str("model") {
@@ -201,15 +228,116 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
     let secs = t0.elapsed().as_secs_f64();
     let m = srv.shutdown()?;
     println!(
-        "{} requests in {secs:.2}s = {:.1} req/s | latency mean {:.2}ms p95 {:.2}ms | \
-         {} batches, occupancy {:.0}%",
+        "{} requests in {secs:.2}s = {:.1} req/s | latency mean {:.2}ms \
+         p50 {:.2}ms p99 {:.2}ms p99.9 {:.2}ms | {} batches, occupancy {:.0}% | \
+         {} shed, queue hwm {}",
         m.requests,
         m.requests as f64 / secs,
         m.mean_latency_us / 1e3,
-        m.p95_latency_us as f64 / 1e3,
+        m.p50_latency_us as f64 / 1e3,
+        m.p99_latency_us as f64 / 1e3,
+        m.p999_latency_us as f64 / 1e3,
         m.batches,
-        m.mean_occupancy * 100.0
+        m.mean_occupancy * 100.0,
+        m.shed,
+        m.queue_depth_hwm,
     );
+    Ok(())
+}
+
+/// Inspect a plan-artifact directory (DESIGN.md §13) without booting a
+/// trainer: per artifact, the file name, format version, content hash,
+/// and the validation verdict (the full `decode` pipeline: JSON → kind
+/// → version → content hash → field decode → `StepPlan::validate`).
+fn cmd_plans(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("chemgcn plans", "list/verify/dump AOT step-plan artifacts")
+        .opt(
+            "dir",
+            "",
+            "plan-artifact directory (default: $BSPMM_PLAN_ARTIFACTS, else <artifacts>/plans)",
+        )
+        .opt("dump", "", "print the raw JSON of one artifact (by file name)")
+        .flag("verify", "exit with an error if any artifact fails validation");
+    let args = parse(&cli, rest)?;
+    let dir = match args.str("dir") {
+        "" => plan_artifact::default_plan_dir(),
+        d => PathBuf::from(d),
+    };
+    anyhow::ensure!(
+        dir.is_dir(),
+        "no plan directory at {} (run `plan_aot --dir {}` to produce artifacts)",
+        dir.display(),
+        dir.display()
+    );
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.ends_with(plan_artifact::FILE_SUFFIX))
+        })
+        .collect();
+    paths.sort();
+
+    if let Some(want) = match args.str("dump") {
+        "" => None,
+        name => Some(name.to_string()),
+    } {
+        let path = paths
+            .iter()
+            .find(|p| p.file_name().and_then(|n| n.to_str()) == Some(want.as_str()))
+            .ok_or_else(|| anyhow::anyhow!("no artifact '{want}' in {}", dir.display()))?;
+        print!("{}", std::fs::read_to_string(path)?);
+        return Ok(());
+    }
+
+    println!(
+        "{} step-plan artifact(s) in {} (format v{})",
+        paths.len(),
+        dir.display(),
+        plan_artifact::FORMAT_VERSION
+    );
+    let mut invalid = 0usize;
+    for path in &paths {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("?");
+        // Raw fields first (best effort), so even a failing artifact
+        // shows what it claims to be; the verdict uses the full decode.
+        let text = std::fs::read_to_string(path).unwrap_or_default();
+        let raw = json_parse(&text).ok();
+        let claimed = |key: &str| -> String {
+            raw.as_ref()
+                .and_then(|j| j.get(key).and_then(|v| v.as_f64()))
+                .map(|v| format!("{v}"))
+                .or_else(|| {
+                    raw.as_ref()
+                        .and_then(|j| j.get(key).and_then(|v| v.as_str()))
+                        .map(String::from)
+                })
+                .unwrap_or_else(|| "?".into())
+        };
+        match plan_artifact::load(path) {
+            Ok(art) => println!(
+                "  {name}  v{} hash {}  OK: key {:?}, {} dispatches, {} slots, {} params",
+                claimed("format_version"),
+                art.content_hash,
+                art.plan.key.0,
+                art.plan.dispatches.len(),
+                art.plan.slots.len(),
+                art.plan.params.len(),
+            ),
+            Err(e) => {
+                invalid += 1;
+                println!(
+                    "  {name}  v{} hash {}  INVALID: {e:#}",
+                    claimed("format_version"),
+                    claimed("content_hash"),
+                );
+            }
+        }
+    }
+    if args.flag("verify") && invalid > 0 {
+        anyhow::bail!("{invalid} invalid artifact(s) in {}", dir.display());
+    }
     Ok(())
 }
 

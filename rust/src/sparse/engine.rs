@@ -108,16 +108,18 @@ pub enum KernelVariant {
     #[default]
     Vectorized,
     /// Cache-tiled twin of [`KernelVariant::Vectorized`] for the
-    /// large-graph regime (DESIGN.md §12): forward dispatches run
-    /// [`BatchedSpmm::spmm_sample_tiled`], which walks the dense
+    /// large-graph regime (DESIGN.md §12): dispatches run
+    /// [`BatchedSpmm::spmm_sample_tiled`] (and the transpose twins
+    /// [`BatchedSpmm::spmm_sample_t_tiled`] /
+    /// [`BatchedSpmm::spmm_sample_t_rows_tiled`]), which walk the dense
     /// feature matrix in column tiles (width from `BSPMM_TILE_COLS` or
     /// the L2 heuristic) so the gathered `rhs` rows stay hot across the
     /// non-zeros of a tile — GE-SpMM's row-reuse idea on CPU caches.
-    /// Backends without a tiled override, and all transpose dispatches,
-    /// fall back to the vectorized loops. Tiling regroups only
-    /// independent output elements (each element's accumulation chain
-    /// over the non-zeros is untouched), so output is bit-identical to
-    /// the other variants for any tile width.
+    /// Backends without a tiled override fall back to the vectorized
+    /// loops. Tiling regroups only independent output elements (each
+    /// element's accumulation chain over the non-zeros is untouched),
+    /// so output is bit-identical to the other variants for any tile
+    /// width.
     Tiled,
 }
 
@@ -292,6 +294,35 @@ pub trait BatchedSpmm: Sync {
         self.spmm_sample_rows(b, row0, rhs, n, out)
     }
 
+    /// Cache-tiled twin of [`spmm_sample_t`](BatchedSpmm::spmm_sample_t)
+    /// — the transpose (scatter) form under [`KernelVariant::Tiled`],
+    /// so large-graph backward dispatches get the same column tiling as
+    /// forward (DESIGN.md §12). Per column tile, each non-zero `(r, c)`
+    /// scatters `rhs[r, tile]` into `out[c, tile]`; restricting both
+    /// slices to the tile keeps the touched dense rows L2-resident.
+    /// Same bit-identity contract and vectorized default as
+    /// [`spmm_sample_tiled`](BatchedSpmm::spmm_sample_tiled).
+    fn spmm_sample_t_tiled(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.spmm_sample_t(b, rhs, n, out)
+    }
+
+    /// Tiled twin of
+    /// [`spmm_sample_t_rows`](BatchedSpmm::spmm_sample_t_rows) — the
+    /// row-blocked transpose form the pool's (sample, row-block) tasks
+    /// run under [`KernelVariant::Tiled`]. Same bit-identity contract
+    /// and vectorized default as
+    /// [`spmm_sample_t_tiled`](BatchedSpmm::spmm_sample_t_tiled).
+    fn spmm_sample_t_rows_tiled(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        self.spmm_sample_t_rows(b, row0, rhs, n, out)
+    }
+
     /// Real non-zeros of sample `b` restricted to output rows
     /// `r0..r1`, in O(1), when the layout can answer that (CSR: a row
     /// pointer difference). `None` means the pool's planner falls back
@@ -391,6 +422,21 @@ impl<K: BatchedSpmm + ?Sized> BatchedSpmm for &K {
         out: &mut [f32],
     ) {
         (**self).spmm_sample_rows_tiled(b, row0, rhs, n, out)
+    }
+
+    fn spmm_sample_t_tiled(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_t_tiled(b, rhs, n, out)
+    }
+
+    fn spmm_sample_t_rows_tiled(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        (**self).spmm_sample_t_rows_tiled(b, row0, rhs, n, out)
     }
 
     fn rows_nnz(&self, b: usize, r0: usize, r1: usize) -> Option<usize> {

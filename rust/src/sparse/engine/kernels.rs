@@ -323,12 +323,13 @@ impl BatchedSpmm for StKernel<'_> {
 /// Padded rows repeat the final row pointer, so their inner loop is
 /// empty.
 ///
-/// The only backend with a real cache-tiled override
-/// ([`BatchedSpmm::spmm_sample_tiled`], DESIGN.md §12): its row-major
-/// non-zero order makes tiling the dense operand's columns a pure
-/// regrouping, and its row pointers answer the planner's
-/// [`BatchedSpmm::rows_nnz`] range queries in O(1) — the two hooks the
-/// large-graph tier rides on.
+/// The only backend with real cache-tiled overrides
+/// ([`BatchedSpmm::spmm_sample_tiled`] and its row-blocked + transpose
+/// twins, DESIGN.md §12): its row-major non-zero order makes tiling the
+/// dense operand's columns a pure regrouping — in the forward gather
+/// *and* the transpose scatter — and its row pointers answer the
+/// planner's [`BatchedSpmm::rows_nnz`] range queries in O(1) — the two
+/// hooks the large-graph tier rides on.
 pub struct CsrKernel<'a> {
     csr: &'a PaddedCsrBatch,
     /// Column-tile width of the tiled path; `0` = resolve from
@@ -523,6 +524,76 @@ impl BatchedSpmm for CsrKernel<'_> {
                     let val = self.csr.vals[base + i];
                     let cid = self.csr.col_ids[base + i] as usize;
                     axpy_row(dst, val, &rhs[cid * n + j0..cid * n + j1]);
+                }
+            }
+            j0 = j1;
+        }
+    }
+
+    fn spmm_sample_t_tiled(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        // The transpose (scatter) form under the same column tiling:
+        // for a fixed tile [j0, j1) each non-zero (r, cid) scatters
+        // rhs[r, tile] into out[cid, tile], so the dense rows a hub
+        // column keeps landing in stay L2-resident across the tile —
+        // large-graph backward gets the same reuse as forward
+        // (DESIGN.md §12). Each output element (cid, j) lives in
+        // exactly one tile and receives its contributions in the same
+        // (row, nnz) order as the untiled scatter, so the regrouping is
+        // bit-exact for any width.
+        let tc = self.resolve_tile_cols();
+        if tc >= n {
+            return self.spmm_sample_t(b, rhs, n, out);
+        }
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + tc).min(n);
+            for r in 0..self.csr.dim {
+                let src = &rhs[r * n + j0..r * n + j1];
+                for i in rpt[r] as usize..rpt[r + 1] as usize {
+                    let val = self.csr.vals[base + i];
+                    let cid = self.csr.col_ids[base + i] as usize;
+                    axpy_row(&mut out[cid * n + j0..cid * n + j1], val, src);
+                }
+            }
+            j0 = j1;
+        }
+    }
+
+    fn spmm_sample_t_rows_tiled(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        // Row-blocked transpose scatter under column tiling: scan every
+        // source row in serial order, keep only contributions landing
+        // in transpose-output rows [row0, row1) — the filter the
+        // untiled t_rows form uses, now inside each column tile.
+        let tc = self.resolve_tile_cols();
+        if tc >= n {
+            return self.spmm_sample_t_rows(b, row0, rhs, n, out);
+        }
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + tc).min(n);
+            for r in 0..self.csr.dim {
+                let src = &rhs[r * n + j0..r * n + j1];
+                for i in rpt[r] as usize..rpt[r + 1] as usize {
+                    let cid = self.csr.col_ids[base + i] as usize;
+                    if cid < row0 || cid >= row1 {
+                        continue;
+                    }
+                    let val = self.csr.vals[base + i];
+                    axpy_row(&mut out[(cid - row0) * n + j0..(cid - row0) * n + j1], val, src);
                 }
             }
             j0 = j1;
@@ -1397,6 +1468,44 @@ mod tests {
         plain.spmm_sample(0, &rhs, nb, &mut want);
         let mut got = vec![0f32; dim * nb];
         plain.spmm_sample_tiled(0, &rhs, nb, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn tiled_csr_transpose_is_bit_identical_across_tile_widths() {
+        // The transpose (scatter) twins of the tiled path: every tile
+        // width must reproduce the untiled transpose result bit for
+        // bit, in both the full-sample and row-blocked forms — each
+        // output element lives in one tile and its scatter order over
+        // the non-zeros is untouched (DESIGN.md §12).
+        let mut rng = Rng::new(0x7138);
+        let (dim, z, batch, nb) = (17usize, 3usize, 3usize, 13usize);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, z), batch);
+        let csr = PaddedCsrBatch::pack(&mats, dim, dim * z).unwrap();
+        let rhs: Vec<f32> = (0..dim * nb).map(|_| rng.normal()).collect();
+        let plain = CsrKernel::new(&csr);
+        let cuts = [0usize, 2, 5, 11, dim];
+        for tc in [1usize, 3, 7, LANES, nb, 64, 4096] {
+            let tiled = CsrKernel::new(&csr).with_tile_cols(tc);
+            for b in 0..batch {
+                let mut want = vec![0.5f32; dim * nb];
+                plain.spmm_sample_t(b, &rhs, nb, &mut want);
+                let mut got = vec![0.5f32; dim * nb];
+                tiled.spmm_sample_t_tiled(b, &rhs, nb, &mut got);
+                assert_eq!(want, got, "tc={tc} sample {b} transpose");
+                let mut blocked = vec![0.5f32; dim * nb];
+                for w in cuts.windows(2) {
+                    let block = &mut blocked[w[0] * nb..w[1] * nb];
+                    tiled.spmm_sample_t_rows_tiled(b, w[0], &rhs, nb, block);
+                }
+                assert_eq!(want, blocked, "tc={tc} sample {b} transpose row-blocked");
+            }
+        }
+        // The default (no override) path for the transpose twins.
+        let mut want = vec![0f32; dim * nb];
+        plain.spmm_sample_t(0, &rhs, nb, &mut want);
+        let mut got = vec![0f32; dim * nb];
+        plain.spmm_sample_t_tiled(0, &rhs, nb, &mut got);
         assert_eq!(want, got);
     }
 

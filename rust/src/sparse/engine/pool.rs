@@ -546,11 +546,10 @@ impl WorkerPool {
                     (KernelVariant::Tiled, false) => {
                         kernel.spmm_sample_tiled(s, rhs_s, n, sample_out)
                     }
-                    // Tiling targets the forward row-major gather; the
-                    // transpose scatter falls back to the vectorized
-                    // loops (bit-identical either way).
+                    // The transpose scatter has its own tiled twin
+                    // (bit-identical for any tile width).
                     (KernelVariant::Tiled, true) => {
-                        kernel.spmm_sample_t(s, rhs_s, n, sample_out)
+                        kernel.spmm_sample_t_tiled(s, rhs_s, n, sample_out)
                     }
                 }
             }
@@ -761,11 +760,8 @@ fn exec_task(job: &Job, task: &Task) {
             (Scalar, true, false) => job.kernel.spmm_sample_t_rows_scalar(s, row0, rhs, n, out),
             (Tiled, false, true) => job.kernel.spmm_sample_tiled(s, rhs, n, out),
             (Tiled, false, false) => job.kernel.spmm_sample_rows_tiled(s, row0, rhs, n, out),
-            // Tiling targets the forward row-major gather; transpose
-            // dispatches fall back to the vectorized scatter loops
-            // (bit-identical either way).
-            (Tiled, true, true) => job.kernel.spmm_sample_t(s, rhs, n, out),
-            (Tiled, true, false) => job.kernel.spmm_sample_t_rows(s, row0, rhs, n, out),
+            (Tiled, true, true) => job.kernel.spmm_sample_t_tiled(s, rhs, n, out),
+            (Tiled, true, false) => job.kernel.spmm_sample_t_rows_tiled(s, row0, rhs, n, out),
         }
     }
 }

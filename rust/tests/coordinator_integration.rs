@@ -4,6 +4,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
+use bspmm::coordinator::CloseRule;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 
 fn artifacts_dir() -> Option<PathBuf> {
@@ -26,6 +27,9 @@ fn server(mode: DispatchMode, max_batch: usize, wait_ms: u64) -> Option<Server> 
             backend: ServeBackend::Pjrt,
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
+            close: CloseRule::SizeOrAge,
+            queue_bound: 0,
+            deadline: None,
             params_path: None,
         })
         .expect("server start"),
@@ -97,6 +101,9 @@ fn server_rejects_unknown_model() {
         backend: ServeBackend::Pjrt,
         max_batch: 50,
         max_wait: Duration::from_millis(1),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
         params_path: None,
     });
     assert!(err.is_err());
@@ -112,6 +119,9 @@ fn server_rejects_unsupported_batch_capacity() {
         backend: ServeBackend::Pjrt,
         max_batch: 33, // no fwd artifact with this capacity
         max_wait: Duration::from_millis(1),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
         params_path: None,
     });
     assert!(err.is_err());

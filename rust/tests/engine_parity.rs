@@ -341,8 +341,9 @@ fn tiled_csr_bit_identical_to_untiled_and_scalar_across_widths_threads_policies(
                     let exec = Executor::with_variant(threads, policy, KernelVariant::Tiled);
                     let pf = exec.spmm(&k, Rhs::PerSample(&dense), nb).unwrap();
                     assert_eq!(pf, want_fwd, "{what}/tc{tc}/t{threads}/{policy:?} fwd");
-                    // Transpose dispatches fall back to the untiled
-                    // vectorized path — still bit-exact vs scalar.
+                    // Transpose dispatches take the tiled scatter twin
+                    // (spmm_sample_t_tiled) — bit-exact vs scalar at
+                    // every tile width, same argument as the forward.
                     let pb = exec.spmm_t(&k, Rhs::PerSample(&dense), nb).unwrap();
                     assert_eq!(pb, want_bwd, "{what}/tc{tc}/t{threads}/{policy:?} bwd");
                 }

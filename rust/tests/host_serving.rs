@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::coordinator::trainer::Trainer;
+use bspmm::coordinator::CloseRule;
 use bspmm::gcn::backward;
 use bspmm::gcn::ParamSet;
 use bspmm::graph::dataset::{Dataset, DatasetKind};
@@ -19,6 +20,9 @@ fn host_server(mode: DispatchMode, max_batch: usize, wait_ms: u64) -> Server {
         backend: ServeBackend::HostEngine { threads: 2 },
         max_batch,
         max_wait: Duration::from_millis(wait_ms),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
         params_path: None,
     })
     .expect("host server start")
@@ -88,6 +92,9 @@ fn host_server_rejects_unknown_model() {
         backend: ServeBackend::HostEngine { threads: 1 },
         max_batch: 50,
         max_wait: Duration::from_millis(1),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
         params_path: None,
     });
     assert!(err.is_err());
