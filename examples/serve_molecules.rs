@@ -39,6 +39,8 @@ fn run_mode(
         queue_bound: 0,
         deadline: None,
         params_path: params,
+        registry: None,
+        plans_dir: None,
     })?;
     // Warmup (compile + first dispatch) outside the measurement.
     srv.submit(data.samples[0].mol.clone())

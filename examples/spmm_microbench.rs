@@ -54,8 +54,8 @@ use std::path::Path;
 
 use bspmm::bench::figures::{
     auto_choices, auto_vs_fixed_summary, engine_speedup_summary, run_aot_warmstart_bench,
-    run_engine_bench_backends, run_large_graph_bench, run_plan_bench, run_serving_bench,
-    run_train_step_bench, FigureRunner, ENGINE_SERIES,
+    run_engine_bench_backends, run_large_graph_bench, run_mixed_serving_bench, run_plan_bench,
+    run_serving_bench, run_train_step_bench, FigureRunner, ENGINE_SERIES,
 };
 use bspmm::bench::report::save_json_in;
 use bspmm::bench::BenchOpts;
@@ -106,10 +106,19 @@ fn main() -> anyhow::Result<()> {
     if args.flag("serve") {
         let bench = run_serving_bench(args.str("train_model"), args.usize("threads"))?;
         print!("{}", bench.render());
+        // The mixed-model sweep (DESIGN.md §15): two registered models
+        // round-robined at one server with a mid-trace parameter hot
+        // swap, merged into the same record under the "mixed" key.
+        let mixed = run_mixed_serving_bench(args.usize("threads"))?;
+        print!("{}", mixed.render());
+        let mut record = bench.to_json();
+        if let Json::Obj(m) = &mut record {
+            m.insert("mixed".into(), mixed.to_json());
+        }
         let root = Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()
             .unwrap_or_else(|| Path::new("."));
-        let path = save_json_in(root, "BENCH_serving", &bench.to_json())?;
+        let path = save_json_in(root, "BENCH_serving", &record)?;
         println!("wrote {}\n", path.display());
         return Ok(());
     }

@@ -122,6 +122,8 @@ fn a3_batcher_deadline() -> anyhow::Result<Json> {
             queue_bound: 0,
             deadline: None,
             params_path: None,
+            registry: None,
+            plans_dir: None,
         })?;
         let data = Dataset::generate(DatasetKind::Tox21, 300, 0xAB);
         srv.submit(data.samples[0].mol.clone())

@@ -46,6 +46,8 @@ fn run_mode(
         queue_bound: 0,
         deadline: None,
         params_path: None,
+        registry: None,
+        plans_dir: None,
     })?;
     let data = Dataset::generate(kind, n, 0xCAFE);
     // Warm: one request through (compile + first dispatch).

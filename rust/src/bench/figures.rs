@@ -477,6 +477,7 @@ pub fn run_plan_bench(
             plans_built: s1.plans_built - s0.plans_built,
             plans_warmed: s1.plans_warmed - s0.plans_warmed,
             replays: s1.replays - s0.replays,
+            plans_evicted: s1.plans_evicted - s0.plans_evicted,
             arena_bytes: s1.arena_bytes,
             arena_reuses: s1.arena_reuses - s0.arena_reuses,
             zero_fills_elided: s1.zero_fills_elided - s0.zero_fills_elided,
@@ -754,6 +755,33 @@ impl ServingBench {
         ))
     }
 
+    /// Burst sensitivity at the lowest offered load: the same mean rate
+    /// reshaped into bursts against the smooth Poisson stream, both
+    /// under the size-or-age close.
+    pub fn bursty_headline(&self) -> Option<String> {
+        let smooth = self
+            .series
+            .iter()
+            .find(|s| s.name == "size-or-age")?
+            .points
+            .first()?;
+        let bursty = self
+            .series
+            .iter()
+            .find(|s| s.name == "size-or-age-bursty")?
+            .points
+            .first()?;
+        Some(format!(
+            "  at {:.0} rps mean: bursty arrivals p99 {:.1} ms vs Poisson p99 {:.1} ms \
+             (depth hwm {} vs {})\n",
+            smooth.offered_rps,
+            bursty.p99_ms,
+            smooth.p99_ms,
+            bursty.queue_depth_hwm,
+            smooth.queue_depth_hwm,
+        ))
+    }
+
     /// The printable summary the microbench and CI quote.
     pub fn render(&self) -> String {
         let mut out = format!(
@@ -789,6 +817,9 @@ impl ServingBench {
             }
         }
         if let Some(line) = self.headline() {
+            out.push_str(&line);
+        }
+        if let Some(line) = self.bursty_headline() {
             out.push_str(&line);
         }
         out
@@ -899,10 +930,33 @@ pub fn run_serving_bench(model: &str, threads: usize) -> anyhow::Result<ServingB
             name: "size-or-age".into(),
             points: Vec::new(),
         },
+        // The same mean offered load reshaped into on/off bursts
+        // (peak 4x mean, bursts one device batch deep): depth spikes
+        // the smooth Poisson stream never produces, served under the
+        // adaptive close rule.
+        ServingSeries {
+            name: "size-or-age-bursty".into(),
+            points: Vec::new(),
+        },
     ];
     for (pi, &(rate, n)) in points.iter().enumerate() {
-        let trace = generate_trace(Arrivals::Poisson { rate_rps: rate }, n, 0x5E21 + pi as u64);
-        for (si, close) in [CloseRule::FixedSize, CloseRule::SizeOrAge].iter().enumerate() {
+        let seed = 0x5E21 + pi as u64;
+        let poisson = generate_trace(Arrivals::Poisson { rate_rps: rate }, n, seed);
+        let bursty = generate_trace(
+            Arrivals::Bursty {
+                rate_rps: rate,
+                peak_rps: 4.0 * rate,
+                burst: max_batch,
+            },
+            n,
+            seed,
+        );
+        let runs = [
+            (CloseRule::FixedSize, &poisson),
+            (CloseRule::SizeOrAge, &poisson),
+            (CloseRule::SizeOrAge, &bursty),
+        ];
+        for (si, (close, trace)) in runs.iter().enumerate() {
             let server = Server::start(ServerConfig {
                 artifacts_dir: PathBuf::from("unused-for-host-backend"),
                 model: model.into(),
@@ -914,8 +968,10 @@ pub fn run_serving_bench(model: &str, threads: usize) -> anyhow::Result<ServingB
                 queue_bound,
                 deadline: None,
                 params_path: None,
+                registry: None,
+                plans_dir: None,
             })?;
-            let rxs = submit_trace(&server, &trace);
+            let rxs = submit_trace(&server, trace);
             let snap = server.shutdown()?;
             let answered = rxs.iter().filter(|rx| rx.recv().is_ok()).count();
             anyhow::ensure!(
@@ -952,6 +1008,265 @@ pub fn run_serving_bench(model: &str, threads: usize) -> anyhow::Result<ServingB
         age_cap,
         queue_bound,
         series,
+    })
+}
+
+/// One model's slice of the mixed-model serving sweep
+/// ([`run_mixed_serving_bench`]).
+#[derive(Clone, Debug)]
+pub struct MixedModelPoint {
+    pub model: String,
+    pub requests: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_occupancy: f64,
+    /// Highest parameter version observed in this model's responses.
+    pub max_version: u64,
+}
+
+/// The mixed-model serving record (DESIGN.md §15): two registered
+/// models round-robined at one server, plans warm-started per tenant,
+/// with a parameter hot swap landing mid-trace.
+#[derive(Clone, Debug)]
+pub struct MixedServingBench {
+    pub models: Vec<String>,
+    pub max_batch: usize,
+    pub threads: usize,
+    pub submitted: u64,
+    /// Registry-wide hot swaps completed during the trace (>= 1 by
+    /// construction — the bench swaps the first model mid-trace).
+    pub param_swaps: u64,
+    /// Plans compiled while serving — 0: every tenant's geometry was
+    /// warm-started from its per-model artifact subdirectory.
+    pub plans_built: u64,
+    pub plans_warmed: u64,
+    pub plan_replays: u64,
+    pub per_model: Vec<MixedModelPoint>,
+}
+
+impl MixedServingBench {
+    /// The printable summary the microbench and CI quote.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "mixed-serving[{} models, B={}, {}t]: {} submitted, {} hot swap(s), \
+             plans built {} / warmed {} / replayed {}\n",
+            self.models.len(),
+            self.max_batch,
+            self.threads,
+            self.submitted,
+            self.param_swaps,
+            self.plans_built,
+            self.plans_warmed,
+            self.plan_replays,
+        );
+        for p in &self.per_model {
+            out.push_str(&format!(
+                "    model:{:<12} {} done, {} shed, p50 {:.1} / p99 {:.1} ms, \
+                 occ {:.2}, param v{}\n",
+                p.model, p.requests, p.shed, p.p50_ms, p.p99_ms, p.mean_occupancy, p.max_version,
+            ));
+        }
+        out
+    }
+
+    /// Canonical JSON: per-model series named `model:<name>` — the CI
+    /// smoke job greps these plus a nonzero `param_swaps` out of
+    /// `BENCH_serving.json`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("models", arr(self.models.iter().map(|m| s(m)).collect())),
+            ("max_batch", num(self.max_batch as f64)),
+            ("threads", num(self.threads as f64)),
+            ("submitted", num(self.submitted as f64)),
+            ("param_swaps", num(self.param_swaps as f64)),
+            ("plans_built", num(self.plans_built as f64)),
+            ("plans_warmed", num(self.plans_warmed as f64)),
+            ("plan_replays", num(self.plan_replays as f64)),
+            (
+                "series",
+                arr(self
+                    .per_model
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("name", s(&format!("model:{}", p.model))),
+                            ("requests", num(p.requests as f64)),
+                            ("shed", num(p.shed as f64)),
+                            ("batches", num(p.batches as f64)),
+                            ("p50_ms", num(p.p50_ms)),
+                            ("p99_ms", num(p.p99_ms)),
+                            ("mean_occupancy", num(p.mean_occupancy)),
+                            ("max_version", num(p.max_version as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Mixed-model serving sweep (DESIGN.md §15): register two models,
+/// warm a plan per tenant, export the per-model artifact
+/// subdirectories (plus the registry manifest the GC reads), then
+/// serve a round-robin trace against one server — hot-swapping the
+/// first model's parameters mid-trace. Hard-fails unless every request
+/// is answered, both models served, the swap landed, and steady state
+/// compiled zero plans (the warm start covered every tenant).
+pub fn run_mixed_serving_bench(threads: usize) -> anyhow::Result<MixedServingBench> {
+    use std::path::PathBuf;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use crate::coordinator::dispatch::MultiDispatcher;
+    use crate::coordinator::registry::ModelRegistry;
+    use crate::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
+    use crate::coordinator::CloseRule;
+    use crate::gcn::params::ParamSet;
+    use crate::graph::dataset::pack_molecules;
+    use crate::graph::molecule::{Molecule, MoleculeSpec};
+    use crate::runtime::plan_artifact;
+    use crate::util::rng::Rng;
+
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let max_batch = if quick { 4 } else { 8 };
+    let n = if quick { 32 } else { 96 };
+    let threads = Executor::resolve_threads(threads);
+    let models = ["tox21", "reaction100"];
+
+    let mut reg = ModelRegistry::new();
+    for m in models {
+        reg.register_synthetic(m, 0x5EED)?;
+    }
+    let registry = Arc::new(reg);
+
+    // Warm one full-capacity plan per tenant offline, export the
+    // per-model artifact subdirectories and the registry manifest.
+    // The server pads every device batch to `max_batch`, so this one
+    // geometry per model is all steady state ever replays.
+    let plans_root =
+        std::env::temp_dir().join(format!("bspmm_mixed_serving_plans_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&plans_root);
+    {
+        let mut md = MultiDispatcher::new(registry.clone(), threads);
+        let mut rng = Rng::new(0xCA11);
+        let spec = MoleculeSpec::default();
+        for m in models {
+            let cfg = registry.cfg(m)?.clone();
+            let mols: Vec<Molecule> =
+                (0..max_batch).map(|_| Molecule::random(&mut rng, &spec)).collect();
+            let refs: Vec<&Molecule> = mols.iter().collect();
+            let mb = pack_molecules(&refs, max_batch, cfg.max_nodes, cfg.ell_width, cfg.n_out)?;
+            md.forward(m, DispatchMode::Batched, &mb)?;
+        }
+        md.export_plans(&plans_root)?;
+        let manifest: Vec<(String, u64)> = models
+            .iter()
+            .map(|m| Ok((m.to_string(), registry.current(m)?.version)))
+            .collect::<anyhow::Result<_>>()?;
+        plan_artifact::write_registry_manifest(&plans_root, &manifest)?;
+    }
+
+    let server = Server::start(ServerConfig {
+        artifacts_dir: PathBuf::from("unused-for-host-backend"),
+        model: models[0].into(),
+        mode: DispatchMode::Batched,
+        backend: ServeBackend::HostEngine { threads },
+        max_batch,
+        max_wait: Duration::from_millis(2),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
+        params_path: None,
+        registry: Some(registry.clone()),
+        plans_dir: Some(plans_root.clone()),
+    })?;
+
+    // Round-robin the models through one server; swap the first
+    // model's parameters at the half-way mark. `swap_params` returns
+    // only after the new version is installed, so every later
+    // submission must serve on v2.
+    let mut rng = Rng::new(0x313E);
+    let spec = MoleculeSpec::default();
+    let mut rxs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        if i == n / 2 {
+            let cfg = registry.cfg(models[0])?;
+            registry.swap_params(models[0], ParamSet::random_init(cfg, 0xBEEF))?;
+        }
+        let model = models[i % models.len()];
+        labels.push(model);
+        rxs.push(server.submit_to(model, Molecule::random(&mut rng, &spec)));
+    }
+    let snap = server.shutdown()?;
+    let _ = std::fs::remove_dir_all(&plans_root);
+
+    let mut max_version = vec![0u64; models.len()];
+    let mut answered = 0usize;
+    for (i, rx) in rxs.iter().enumerate() {
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("mixed serving bench lost a reply"))?;
+        answered += 1;
+        let mi = models.iter().position(|m| *m == labels[i]).unwrap();
+        max_version[mi] = max_version[mi].max(resp.version);
+    }
+    anyhow::ensure!(answered == n, "mixed serving bench lost replies");
+    anyhow::ensure!(
+        snap.param_swaps >= 1,
+        "hot swap not recorded: param_swaps = {}",
+        snap.param_swaps
+    );
+    anyhow::ensure!(
+        max_version[0] >= 2,
+        "post-swap responses still on v{} — the swap never took effect",
+        max_version[0]
+    );
+    anyhow::ensure!(
+        snap.plans_built == 0,
+        "steady state compiled {} plan(s) despite the warm start",
+        snap.plans_built
+    );
+    anyhow::ensure!(
+        snap.plans_warmed >= models.len() as u64,
+        "warm start installed only {} plan(s) for {} tenants",
+        snap.plans_warmed,
+        models.len()
+    );
+
+    let per_model = models
+        .iter()
+        .enumerate()
+        .map(|(mi, m)| {
+            let pm = snap
+                .model(m)
+                .ok_or_else(|| anyhow::anyhow!("no per-model metrics for '{m}'"))?;
+            anyhow::ensure!(pm.requests > 0, "model '{m}' served zero requests");
+            Ok(MixedModelPoint {
+                model: m.to_string(),
+                requests: pm.requests,
+                shed: pm.shed,
+                batches: pm.batches,
+                p50_ms: pm.p50_latency_us as f64 / 1e3,
+                p99_ms: pm.p99_latency_us as f64 / 1e3,
+                mean_occupancy: pm.mean_occupancy,
+                max_version: max_version[mi],
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    Ok(MixedServingBench {
+        models: models.iter().map(|m| m.to_string()).collect(),
+        max_batch,
+        threads,
+        submitted: n as u64,
+        param_swaps: snap.param_swaps,
+        plans_built: snap.plans_built,
+        plans_warmed: snap.plans_warmed,
+        plan_replays: snap.plan_replays,
+        per_model,
     })
 }
 

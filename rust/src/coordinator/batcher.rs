@@ -183,6 +183,94 @@ impl<T> BatchAssembler<T> {
     }
 }
 
+/// Per-key batch assembly for multi-model serving (DESIGN.md §15): one
+/// [`BatchAssembler`] lane per key (model name), all under one policy,
+/// so batches never mix models — each device batch replays exactly one
+/// model's compiled plan. Like `BatchAssembler`, a pure data structure:
+/// the same no-loss / FIFO-per-lane / bounded-size invariants hold
+/// lane-wise.
+pub struct KeyedBatchAssembler<T> {
+    policy: BatchPolicy,
+    lanes: Vec<(String, BatchAssembler<T>)>,
+    /// Round-robin start cursor so a perpetually-ready first lane
+    /// cannot starve later lanes.
+    next_lane: usize,
+}
+
+impl<T> KeyedBatchAssembler<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            lanes: Vec::new(),
+            next_lane: 0,
+        }
+    }
+
+    fn lane_mut(&mut self, key: &str) -> &mut BatchAssembler<T> {
+        if let Some(pos) = self.lanes.iter().position(|(k, _)| k == key) {
+            return &mut self.lanes[pos].1;
+        }
+        self.lanes
+            .push((key.to_string(), BatchAssembler::new(self.policy)));
+        &mut self.lanes.last_mut().unwrap().1
+    }
+
+    pub fn push(&mut self, key: &str, item: T, now: Instant) {
+        self.lane_mut(key).push(item, now);
+    }
+
+    /// Total queued items across every lane.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|(_, a)| a.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|(_, a)| a.is_empty())
+    }
+
+    /// Minimum time-to-deadline across lanes — the server's
+    /// `recv_timeout` (None when every lane is empty or the close rule
+    /// never fires on age).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.lanes
+            .iter()
+            .filter_map(|(_, a)| a.time_to_deadline(now))
+            .min()
+    }
+
+    /// Emit one ready batch, round-robin across lanes: `(key, batch)`
+    /// from the first lane (starting at the rotating cursor) whose
+    /// policy fires. Call repeatedly until `None` to drain all ready
+    /// batches.
+    pub fn poll(&mut self, now: Instant) -> Option<(String, Vec<T>)> {
+        let n = self.lanes.len();
+        for i in 0..n {
+            let pos = (self.next_lane + i) % n;
+            if let Some(batch) = self.lanes[pos].1.poll(now) {
+                self.next_lane = (pos + 1) % n;
+                return Some((self.lanes[pos].0.clone(), batch));
+            }
+        }
+        None
+    }
+
+    /// Flush every lane (shutdown path), in lane-creation order.
+    pub fn drain_all(&mut self) -> Vec<(String, Vec<T>)> {
+        self.lanes
+            .iter_mut()
+            .filter_map(|(k, a)| {
+                let batch = a.drain_all();
+                (!batch.is_empty()).then(|| (k.clone(), batch))
+            })
+            .collect()
+    }
+
+    /// Lanes in creation order (occupancy reporting).
+    pub fn lanes(&self) -> impl Iterator<Item = (&str, &BatchAssembler<T>)> {
+        self.lanes.iter().map(|(k, a)| (k.as_str(), a))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,5 +445,54 @@ mod tests {
         assert_eq!(b.items_emitted, 6);
         assert_eq!(b.full_batches, 1);
         assert!((b.mean_occupancy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn keyed_lanes_never_mix_keys_and_stay_fifo_per_lane() {
+        let mut b = KeyedBatchAssembler::new(BatchPolicy::new(2, Duration::from_secs(60)));
+        let now = t0();
+        // Interleaved arrivals across two models.
+        b.push("a", 1, now);
+        b.push("b", 10, now);
+        b.push("b", 11, now);
+        b.push("a", 2, now);
+        b.push("a", 3, now);
+        assert_eq!(b.len(), 5);
+        // Both lanes have a full batch; round-robin serves each once.
+        let (k1, batch1) = b.poll(now).unwrap();
+        let (k2, batch2) = b.poll(now).unwrap();
+        assert_ne!(k1, k2, "round-robin must rotate lanes");
+        for (k, batch) in [(k1, batch1), (k2, batch2)] {
+            match k.as_str() {
+                "a" => assert_eq!(batch, vec![1, 2]),
+                "b" => assert_eq!(batch, vec![10, 11]),
+                other => panic!("unknown lane {other}"),
+            }
+        }
+        // "a" still holds one item below the size trigger.
+        assert!(b.poll(now).is_none());
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.drain_all(), vec![("a".to_string(), vec![3])]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn keyed_deadline_is_the_min_across_lanes() {
+        let mut b = KeyedBatchAssembler::new(BatchPolicy::new(100, Duration::from_millis(10)));
+        let now = t0();
+        assert!(b.time_to_deadline(now).is_none());
+        b.push("a", 1, now);
+        b.push("b", 2, now + Duration::from_millis(4));
+        // Oldest overall is a's entry: 10ms cap, 6ms elapsed -> 4ms.
+        let at = now + Duration::from_millis(6);
+        assert_eq!(b.time_to_deadline(at), Some(Duration::from_millis(4)));
+        // a's lane flushes alone at its deadline; b's stays queued.
+        let (k, batch) = b.poll(now + Duration::from_millis(10)).unwrap();
+        assert_eq!((k.as_str(), batch), ("a", vec![1]));
+        assert_eq!(b.len(), 1);
+        assert_eq!(
+            b.time_to_deadline(now + Duration::from_millis(10)),
+            Some(Duration::from_millis(4))
+        );
     }
 }

@@ -31,13 +31,16 @@
 //!
 //! [`BatchedSpmm`]: crate::sparse::engine::BatchedSpmm
 
+use std::sync::Arc;
+
+use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::server::DispatchMode;
 use crate::gcn::config::ModelConfig;
 use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
 use crate::graph::dataset::ModelBatch;
 use crate::runtime::plan_artifact::{self, WarmStartReport};
-use crate::sparse::engine::{AutoThresholds, Executor, PlanCache, PlanStats};
+use crate::sparse::engine::{AutoThresholds, Executor, PlanCache, PlanStats, TenantPlanCaches};
 
 /// In-process model execution over the batched-SpMM engine.
 pub struct HostDispatcher {
@@ -187,6 +190,189 @@ impl HostDispatcher {
     }
 }
 
+/// Multi-model host dispatch (DESIGN.md §15): the registry-backed twin
+/// of [`HostDispatcher`]. One executor (one worker pool) serves every
+/// registered model; parameters come from the
+/// [`ModelRegistry`] — each forward clones the model's current
+/// `Arc<ParamVersion>` **once** and runs the whole batch on it, so a
+/// concurrent [`swap_params`](ModelRegistry::swap_params) can never mix
+/// versions within a batch. Compiled plans live in per-tenant caches
+/// ([`TenantPlanCaches`]) under the global arena budget; the
+/// version-bound readout tile `w_rep` is the only parameter-derived
+/// cache and is refreshed whenever the served version changes.
+pub struct MultiDispatcher {
+    registry: Arc<ModelRegistry>,
+    exec: Executor,
+    thresholds: AutoThresholds,
+    plans: TenantPlanCaches,
+    /// Per-model cached readout tile, stamped with the parameter
+    /// version it was built from.
+    w_rep: Vec<(String, u64, Vec<f32>)>,
+    /// Forward dispatches issued, all models combined.
+    pub dispatches: u64,
+}
+
+impl MultiDispatcher {
+    /// `threads = 0` means one thread per core. The plan budget comes
+    /// from `$BSPMM_PLAN_BUDGET_BYTES`
+    /// ([`TenantPlanCaches::from_env`]).
+    pub fn new(registry: Arc<ModelRegistry>, threads: usize) -> MultiDispatcher {
+        MultiDispatcher {
+            registry,
+            exec: Executor::auto(threads),
+            thresholds: AutoThresholds::from_env(),
+            plans: TenantPlanCaches::from_env(),
+            w_rep: Vec::new(),
+            dispatches: 0,
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Warm-start every registered model's tenant cache from its
+    /// per-model subdirectory `root/<model>/` (missing subdirectories
+    /// are skipped — those models compile at runtime). Returns one
+    /// report per model that had a directory.
+    pub fn warm_start_plans(
+        &mut self,
+        root: &std::path::Path,
+    ) -> anyhow::Result<Vec<(String, WarmStartReport)>> {
+        let models: Vec<String> = self.registry.models().iter().map(|m| m.to_string()).collect();
+        let th = self.thresholds;
+        let mut reports = Vec::new();
+        for model in models {
+            let dir = root.join(&model);
+            if !dir.is_dir() {
+                continue;
+            }
+            let report = plan_artifact::warm_start(self.plans.tenant_cache_mut(&model), &dir, &th)?;
+            reports.push((model, report));
+        }
+        Ok(reports)
+    }
+
+    /// Legacy single-model env warm start: with exactly one registered
+    /// model, load `$BSPMM_PLAN_ARTIFACTS` (flat layout, no per-model
+    /// subdirectory) into its tenant cache, so a registry-of-one server
+    /// keeps the PR 7 boot behavior. No-op (`None`) with several models
+    /// — those use [`MultiDispatcher::warm_start_plans`]'s per-model
+    /// layout.
+    pub fn warm_start_single_from_env(&mut self) -> anyhow::Result<Option<WarmStartReport>> {
+        let models = self.registry.models();
+        if models.len() != 1 {
+            return Ok(None);
+        }
+        let model = models[0].to_string();
+        let th = self.thresholds;
+        plan_artifact::warm_start_from_env(self.plans.tenant_cache_mut(&model), &th)
+    }
+
+    /// Dump every tenant's cached plans into per-model subdirectories
+    /// `root/<model>/` (the producer side of
+    /// [`MultiDispatcher::warm_start_plans`]); returns how many
+    /// artifacts were written.
+    pub fn export_plans(&mut self, root: &std::path::Path) -> anyhow::Result<usize> {
+        let models: Vec<String> = self.plans.tenants().map(|t| t.to_string()).collect();
+        let th = self.thresholds;
+        let mut n = 0;
+        for model in models {
+            let dir = root.join(&model);
+            let cache = self.plans.tenant_cache_mut(&model);
+            for plan in cache.plans() {
+                plan_artifact::save(plan, &th, &dir)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Aggregate plan/arena accounting across every tenant.
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plans.stats()
+    }
+
+    /// Per-model plan/arena accounting (budget tests and the `--models`
+    /// serve report read this).
+    pub fn per_tenant_stats(&self) -> Vec<(String, PlanStats)> {
+        self.plans.per_tenant_stats()
+    }
+
+    pub fn plan_budget(&self) -> u64 {
+        self.plans.budget()
+    }
+
+    pub fn total_arena_bytes(&self) -> u64 {
+        self.plans.total_arena_bytes()
+    }
+
+    /// Forward a packed batch for `model` on its current parameter
+    /// version; returns the logits and the version they were computed
+    /// under. The version is pinned for the whole batch (one `Arc`
+    /// clone up front) — the linearization half of the hot-swap
+    /// contract.
+    pub fn forward(
+        &mut self,
+        model: &str,
+        mode: DispatchMode,
+        mb: &ModelBatch,
+    ) -> anyhow::Result<(Vec<f32>, u64)> {
+        let cur = self.registry.current(model)?;
+        let cfg = self.registry.cfg(model)?;
+        let th = self.thresholds;
+        // Refresh the readout tile iff the served version moved.
+        let pos = self.w_rep.iter().position(|(m, _, _)| m == model);
+        if pos.map_or(true, |i| self.w_rep[i].1 != cur.version) {
+            let tile = reference::build_w_rep(cfg, &cur.params)?;
+            match pos {
+                Some(i) => self.w_rep[i] = (model.to_string(), cur.version, tile),
+                None => self.w_rep.push((model.to_string(), cur.version, tile)),
+            }
+        }
+        let w_rep: &[f32] = {
+            let i = self.w_rep.iter().position(|(m, _, _)| m == model).unwrap();
+            &self.w_rep[i].2
+        };
+        let logits = match mode {
+            DispatchMode::Batched => {
+                self.dispatches += 1;
+                let key = reference::forward_plan_key(cfg, mb);
+                let (plan, ws) = self
+                    .plans
+                    .entry_with(model, key, || reference::plan_forward(cfg, mb, &th))?;
+                reference::forward_planned(cfg, &cur.params, mb, &self.exec, w_rep, plan, ws)?
+            }
+            DispatchMode::PerSample => {
+                let n = cfg.n_out;
+                let mut logits = vec![0f32; mb.batch * n];
+                let mut dispatched = 0u64;
+                for bi in 0..mb.batch {
+                    let one = mb.single(bi);
+                    let key = reference::forward_plan_key(cfg, &one);
+                    let (plan, ws) = self
+                        .plans
+                        .entry_with(model, key, || reference::plan_forward(cfg, &one, &th))?;
+                    let l = reference::forward_planned(
+                        cfg,
+                        &cur.params,
+                        &one,
+                        &self.exec,
+                        w_rep,
+                        plan,
+                        ws,
+                    )?;
+                    dispatched += 1;
+                    logits[bi * n..(bi + 1) * n].copy_from_slice(&l);
+                }
+                self.dispatches += dispatched;
+                logits
+            }
+        };
+        Ok((logits, cur.version))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +438,69 @@ mod tests {
         hd.set_params(fresh);
         hd.forward(DispatchMode::Batched, &mb).unwrap();
         assert_eq!(hd.plan_stats().plans_built, 2);
+    }
+
+    #[test]
+    fn multi_dispatcher_matches_host_dispatcher_per_model() {
+        let mut reg = ModelRegistry::new();
+        reg.register_synthetic("tox21", 3).unwrap();
+        reg.register_synthetic("reaction100", 3).unwrap();
+        let reg = Arc::new(reg);
+        let mut md = MultiDispatcher::new(Arc::clone(&reg), 1);
+        for model in ["tox21", "reaction100"] {
+            let mut hd = HostDispatcher::synthetic(model, 1, 3).unwrap();
+            let kind = if model == "tox21" {
+                DatasetKind::Tox21
+            } else {
+                DatasetKind::Reaction100
+            };
+            let d = Dataset::generate(kind, 4, 8);
+            let mb = d
+                .pack_batch(&[0, 1, 2, 3], hd.cfg.max_nodes, hd.cfg.ell_width)
+                .unwrap();
+            let want = hd.forward(DispatchMode::Batched, &mb).unwrap();
+            let (got, version) = md.forward(model, DispatchMode::Batched, &mb).unwrap();
+            assert_eq!(got, want, "{model}: multi != single-model dispatch");
+            assert_eq!(version, 1);
+        }
+        assert_eq!(md.dispatches, 2);
+        // One plan per model geometry, in separate tenant caches.
+        let per = md.per_tenant_stats();
+        assert_eq!(per.len(), 2);
+        for (model, s) in &per {
+            assert_eq!(s.plans_built, 1, "{model}");
+        }
+        assert!(md.total_arena_bytes() <= md.plan_budget());
+        // Unknown model errors instead of serving garbage.
+        let d = Dataset::generate(DatasetKind::Tox21, 1, 8);
+        let mb = d.pack_batch(&[0], 50, 12).unwrap();
+        assert!(md.forward("nope", DispatchMode::Batched, &mb).is_err());
+    }
+
+    #[test]
+    fn hot_swap_takes_effect_without_touching_plans() {
+        let mut reg = ModelRegistry::new();
+        reg.register_synthetic("tox21", 3).unwrap();
+        let reg = Arc::new(reg);
+        let mut md = MultiDispatcher::new(Arc::clone(&reg), 1);
+        let d = Dataset::generate(DatasetKind::Tox21, 2, 8);
+        let cfg = reg.cfg("tox21").unwrap().clone();
+        let mb = d.pack_batch(&[0, 1], cfg.max_nodes, cfg.ell_width).unwrap();
+        let (before, v1) = md.forward("tox21", DispatchMode::Batched, &mb).unwrap();
+        assert_eq!(v1, 1);
+        let fresh = ParamSet::random_init(&cfg, 99);
+        let v2 = reg.swap_params("tox21", fresh.clone()).unwrap();
+        let (after, served) = md.forward("tox21", DispatchMode::Batched, &mb).unwrap();
+        assert_eq!(served, v2);
+        assert_ne!(before, after, "swap did not take effect");
+        // Same logits as a single-model dispatcher on the new params
+        // (w_rep cache refreshed, plans untouched).
+        let mut direct = HostDispatcher::new(cfg, fresh, 1);
+        let want = direct.forward(DispatchMode::Batched, &mb).unwrap();
+        assert_eq!(after, want);
+        let s = md.plan_stats();
+        assert_eq!(s.plans_built, 1, "hot swap must not invalidate plans");
+        assert_eq!(s.replays, 1);
     }
 
     #[test]

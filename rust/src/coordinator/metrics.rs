@@ -31,8 +31,38 @@ struct Inner {
     plans_built: u64,
     plans_warmed: u64,
     plan_replays: u64,
+    /// Registry-wide parameter hot swaps (gauge: newest registry count
+    /// wins, like the plan counters). Zero on single-model servers that
+    /// never swap.
+    param_swaps: u64,
+    /// Per-model breakdown (DESIGN.md §15), keyed by registered model
+    /// name in first-seen order. Aggregate counters above always
+    /// include these; single-model servers see one entry.
+    per_model: Vec<(String, ModelInner)>,
     started: Option<Instant>,
     finished: Option<Instant>,
+}
+
+impl Inner {
+    fn model_mut(&mut self, model: &str) -> &mut ModelInner {
+        if let Some(pos) = self.per_model.iter().position(|(m, _)| m == model) {
+            return &mut self.per_model[pos].1;
+        }
+        self.per_model
+            .push((model.to_string(), ModelInner::default()));
+        &mut self.per_model.last_mut().unwrap().1
+    }
+}
+
+/// Per-model slice of the serving counters.
+#[derive(Debug, Default)]
+struct ModelInner {
+    latency: LatencyHistogram,
+    requests: u64,
+    shed: u64,
+    batches: u64,
+    batch_slots: u64,
+    batch_capacity: u64,
 }
 
 /// Thread-safe metrics sink shared between client and server threads.
@@ -77,8 +107,36 @@ pub struct MetricsSnapshot {
     pub plans_warmed: u64,
     /// Forwards served by replaying a cached plan (0 on PJRT).
     pub plan_replays: u64,
+    /// Registry-wide parameter hot swaps completed
+    /// (`ModelRegistry::total_swaps` at snapshot time).
+    pub param_swaps: u64,
+    /// Per-model latency/shed/occupancy breakdown, in first-served
+    /// order. Empty until a model-tagged record lands.
+    pub per_model: Vec<ModelMetricsSnapshot>,
     pub wall_secs: f64,
     pub throughput_rps: f64,
+}
+
+/// One model's slice of a [`MetricsSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ModelMetricsSnapshot {
+    pub model: String,
+    pub requests: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    /// Mean filled-slot fraction of this model's device batches.
+    pub mean_occupancy: f64,
+}
+
+impl MetricsSnapshot {
+    /// The per-model slice for `model`, if any requests or sheds were
+    /// recorded against it.
+    pub fn model(&self, model: &str) -> Option<&ModelMetricsSnapshot> {
+        self.per_model.iter().find(|m| m.model == model)
+    }
 }
 
 impl Metrics {
@@ -104,6 +162,17 @@ impl Metrics {
         g.requests += 1;
     }
 
+    /// [`Metrics::record_request`] plus the per-model breakdown.
+    pub fn record_request_for(&self, model: &str, latency_us: u64, queue_wait_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latency.record_us(latency_us);
+        g.queue_wait.record_us(queue_wait_us);
+        g.requests += 1;
+        let m = g.model_mut(model);
+        m.latency.record_us(latency_us);
+        m.requests += 1;
+    }
+
     pub fn record_batch(&self, size: usize, capacity: usize, device_us: u64) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
@@ -116,9 +185,39 @@ impl Metrics {
         g.batch_size_counts[size] += 1;
     }
 
+    /// [`Metrics::record_batch`] plus the per-model breakdown.
+    pub fn record_batch_for(&self, model: &str, size: usize, capacity: usize, device_us: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_slots += size as u64;
+        g.batch_capacity += capacity as u64;
+        g.device_busy_us += device_us;
+        if g.batch_size_counts.len() <= size {
+            g.batch_size_counts.resize(size + 1, 0);
+        }
+        g.batch_size_counts[size] += 1;
+        let m = g.model_mut(model);
+        m.batches += 1;
+        m.batch_slots += size as u64;
+        m.batch_capacity += capacity as u64;
+    }
+
     /// One request refused without execution.
     pub fn record_shed(&self) {
         self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// [`Metrics::record_shed`] plus the per-model breakdown.
+    pub fn record_shed_for(&self, model: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.shed += 1;
+        g.model_mut(model).shed += 1;
+    }
+
+    /// Store the registry-wide hot-swap count (cumulative on the
+    /// registry side, so the newest snapshot wins).
+    pub fn record_swaps(&self, param_swaps: u64) {
+        self.inner.lock().unwrap().param_swaps = param_swaps;
     }
 
     /// Observe the current admitted-but-unanswered depth; keeps the
@@ -177,6 +276,25 @@ impl Metrics {
             plans_built: g.plans_built,
             plans_warmed: g.plans_warmed,
             plan_replays: g.plan_replays,
+            param_swaps: g.param_swaps,
+            per_model: g
+                .per_model
+                .iter()
+                .map(|(name, m)| ModelMetricsSnapshot {
+                    model: name.clone(),
+                    requests: m.requests,
+                    shed: m.shed,
+                    batches: m.batches,
+                    mean_latency_us: m.latency.mean_us(),
+                    p50_latency_us: m.latency.quantile_us(0.50),
+                    p99_latency_us: m.latency.quantile_us(0.99),
+                    mean_occupancy: if m.batch_capacity == 0 {
+                        0.0
+                    } else {
+                        m.batch_slots as f64 / m.batch_capacity as f64
+                    },
+                })
+                .collect(),
             wall_secs: wall,
             throughput_rps: if wall > 0.0 {
                 g.requests as f64 / wall
@@ -241,5 +359,35 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.param_swaps, 0);
+        assert!(s.per_model.is_empty());
+    }
+
+    #[test]
+    fn per_model_breakdown_splits_the_aggregate() {
+        let m = Metrics::new();
+        m.record_request_for("tox21", 1000, 100);
+        m.record_request_for("tox21", 3000, 100);
+        m.record_request_for("reaction100", 9000, 100);
+        m.record_batch_for("tox21", 2, 4, 50);
+        m.record_batch_for("reaction100", 1, 4, 50);
+        m.record_shed_for("reaction100");
+        m.record_swaps(3);
+        let s = m.snapshot();
+        // Aggregates include every model.
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.param_swaps, 3);
+        assert_eq!(s.per_model.len(), 2);
+        let tox = s.model("tox21").unwrap();
+        assert_eq!((tox.requests, tox.shed, tox.batches), (2, 0, 1));
+        assert!((tox.mean_latency_us - 2000.0).abs() < 1.0);
+        assert!((tox.mean_occupancy - 0.5).abs() < 1e-12);
+        let rxn = s.model("reaction100").unwrap();
+        assert_eq!((rxn.requests, rxn.shed, rxn.batches), (1, 1, 1));
+        assert!(rxn.p99_latency_us >= 9000);
+        assert!((rxn.mean_occupancy - 0.25).abs() < 1e-12);
+        assert!(s.model("nope").is_none());
     }
 }

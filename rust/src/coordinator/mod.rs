@@ -7,7 +7,11 @@
 //!   `BSPMM_BATCH_AGE_US`); pure data structure, property-tested.
 //! * [`dispatch`] — the host-engine forward path: model execution over
 //!   the batched-SpMM engine (`sparse::engine`), no artifacts needed,
-//!   with the tiled readout weight cached per parameter set.
+//!   with the tiled readout weight cached per parameter set. The
+//!   multi-model form ([`MultiDispatcher`]) serves every registry
+//!   entry from one worker pool with per-tenant plan caches.
+//! * [`registry`] — the model registry (DESIGN.md §15): named models
+//!   with versioned, atomically hot-swappable parameter sets.
 //! * [`server`] — the serving runtime: a device thread owning the
 //!   execution backend (PJRT artifacts or host engine), assembling
 //!   batches and dispatching either one batched execute (Fig. 7) or
@@ -36,12 +40,14 @@
 pub mod batcher;
 pub mod dispatch;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod server;
 pub mod trainer;
 
-pub use batcher::{BatchAssembler, BatchPolicy, CloseRule};
-pub use dispatch::HostDispatcher;
+pub use batcher::{BatchAssembler, BatchPolicy, CloseRule, KeyedBatchAssembler};
+pub use dispatch::{HostDispatcher, MultiDispatcher};
+pub use registry::{ModelRegistry, ParamVersion};
 pub use request::{InferRequest, InferResponse};
 pub use server::{DispatchMode, ServeBackend, Server, ServerConfig};
 pub use trainer::{TrainMode, Trainer};

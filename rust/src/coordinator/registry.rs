@@ -1,0 +1,307 @@
+//! Model registry: the multi-model half of the serving stack
+//! (DESIGN.md §15).
+//!
+//! One server process hosts many models. Each registered model is keyed
+//! by name and carries its architecture + geometry ([`ModelConfig`])
+//! plus a *versioned* chain of parameter sets ([`ParamVersion`]). The
+//! registry is the single authority on "which parameters does a batch
+//! for model M run on right now":
+//!
+//! * **Zero-downtime hot swap.** [`ModelRegistry::swap_params`]
+//!   replaces the current version atomically under traffic. Readers
+//!   ([`ModelRegistry::current`]) clone an `Arc<ParamVersion>` under a
+//!   short read lock and hold it for the whole batch — an in-flight
+//!   batch finishes on the version it started with, the next batch
+//!   picks up the new one, and no reader ever observes a torn
+//!   parameter vector (the swap replaces the whole `Arc`, never writes
+//!   through it). Linearization point: the `RwLock` write section in
+//!   `swap_params`.
+//! * **Version history.** Every version ever installed stays reachable
+//!   ([`ModelRegistry::version`]), so a response stamped with the
+//!   version it was served under can be replayed bit-identically — the
+//!   concurrent hot-swap test in `tests/serving_registry.rs` pins
+//!   exactly this.
+//! * **Per-model swap counts** feed the registry-wide
+//!   `param_swaps` metric ([`ModelRegistry::total_swaps`]).
+//!
+//! The registry deliberately holds *parameters only*. Compiled plans
+//! live in the per-tenant [`TenantPlanCaches`]
+//! (`sparse::engine::TenantPlanCaches`) — plans depend on geometry, not
+//! on parameter versions, so a hot swap never invalidates a plan (the
+//! PR 5 invalidation rule; only the derived `w_rep` readout tile is
+//! version-bound and is refreshed by the dispatcher on version change).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::gcn::{ModelConfig, ParamSet};
+
+/// One immutable parameter snapshot. Batches hold an
+/// `Arc<ParamVersion>` for their whole forward, so the data can never
+/// change (or be freed) under them.
+#[derive(Debug)]
+pub struct ParamVersion {
+    /// 1-based, monotonically increasing per model. `0` is reserved as
+    /// the "no registry / not applicable" stamp in responses.
+    pub version: u64,
+    pub params: ParamSet,
+}
+
+struct ModelSlot {
+    cfg: ModelConfig,
+    current: RwLock<Arc<ParamVersion>>,
+    /// Every version ever installed, in install order (index = version
+    /// - 1). Kept for replay verification; molecule-model ParamSets are
+    /// small (tens of KiB) so retention is cheap.
+    history: Mutex<Vec<Arc<ParamVersion>>>,
+    swaps: AtomicU64,
+    next_version: AtomicU64,
+}
+
+/// Registry of named models, each with hot-swappable versioned
+/// parameters. Registration (`&mut self`) happens at boot; swap/read
+/// (`&self`) run concurrently under traffic.
+pub struct ModelRegistry {
+    slots: BTreeMap<String, ModelSlot>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        ModelRegistry::new()
+    }
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRegistry")
+            .field("models", &self.slots.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry {
+            slots: BTreeMap::new(),
+        }
+    }
+
+    /// Register a model with its initial parameters as version 1.
+    /// Rejects duplicate names and parameter vectors that do not match
+    /// the config's `n_params` (a torn or truncated init blob must not
+    /// reach serving).
+    pub fn register(&mut self, cfg: ModelConfig, params: ParamSet) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            !self.slots.contains_key(&cfg.name),
+            "model '{}' is already registered",
+            cfg.name
+        );
+        anyhow::ensure!(
+            params.data.len() == cfg.n_params,
+            "model '{}': parameter vector has {} values, config declares {}",
+            cfg.name,
+            params.data.len(),
+            cfg.n_params
+        );
+        let v = Arc::new(ParamVersion { version: 1, params });
+        self.slots.insert(
+            cfg.name.clone(),
+            ModelSlot {
+                cfg,
+                current: RwLock::new(Arc::clone(&v)),
+                history: Mutex::new(vec![v]),
+                swaps: AtomicU64::new(0),
+                next_version: AtomicU64::new(2),
+            },
+        );
+        Ok(1)
+    }
+
+    /// Register a named synthetic model ([`ModelConfig::synthetic`])
+    /// with deterministically initialized parameters.
+    pub fn register_synthetic(&mut self, model: &str, seed: u64) -> anyhow::Result<u64> {
+        let cfg = ModelConfig::synthetic(model)?;
+        let params = ParamSet::random_init(&cfg, seed);
+        self.register(cfg, params)
+    }
+
+    fn slot(&self, model: &str) -> anyhow::Result<&ModelSlot> {
+        self.slots
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("model '{model}' is not registered"))
+    }
+
+    /// Atomically install `params` as the new current version for
+    /// `model` and return the new version number. In-flight readers
+    /// keep their `Arc` to the old version; the next
+    /// [`ModelRegistry::current`] call observes the new one.
+    pub fn swap_params(&self, model: &str, params: ParamSet) -> anyhow::Result<u64> {
+        let slot = self.slot(model)?;
+        anyhow::ensure!(
+            params.data.len() == slot.cfg.n_params,
+            "model '{model}': parameter vector has {} values, config declares {}",
+            params.data.len(),
+            slot.cfg.n_params
+        );
+        let version = slot.next_version.fetch_add(1, Ordering::Relaxed);
+        let v = Arc::new(ParamVersion { version, params });
+        // History before publication: any reader that observes the new
+        // version can already resolve it by number.
+        slot.history.lock().unwrap().push(Arc::clone(&v));
+        *slot.current.write().unwrap() = v;
+        slot.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(version)
+    }
+
+    /// The current parameter version for `model`. Cheap (one read lock
+    /// + one `Arc` clone); callers hold the result for the whole batch.
+    pub fn current(&self, model: &str) -> anyhow::Result<Arc<ParamVersion>> {
+        Ok(Arc::clone(&self.slot(model)?.current.read().unwrap()))
+    }
+
+    /// A specific historical version of `model`, if it was ever
+    /// installed (replay verification).
+    pub fn version(&self, model: &str, version: u64) -> Option<Arc<ParamVersion>> {
+        let slot = self.slots.get(model)?;
+        let hist = slot.history.lock().unwrap();
+        hist.iter().find(|v| v.version == version).cloned()
+    }
+
+    /// Version numbers installed for `model`, in install order.
+    pub fn versions(&self, model: &str) -> Vec<u64> {
+        self.slots.get(model).map_or_else(Vec::new, |s| {
+            s.history.lock().unwrap().iter().map(|v| v.version).collect()
+        })
+    }
+
+    pub fn cfg(&self, model: &str) -> anyhow::Result<&ModelConfig> {
+        Ok(&self.slot(model)?.cfg)
+    }
+
+    pub fn contains(&self, model: &str) -> bool {
+        self.slots.contains_key(model)
+    }
+
+    /// Registered model names in sorted (BTreeMap) order.
+    pub fn models(&self) -> Vec<&str> {
+        self.slots.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Completed hot swaps for one model.
+    pub fn swap_count(&self, model: &str) -> u64 {
+        self.slots
+            .get(model)
+            .map_or(0, |s| s.swaps.load(Ordering::Relaxed))
+    }
+
+    /// Registry-wide hot-swap count (the `param_swaps` metric).
+    pub fn total_swaps(&self) -> u64 {
+        self.slots
+            .values()
+            .map(|s| s.swaps.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry_with(model: &str) -> ModelRegistry {
+        let mut reg = ModelRegistry::new();
+        reg.register_synthetic(model, 0x5EED).unwrap();
+        reg
+    }
+
+    #[test]
+    fn register_swap_and_history_are_versioned() {
+        let mut reg = registry_with("tox21");
+        assert_eq!(reg.models(), vec!["tox21"]);
+        assert_eq!(reg.current("tox21").unwrap().version, 1);
+        assert_eq!(reg.swap_count("tox21"), 0);
+
+        let cfg = reg.cfg("tox21").unwrap().clone();
+        let v2 = reg
+            .swap_params("tox21", ParamSet::random_init(&cfg, 0xBEEF))
+            .unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(reg.current("tox21").unwrap().version, 2);
+        assert_eq!(reg.versions("tox21"), vec![1, 2]);
+        assert_eq!(reg.swap_count("tox21"), 1);
+        assert_eq!(reg.total_swaps(), 1);
+        // Both versions stay reachable and distinct.
+        let p1 = reg.version("tox21", 1).unwrap();
+        let p2 = reg.version("tox21", 2).unwrap();
+        assert_ne!(p1.params.data, p2.params.data);
+
+        // Second model registers independently.
+        reg.register_synthetic("reaction100", 0x5EED).unwrap();
+        assert_eq!(reg.models(), vec!["reaction100", "tox21"]);
+        assert_eq!(reg.total_swaps(), 1);
+    }
+
+    #[test]
+    fn bad_registrations_and_swaps_are_rejected() {
+        let mut reg = registry_with("tox21");
+        // Duplicate name.
+        assert!(reg.register_synthetic("tox21", 1).is_err());
+        // Unknown model.
+        assert!(reg.current("nope").is_err());
+        assert!(reg
+            .swap_params("nope", ParamSet { data: vec![] })
+            .is_err());
+        // Wrong parameter count.
+        assert!(reg
+            .swap_params("tox21", ParamSet { data: vec![0.0; 3] })
+            .is_err());
+        // Registry state is untouched by the failures.
+        assert_eq!(reg.current("tox21").unwrap().version, 1);
+        assert_eq!(reg.swap_count("tox21"), 0);
+    }
+
+    #[test]
+    fn readers_never_observe_a_torn_version() {
+        // Writer hammers swaps where every parameter value equals the
+        // version number; readers assert each snapshot is internally
+        // uniform — a torn read would mix values.
+        let mut reg = ModelRegistry::new();
+        let cfg = ModelConfig::synthetic("tox21").unwrap();
+        let n = cfg.n_params;
+        reg.register(cfg, ParamSet { data: vec![1.0; n] }).unwrap();
+        let reg = Arc::new(reg);
+
+        let writer = {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                for _ in 0..200 {
+                    let v = reg.current("tox21").unwrap().version + 1;
+                    reg.swap_params("tox21", ParamSet { data: vec![v as f32; n] })
+                        .unwrap();
+                }
+            })
+        };
+        let mut last = 0u64;
+        for _ in 0..500 {
+            let cur = reg.current("tox21").unwrap();
+            assert!(
+                cur.params.data.iter().all(|&x| x == cur.version as f32),
+                "torn read at version {}",
+                cur.version
+            );
+            assert!(cur.version >= last, "versions went backwards");
+            last = cur.version;
+        }
+        writer.join().unwrap();
+        assert_eq!(reg.current("tox21").unwrap().version, 201);
+        assert_eq!(reg.swap_count("tox21"), 200);
+    }
+}

@@ -8,10 +8,16 @@ use crate::graph::molecule::Molecule;
 /// A unique, monotonically-assigned request id.
 pub type RequestId = u64;
 
-/// One inference request: a molecule to classify.
+/// One inference request: a molecule to classify, addressed to one
+/// registered model (batches form per model — DESIGN.md §15).
 #[derive(Debug)]
 pub struct InferRequest {
     pub id: RequestId,
+    /// Registered model this request is addressed to
+    /// ([`Server::submit`](super::Server::submit) fills in the server's
+    /// default model; [`Server::submit_to`](super::Server::submit_to)
+    /// targets any registry entry).
+    pub model: String,
     pub mol: Molecule,
     pub submitted: Instant,
     /// Where the server sends the answer.
@@ -22,6 +28,19 @@ pub struct InferRequest {
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub id: RequestId,
+    /// The model that served (or shed) the request.
+    pub model: String,
+    /// Parameter version the logits were computed under
+    /// (`ModelRegistry` version numbering, 1-based). `0` when shed or
+    /// when the backend has no registry versioning (PJRT device path).
+    /// The hot-swap test replays this exact version to prove no batch
+    /// mixed versions.
+    pub version: u64,
+    /// Sequence number of the device batch this request rode in
+    /// (1-based per server; `0` when shed). Requests sharing a
+    /// `batch_seq` were computed in one engine dispatch — and therefore
+    /// must share a `version`.
+    pub batch_seq: u64,
     /// Model logits for this molecule. Empty when `shed`.
     pub logits: Vec<f32>,
     /// End-to-end latency (enqueue -> response ready). For shed
@@ -40,9 +59,12 @@ pub struct InferResponse {
 
 impl InferResponse {
     /// A load-shedding refusal: no logits, never executed.
-    pub fn shed(id: RequestId, latency_us: u64) -> Self {
+    pub fn shed(id: RequestId, model: &str, latency_us: u64) -> Self {
         Self {
             id,
+            model: model.to_string(),
+            version: 0,
+            batch_seq: 0,
             logits: Vec::new(),
             latency_us,
             batch_size: 0,

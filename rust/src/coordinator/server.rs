@@ -36,6 +36,21 @@
 //! request never touches the engine. Batch close policy is
 //! [`CloseRule`]: size-or-age (adaptive, the default) vs fixed-size
 //! (the throughput-first baseline the serving bench contrasts).
+//!
+//! Multi-model serving (DESIGN.md §15): with
+//! [`ServerConfig::registry`] set, one host-engine device thread
+//! serves every registered model. Requests are addressed per model
+//! ([`Server::submit_to`]), batches assemble per model in a
+//! [`KeyedBatchAssembler`] (never mixing models), and each batch runs
+//! on the parameter version current when it was dispatched — pinned
+//! for the whole batch, so a concurrent
+//! [`swap_params`](crate::coordinator::ModelRegistry::swap_params)
+//! flips versions only between batches. Responses carry the model,
+//! the served parameter version, and a device batch sequence number so
+//! the hot-swap test can verify no batch mixed versions. Without a
+//! registry the server builds a registry-of-one from
+//! [`ServerConfig::model`] (same deterministic init as before), so the
+//! single-model path is the multi-model path with one tenant.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -43,9 +58,10 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{age_from_env, BatchAssembler, BatchPolicy, CloseRule};
-use crate::coordinator::dispatch::HostDispatcher;
+use crate::coordinator::batcher::{age_from_env, BatchPolicy, CloseRule, KeyedBatchAssembler};
+use crate::coordinator::dispatch::MultiDispatcher;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::trainer::{batch_tensors, param_tensors};
 use crate::gcn::config::ModelConfig;
@@ -68,9 +84,9 @@ pub enum ServeBackend {
     /// AOT artifacts on the PJRT runtime.
     Pjrt,
     /// In-process batched-SpMM engine; `threads = 0` means one per
-    /// core. The device thread's [`HostDispatcher`] constructs one
-    /// persistent worker pool at startup and serves every request on
-    /// it — no per-dispatch thread spawning (DESIGN.md §9).
+    /// core. The device thread's [`MultiDispatcher`] constructs one
+    /// persistent worker pool at startup and serves every registered
+    /// model on it — no per-dispatch thread spawning (DESIGN.md §9).
     HostEngine { threads: usize },
 }
 
@@ -105,7 +121,20 @@ pub struct ServerConfig {
     pub deadline: Option<Duration>,
     /// Optional trained parameter blob (defaults to the init params on
     /// PJRT, to a deterministic random init on the host engine).
+    /// Ignored when [`ServerConfig::registry`] is set — registered
+    /// models bring their own parameters.
     pub params_path: Option<PathBuf>,
+    /// Multi-model serving (host engine only): the model registry this
+    /// server drives. `None` builds a registry-of-one from
+    /// [`ServerConfig::model`] on the host engine (the single-model
+    /// path unchanged); on PJRT a registry is rejected at startup.
+    pub registry: Option<Arc<ModelRegistry>>,
+    /// Plan-artifact root with per-model subdirectories
+    /// (`<dir>/<model>/*.plan.json`) to warm-start every registered
+    /// model's tenant plan cache from at boot (DESIGN.md §13/§15).
+    /// `None` falls back to the legacy `$BSPMM_PLAN_ARTIFACTS` flat
+    /// layout when exactly one model is registered.
+    pub plans_dir: Option<PathBuf>,
 }
 
 enum Msg {
@@ -123,10 +152,47 @@ pub struct Server {
     /// (incremented at admission, decremented at reply or shed).
     depth: Arc<AtomicUsize>,
     queue_bound: usize,
+    /// The registry this server serves from (registry-of-one when the
+    /// config had none). `None` only on the PJRT backend.
+    registry: Option<Arc<ModelRegistry>>,
+    /// Model [`Server::submit`] addresses.
+    default_model: String,
 }
 
 impl Server {
-    pub fn start(cfg: ServerConfig) -> anyhow::Result<Server> {
+    pub fn start(mut cfg: ServerConfig) -> anyhow::Result<Server> {
+        // Resolve the registry up front so admission can validate model
+        // names and so startup errors (unknown model, registry on PJRT)
+        // surface synchronously.
+        let registry: Option<Arc<ModelRegistry>> = match (&cfg.registry, cfg.backend) {
+            (Some(_), ServeBackend::Pjrt) => {
+                anyhow::bail!("a model registry requires the host-engine backend")
+            }
+            (Some(r), _) => {
+                anyhow::ensure!(
+                    r.contains(&cfg.model),
+                    "default model '{}' is not in the registry (has: {:?})",
+                    cfg.model,
+                    r.models()
+                );
+                Some(Arc::clone(r))
+            }
+            (None, ServeBackend::HostEngine { .. }) => {
+                // Registry-of-one: same model resolution + deterministic
+                // init as the pre-registry host path.
+                let model = ModelConfig::synthetic(&cfg.model)?;
+                let params = match &cfg.params_path {
+                    Some(p) => load_params_blob(&model, p)?,
+                    None => ParamSet::random_init(&model, 0x5EED),
+                };
+                let mut reg = ModelRegistry::new();
+                reg.register(model, params)?;
+                Some(Arc::new(reg))
+            }
+            (None, ServeBackend::Pjrt) => None,
+        };
+        cfg.registry = registry.clone();
+        let default_model = cfg.model.clone();
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Metrics::new());
         let m2 = metrics.clone();
@@ -149,30 +215,56 @@ impl Server {
             next_id: AtomicU64::new(0),
             depth,
             queue_bound,
+            registry,
+            default_model,
         })
     }
 
-    /// Submit one molecule; returns the channel the response arrives
-    /// on. With a nonzero `queue_bound`, a submit that would push the
-    /// admitted-but-unanswered depth past the bound is refused right
-    /// here: a shed [`InferResponse`] arrives on the channel
-    /// immediately and the request never reaches the device thread.
+    /// The registry this server serves from (`None` on PJRT).
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// Submit one molecule to the server's default model; returns the
+    /// channel the response arrives on. With a nonzero `queue_bound`, a
+    /// submit that would push the admitted-but-unanswered depth past
+    /// the bound is refused right here: a shed [`InferResponse`]
+    /// arrives on the channel immediately and the request never reaches
+    /// the device thread.
     pub fn submit(&self, mol: Molecule) -> mpsc::Receiver<InferResponse> {
+        let model = self.default_model.clone();
+        self.submit_to(&model, mol)
+    }
+
+    /// Submit one molecule to a specific registered model. A model
+    /// unknown to the registry (or any non-default model on the PJRT
+    /// backend) is refused immediately with a shed response.
+    pub fn submit_to(&self, model: &str, mol: Molecule) -> mpsc::Receiver<InferResponse> {
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let known = match &self.registry {
+            Some(r) => r.contains(model),
+            None => model == self.default_model,
+        };
+        if !known {
+            self.metrics.record_shed_for(model);
+            let _ = reply.send(InferResponse::shed(id, model, 0));
+            return rx;
+        }
         // Reserve a queue slot first, then check the bound on the value
         // we displaced: concurrent submitters each see a distinct prior
         // depth, so the bound is never exceeded even under races.
         let prev = self.depth.fetch_add(1, Ordering::AcqRel);
         if self.queue_bound > 0 && prev >= self.queue_bound {
             self.depth.fetch_sub(1, Ordering::AcqRel);
-            self.metrics.record_shed();
-            let _ = reply.send(InferResponse::shed(id, 0));
+            self.metrics.record_shed_for(model);
+            let _ = reply.send(InferResponse::shed(id, model, 0));
             return rx;
         }
         self.metrics.record_queue_depth(prev + 1);
         let req = InferRequest {
             id,
+            model: model.to_string(),
             mol,
             submitted: Instant::now(),
             reply,
@@ -222,7 +314,9 @@ enum Engine {
         ptensors: Vec<Tensor>,
         artifact: String,
     },
-    Host(HostDispatcher),
+    /// Registry-backed multi-model host dispatch (a registry-of-one for
+    /// single-model configs).
+    Host(MultiDispatcher),
 }
 
 fn device_thread(
@@ -274,15 +368,23 @@ fn device_thread(
                 ))
             }
             ServeBackend::HostEngine { threads } => {
-                let model = ModelConfig::synthetic(&cfg.model)?;
-                let params = match &cfg.params_path {
-                    Some(p) => load_params_blob(&model, p)?,
-                    None => ParamSet::random_init(&model, 0x5EED),
-                };
-                Ok((
-                    Engine::Host(HostDispatcher::new(model, params, threads)),
-                    capacity,
-                ))
+                let registry = cfg
+                    .registry
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("host engine started without a registry"))?;
+                let mut md = MultiDispatcher::new(registry, threads);
+                // Warm-start every tenant's plan cache: per-model
+                // subdirectories when a plans dir is configured, the
+                // legacy flat env layout for a registry-of-one.
+                match &cfg.plans_dir {
+                    Some(dir) => {
+                        md.warm_start_plans(dir)?;
+                    }
+                    None => {
+                        let _ = md.warm_start_single_from_env();
+                    }
+                }
+                Ok((Engine::Host(md), capacity))
             }
         }
     })();
@@ -302,7 +404,12 @@ fn device_thread(
         CloseRule::SizeOrAge => BatchPolicy::new(capacity, age_from_env(cfg.max_wait)),
         CloseRule::FixedSize => BatchPolicy::fixed_size(capacity),
     };
-    let mut assembler: BatchAssembler<InferRequest> = BatchAssembler::new(policy);
+    // One assembly lane per model (DESIGN.md §15): a batch never mixes
+    // models, so each device dispatch replays one model's compiled plan.
+    let mut assembler: KeyedBatchAssembler<InferRequest> = KeyedBatchAssembler::new(policy);
+    // Device batch sequence: responses sharing a batch_seq rode one
+    // engine dispatch (and therefore one parameter version).
+    let mut batch_seq: u64 = 0;
     metrics.mark_start();
 
     // ---- serve loop ------------------------------------------------------
@@ -312,52 +419,40 @@ fn device_thread(
             .time_to_deadline(Instant::now())
             .unwrap_or(Duration::from_millis(100));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Infer(req)) => assembler.push(req, Instant::now()),
+            Ok(Msg::Infer(req)) => {
+                let lane = req.model.clone();
+                assembler.push(&lane, req, Instant::now());
+            }
             Ok(Msg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
                 running = false;
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
         }
-        loop {
-            let batch = if running {
-                assembler.poll(Instant::now())
-            } else {
-                let rest = assembler.drain_all();
-                if rest.is_empty() {
-                    None
-                } else {
-                    Some(rest)
-                }
-            };
-            let Some(mut batch) = batch else { break };
-            // Deadline shedding happens here, at assembly — once a
-            // request has waited past its deadline it would miss its
-            // SLO anyway, and executing it only delays the requests
-            // behind it. Shed requests are answered (shed=true, no
-            // logits) but never reach the engine. The shutdown drain
-            // sheds too: a stale request does not get fresher by the
-            // server stopping.
-            if let Some(deadline) = cfg.deadline {
-                let now = Instant::now();
-                batch.retain(|req| {
-                    let waited = now.saturating_duration_since(req.submitted);
-                    if waited <= deadline {
-                        return true;
-                    }
-                    metrics.record_shed();
-                    depth.fetch_sub(1, Ordering::AcqRel);
-                    let _ = req
-                        .reply
-                        .send(InferResponse::shed(req.id, waited.as_micros() as u64));
-                    false
-                });
-                if batch.is_empty() {
-                    continue;
-                }
-            }
-            // PerSample capacity is 1, so each "batch" is one request.
-            for chunk in batch.chunks(capacity) {
-                serve_chunk(&mut engine, cfg.mode, capacity, chunk, &metrics, &depth)?;
+        while let Some((model, batch)) = assembler.poll(Instant::now()) {
+            serve_batch(
+                &mut engine,
+                &cfg,
+                capacity,
+                &model,
+                batch,
+                &metrics,
+                &depth,
+                &mut batch_seq,
+            )?;
+        }
+        if !running {
+            // Shutdown drain: flush every lane's partial batch.
+            for (model, batch) in assembler.drain_all() {
+                serve_batch(
+                    &mut engine,
+                    &cfg,
+                    capacity,
+                    &model,
+                    batch,
+                    &metrics,
+                    &depth,
+                    &mut batch_seq,
+                )?;
             }
         }
     }
@@ -365,16 +460,65 @@ fn device_thread(
     Ok(())
 }
 
+/// Deadline-shed, chunk to capacity, and dispatch one assembled batch
+/// for one model.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    engine: &mut Engine,
+    cfg: &ServerConfig,
+    capacity: usize,
+    model: &str,
+    mut batch: Vec<InferRequest>,
+    metrics: &Arc<Metrics>,
+    depth: &Arc<AtomicUsize>,
+    batch_seq: &mut u64,
+) -> anyhow::Result<()> {
+    // Deadline shedding happens here, at assembly — once a request has
+    // waited past its deadline it would miss its SLO anyway, and
+    // executing it only delays the requests behind it. Shed requests
+    // are answered (shed=true, no logits) but never reach the engine.
+    // The shutdown drain sheds too: a stale request does not get
+    // fresher by the server stopping.
+    if let Some(deadline) = cfg.deadline {
+        let now = Instant::now();
+        batch.retain(|req| {
+            let waited = now.saturating_duration_since(req.submitted);
+            if waited <= deadline {
+                return true;
+            }
+            metrics.record_shed_for(&req.model);
+            depth.fetch_sub(1, Ordering::AcqRel);
+            let _ = req.reply.send(InferResponse::shed(
+                req.id,
+                &req.model,
+                waited.as_micros() as u64,
+            ));
+            false
+        });
+    }
+    // PerSample capacity is 1, so each "batch" is one request.
+    for chunk in batch.chunks(capacity) {
+        *batch_seq += 1;
+        serve_chunk(
+            engine, cfg.mode, capacity, model, chunk, metrics, depth, *batch_seq,
+        )?;
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
 fn serve_chunk(
     engine: &mut Engine,
     mode: DispatchMode,
     capacity: usize,
+    model_name: &str,
     chunk: &[InferRequest],
     metrics: &Arc<Metrics>,
     depth: &Arc<AtomicUsize>,
+    batch_seq: u64,
 ) -> anyhow::Result<()> {
     let mols: Vec<&Molecule> = chunk.iter().map(|r| &r.mol).collect();
-    let (n_out, logits, device_us) = match engine {
+    let (n_out, logits, version, device_us) = match engine {
         Engine::Pjrt {
             rt,
             model,
@@ -388,38 +532,41 @@ fn serve_chunk(
             let t0 = Instant::now();
             let out = rt.run(artifact, &inputs)?;
             let device_us = t0.elapsed().as_micros() as u64;
-            (model.n_out, out[0].as_f32()?.to_vec(), device_us)
+            // The PJRT path has no registry versioning: version 0.
+            (model.n_out, out[0].as_f32()?.to_vec(), 0u64, device_us)
         }
-        Engine::Host(hd) => {
-            let mb = pack_molecules(
-                &mols,
-                capacity,
-                hd.cfg.max_nodes,
-                hd.cfg.ell_width,
-                hd.cfg.n_out,
-            )?;
+        Engine::Host(md) => {
+            let mcfg = md.registry().cfg(model_name)?.clone();
+            let mb = pack_molecules(&mols, capacity, mcfg.max_nodes, mcfg.ell_width, mcfg.n_out)?;
             let t0 = Instant::now();
-            let logits = hd.forward(mode, &mb)?;
+            // One registry read pins the parameter version for the
+            // whole chunk (MultiDispatcher::forward) — a concurrent
+            // swap lands between chunks, never inside one.
+            let (logits, version) = md.forward(model_name, mode, &mb)?;
             let device_us = t0.elapsed().as_micros() as u64;
             // Surface the dispatcher's plan-cache accounting: a steady
             // stream of same-capacity batches shows plans_built frozen
             // and plan_replays tracking the batch count (DESIGN.md §11);
             // after an AOT warm start (DESIGN.md §13) plans_built stays
             // 0 outright and plans_warmed names the boot's artifacts.
-            let ps = hd.plan_stats();
+            let ps = md.plan_stats();
             metrics.record_plans(ps.plans_built, ps.plans_warmed, ps.replays);
-            (hd.cfg.n_out, logits, device_us)
+            metrics.record_swaps(md.registry().total_swaps());
+            (mcfg.n_out, logits, version, device_us)
         }
     };
-    metrics.record_batch(chunk.len(), capacity, device_us);
+    metrics.record_batch_for(model_name, chunk.len(), capacity, device_us);
     let done = Instant::now();
     for (bi, req) in chunk.iter().enumerate() {
         let latency_us = done.duration_since(req.submitted).as_micros() as u64;
         let queue_us = latency_us.saturating_sub(device_us);
-        metrics.record_request(latency_us, queue_us);
+        metrics.record_request_for(&req.model, latency_us, queue_us);
         depth.fetch_sub(1, Ordering::AcqRel);
         let _ = req.reply.send(InferResponse {
             id: req.id,
+            model: req.model.clone(),
+            version,
+            batch_seq,
             logits: logits[bi * n_out..(bi + 1) * n_out].to_vec(),
             latency_us,
             batch_size: chunk.len(),

@@ -52,6 +52,14 @@ pub struct NeighborSampler<'g> {
     max_nodes: usize,
     ell_width: usize,
     n_out: usize,
+    /// Per-hop expansion fanouts (GraphSAGE-style): level ℓ of the BFS
+    /// draws at most `fanouts[ℓ]` fresh neighbors per frontier node,
+    /// and expansion stops after `fanouts.len()` hops. Empty = the
+    /// legacy schedule (uniform `ell_width - 1`, depth bounded only by
+    /// `max_nodes`). The schedule shapes *which* nodes a subgraph
+    /// holds, never the packed geometry — every batch still fills
+    /// `max_nodes × ell_width`, so the one-plan contract holds.
+    fanouts: Vec<usize>,
     rng: Rng,
     /// Global node id -> local index for the sample in flight (-1 =
     /// absent).  Allocated once (O(nodes)); reset via `touched`, so a
@@ -63,6 +71,34 @@ impl<'g> NeighborSampler<'g> {
     pub fn new(
         graph: &'g LargeGraphBatch,
         cfg: &ModelConfig,
+        seed: u64,
+    ) -> anyhow::Result<NeighborSampler<'g>> {
+        Self::build(graph, cfg, Vec::new(), seed)
+    }
+
+    /// A sampler with an explicit per-hop fanout schedule: hop ℓ draws
+    /// at most `fanouts[ℓ]` fresh neighbors per frontier node, and the
+    /// subgraph never reaches past `fanouts.len()` hops from the root.
+    /// So a sample holds at most `1 + f0 + f0*f1 + ...` nodes — the
+    /// GraphSAGE receptive-field bound — independent of graph degree.
+    pub fn with_fanouts(
+        graph: &'g LargeGraphBatch,
+        cfg: &ModelConfig,
+        fanouts: &[usize],
+        seed: u64,
+    ) -> anyhow::Result<NeighborSampler<'g>> {
+        anyhow::ensure!(!fanouts.is_empty(), "fanout schedule must name at least one hop");
+        anyhow::ensure!(
+            fanouts.iter().all(|&f| f >= 1),
+            "every per-hop fanout must be >= 1, got {fanouts:?}"
+        );
+        Self::build(graph, cfg, fanouts.to_vec(), seed)
+    }
+
+    fn build(
+        graph: &'g LargeGraphBatch,
+        cfg: &ModelConfig,
+        fanouts: Vec<usize>,
         seed: u64,
     ) -> anyhow::Result<NeighborSampler<'g>> {
         anyhow::ensure!(
@@ -82,6 +118,7 @@ impl<'g> NeighborSampler<'g> {
             max_nodes: cfg.max_nodes,
             ell_width: cfg.ell_width,
             n_out: cfg.n_out,
+            fanouts,
             rng: Rng::new(seed),
             local_of: vec![-1; graph.nodes()],
         })
@@ -108,14 +145,22 @@ impl<'g> NeighborSampler<'g> {
     fn fill_sample(&mut self, mb: &mut ModelBatch, bi: usize) {
         let csr = self.graph.csr();
         let nodes = self.graph.nodes();
-        let fanout = self.ell_width - 1;
+        let edge_cap = self.ell_width - 1;
 
-        // --- BFS expansion with per-node fanout cap -------------------
+        // --- BFS expansion with per-hop fanout caps -------------------
         let root = self.rng.below(nodes as u64) as usize;
         let mut local: Vec<u32> = vec![root as u32];
         self.local_of[root] = 0;
         let mut lo = 0usize;
+        let mut hop = 0usize;
         while lo < local.len() && local.len() < self.max_nodes {
+            let fanout = if self.fanouts.is_empty() {
+                edge_cap
+            } else if hop < self.fanouts.len() {
+                self.fanouts[hop]
+            } else {
+                break; // schedule exhausted: the receptive field ends here
+            };
             let hi = local.len();
             for li in lo..hi {
                 let v = local[li] as usize;
@@ -129,11 +174,21 @@ impl<'g> NeighborSampler<'g> {
                 } else {
                     self.rng.sample_distinct(row, take)
                 };
+                // A strict per-node cap only under an explicit
+                // schedule — the legacy draw can admit one extra node
+                // when the self-loop slot went unsampled, and replayed
+                // streams must stay bit-stable across versions.
+                let fresh_cap = if self.fanouts.is_empty() { usize::MAX } else { fanout };
+                let mut fresh = 0usize;
                 for off in picks {
                     let c = csr.col_ids[r0 + off] as usize;
                     if c != v && self.local_of[c] < 0 && local.len() < self.max_nodes {
+                        if fresh >= fresh_cap {
+                            break;
+                        }
                         self.local_of[c] = local.len() as i32;
                         local.push(c as u32);
+                        fresh += 1;
                     }
                 }
                 if local.len() >= self.max_nodes {
@@ -141,6 +196,7 @@ impl<'g> NeighborSampler<'g> {
                 }
             }
             lo = hi;
+            hop += 1;
         }
         let n_local = local.len();
 
@@ -158,7 +214,7 @@ impl<'g> NeighborSampler<'g> {
                 let lv = self.local_of[c];
                 if lv > lu as i32 {
                     let lv = lv as usize;
-                    if kept[lu].len() < fanout && kept[lv].len() < fanout {
+                    if kept[lu].len() < edge_cap && kept[lv].len() < edge_cap {
                         kept[lu].push(lv as u32);
                         kept[lv].push(lu as u32);
                     }
@@ -276,6 +332,65 @@ mod tests {
         assert_eq!(mb.ell_vals, mb2.ell_vals);
         assert_eq!(mb.x, mb2.x);
         assert_eq!(mb.labels, mb2.labels);
+    }
+
+    #[test]
+    fn fanout_schedules_bound_the_receptive_field_without_changing_geometry() {
+        let g = power_law_graph(2_000, 3, 11).unwrap();
+        let cfg = ModelConfig::synthetic("largegraph").unwrap();
+
+        // Bad schedules are rejected up front.
+        assert!(NeighborSampler::with_fanouts(&g, &cfg, &[], 5).is_err());
+        assert!(NeighborSampler::with_fanouts(&g, &cfg, &[3, 0], 5).is_err());
+
+        // Two-hop schedule [3, 2]: every subgraph holds at most
+        // 1 + 3 + 3*2 = 10 real nodes regardless of graph degree.
+        let mut s = NeighborSampler::with_fanouts(&g, &cfg, &[3, 2], 5).unwrap();
+        let mb = s.next_batch(8).unwrap();
+        let m = cfg.max_nodes;
+        for bi in 0..8 {
+            let n_real = mb.mask[bi * m..(bi + 1) * m]
+                .iter()
+                .filter(|&&v| v == 1.0)
+                .count();
+            assert!(n_real >= 1 && n_real <= 10, "sample {bi} has {n_real} nodes");
+        }
+        // The legacy unbounded schedule overruns that receptive field
+        // on a degree-3+ power-law graph — the bound is real.
+        let mut legacy = NeighborSampler::new(&g, &cfg, 5).unwrap();
+        let lb = legacy.next_batch(8).unwrap();
+        let biggest = (0..8)
+            .map(|bi| {
+                lb.mask[bi * m..(bi + 1) * m].iter().filter(|&&v| v == 1.0).count()
+            })
+            .max()
+            .unwrap();
+        assert!(biggest > 10, "legacy sampler never exceeded the 2-hop bound");
+
+        // Packed geometry is schedule-independent: same ModelBatch
+        // shape, so the same compiled plan serves both streams.
+        assert_eq!((mb.batch, mb.max_nodes, mb.ell_width), (lb.batch, lb.max_nodes, lb.ell_width));
+
+        // Deterministic in seed, like the legacy schedule.
+        let mut s2 = NeighborSampler::with_fanouts(&g, &cfg, &[3, 2], 5).unwrap();
+        let mb2 = s2.next_batch(8).unwrap();
+        assert_eq!(mb.ell_cols, mb2.ell_cols);
+        assert_eq!(mb.x, mb2.x);
+    }
+
+    #[test]
+    fn fanout_sampled_training_still_compiles_one_plan() {
+        let g = power_law_graph(20_000, 4, 3).unwrap();
+        let mut tr = Trainer::new_host("largegraph", 1).unwrap();
+        let cfg = tr.cfg.clone();
+        let mut s = NeighborSampler::with_fanouts(&g, &cfg, &[4, 3, 2], 17).unwrap();
+        let losses = tr.train_sampled(&mut s, 3, 8, 0.05).unwrap();
+        assert_eq!(losses.len(), 3);
+        assert!(losses.iter().all(|l| l.is_finite()), "losses {losses:?}");
+        // The schedule shapes node selection, not geometry: the whole
+        // stream still replays one compiled train plan.
+        let ps = tr.plan_stats();
+        assert_eq!(ps.plans_built, 1, "fanout-sampled steps should share one plan");
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!   gen-data   — generate + describe the synthetic datasets (Table I)
 //!   train      — train a model (batched or non-batched dispatch)
 //!   serve      — run the serving coordinator over a synthetic workload
-//!   plans      — list/verify/dump AOT step-plan artifacts (no trainer)
+//!                (--models registers several and round-robins across them)
+//!   plans      — list/verify/dump/gc AOT step-plan artifacts (no trainer)
 //!   timeline   — print the Fig. 11 simulated layer timeline
 //!   sim        — print the simulated-P100 five-series sweep for a figure
 
@@ -14,7 +15,7 @@ use std::time::Duration;
 
 use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
 use bspmm::coordinator::trainer::{TrainMode, Trainer};
-use bspmm::coordinator::CloseRule;
+use bspmm::coordinator::{CloseRule, ModelRegistry};
 use bspmm::graph::dataset::{Dataset, DatasetKind};
 use bspmm::runtime::{plan_artifact, Runtime};
 use bspmm::simulator::cost::CostModel;
@@ -179,7 +180,20 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         )
         .opt("mode", "batched", "batched | per-sample")
         .opt("backend", "pjrt", "pjrt | host (in-process batched-SpMM engine)")
-        .opt("threads", "0", "host-engine threads (0 = one per core)");
+        .opt("threads", "0", "host-engine threads (0 = one per core)")
+        .opt(
+            "models",
+            "",
+            "comma-separated model list for multi-model serving (host backend only): \
+             registers every model, round-robins requests across them, and reports \
+             the per-model breakdown (DESIGN.md §15)",
+        )
+        .opt(
+            "plans-dir",
+            "",
+            "multi-model plan-artifact root with per-model subdirectories to \
+             warm-start each tenant's plan cache from",
+        );
     let args = parse(&cli, rest)?;
     let mode = match args.str("mode") {
         "batched" => DispatchMode::Batched,
@@ -202,9 +216,33 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         0 => None,
         ms => Some(Duration::from_millis(ms)),
     };
+    // --models turns the server multi-model (DESIGN.md §15): one
+    // registry holding every named model, requests round-robined across
+    // them, and the summary broken out per model.
+    let models: Vec<String> = match args.str("models") {
+        "" => vec![args.str("model").to_string()],
+        list => list.split(',').map(|m| m.trim().to_string()).collect(),
+    };
+    let registry = if args.str("models").is_empty() {
+        None
+    } else {
+        anyhow::ensure!(
+            matches!(backend, ServeBackend::HostEngine { .. }),
+            "--models needs the host-engine backend (--backend host)"
+        );
+        let mut reg = ModelRegistry::new();
+        for m in &models {
+            reg.register_synthetic(m, 0x5EED)?;
+        }
+        Some(std::sync::Arc::new(reg))
+    };
+    let plans_dir = match args.str("plans-dir") {
+        "" => None,
+        d => Some(PathBuf::from(d)),
+    };
     let srv = Server::start(ServerConfig {
         artifacts_dir: PathBuf::from(args.str("artifacts")),
-        model: args.str("model").into(),
+        model: models[0].clone(),
         mode,
         backend,
         max_batch: args.usize("batch"),
@@ -213,14 +251,25 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         queue_bound: args.usize("queue-bound"),
         deadline,
         params_path: None,
+        registry,
+        plans_dir,
     })?;
-    let kind = match args.str("model") {
-        "tox21" => DatasetKind::Tox21,
-        _ => DatasetKind::Reaction100,
-    };
-    let data = Dataset::generate(kind, args.usize("requests"), 3);
+    let n = args.usize("requests");
+    let kinds: Vec<DatasetKind> = models
+        .iter()
+        .map(|m| match m.as_str() {
+            "tox21" => DatasetKind::Tox21,
+            _ => DatasetKind::Reaction100,
+        })
+        .collect();
+    let data = Dataset::generate(kinds[0], n, 3);
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = data.samples.iter().map(|s| srv.submit(s.mol.clone())).collect();
+    let rxs: Vec<_> = data
+        .samples
+        .iter()
+        .enumerate()
+        .map(|(i, s)| srv.submit_to(&models[i % models.len()], s.mol.clone()))
+        .collect();
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(600))
             .map_err(|_| anyhow::anyhow!("response timeout"))?;
@@ -242,6 +291,22 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         m.shed,
         m.queue_depth_hwm,
     );
+    for pm in &m.per_model {
+        println!(
+            "  model {}: {} done, {} shed, {} batches, p50 {:.2}ms p99 {:.2}ms, \
+             occupancy {:.0}%",
+            pm.model,
+            pm.requests,
+            pm.shed,
+            pm.batches,
+            pm.p50_latency_us as f64 / 1e3,
+            pm.p99_latency_us as f64 / 1e3,
+            pm.mean_occupancy * 100.0,
+        );
+    }
+    if m.param_swaps > 0 {
+        println!("  param hot swaps: {}", m.param_swaps);
+    }
     Ok(())
 }
 
@@ -257,8 +322,29 @@ fn cmd_plans(rest: &[String]) -> anyhow::Result<()> {
             "plan-artifact directory (default: $BSPMM_PLAN_ARTIFACTS, else <artifacts>/plans)",
         )
         .opt("dump", "", "print the raw JSON of one artifact (by file name)")
+        .opt(
+            "gc",
+            "",
+            "garbage-collect a multi-model plan root: remove plan artifacts under \
+             model subdirectories the root's registry manifest no longer names. \
+             Dry run by default — pass --apply to delete",
+        )
+        .flag("apply", "with --gc: actually delete the stale artifacts")
         .flag("verify", "exit with an error if any artifact fails validation");
     let args = parse(&cli, rest)?;
+    let gc_root = args.str("gc");
+    if !gc_root.is_empty() {
+        let report = plan_artifact::gc_plans(Path::new(gc_root), args.flag("apply"))?;
+        println!("{}", report.summary());
+        for p in &report.stale {
+            println!(
+                "  {} {}",
+                if report.dry_run { "stale:" } else { "removed:" },
+                p.display()
+            );
+        }
+        return Ok(());
+    }
     let dir = match args.str("dir") {
         "" => plan_artifact::default_plan_dir(),
         d => PathBuf::from(d),

@@ -434,6 +434,159 @@ pub fn default_plan_dir() -> PathBuf {
     }
 }
 
+// ---------------------------------------------------------------------
+// Registry manifest + garbage collection
+// ---------------------------------------------------------------------
+
+/// File name of the registry manifest a multi-model plan root carries
+/// (DESIGN.md §15): the list of live `(model, current version)` pairs
+/// the per-model subdirectories belong to.
+pub const REGISTRY_MANIFEST: &str = "registry.json";
+
+/// The `kind` tag of the registry manifest.
+pub const MANIFEST_KIND: &str = "bspmm_plan_registry";
+
+/// Write the registry manifest for a multi-model plan root: which
+/// models (and which current parameter versions) the per-model plan
+/// subdirectories under `dir` serve. [`gc_plans`] treats any model
+/// subdirectory *not* named here as stale.
+pub fn write_registry_manifest(dir: &Path, models: &[(String, u64)]) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow::anyhow!("cannot create {}: {e}", dir.display()))?;
+    let j = obj(vec![
+        ("format_version", num(FORMAT_VERSION as f64)),
+        ("kind", s(MANIFEST_KIND)),
+        (
+            "models",
+            arr(models
+                .iter()
+                .map(|(m, v)| {
+                    obj(vec![("model", s(m)), ("version", num(*v as f64))])
+                })
+                .collect()),
+        ),
+    ]);
+    let path = dir.join(REGISTRY_MANIFEST);
+    let mut text = j.to_string();
+    text.push('\n');
+    std::fs::write(&path, text)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+/// Read a registry manifest back as `(model, version)` pairs.
+pub fn read_registry_manifest(dir: &Path) -> anyhow::Result<Vec<(String, u64)>> {
+    let path = dir.join(REGISTRY_MANIFEST);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    let j = parse(&text).map_err(|e| anyhow::anyhow!("{}: not valid JSON: {e}", path.display()))?;
+    let kind = j.req_str("kind")?;
+    anyhow::ensure!(
+        kind == MANIFEST_KIND,
+        "{}: kind is '{kind}', expected '{MANIFEST_KIND}'",
+        path.display()
+    );
+    let version = req_u32(&j, "format_version")?;
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "{}: manifest format_version {version} but this build reads {FORMAT_VERSION}",
+        path.display()
+    );
+    j.req_arr("models")?
+        .iter()
+        .map(|m| {
+            Ok((
+                m.req_str("model")?.to_string(),
+                m.req_f64("version")? as u64,
+            ))
+        })
+        .collect()
+}
+
+/// What a [`gc_plans`] pass found (and, with `apply`, did). In dry-run
+/// mode `removed` stays 0 and `stale` lists what *would* go.
+#[derive(Clone, Debug, Default)]
+pub struct GcReport {
+    /// Models the manifest lists as live.
+    pub live_models: Vec<String>,
+    /// Stale plan-artifact files: under a model subdirectory the
+    /// manifest no longer names.
+    pub stale: Vec<PathBuf>,
+    /// Files actually deleted (0 in dry-run mode).
+    pub removed: usize,
+    pub dry_run: bool,
+}
+
+impl GcReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "plan gc: {} live model(s), {} stale artifact(s){}",
+            self.live_models.len(),
+            self.stale.len(),
+            if self.dry_run {
+                " (dry run — pass --apply to delete)".to_string()
+            } else {
+                format!(", {} removed", self.removed)
+            }
+        )
+    }
+}
+
+/// Garbage-collect a multi-model plan root against its registry
+/// manifest: every `*.plan.json` under a model subdirectory the
+/// manifest does not name is stale. Dry-run by default — nothing is
+/// deleted unless `apply` is set (then emptied stale subdirectories
+/// are removed too). Flat legacy artifacts directly under `root` are
+/// never touched: they predate the per-model layout and carry no model
+/// identity to judge.
+pub fn gc_plans(root: &Path, apply: bool) -> anyhow::Result<GcReport> {
+    let manifest = read_registry_manifest(root)?;
+    let mut report = GcReport {
+        live_models: manifest.iter().map(|(m, _)| m.clone()).collect(),
+        dry_run: !apply,
+        ..GcReport::default()
+    };
+    let mut subdirs: Vec<PathBuf> = std::fs::read_dir(root)
+        .map_err(|e| anyhow::anyhow!("cannot scan {}: {e}", root.display()))?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.is_dir())
+        .collect();
+    subdirs.sort();
+    for dir in subdirs {
+        let name = match dir.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if report.live_models.iter().any(|m| *m == name) {
+            continue;
+        }
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .map_err(|e| anyhow::anyhow!("cannot scan {}: {e}", dir.display()))?
+            .filter_map(|entry| entry.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.ends_with(FILE_SUFFIX))
+            })
+            .collect();
+        if files.is_empty() {
+            continue; // not a plan subdirectory — leave it alone
+        }
+        files.sort();
+        if apply {
+            for f in &files {
+                std::fs::remove_file(f)
+                    .map_err(|e| anyhow::anyhow!("cannot remove {}: {e}", f.display()))?;
+                report.removed += 1;
+            }
+            // Remove the directory too if the artifacts were all it held.
+            let _ = std::fs::remove_dir(&dir);
+        }
+        report.stale.extend(files);
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -680,6 +833,56 @@ mod tests {
         assert_eq!(report.loaded, 0);
 
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_removes_only_stale_model_subdirectories() {
+        let root = std::env::temp_dir().join("bspmm_plan_gc_fixture");
+        let _ = std::fs::remove_dir_all(&root);
+        let th = AutoThresholds::default();
+
+        // Live model subdir, stale model subdir, a legacy flat artifact,
+        // and a non-plan subdir that must all be judged correctly.
+        let live = sample_plan();
+        save(&live, &th, &root.join("tox21")).unwrap();
+        let mut stale = sample_plan();
+        stale.key = GeometryKey(vec![9, 4, 50, 16, 4, 12, 12, 64, 64]);
+        let stale_path = save(&stale, &th, &root.join("retired_model")).unwrap();
+        let flat_path = save(&live, &th, &root).unwrap();
+        std::fs::create_dir_all(root.join("notes")).unwrap();
+        std::fs::write(root.join("notes").join("readme.txt"), "keep me").unwrap();
+
+        // No manifest: GC refuses rather than guessing liveness.
+        assert!(gc_plans(&root, false).is_err());
+        write_registry_manifest(&root, &[("tox21".to_string(), 3)]).unwrap();
+        assert_eq!(
+            read_registry_manifest(&root).unwrap(),
+            vec![("tox21".to_string(), 3u64)]
+        );
+
+        // Dry run: stale named, nothing deleted.
+        let report = gc_plans(&root, false).unwrap();
+        assert!(report.dry_run && report.removed == 0, "{}", report.summary());
+        assert_eq!(report.live_models, vec!["tox21".to_string()]);
+        assert_eq!(report.stale, vec![stale_path.clone()]);
+        assert!(stale_path.is_file(), "dry run must not delete");
+        assert!(report.summary().contains("--apply"), "{}", report.summary());
+
+        // Apply: stale artifact and its emptied subdir go; the live
+        // subdir, the legacy flat artifact and the non-plan dir stay.
+        let report = gc_plans(&root, true).unwrap();
+        assert_eq!((report.removed, report.stale.len()), (1, 1));
+        assert!(!stale_path.exists());
+        assert!(!root.join("retired_model").exists());
+        assert!(root.join("tox21").join(file_name(&live.key)).is_file());
+        assert!(flat_path.is_file());
+        assert!(root.join("notes").join("readme.txt").is_file());
+
+        // Idempotent: a second pass finds nothing.
+        let report = gc_plans(&root, true).unwrap();
+        assert_eq!((report.removed, report.stale.len()), (0, 0));
+
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -83,9 +83,9 @@ pub mod pool;
 pub use exec::Executor;
 pub use kernels::{CsrKernel, EllKernel, GemmKernel, LANES, StKernel};
 pub use plan::{
-    choose_backend, AutoThresholds, Backend, DispatchDesc, DispatchProfile, GeometryKey,
-    KernelBundle, ParamRef, PlanCache, PlanCursor, PlanStats, RhsKind, SlotId, SlotInit,
-    StepPlan, Workspace,
+    choose_backend, plan_budget_from_env, AutoThresholds, Backend, DispatchDesc, DispatchProfile,
+    GeometryKey, KernelBundle, ParamRef, PlanCache, PlanCursor, PlanStats, RhsKind, SlotId,
+    SlotInit, StepPlan, TenantPlanCaches, Workspace,
 };
 pub use pool::{PoolStats, SchedPolicy, WorkerPool};
 

@@ -34,8 +34,15 @@
 //!   bit-identical to running that fixed backend directly.
 //! * [`PlanCache`] + [`PlanStats`] — one (plan, workspace) pair per
 //!   [`GeometryKey`], built on first use and replayed thereafter;
-//!   geometry changes build a new entry, parameter updates never
-//!   invalidate a plan.
+//!   geometry changes build a new entry (bounded, LRU eviction),
+//!   parameter updates never invalidate a plan.
+//! * [`TenantPlanCaches`] — the multi-model serving form (DESIGN.md
+//!   §15): one bounded [`PlanCache`] per tenant (model), all stamped
+//!   from a single recency clock, with LRU eviction *within* a tenant
+//!   at its per-tenant cap and *across* tenants only when the global
+//!   `arena_bytes` budget would overflow. A tenant churning through
+//!   geometries can never evict another tenant's hot plan while the
+//!   budget has headroom.
 //!
 //! Plans describe *what* runs (backend, transpose form, shapes) —
 //! never *how* the executor runs it: the kernel variant
@@ -659,6 +666,10 @@ pub struct PlanStats {
     pub plans_warmed: u64,
     /// Steps served from a cached plan.
     pub replays: u64,
+    /// Entries dropped to stay within the per-tenant cap or the global
+    /// arena budget ([`TenantPlanCaches`]). A re-entered geometry after
+    /// eviction counts in `plans_built` again (readmission recompiles).
+    pub plans_evicted: u64,
     /// Bytes currently backing all cached workspaces.
     pub arena_bytes: u64,
     /// Buffer takes served without growing an allocation.
@@ -671,18 +682,26 @@ struct CacheEntry {
     key: GeometryKey,
     plan: StepPlan,
     ws: Workspace,
+    /// Recency stamp from the owning cache's clock (or the shared
+    /// [`TenantPlanCaches`] clock) — the LRU eviction order.
+    last_used: u64,
 }
 
 /// One (plan, workspace) pair per geometry, built on first use.
-/// Geometry changes build a new entry (bounded FIFO eviction);
-/// parameter updates never touch this cache — plans depend only on
-/// geometry.
+/// Geometry changes build a new entry (bounded, least-recently-used
+/// eviction); parameter updates never touch this cache — plans depend
+/// only on geometry.
 pub struct PlanCache {
     entries: Vec<CacheEntry>,
     cap: usize,
+    /// Monotonic recency clock; every hit/insert stamps the entry.
+    /// [`TenantPlanCaches`] syncs this across tenants so stamps are
+    /// comparable cache-to-cache.
+    clock: u64,
     plans_built: u64,
     plans_warmed: u64,
     replays: u64,
+    plans_evicted: u64,
 }
 
 impl Default for PlanCache {
@@ -698,9 +717,11 @@ impl PlanCache {
             // Enough for the live modes of one host (train + a couple
             // of eval/serve batch shapes) without unbounded growth.
             cap: 8,
+            clock: 0,
             plans_built: 0,
             plans_warmed: 0,
             replays: 0,
+            plans_evicted: 0,
         }
     }
 
@@ -730,18 +751,21 @@ impl PlanCache {
         ws.prepare(&plan);
         self.plans_warmed += 1;
         if self.entries.len() == self.cap {
-            self.entries.remove(0);
+            self.evict_lru();
         }
+        self.clock += 1;
         self.entries.push(CacheEntry {
             key: plan.key.clone(),
             plan,
             ws,
+            last_used: self.clock,
         });
         true
     }
 
     /// The cached plan + workspace for `key`, building (and preparing
-    /// the workspace of) a new entry via `build` on a miss.
+    /// the workspace of) a new entry via `build` on a miss. Hits stamp
+    /// the entry most-recently-used.
     pub fn entry_with(
         &mut self,
         key: GeometryKey,
@@ -749,7 +773,9 @@ impl PlanCache {
     ) -> anyhow::Result<(&StepPlan, &mut Workspace)> {
         if let Some(pos) = self.entries.iter().position(|e| e.key == key) {
             self.replays += 1;
+            self.clock += 1;
             let e = &mut self.entries[pos];
+            e.last_used = self.clock;
             return Ok((&e.plan, &mut e.ws));
         }
         let plan = build()?;
@@ -757,11 +783,32 @@ impl PlanCache {
         ws.prepare(&plan);
         self.plans_built += 1;
         if self.entries.len() == self.cap {
-            self.entries.remove(0);
+            self.evict_lru();
         }
-        self.entries.push(CacheEntry { key, plan, ws });
+        self.clock += 1;
+        self.entries.push(CacheEntry {
+            key,
+            plan,
+            ws,
+            last_used: self.clock,
+        });
         let e = self.entries.last_mut().unwrap();
         Ok((&e.plan, &mut e.ws))
+    }
+
+    /// Drop the least-recently-used entry, if any. Counts in
+    /// [`PlanStats::plans_evicted`].
+    fn evict_lru(&mut self) {
+        if let Some(pos) = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        {
+            self.entries.remove(pos);
+            self.plans_evicted += 1;
+        }
     }
 
     /// Drop every cached plan and workspace (the microbench's cold-plan
@@ -778,11 +825,18 @@ impl PlanCache {
         self.entries.is_empty()
     }
 
+    /// Bytes currently backing this cache's workspaces (the quantity
+    /// the [`TenantPlanCaches`] global budget bounds).
+    pub fn arena_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.ws.arena_bytes()).sum()
+    }
+
     pub fn stats(&self) -> PlanStats {
         let mut s = PlanStats {
             plans_built: self.plans_built,
             plans_warmed: self.plans_warmed,
             replays: self.replays,
+            plans_evicted: self.plans_evicted,
             ..PlanStats::default()
         };
         for e in &self.entries {
@@ -791,6 +845,231 @@ impl PlanCache {
             s.zero_fills_elided += e.ws.zero_fills_elided();
         }
         s
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-tenant plan caches under a global arena budget
+// ---------------------------------------------------------------------
+
+/// Environment override for the [`TenantPlanCaches`] global arena
+/// budget, in bytes. `0` disables the budget (per-tenant caps still
+/// bound each cache).
+pub const ENV_PLAN_BUDGET: &str = "BSPMM_PLAN_BUDGET_BYTES";
+
+/// Default global arena budget: 512 MiB — generous for the molecule
+/// models (whose workspaces are a few MiB) while still a hard wall for
+/// a fleet of large-graph tenants.
+pub const DEFAULT_PLAN_BUDGET: u64 = 512 << 20;
+
+/// The global plan-arena budget in bytes: [`ENV_PLAN_BUDGET`] if set
+/// and parseable, else [`DEFAULT_PLAN_BUDGET`].
+pub fn plan_budget_from_env() -> u64 {
+    std::env::var(ENV_PLAN_BUDGET)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(DEFAULT_PLAN_BUDGET)
+}
+
+/// One bounded [`PlanCache`] per tenant (in multi-model serving: per
+/// registered model), all stamped from a single shared recency clock so
+/// LRU order is comparable across tenants (DESIGN.md §15).
+///
+/// Two eviction regimes, deliberately separate:
+///
+/// * **Per-tenant cap** (each cache's `cap`, 8): a tenant cycling
+///   through more geometries than its cap evicts *its own* LRU entry —
+///   never a neighbour's. This is the fairness rule: churn is charged
+///   to the tenant causing it.
+/// * **Global budget** (`budget` bytes over the summed `arena_bytes`):
+///   only when admitting a new workspace would overflow the budget does
+///   eviction go cross-tenant, dropping the *globally*
+///   least-recently-used entry (wherever it lives) until the newcomer
+///   fits. Evictions are charged to the owning tenant's
+///   [`PlanStats::plans_evicted`].
+///
+/// Readmission after either eviction recompiles (counts in
+/// `plans_built` again) — pinned by the budget tests.
+pub struct TenantPlanCaches {
+    tenants: Vec<(String, PlanCache)>,
+    clock: u64,
+    budget: u64,
+}
+
+impl TenantPlanCaches {
+    /// Empty cache set with an explicit budget (`0` = unbudgeted).
+    pub fn new(budget: u64) -> TenantPlanCaches {
+        TenantPlanCaches {
+            tenants: Vec::new(),
+            clock: 0,
+            budget,
+        }
+    }
+
+    /// Empty cache set budgeted from [`plan_budget_from_env`].
+    pub fn from_env() -> TenantPlanCaches {
+        TenantPlanCaches::new(plan_budget_from_env())
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Replace the global budget (takes effect on the next admission;
+    /// already-cached entries are not proactively evicted).
+    pub fn set_budget(&mut self, budget: u64) {
+        self.budget = budget;
+    }
+
+    /// Tenant names in registration order.
+    pub fn tenants(&self) -> impl Iterator<Item = &str> {
+        self.tenants.iter().map(|(t, _)| t.as_str())
+    }
+
+    /// Summed `arena_bytes` across every tenant — the quantity the
+    /// budget bounds.
+    pub fn total_arena_bytes(&self) -> u64 {
+        self.tenants.iter().map(|(_, c)| c.arena_bytes()).sum()
+    }
+
+    /// Pull the shared clock forward past every tenant clock (tenant
+    /// caches mutated directly via [`tenant_cache_mut`] advance their
+    /// own clocks; stamps stay comparable as long as the shared clock
+    /// never falls behind).
+    ///
+    /// [`tenant_cache_mut`]: TenantPlanCaches::tenant_cache_mut
+    fn sync_clock(&mut self) {
+        for (_, c) in &self.tenants {
+            self.clock = self.clock.max(c.clock);
+        }
+    }
+
+    fn ensure_tenant(&mut self, tenant: &str) -> usize {
+        if let Some(pos) = self.tenants.iter().position(|(t, _)| t == tenant) {
+            return pos;
+        }
+        self.tenants.push((tenant.to_string(), PlanCache::new()));
+        self.tenants.len() - 1
+    }
+
+    /// Direct access to one tenant's cache (created empty on first
+    /// use) — the warm-start / export seam:
+    /// `runtime::plan_artifact::{warm_start, save}` operate on a plain
+    /// [`PlanCache`].
+    pub fn tenant_cache_mut(&mut self, tenant: &str) -> &mut PlanCache {
+        self.sync_clock();
+        let idx = self.ensure_tenant(tenant);
+        let clock = self.clock;
+        let cache = &mut self.tenants[idx].1;
+        cache.clock = cache.clock.max(clock);
+        cache
+    }
+
+    /// The cached plan + workspace for `(tenant, key)`, building via
+    /// `build` on a miss. Misses prepare the workspace first, then
+    /// enforce the per-tenant cap (own-LRU eviction) and the global
+    /// budget (cross-tenant LRU eviction) before admission.
+    pub fn entry_with(
+        &mut self,
+        tenant: &str,
+        key: GeometryKey,
+        build: impl FnOnce() -> anyhow::Result<StepPlan>,
+    ) -> anyhow::Result<(&StepPlan, &mut Workspace)> {
+        self.sync_clock();
+        let idx = self.ensure_tenant(tenant);
+        if let Some(pos) = self.tenants[idx].1.entries.iter().position(|e| e.key == key) {
+            self.clock += 1;
+            let stamp = self.clock;
+            let cache = &mut self.tenants[idx].1;
+            cache.replays += 1;
+            cache.clock = stamp;
+            let e = &mut cache.entries[pos];
+            e.last_used = stamp;
+            return Ok((&e.plan, &mut e.ws));
+        }
+        // Miss: compile + prepare before admission so the newcomer's
+        // arena cost is known to the budget check.
+        let plan = build()?;
+        let mut ws = Workspace::new();
+        ws.prepare(&plan);
+        let new_bytes = ws.arena_bytes();
+        // Per-tenant cap first: churn is charged to the churning tenant.
+        if self.tenants[idx].1.entries.len() >= self.tenants[idx].1.cap {
+            self.tenants[idx].1.evict_lru();
+        }
+        // Global budget: cross-tenant LRU eviction until the newcomer
+        // fits (or nothing is left to evict).
+        while self.budget > 0
+            && self.total_arena_bytes() + new_bytes > self.budget
+            && self.evict_global_lru()
+        {}
+        self.clock += 1;
+        let stamp = self.clock;
+        let cache = &mut self.tenants[idx].1;
+        cache.plans_built += 1;
+        cache.clock = stamp;
+        cache.entries.push(CacheEntry {
+            key,
+            plan,
+            ws,
+            last_used: stamp,
+        });
+        let e = cache.entries.last_mut().unwrap();
+        Ok((&e.plan, &mut e.ws))
+    }
+
+    /// Drop the globally least-recently-used entry across every tenant.
+    /// Returns `false` when no tenant holds any entry.
+    fn evict_global_lru(&mut self) -> bool {
+        let mut victim: Option<(usize, usize, u64)> = None;
+        for (ti, (_, cache)) in self.tenants.iter().enumerate() {
+            for (ei, e) in cache.entries.iter().enumerate() {
+                if victim.map_or(true, |(_, _, stamp)| e.last_used < stamp) {
+                    victim = Some((ti, ei, e.last_used));
+                }
+            }
+        }
+        match victim {
+            Some((ti, ei, _)) => {
+                let cache = &mut self.tenants[ti].1;
+                cache.entries.remove(ei);
+                cache.plans_evicted += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Whether `(tenant, key)` is cached.
+    pub fn contains(&self, tenant: &str, key: &GeometryKey) -> bool {
+        self.tenants
+            .iter()
+            .any(|(t, c)| t == tenant && c.contains(key))
+    }
+
+    /// Aggregate stats summed across every tenant.
+    pub fn stats(&self) -> PlanStats {
+        let mut agg = PlanStats::default();
+        for (_, c) in &self.tenants {
+            let s = c.stats();
+            agg.plans_built += s.plans_built;
+            agg.plans_warmed += s.plans_warmed;
+            agg.replays += s.replays;
+            agg.plans_evicted += s.plans_evicted;
+            agg.arena_bytes += s.arena_bytes;
+            agg.arena_reuses += s.arena_reuses;
+            agg.zero_fills_elided += s.zero_fills_elided;
+        }
+        agg
+    }
+
+    /// Per-tenant stats in registration order (the per-model metrics
+    /// breakdown and the budget-accounting tests read this).
+    pub fn per_tenant_stats(&self) -> Vec<(String, PlanStats)> {
+        self.tenants
+            .iter()
+            .map(|(t, c)| (t.clone(), c.stats()))
+            .collect()
     }
 }
 
@@ -903,33 +1182,120 @@ mod tests {
         assert!(choose_backend(&dense, &[], &th).is_err());
     }
 
+    fn key(v: u32) -> GeometryKey {
+        GeometryKey(vec![v])
+    }
+
+    /// Build closure for a one-slot plan of `slot` f32 elements.
+    fn build(v: u32, slot: usize) -> impl FnOnce() -> anyhow::Result<StepPlan> {
+        move || {
+            let mut p = StepPlan::new(GeometryKey(vec![v]));
+            p.add_slot(slot);
+            Ok(p)
+        }
+    }
+
     #[test]
-    fn plan_cache_builds_once_per_geometry_and_evicts_fifo() {
+    fn plan_cache_builds_once_per_geometry_and_evicts_lru() {
         let mut cache = PlanCache::new();
-        let key = |v: u32| GeometryKey(vec![v]);
-        let build = |v: u32| {
-            move || {
-                let mut p = StepPlan::new(GeometryKey(vec![v]));
-                p.add_slot(8);
-                Ok(p)
-            }
-        };
-        cache.entry_with(key(1), build(1)).unwrap();
-        cache.entry_with(key(1), build(1)).unwrap();
-        cache.entry_with(key(2), build(2)).unwrap();
+        cache.entry_with(key(1), build(1, 8)).unwrap();
+        cache.entry_with(key(1), build(1, 8)).unwrap();
+        cache.entry_with(key(2), build(2, 8)).unwrap();
         let s = cache.stats();
         assert_eq!(s.plans_built, 2);
         assert_eq!(s.replays, 1);
+        assert_eq!(s.plans_evicted, 0);
         assert!(s.arena_bytes >= (2 * 8 * 4) as u64);
         // Node-count-style geometry difference is a different key.
         assert_ne!(key(1), key(2));
-        for v in 3..=10 {
-            cache.entry_with(key(v), build(v)).unwrap();
+        for v in 3..=8 {
+            cache.entry_with(key(v), build(v, 8)).unwrap();
         }
+        // Full at cap 8. Re-touch key(1): under FIFO it would be the
+        // next victim (oldest insertion); under LRU the hit protects it
+        // and key(2) — least recently used — goes instead.
+        cache.entry_with(key(1), build(1, 8)).unwrap();
+        cache.entry_with(key(9), build(9, 8)).unwrap();
         assert_eq!(cache.len(), 8, "cache must stay bounded");
-        // key(1) was evicted; re-entry rebuilds.
-        cache.entry_with(key(1), build(1)).unwrap();
-        assert_eq!(cache.stats().plans_built, 11);
+        assert!(cache.contains(&key(1)), "LRU must keep the re-touched entry");
+        assert!(!cache.contains(&key(2)), "key(2) was the LRU victim");
+        let s = cache.stats();
+        assert_eq!(s.plans_built, 9);
+        assert_eq!(s.plans_evicted, 1);
+        // Readmission after eviction recompiles.
+        cache.entry_with(key(2), build(2, 8)).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.plans_built, 10);
+        assert_eq!(s.plans_evicted, 2);
+    }
+
+    #[test]
+    fn tenant_churn_cannot_evict_a_neighbour_under_budget_headroom() {
+        // Generous budget: nothing here approaches it.
+        let mut caches = TenantPlanCaches::new(64 << 20);
+        caches.entry_with("a", key(100), build(100, 64)).unwrap();
+        // Tenant B churns through 3x its per-tenant cap of geometries.
+        for v in 0..24 {
+            caches.entry_with("b", key(v), build(v, 64)).unwrap();
+        }
+        // B paid for its own churn; A's hot plan is untouched.
+        let stats: std::collections::HashMap<_, _> =
+            caches.per_tenant_stats().into_iter().collect();
+        assert!(caches.contains("a", &key(100)), "churn evicted a neighbour");
+        assert_eq!(stats["a"].plans_evicted, 0);
+        assert_eq!(stats["a"].plans_built, 1);
+        assert_eq!(stats["b"].plans_built, 24);
+        assert_eq!(stats["b"].plans_evicted, 16, "B evicts only its own LRU");
+        assert!(caches.total_arena_bytes() <= caches.budget());
+        // A replay on A still hits.
+        caches.entry_with("a", key(100), build(100, 64)).unwrap();
+        assert_eq!(
+            caches.per_tenant_stats().into_iter().collect::<std::collections::HashMap<_, _>>()["a"]
+                .replays,
+            1
+        );
+    }
+
+    #[test]
+    fn over_budget_admission_evicts_the_global_lru_victim_in_order() {
+        // Measure one entry's real arena footprint first (allocator
+        // rounding makes hardcoded byte counts brittle), then budget
+        // exactly three entries.
+        let mut caches = TenantPlanCaches::new(0);
+        caches.entry_with("a", key(1), build(1, 256)).unwrap();
+        let per_entry = caches.total_arena_bytes();
+        assert!(per_entry >= (256 * 4) as u64);
+        caches.set_budget(3 * per_entry);
+        caches.entry_with("a", key(2), build(2, 256)).unwrap();
+        caches.entry_with("b", key(3), build(3, 256)).unwrap();
+        assert_eq!(caches.total_arena_bytes(), 3 * per_entry);
+        assert_eq!(caches.stats().plans_evicted, 0, "at budget is not over it");
+        // Fourth entry overflows: the global LRU is a:key(1).
+        caches.entry_with("b", key(4), build(4, 256)).unwrap();
+        assert!(!caches.contains("a", &key(1)), "a:1 was the global LRU");
+        assert!(caches.contains("a", &key(2)));
+        let stats: std::collections::HashMap<_, _> =
+            caches.per_tenant_stats().into_iter().collect();
+        assert_eq!(stats["a"].plans_evicted, 1);
+        assert_eq!(stats["b"].plans_evicted, 0);
+        assert!(caches.total_arena_bytes() <= caches.budget());
+        // Touch a:2, then admit a:5 — the victim order continues with
+        // b:3 (cross-tenant LRU), not the freshly touched a:2.
+        caches.entry_with("a", key(2), build(2, 256)).unwrap();
+        caches.entry_with("a", key(5), build(5, 256)).unwrap();
+        assert!(!caches.contains("b", &key(3)), "b:3 was next in LRU order");
+        assert!(caches.contains("a", &key(2)));
+        assert!(caches.contains("b", &key(4)));
+        let stats: std::collections::HashMap<_, _> =
+            caches.per_tenant_stats().into_iter().collect();
+        assert_eq!(stats["b"].plans_evicted, 1);
+        // Readmission of the first victim recompiles and evicts b:4.
+        caches.entry_with("a", key(1), build(1, 256)).unwrap();
+        let stats: std::collections::HashMap<_, _> =
+            caches.per_tenant_stats().into_iter().collect();
+        assert_eq!(stats["a"].plans_built, 4, "readmission recompiles");
+        assert!(!caches.contains("b", &key(4)));
+        assert!(caches.total_arena_bytes() <= caches.budget());
     }
 
     #[test]

@@ -31,6 +31,8 @@ fn server(mode: DispatchMode, max_batch: usize, wait_ms: u64) -> Option<Server> 
             queue_bound: 0,
             deadline: None,
             params_path: None,
+            registry: None,
+            plans_dir: None,
         })
         .expect("server start"),
     )
@@ -105,6 +107,8 @@ fn server_rejects_unknown_model() {
         queue_bound: 0,
         deadline: None,
         params_path: None,
+        registry: None,
+        plans_dir: None,
     });
     assert!(err.is_err());
 }
@@ -123,6 +127,8 @@ fn server_rejects_unsupported_batch_capacity() {
         queue_bound: 0,
         deadline: None,
         params_path: None,
+        registry: None,
+        plans_dir: None,
     });
     assert!(err.is_err());
 }

@@ -24,6 +24,8 @@ fn host_server(mode: DispatchMode, max_batch: usize, wait_ms: u64) -> Server {
         queue_bound: 0,
         deadline: None,
         params_path: None,
+        registry: None,
+        plans_dir: None,
     })
     .expect("host server start")
 }
@@ -96,6 +98,8 @@ fn host_server_rejects_unknown_model() {
         queue_bound: 0,
         deadline: None,
         params_path: None,
+        registry: None,
+        plans_dir: None,
     });
     assert!(err.is_err());
 }

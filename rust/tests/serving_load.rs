@@ -28,6 +28,8 @@ fn server(
         queue_bound,
         deadline: deadline_ms.map(Duration::from_millis),
         params_path: None,
+        registry: None,
+        plans_dir: None,
     })
     .expect("host server start")
 }

@@ -1,0 +1,310 @@
+//! Multi-model serving under concurrent parameter hot swap — the
+//! DESIGN.md §15 acceptance suite.
+//!
+//! The contract pinned here:
+//!
+//! * **No mixed-version batch.** Every response carries the `version`
+//!   its logits were computed under and the `batch_seq` of the engine
+//!   dispatch it rode in; all responses sharing a `batch_seq` must
+//!   share a `version`, even while a writer thread hammers
+//!   [`ModelRegistry::swap_params`] under traffic.
+//! * **Bit-identical replay.** Each served logit vector equals, bit for
+//!   bit, a direct offline replay of the same packed batch on exactly
+//!   the registered parameter version the response was stamped with.
+//! * **Warm multi-model steady state.** With every model's plan
+//!   artifacts exported and warm-started, a mixed-model run serves
+//!   with `plans_built == 0`, and the plan arena stays within the
+//!   global budget.
+//! * **Unknown models are shed**, never executed.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bspmm::coordinator::server::{DispatchMode, ServeBackend, Server, ServerConfig};
+use bspmm::coordinator::{CloseRule, ModelRegistry, MultiDispatcher};
+use bspmm::gcn::ParamSet;
+use bspmm::graph::dataset::pack_molecules;
+use bspmm::graph::molecule::{Molecule, MoleculeSpec};
+use bspmm::util::rng::Rng;
+
+const MODELS: [&str; 2] = ["tox21", "reaction100"];
+const MAX_BATCH: usize = 8;
+
+fn two_model_registry() -> Arc<ModelRegistry> {
+    let mut reg = ModelRegistry::new();
+    for m in MODELS {
+        reg.register_synthetic(m, 0x5EED).unwrap();
+    }
+    Arc::new(reg)
+}
+
+/// Compile each model's full-capacity serve plan offline and export the
+/// per-model artifact layout (`root/<model>/`) the server warm-starts
+/// from.
+fn export_warm_plans(registry: &Arc<ModelRegistry>, root: &PathBuf) {
+    let mut md = MultiDispatcher::new(Arc::clone(registry), 1);
+    let mut rng = Rng::new(0xCA11);
+    let spec = MoleculeSpec::default();
+    for m in MODELS {
+        let cfg = registry.cfg(m).unwrap().clone();
+        let mols: Vec<Molecule> = (0..MAX_BATCH)
+            .map(|_| Molecule::random(&mut rng, &spec))
+            .collect();
+        let refs: Vec<&Molecule> = mols.iter().collect();
+        let mb =
+            pack_molecules(&refs, MAX_BATCH, cfg.max_nodes, cfg.ell_width, cfg.n_out).unwrap();
+        md.forward(m, DispatchMode::Batched, &mb).unwrap();
+    }
+    let exported = md.export_plans(root).unwrap();
+    assert!(exported >= MODELS.len(), "exported {exported} plan artifacts");
+}
+
+fn multi_model_server(registry: &Arc<ModelRegistry>, plans_dir: Option<PathBuf>) -> Server {
+    Server::start(ServerConfig {
+        artifacts_dir: PathBuf::from("unused-for-host-backend"),
+        model: "tox21".into(),
+        mode: DispatchMode::Batched,
+        backend: ServeBackend::HostEngine { threads: 2 },
+        max_batch: MAX_BATCH,
+        max_wait: Duration::from_millis(2),
+        close: CloseRule::SizeOrAge,
+        queue_bound: 0,
+        deadline: None,
+        params_path: None,
+        registry: Some(Arc::clone(registry)),
+        plans_dir,
+    })
+    .expect("multi-model server start")
+}
+
+#[test]
+fn concurrent_hot_swap_never_mixes_versions_and_replays_bit_identically() {
+    let registry = two_model_registry();
+    let plans_root =
+        std::env::temp_dir().join(format!("bspmm-hot-swap-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&plans_root);
+    export_warm_plans(&registry, &plans_root);
+
+    let srv = multi_model_server(&registry, Some(plans_root.clone()));
+
+    // A writer thread hammers tox21 swaps for the whole run — the
+    // concurrency stress. `swap_params` only ever installs a complete
+    // new Arc, so the server must keep answering on *some* registered
+    // version, one per batch.
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let registry = Arc::clone(&registry);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let cfg = registry.cfg("tox21").unwrap().clone();
+            let mut seed = 0xBEEF_u64;
+            while !stop.load(Ordering::Relaxed) {
+                registry
+                    .swap_params("tox21", ParamSet::random_init(&cfg, seed))
+                    .unwrap();
+                seed += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+
+    // Two submission phases with a deterministic swap between them:
+    // phase-0 responses are all served before the swap installs, so
+    // phase-1 tox21 responses must carry a strictly newer version —
+    // at least two distinct versions serve even if the writer thread
+    // is starved.
+    let mut rng = Rng::new(0x51AB);
+    let spec = MoleculeSpec::default();
+    let mut by_id: BTreeMap<u64, Molecule> = BTreeMap::new();
+    let mut responses = Vec::new();
+    let mut phase0_max_tox21_version = 0u64;
+    for phase in 0..2 {
+        let rxs: Vec<_> = (0..60)
+            .map(|i| {
+                let model = MODELS[i % MODELS.len()];
+                let mol = Molecule::random(&mut rng, &spec);
+                (mol.clone(), srv.submit_to(model, mol))
+            })
+            .collect();
+        for (mol, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+            assert!(!resp.shed, "unexpected shed for request {}", resp.id);
+            assert!(resp.version >= 1, "served without a registry version");
+            assert!(resp.batch_seq >= 1, "served without a batch_seq");
+            if phase == 0 && resp.model == "tox21" {
+                phase0_max_tox21_version = phase0_max_tox21_version.max(resp.version);
+            }
+            by_id.insert(resp.id, mol);
+            responses.push(resp);
+        }
+        if phase == 0 {
+            let cfg = registry.cfg("tox21").unwrap().clone();
+            registry
+                .swap_params("tox21", ParamSet::random_init(&cfg, 0xF00D))
+                .unwrap();
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    writer.join().unwrap();
+    let snap = srv.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&plans_root);
+
+    // ---- no mixed-version batch --------------------------------------
+    let mut batches: BTreeMap<u64, Vec<&bspmm::coordinator::InferResponse>> = BTreeMap::new();
+    for resp in &responses {
+        batches.entry(resp.batch_seq).or_default().push(resp);
+    }
+    let mut tox21_versions = std::collections::BTreeSet::new();
+    for (seq, group) in &batches {
+        assert!(group.len() <= MAX_BATCH, "batch {seq} overflows capacity");
+        let model = &group[0].model;
+        let version = group[0].version;
+        for resp in group {
+            assert_eq!(&resp.model, model, "batch {seq} mixed models");
+            assert_eq!(
+                resp.version, version,
+                "batch {seq} mixed parameter versions"
+            );
+        }
+        if model == "tox21" {
+            tox21_versions.insert(version);
+        }
+    }
+    assert!(
+        tox21_versions.len() >= 2,
+        "hot swap never landed: versions {tox21_versions:?}"
+    );
+    assert!(
+        tox21_versions.iter().any(|&v| v > phase0_max_tox21_version),
+        "post-swap submissions kept serving the old version"
+    );
+
+    // ---- bit-identical replay on the stamped version ------------------
+    // Rebuild each batch exactly as the server packed it (requests in
+    // id order, padded to capacity) and run it on a fresh dispatcher
+    // holding only the response's registered version. One dispatcher
+    // per (model, version) so each compiles its plan once.
+    let mut replayers: HashMap<(String, u64), MultiDispatcher> = HashMap::new();
+    for group in batches.values() {
+        let model = group[0].model.clone();
+        let version = group[0].version;
+        let pinned = registry
+            .version(&model, version)
+            .expect("served version is not in the registry history");
+        assert_eq!(pinned.version, version);
+        let md = replayers.entry((model.clone(), version)).or_insert_with(|| {
+            let mut reg = ModelRegistry::new();
+            reg.register(
+                registry.cfg(&model).unwrap().clone(),
+                pinned.params.clone(),
+            )
+            .unwrap();
+            MultiDispatcher::new(Arc::new(reg), 1)
+        });
+        let mut ordered: Vec<_> = group.to_vec();
+        ordered.sort_by_key(|r| r.id);
+        let mols: Vec<&Molecule> = ordered.iter().map(|r| &by_id[&r.id]).collect();
+        let cfg = registry.cfg(&model).unwrap();
+        let mb =
+            pack_molecules(&mols, MAX_BATCH, cfg.max_nodes, cfg.ell_width, cfg.n_out).unwrap();
+        let (logits, v) = md.forward(&model, DispatchMode::Batched, &mb).unwrap();
+        assert_eq!(v, 1, "replay registry holds exactly one version");
+        for (bi, resp) in ordered.iter().enumerate() {
+            assert_eq!(
+                resp.logits,
+                &logits[bi * cfg.n_out..(bi + 1) * cfg.n_out],
+                "request {} (batch {}, version {}) logits diverge from \
+                 a replay of its pinned version",
+                resp.id,
+                resp.batch_seq,
+                version
+            );
+        }
+    }
+
+    // ---- warm multi-model steady state --------------------------------
+    assert_eq!(snap.requests, 120);
+    assert_eq!(snap.shed, 0);
+    assert_eq!(
+        snap.plans_built, 0,
+        "a warm-started model compiled a plan under traffic"
+    );
+    assert!(snap.plans_warmed >= 2, "plans_warmed {}", snap.plans_warmed);
+    assert!(snap.plan_replays > 0);
+    assert!(snap.param_swaps >= 1, "param_swaps {}", snap.param_swaps);
+    for m in MODELS {
+        let pm = snap.model(m).expect("per-model metrics present");
+        assert_eq!(pm.requests, 60, "model {m}");
+        assert_eq!(pm.shed, 0, "model {m}");
+        assert!(pm.batches > 0, "model {m}");
+    }
+}
+
+#[test]
+fn unknown_model_is_shed_without_execution() {
+    let registry = two_model_registry();
+    let srv = multi_model_server(&registry, None);
+    let mut rng = Rng::new(0x0DD);
+    let spec = MoleculeSpec::default();
+
+    let rx = srv.submit_to("nope", Molecule::random(&mut rng, &spec));
+    let resp = rx.recv_timeout(Duration::from_secs(30)).expect("shed reply");
+    assert!(resp.shed);
+    assert_eq!(resp.model, "nope");
+    assert_eq!(resp.version, 0);
+    assert_eq!(resp.batch_seq, 0);
+    assert!(resp.logits.is_empty());
+
+    // Registered models keep serving around the refusal.
+    let rx = srv.submit_to("reaction100", Molecule::random(&mut rng, &spec));
+    let ok = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+    assert!(!ok.shed);
+    assert_eq!(ok.logits.len(), 100);
+
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.requests, 1);
+    assert_eq!(snap.shed, 1);
+    let nm = snap.model("nope").expect("shed model appears in per-model metrics");
+    assert_eq!(nm.shed, 1);
+    assert_eq!(nm.requests, 0);
+}
+
+#[test]
+fn warmed_multi_model_dispatcher_stays_within_plan_budget() {
+    let registry = two_model_registry();
+    let mut md = MultiDispatcher::new(Arc::clone(&registry), 1);
+    let mut rng = Rng::new(0xA11C);
+    let spec = MoleculeSpec::default();
+    for m in MODELS {
+        let cfg = registry.cfg(m).unwrap().clone();
+        let mols: Vec<Molecule> = (0..MAX_BATCH)
+            .map(|_| Molecule::random(&mut rng, &spec))
+            .collect();
+        let refs: Vec<&Molecule> = mols.iter().collect();
+        let mb =
+            pack_molecules(&refs, MAX_BATCH, cfg.max_nodes, cfg.ell_width, cfg.n_out).unwrap();
+        // Twice: once to compile, once to replay.
+        md.forward(m, DispatchMode::Batched, &mb).unwrap();
+        md.forward(m, DispatchMode::Batched, &mb).unwrap();
+    }
+    let stats = md.plan_stats();
+    assert_eq!(stats.plans_built, MODELS.len() as u64);
+    assert_eq!(stats.replays, MODELS.len() as u64);
+    assert!(stats.arena_bytes > 0);
+    assert!(
+        md.total_arena_bytes() <= md.plan_budget(),
+        "arena {} exceeds global budget {}",
+        md.total_arena_bytes(),
+        md.plan_budget()
+    );
+    // Each tenant accounts for exactly its own plan.
+    let per = md.per_tenant_stats();
+    assert_eq!(per.len(), MODELS.len());
+    for (tenant, s) in &per {
+        assert_eq!(s.plans_built, 1, "tenant {tenant}");
+        assert!(s.arena_bytes > 0, "tenant {tenant}");
+    }
+}
