@@ -16,6 +16,7 @@
 //!     cargo run --release --example spmm_microbench -- --sweep fig8b --nb 64
 //!     cargo run --release --example spmm_microbench -- --threads 4
 //!     cargo run --release --example spmm_microbench -- --backend auto
+//!     cargo run --release --example spmm_microbench -- --precision int8
 //!     cargo run --release --example spmm_microbench -- --plan both
 //!     cargo run --release --example spmm_microbench -- --plan aot
 //!     cargo run --release --example spmm_microbench -- --json
@@ -33,6 +34,12 @@
 //! `BENCH_QUICK=1`), batch-of-one CSR dispatches comparing the
 //! cache-tiled vs untiled kernels under static vs work-stealing
 //! scheduling; with `--json` the series merge into `BENCH_engine.json`.
+//!
+//! `--precision` adds the quantized ELL inference series
+//! (DESIGN.md §16): the adjacency dispatch from f32 vs bf16 vs int8
+//! value storage, reporting bytes moved per dispatch alongside GFLOPS
+//! and a speedup-vs-f32 summary line per quantized precision; the
+//! figure merges into `BENCH_engine.json` under `--json`.
 //!
 //! `--plan aot` exercises the AOT plan-artifact round trip
 //! (DESIGN.md §13): a producer trainer dumps its compiled plans, a
@@ -53,9 +60,10 @@
 use std::path::Path;
 
 use bspmm::bench::figures::{
-    auto_choices, auto_vs_fixed_summary, engine_speedup_summary, run_aot_warmstart_bench,
-    run_engine_bench_backends, run_large_graph_bench, run_mixed_serving_bench, run_plan_bench,
-    run_serving_bench, run_train_step_bench, FigureRunner, ENGINE_SERIES,
+    auto_choices, auto_vs_fixed_summary, engine_speedup_summary, precision_speedup_summary,
+    run_aot_warmstart_bench, run_engine_bench_backends, run_large_graph_bench,
+    run_mixed_serving_bench, run_plan_bench, run_precision_bench, run_serving_bench,
+    run_train_step_bench, FigureRunner, ENGINE_SERIES,
 };
 use bspmm::bench::report::save_json_in;
 use bspmm::bench::BenchOpts;
@@ -76,6 +84,15 @@ fn main() -> anyhow::Result<()> {
         .opt("nb", "64", "dense input width n_B (must exist in the sweep)")
         .opt("threads", "0", "parallel executor threads (0 = one per core)")
         .opt("backend", "all", "engine series: all|st|csr|ell|gemm|auto")
+        .opt(
+            "precision",
+            "all",
+            "quantized ELL inference series (DESIGN.md §16): all|f32|bf16|int8. \
+             f32 skips the precision figure (the plain engine series already \
+             covers f32); bf16/int8 run that precision against the f32 \
+             baseline; all runs both. Each precision reports GFLOPS and \
+             bytes moved per dispatch, plus a speedup-vs-f32 summary line",
+        )
         .opt(
             "plan",
             "cached",
@@ -197,6 +214,30 @@ fn main() -> anyhow::Result<()> {
     }
     println!();
     let mut figures = vec![engine];
+
+    // Quantized inference precision series (DESIGN.md §16): the ELL
+    // adjacency dispatch from f32 vs bf16 vs int8 value storage —
+    // GFLOPS next to bytes moved per dispatch, with speedup-vs-f32
+    // summary lines, merged into the same JSON record.
+    let precision = args.str("precision");
+    anyhow::ensure!(
+        matches!(precision, "all" | "f32" | "bf16" | "int8"),
+        "--precision must be all|f32|bf16|int8, got '{precision}'"
+    );
+    if precision != "f32" {
+        let mut pfig = run_precision_bench(&sw, threads, &opts)?;
+        if precision != "all" {
+            // Keep the f32 baseline pair (the speedup denominator)
+            // plus the requested precision's pair.
+            pfig.series.retain(|ser| {
+                ser.name.contains("[f32]") || ser.name.contains(&format!("[{precision}]"))
+            });
+        }
+        println!("{}", pfig.render());
+        print!("{}", precision_speedup_summary(&pfig));
+        println!();
+        figures.push(pfig);
+    }
 
     // The mixed-batch sweep (Fig. 10 geometry): the skewed case the
     // work-stealing decomposition exists for. Only run for the JSON

@@ -57,19 +57,22 @@ pub fn engine_legend(b: Backend) -> &'static str {
 
 /// Benchmark the engine series ([`ENGINE_SERIES`]: four fixed backends
 /// plus `Backend::Auto`, which resolves per point via the cost model)
-/// at every sweep point in four executor configurations: scalar serial
+/// at every sweep point in five executor configurations: scalar serial
 /// baseline (the pre-vectorization inner loops, DESIGN.md §10),
 /// vectorized serial fallback, `threads`-wide static split (the legacy
-/// contiguous sample partition), and `threads`-wide work-stealing pool
+/// contiguous sample partition), `threads`-wide work-stealing pool
 /// (`threads = 0` = one per core; static and steal run the vectorized
-/// kernels). Series come in (scalar, serial, static, steal) quadruples
-/// per backend; no runtime or artifacts are needed. scalar → serial
-/// isolates the kernel-vectorization win, serial → static/steal the
-/// parallel win, and the AUTO group vs the fixed groups
-/// ([`auto_vs_fixed_summary`]) shows whether the auto thresholds are
-/// calibrated. On uniform sweeps static and steal should coincide (the
-/// planner keeps the static fast path); mixed sweeps (fig10) are where
-/// stealing pulls ahead.
+/// kernels), and the work-stealing pool on the explicit-SIMD kernels
+/// (`KernelVariant::Simd`, DESIGN.md §16 — AVX2 intrinsics under
+/// `--features simd`, vectorized fallback otherwise). Series come in
+/// (scalar, serial, static, steal, simd) quintuples per backend; no
+/// runtime or artifacts are needed. scalar → serial isolates the
+/// kernel-vectorization win, serial → static/steal the parallel win,
+/// steal → simd the explicit-intrinsics win on top of both, and the
+/// AUTO group vs the fixed groups ([`auto_vs_fixed_summary`]) shows
+/// whether the auto thresholds are calibrated. On uniform sweeps
+/// static and steal should coincide (the planner keeps the static fast
+/// path); mixed sweeps (fig10) are where stealing pulls ahead.
 pub fn run_engine_bench(
     sw: &SweepSpec,
     threads: usize,
@@ -93,13 +96,15 @@ pub fn run_engine_bench_backends(
     let scalar = Executor::with_variant(1, SchedPolicy::WorkStealing, KernelVariant::Scalar);
     let stat = Executor::with_policy(t, SchedPolicy::Static);
     let steal = Executor::new(t);
+    let simd = Executor::with_variant(t, SchedPolicy::WorkStealing, KernelVariant::Simd);
     let labels = [
         "scalar".to_string(),
         "serial".to_string(),
         format!("static-{t}t"),
         format!("steal-{t}t"),
+        format!("simd-{t}t"),
     ];
-    let execs = [scalar, Executor::serial(), stat, steal];
+    let execs = [scalar, Executor::serial(), stat, steal, simd];
     let mut series: Vec<Series> = Vec::new();
     for &backend in backends {
         for label in &labels {
@@ -257,9 +262,12 @@ pub fn run_large_graph_bench(
 }
 
 /// Per-backend speedup lines for an engine figure (series arranged in
-/// (scalar, serial, static, steal) quadruples, as `run_engine_bench`
-/// emits them): the scalar → serial ratio is the pure vectorization
-/// win, serial → static/steal the parallel win on top of it.
+/// (scalar, serial, static, steal, simd) quintuples, as
+/// `run_engine_bench` emits them): the scalar → serial ratio is the
+/// pure vectorization win, serial → static/steal the parallel win on
+/// top of it, and steal → simd the explicit-intrinsics win over the
+/// autovectorized kernels (1.0x when the `simd` feature is off or the
+/// CPU lacks AVX2 — the variant falls back to the vectorized loops).
 pub fn engine_speedup_summary(f: &FigureResult) -> String {
     let best = |s: &Series| {
         s.values
@@ -269,27 +277,158 @@ pub fn engine_speedup_summary(f: &FigureResult) -> String {
             .fold(f64::MIN, f64::max)
     };
     let mut out = String::new();
-    for group in f.series.chunks(4) {
-        if group.len() != 4 {
+    for group in f.series.chunks(5) {
+        if group.len() != 5 {
             continue;
         }
-        let (sc, s, st, wk) = (
+        let (sc, s, st, wk, sd) = (
             best(&group[0]),
             best(&group[1]),
             best(&group[2]),
             best(&group[3]),
+            best(&group[4]),
         );
-        if sc > 0.0 && s > 0.0 && st > 0.0 && wk > 0.0 {
+        if sc > 0.0 && s > 0.0 && st > 0.0 && wk > 0.0 && sd > 0.0 {
             out.push_str(&format!(
                 "  {} {sc:.3} -> {} {s:.3} ({:.2}x vector speedup) -> {} {st:.3} ({:.2}x) \
-                 -> {} {wk:.3} GFLOPS ({:.2}x parallel speedup)\n",
+                 -> {} {wk:.3} GFLOPS ({:.2}x parallel speedup); {} {sd:.3} ({:.2}x simd-vs-steal)\n",
                 group[0].name,
                 group[1].name,
                 s / sc,
                 group[2].name,
                 st / s,
                 group[3].name,
-                wk / s
+                wk / s,
+                group[4].name,
+                sd / wk
+            ));
+        }
+    }
+    out
+}
+
+/// Quantized-precision inference sweep (DESIGN.md §16): the batched
+/// adjacency SpMM dispatched from f32, bf16 and int8 ELL value storage
+/// on the work-stealing executor. Each precision contributes a GFLOPS
+/// series and a bytes-moved-per-dispatch series (quantized value array
+/// + i32 column ids + f32 dense operand + f32 output — the value-array
+/// term is what shrinks 2x/4x), so the record shows whether the
+/// bandwidth saving translates into throughput at each n_B. GFLOPS
+/// count the same effective f32 flops for every precision (the
+/// dequantize-on-the-fly kernels do the same multiply-adds), so the
+/// series are directly a time ratio.
+pub fn run_precision_bench(
+    sw: &SweepSpec,
+    threads: usize,
+    opts: &BenchOpts,
+) -> anyhow::Result<FigureResult> {
+    use crate::sparse::batch::QuantizedEllBatch;
+    use crate::sparse::engine::{BatchedSpmm, DType, QuantEllKernel};
+
+    let t = Executor::resolve_threads(threads);
+    let exec = Executor::new(t);
+    let mut series: Vec<Series> = Vec::new();
+    for dt in DType::ALL {
+        series.push(Series {
+            name: format!("Engine-ELL[{}]({t}t)", dt.name()),
+            values: Vec::new(),
+        });
+        series.push(Series {
+            name: format!("Engine-ELL[{}](MB/dispatch)", dt.name()),
+            values: Vec::new(),
+        });
+    }
+    for &nb in &sw.nbs {
+        let w = SpmmWorkload::build(sw, nb)?;
+        let ellk = w.ell_kernel();
+        let quant: Vec<QuantizedEllBatch> = [DType::Bf16, DType::Int8]
+            .iter()
+            .map(|&dt| QuantizedEllBatch::from_padded(&w.ell, dt))
+            .collect::<anyhow::Result<_>>()?;
+        let qks: Vec<QuantEllKernel<'_>> = quant.iter().map(QuantEllKernel::from_batch).collect();
+        for (di, dt) in DType::ALL.iter().enumerate() {
+            let kernel: &dyn BatchedSpmm = match di {
+                0 => &ellk,
+                i => &qks[i - 1],
+            };
+            let mut out = vec![0f32; kernel.batch() * kernel.out_rows() * nb];
+            let mut sample_once = || {
+                out.fill(0.0);
+                let t0 = std::time::Instant::now();
+                exec.dispatch(kernel, Rhs::PerSample(&w.dense), nb, &mut out)
+                    .expect("precision dispatch");
+                t0.elapsed().as_secs_f64()
+            };
+            for _ in 0..opts.warmup {
+                sample_once();
+            }
+            let mut samples: Vec<f64> = Vec::new();
+            let mut total = 0.0;
+            while samples.len() < opts.max_iters.max(1)
+                && (samples.len() < opts.min_iters || total < opts.min_time_s)
+            {
+                let elapsed = sample_once();
+                samples.push(elapsed);
+                total += elapsed;
+            }
+            let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+            let moved_mb = (w.ell.vals.len() * dt.value_bytes()
+                + w.ell.cols.len() * 4
+                + w.dense.len() * 4
+                + out.len() * 4) as f64
+                / 1e6;
+            series[di * 2].values.push(w.gflops(mean));
+            series[di * 2 + 1].values.push(moved_mb);
+        }
+    }
+    Ok(FigureResult {
+        key: format!("{}_precision", sw.key),
+        title: format!(
+            "Quantized ELL SpMM precision (dim={}, nnz/row={}, batch={}{})",
+            sw.dim,
+            sw.z,
+            sw.batch,
+            if sw.mixed { ", mixed" } else { "" }
+        ),
+        x_label: "n_B".into(),
+        xs: sw.nbs.iter().map(|&n| n as f64).collect(),
+        y_label: "GFLOPS (bytes series: MB moved per dispatch)".into(),
+        series,
+    })
+}
+
+/// Speedup-vs-f32 lines for a precision figure
+/// ([`run_precision_bench`] series come in (GFLOPS, MB/dispatch) pairs
+/// per dtype, f32 first): peak quantized GFLOPS against peak f32, with
+/// the bytes-moved contrast that explains (or indicts) the ratio.
+pub fn precision_speedup_summary(f: &FigureResult) -> String {
+    let best = |s: &Series| {
+        s.values
+            .iter()
+            .cloned()
+            .filter(|v| v.is_finite())
+            .fold(f64::MIN, f64::max)
+    };
+    let mut out = String::new();
+    if f.series.len() < 4 {
+        return out;
+    }
+    let f32_gflops = best(&f.series[0]);
+    let f32_mb = best(&f.series[1]);
+    if f32_gflops <= 0.0 {
+        return out;
+    }
+    for pair in f.series.chunks(2).skip(1) {
+        if pair.len() != 2 {
+            continue;
+        }
+        let (g, mb) = (best(&pair[0]), best(&pair[1]));
+        if g > 0.0 {
+            out.push_str(&format!(
+                "  {} {g:.3} GFLOPS = {:.2}x speedup vs f32 {f32_gflops:.3} \
+                 ({mb:.2} vs {f32_mb:.2} MB/dispatch)\n",
+                pair[0].name,
+                g / f32_gflops,
             ));
         }
     }
@@ -1691,14 +1830,19 @@ mod tests {
             min_time_s: 0.0,
         };
         let f = run_engine_bench(&sw, 2, &opts).unwrap();
-        assert_eq!(f.series.len(), ENGINE_SERIES.len() * 4);
+        assert_eq!(f.series.len(), ENGINE_SERIES.len() * 5);
         assert!(f
             .series
             .iter()
             .all(|s| s.values.len() == 1 && s.values[0] > 0.0));
-        // Every backend carries its scalar-baseline series.
+        // Every backend carries its scalar-baseline and explicit-SIMD
+        // series.
         assert_eq!(
             f.series.iter().filter(|s| s.name.ends_with("(scalar)")).count(),
+            ENGINE_SERIES.len()
+        );
+        assert_eq!(
+            f.series.iter().filter(|s| s.name.ends_with("(simd-2t)")).count(),
             ENGINE_SERIES.len()
         );
         // The auto series resolved and ran.
@@ -1707,12 +1851,13 @@ mod tests {
                 .iter()
                 .filter(|s| s.name.starts_with("Engine-AUTO"))
                 .count(),
-            4
+            5
         );
         let summary = engine_speedup_summary(&f);
         assert!(!summary.is_empty());
         assert!(summary.contains("vector speedup"), "{summary}");
         assert!(summary.contains("static-2t") && summary.contains("steal-2t"));
+        assert!(summary.contains("simd-vs-steal"), "{summary}");
         let auto = auto_vs_fixed_summary(&f);
         assert!(auto.contains("best fixed"), "{auto}");
         // Auto resolves to a concrete backend at every point.
@@ -1721,8 +1866,48 @@ mod tests {
         assert_ne!(choices[0].1, Backend::Auto);
         // A restricted backend list restricts the series.
         let only = run_engine_bench_backends(&sw, 1, &opts, &[Backend::Ell]).unwrap();
-        assert_eq!(only.series.len(), 4);
+        assert_eq!(only.series.len(), 5);
         assert!(only.series.iter().all(|s| s.name.starts_with("Engine-ELL")));
+    }
+
+    #[test]
+    fn precision_bench_runs_and_reports_speedup_vs_f32() {
+        let mut sw = SweepSpec::builtin("fig8a").unwrap();
+        sw.batch = 8;
+        sw.nbs = vec![8];
+        let opts = BenchOpts {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            min_time_s: 0.0,
+        };
+        let f = run_precision_bench(&sw, 2, &opts).unwrap();
+        // (GFLOPS, MB/dispatch) pairs for f32, bf16, int8 — the CI
+        // smoke job greps the recorded JSON for these names.
+        assert_eq!(f.series.len(), 6);
+        for needle in ["[f32]", "[bf16]", "[int8]"] {
+            assert!(
+                f.series.iter().any(|s| s.name.contains(needle)),
+                "missing series {needle}"
+            );
+        }
+        assert!(f
+            .series
+            .iter()
+            .all(|s| s.values.len() == 1 && s.values[0] > 0.0));
+        // Bytes moved per dispatch strictly shrink with the value
+        // dtype: f32 (4B) > bf16 (2B) > int8 (1B).
+        let mb = |i: usize| f.series[i * 2 + 1].values[0];
+        assert!(
+            mb(0) > mb(1) && mb(1) > mb(2),
+            "bytes/dispatch not ordered: {} {} {}",
+            mb(0),
+            mb(1),
+            mb(2)
+        );
+        let summary = precision_speedup_summary(&f);
+        assert!(summary.contains("speedup vs f32"), "{summary}");
+        assert!(summary.contains("MB/dispatch"), "{summary}");
     }
 
     #[test]

@@ -35,12 +35,16 @@ use std::sync::Arc;
 
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::server::DispatchMode;
+use crate::coordinator::trainer::Precision;
 use crate::gcn::config::ModelConfig;
 use crate::gcn::params::ParamSet;
 use crate::gcn::reference;
 use crate::graph::dataset::ModelBatch;
 use crate::runtime::plan_artifact::{self, WarmStartReport};
-use crate::sparse::engine::{AutoThresholds, Executor, PlanCache, PlanStats, TenantPlanCaches};
+use crate::sparse::engine::{
+    AutoThresholds, Backend, Executor, GeometryKey, PlanCache, PlanStats, RhsKind,
+    TenantPlanCaches,
+};
 
 /// In-process model execution over the batched-SpMM engine.
 pub struct HostDispatcher {
@@ -338,6 +342,7 @@ impl MultiDispatcher {
             DispatchMode::Batched => {
                 self.dispatches += 1;
                 let key = reference::forward_plan_key(cfg, mb);
+                Self::revalidate_auto(&mut self.plans, model, cfg, mb, &th, &key)?;
                 let (plan, ws) = self
                     .plans
                     .entry_with(model, key, || reference::plan_forward(cfg, mb, &th))?;
@@ -361,6 +366,108 @@ impl MultiDispatcher {
                         w_rep,
                         plan,
                         ws,
+                    )?;
+                    dispatched += 1;
+                    logits[bi * n..(bi + 1) * n].copy_from_slice(&l);
+                }
+                self.dispatches += dispatched;
+                logits
+            }
+        };
+        Ok((logits, cur.version))
+    }
+
+    /// Per-batch `Backend::Auto` re-resolution (DESIGN.md §16). A
+    /// cached plan froze one backend per adjacency dispatch from the
+    /// *first* batch of its geometry, but batches of identical shape
+    /// can carry very different per-channel densities. Before replay,
+    /// re-run the O(channels) cost model on *this* batch's
+    /// [`DispatchProfile`](crate::sparse::engine::DispatchProfile) and
+    /// drop the cached plan when any frozen choice disagrees — the
+    /// `entry_with` that follows recompiles it for the observed
+    /// profile. With ELL the only packed adjacency candidate today the
+    /// re-resolution always agrees (plans are never dropped); the hook
+    /// becomes load-bearing the moment a second packing joins the
+    /// candidate set.
+    fn revalidate_auto(
+        plans: &mut TenantPlanCaches,
+        model: &str,
+        cfg: &ModelConfig,
+        mb: &ModelBatch,
+        th: &AutoThresholds,
+        key: &GeometryKey,
+    ) -> anyhow::Result<()> {
+        let mut want: Vec<Backend> = Vec::with_capacity(cfg.channels);
+        for ch in 0..cfg.channels {
+            want.push(reference::adjacency_backend(mb, ch, th)?);
+        }
+        // Adjacency dispatches are exactly the per-sample-RHS ones, in
+        // (layer, channel) order — compare each against this batch's
+        // resolution for its channel.
+        plans.tenant_cache_mut(model).retain_key(key, |plan| {
+            plan.dispatches
+                .iter()
+                .filter(|d| d.rhs == RhsKind::PerSample)
+                .zip((0..cfg.hidden.len()).flat_map(|_| want.iter()))
+                .all(|(d, w)| d.backend == *w)
+        });
+        Ok(())
+    }
+
+    /// [`MultiDispatcher::forward`] at an explicit inference precision
+    /// (DESIGN.md §16). [`Precision::F32`] is the plain forward.
+    /// `Bf16`/`Int8` serve on bf16-rounded parameters
+    /// ([`ParamSet::round_to_bf16`]), quantize this batch's adjacency
+    /// planes at pack time
+    /// ([`reference::quantize_batch`]), and replay a plan cached under
+    /// the dtype-tagged geometry key — compiled plans carry their
+    /// precision, so an f32 plan can never serve a quantized request
+    /// (nor the reverse).
+    pub fn forward_precision(
+        &mut self,
+        model: &str,
+        mode: DispatchMode,
+        mb: &ModelBatch,
+        precision: Precision,
+    ) -> anyhow::Result<(Vec<f32>, u64)> {
+        if precision == Precision::F32 {
+            return self.forward(model, mode, mb);
+        }
+        let cur = self.registry.current(model)?;
+        let cfg = self.registry.cfg(model)?;
+        let th = self.thresholds;
+        // The weight-storage half of the precision mode: serve on
+        // bf16-rounded parameters and a matching readout tile. Built
+        // per call rather than threaded through the version-stamped
+        // f32 `w_rep` cache — quantized serving is inference-only and
+        // the rounding is two passes over the parameter vector.
+        let ps16 = cur.params.round_to_bf16();
+        let w_rep = reference::build_w_rep(cfg, &ps16)?;
+        let logits = match mode {
+            DispatchMode::Batched => {
+                self.dispatches += 1;
+                let quant = reference::quantize_batch(mb, precision)?;
+                let key = reference::forward_plan_key_dtype(cfg, mb, precision);
+                let (plan, ws) = self.plans.entry_with(model, key, || {
+                    reference::plan_forward_dtype(cfg, mb, &th, precision)
+                })?;
+                reference::forward_planned_quant(
+                    cfg, &ps16, mb, &quant, &self.exec, &w_rep, plan, ws,
+                )?
+            }
+            DispatchMode::PerSample => {
+                let n = cfg.n_out;
+                let mut logits = vec![0f32; mb.batch * n];
+                let mut dispatched = 0u64;
+                for bi in 0..mb.batch {
+                    let one = mb.single(bi);
+                    let quant = reference::quantize_batch(&one, precision)?;
+                    let key = reference::forward_plan_key_dtype(cfg, &one, precision);
+                    let (plan, ws) = self.plans.entry_with(model, key, || {
+                        reference::plan_forward_dtype(cfg, &one, &th, precision)
+                    })?;
+                    let l = reference::forward_planned_quant(
+                        cfg, &ps16, &one, &quant, &self.exec, &w_rep, plan, ws,
                     )?;
                     dispatched += 1;
                     logits[bi * n..(bi + 1) * n].copy_from_slice(&l);
@@ -521,5 +628,115 @@ mod tests {
         let mut direct = HostDispatcher::new(hd.cfg.clone(), fresh, 1);
         let want = direct.forward(DispatchMode::Batched, &mb).unwrap();
         assert_eq!(after, want);
+    }
+
+    #[test]
+    fn forward_precision_serves_quantized_plans_per_dtype() {
+        let mut reg = ModelRegistry::new();
+        reg.register_synthetic("tox21", 3).unwrap();
+        let reg = Arc::new(reg);
+        let mut md = MultiDispatcher::new(Arc::clone(&reg), 1);
+        let cfg = reg.cfg("tox21").unwrap().clone();
+        let d = Dataset::generate(DatasetKind::Tox21, 4, 8);
+        let mb = d
+            .pack_batch(&[0, 1, 2, 3], cfg.max_nodes, cfg.ell_width)
+            .unwrap();
+
+        // F32 delegates to the plain forward.
+        let (f32_logits, _) = md
+            .forward_precision("tox21", DispatchMode::Batched, &mb, Precision::F32)
+            .unwrap();
+        let (plain, _) = md.forward("tox21", DispatchMode::Batched, &mb).unwrap();
+        assert_eq!(f32_logits, plain);
+
+        for (precision, tol) in [(Precision::Bf16, 0.05f32), (Precision::Int8, 0.3f32)] {
+            let (q, version) = md
+                .forward_precision("tox21", DispatchMode::Batched, &mb, precision)
+                .unwrap();
+            assert_eq!(version, 1);
+            // Bit-identical to the unplanned quantized reference (the
+            // engine's dispatches are bit-stable across thread counts
+            // and plan replay).
+            let want = reference::forward_quantized(
+                &cfg,
+                &reg.current("tox21").unwrap().params,
+                &mb,
+                &Executor::serial(),
+                precision,
+            )
+            .unwrap();
+            assert_eq!(q, want, "{precision}: planned != reference quantized");
+            // And close to f32 within the dtype's error budget.
+            for (i, (a, b)) in q.iter().zip(&f32_logits).enumerate() {
+                assert!(
+                    (a - b).abs() <= tol + tol * b.abs(),
+                    "{precision} logit {i}: {a} vs f32 {b}"
+                );
+            }
+            // Per-sample mode agrees with batched (quantization is
+            // per-plane, so slicing the batch cannot move the scales).
+            let (qs, _) = md
+                .forward_precision("tox21", DispatchMode::PerSample, &mb, precision)
+                .unwrap();
+            for (i, (a, b)) in qs.iter().zip(&q).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+                    "{precision} per-sample logit {i}: {a} vs batched {b}"
+                );
+            }
+        }
+        // Every (precision, geometry) pair is its own cached plan: f32
+        // B=4, bf16 B=4, int8 B=4, bf16 B=1, int8 B=1.
+        assert_eq!(md.plan_stats().plans_built, 5);
+    }
+
+    #[test]
+    fn per_batch_auto_revalidation() {
+        let mut reg = ModelRegistry::new();
+        reg.register_synthetic("tox21", 3).unwrap();
+        let reg = Arc::new(reg);
+        let mut md = MultiDispatcher::new(Arc::clone(&reg), 1);
+        let cfg = reg.cfg("tox21").unwrap().clone();
+        let d = Dataset::generate(DatasetKind::Tox21, 8, 8);
+        // Two batches of identical geometry but different graphs: the
+        // cost model re-runs on the second batch's profile, agrees
+        // (ELL is the only packed candidate), and the cached plan is
+        // replayed instead of recompiled.
+        let a = d
+            .pack_batch(&[0, 1, 2, 3], cfg.max_nodes, cfg.ell_width)
+            .unwrap();
+        let b = d
+            .pack_batch(&[4, 5, 6, 7], cfg.max_nodes, cfg.ell_width)
+            .unwrap();
+        md.forward("tox21", DispatchMode::Batched, &a).unwrap();
+        md.forward("tox21", DispatchMode::Batched, &b).unwrap();
+        let s = md.plan_stats();
+        assert_eq!((s.plans_built, s.replays), (1, 1));
+
+        // A cached plan whose frozen adjacency backends disagree with
+        // the observed batch is dropped and recompiled: plant one with
+        // every adjacency dispatch flipped to GEMM under a fresh
+        // geometry (B=5), then forward that geometry.
+        let c = d
+            .pack_batch(&[0, 1, 2, 3, 4], cfg.max_nodes, cfg.ell_width)
+            .unwrap();
+        let mut stale = reference::plan_forward(&cfg, &c, &md.thresholds).unwrap();
+        for disp in &mut stale.dispatches {
+            if disp.rhs == RhsKind::PerSample {
+                disp.backend = Backend::Gemm;
+            }
+        }
+        assert!(md.plans.tenant_cache_mut("tox21").insert_warm(stale));
+        let (got, _) = md.forward("tox21", DispatchMode::Batched, &c).unwrap();
+        let s = md.plan_stats();
+        assert_eq!(
+            s.plans_built, 2,
+            "disagreeing plan must be dropped and recompiled"
+        );
+        // The recompiled plan serves the same logits as a fresh
+        // single-model dispatcher.
+        let mut hd = HostDispatcher::new(cfg, reg.current("tox21").unwrap().params.clone(), 1);
+        let want = hd.forward(DispatchMode::Batched, &c).unwrap();
+        assert_eq!(got, want);
     }
 }

@@ -44,8 +44,9 @@ use super::params::ParamSet;
 use super::reference::{self, EPS};
 use crate::graph::dataset::ModelBatch;
 use crate::sparse::engine::{
-    plan::transpose_into, AutoThresholds, Backend, DispatchDesc, EllKernel, Executor, GemmKernel,
-    GeometryKey, ParamRef, PlanCursor, Rhs, RhsKind, SlotId, SlotInit, StepPlan, Workspace,
+    plan::transpose_into, AutoThresholds, Backend, DType, DispatchDesc, EllKernel, Executor,
+    GemmKernel, GeometryKey, ParamRef, PlanCursor, Rhs, RhsKind, SlotId, SlotInit, StepPlan,
+    Workspace,
 };
 use crate::sparse::ops::axpy;
 
@@ -410,7 +411,7 @@ fn graph_norm_relu_backward(
 
 /// Cache key for a train plan of this batch shape.
 pub fn train_plan_key(cfg: &ModelConfig, mb: &ModelBatch) -> GeometryKey {
-    reference::geometry_key(cfg, mb, reference::MODE_TRAIN)
+    reference::geometry_key(cfg, mb, reference::MODE_TRAIN, DType::F32)
 }
 
 /// Workspace slot ids of a train plan: the forward slots
@@ -462,7 +463,7 @@ pub fn plan_train(
     th: &AutoThresholds,
 ) -> anyhow::Result<StepPlan> {
     let mut plan = StepPlan::new(train_plan_key(cfg, mb));
-    reference::plan_forward_into(cfg, mb, th, &mut plan)?;
+    reference::plan_forward_into(cfg, mb, th, DType::F32, &mut plan)?;
     let b = mb.batch;
     let m = cfg.max_nodes;
     let n_out = cfg.n_out;
@@ -506,6 +507,7 @@ pub fn plan_train(
         rhs: RhsKind::Shared,
         n: n_out as u32,
         out: SlotId::NONE, // dW_out accumulates into the grads buffer
+        dtype: DType::F32,
     });
     plan.add_dispatch(DispatchDesc {
         backend: Backend::Gemm,
@@ -513,6 +515,7 @@ pub fn plan_train(
         rhs: RhsKind::SharedTransposed,
         n: fin_last as u32,
         out: sl.drow,
+        dtype: DType::F32,
     });
     for li in (0..cfg.hidden.len()).rev() {
         let fout = cfg.hidden[li];
@@ -528,6 +531,7 @@ pub fn plan_train(
                 rhs: RhsKind::PerSample,
                 n: fout as u32,
                 out: sl.du,
+                dtype: DType::F32,
             });
             plan.add_dispatch(DispatchDesc {
                 backend: Backend::Gemm,
@@ -535,6 +539,7 @@ pub fn plan_train(
                 rhs: RhsKind::Shared,
                 n: fout as u32,
                 out: SlotId::NONE, // dW_ch accumulates into the grads buffer
+                dtype: DType::F32,
             });
             if li > 0 {
                 plan.add_dispatch(DispatchDesc {
@@ -543,6 +548,7 @@ pub fn plan_train(
                     rhs: RhsKind::SharedTransposed,
                     n: fin as u32,
                     out: sl.dx,
+                    dtype: DType::F32,
                 });
             }
         }
@@ -608,6 +614,7 @@ pub fn grad_planned(
         ws,
         &mut cursor,
         &sl.ypre,
+        None,
     )?;
     let b = mb.batch;
     let m = cfg.max_nodes;

@@ -93,6 +93,32 @@ impl ParamSet {
     pub fn l2_norm(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
+
+    /// bf16 storage of the whole parameter vector (truncation, DESIGN.md
+    /// §16) — half the bytes of the f32 blob. The reduced-precision
+    /// serving path stores weights in this form and expands them back
+    /// with [`ParamSet::from_bf16`] when a model's params are swapped
+    /// in.
+    pub fn to_bf16(&self) -> Vec<u16> {
+        self.data.iter().map(|&v| crate::sparse::batch::f32_to_bf16(v)).collect()
+    }
+
+    /// Expand bf16 parameter storage back to a dispatchable f32 set
+    /// (exact: bf16 is a prefix of the f32 bit pattern).
+    pub fn from_bf16(bits: &[u16]) -> ParamSet {
+        ParamSet {
+            data: bits.iter().map(|&b| crate::sparse::batch::bf16_to_f32(b)).collect(),
+        }
+    }
+
+    /// Every parameter rounded through bf16 — the weight cast the
+    /// inference-only [`DType::Bf16`](crate::sparse::engine::DType) and
+    /// [`DType::Int8`](crate::sparse::engine::DType) precision modes
+    /// dispatch with (quantized adjacency keeps f32 activations, so
+    /// weights are the only other tensor to cast).
+    pub fn round_to_bf16(&self) -> ParamSet {
+        ParamSet::from_bf16(&self.to_bf16())
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +172,25 @@ mod tests {
         assert!(a.l2_norm() > 0.0);
         let c = ParamSet::random_init(&cfg, 10);
         assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn bf16_storage_round_trips_and_halves_bytes() {
+        let cfg = ModelConfig::synthetic("tox21").unwrap();
+        let ps = ParamSet::random_init(&cfg, 3);
+        let bits = ps.to_bf16();
+        assert_eq!(bits.len(), ps.data.len());
+        let back = ParamSet::from_bf16(&bits);
+        // Expansion is exact; a second cast is a fixed point.
+        assert_eq!(back.to_bf16(), bits);
+        assert_eq!(back.data, ps.round_to_bf16().data);
+        for (b, v) in back.data.iter().zip(&ps.data) {
+            if *v != 0.0 {
+                assert!((b - v).abs() <= v.abs() / 128.0, "{b} vs {v}");
+            } else {
+                assert_eq!(*b, 0.0);
+            }
+        }
     }
 
     #[test]

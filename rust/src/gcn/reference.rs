@@ -33,9 +33,11 @@
 use super::config::{LossKind, ModelConfig};
 use super::params::ParamSet;
 use crate::graph::dataset::ModelBatch;
+use crate::sparse::batch::QuantizedEllBatch;
 use crate::sparse::engine::{
-    choose_backend, AutoThresholds, Backend, DispatchDesc, DispatchProfile, EllKernel, Executor,
-    GemmKernel, GeometryKey, PlanCursor, Rhs, RhsKind, SlotId, SlotInit, StepPlan, Workspace,
+    choose_backend, AutoThresholds, Backend, DType, DispatchDesc, DispatchProfile, EllKernel,
+    Executor, GemmKernel, GeometryKey, PlanCursor, QuantEllKernel, Rhs, RhsKind, SlotId, SlotInit,
+    StepPlan, Workspace,
 };
 
 /// GraphNorm variance stabilizer — matches `model.py`'s `eps`.
@@ -132,7 +134,7 @@ pub(crate) fn conv_layer(
     let bias = ps.slice(cfg, &format!("conv{li}.b"))?; // [CH, fout]
     let mut y = vec![0f32; b * m * fout];
     let mut u = vec![0f32; b * m * fout];
-    conv_layer_into(cfg, w, bias, fin, fout, h, mb, exec, None, &mut y, &mut u)?;
+    conv_layer_into(cfg, w, bias, fin, fout, h, mb, exec, None, None, &mut y, &mut u)?;
     Ok(y)
 }
 
@@ -141,7 +143,12 @@ pub(crate) fn conv_layer(
 /// scratch (fully bias-overwritten per channel, so it needs no
 /// zeroing). When `plan` is given, each dispatch consumes its recorded
 /// [`DispatchDesc`] — the adjacency dispatch runs on the descriptor's
-/// resolved backend instead of re-deriving it.
+/// resolved backend and [`DType`] instead of re-deriving them. A
+/// quantized adjacency batch (`quant`, DESIGN.md §16) swaps the
+/// adjacency dispatch onto the dequantize-on-the-fly
+/// [`QuantEllKernel`]; the dense feature transform stays f32 either
+/// way (quantization covers adjacency values and weight *storage*,
+/// activations remain f32).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn conv_layer_into(
     cfg: &ModelConfig,
@@ -153,6 +160,7 @@ pub(crate) fn conv_layer_into(
     mb: &ModelBatch,
     exec: &Executor,
     mut plan: Option<&mut PlanCursor<'_>>,
+    quant: Option<&QuantizedEllBatch>,
     y: &mut [f32],
     u: &mut [f32],
 ) -> anyhow::Result<()> {
@@ -174,6 +182,7 @@ pub(crate) fn conv_layer_into(
             Some(c) => {
                 let d = c.dispatch();
                 debug_assert_eq!(d.backend, Backend::Gemm);
+                debug_assert_eq!(d.dtype, DType::F32);
                 d.n as usize
             }
             None => fout,
@@ -182,16 +191,29 @@ pub(crate) fn conv_layer_into(
         let xw = GemmKernel::new(h, b, m, fin);
         exec.dispatch(&xw, Rhs::Shared(w_ch), n, u)?;
         // y += A[ch] @ U             (SpMM + ElementWiseAdd).
-        let backend = match plan.as_deref_mut() {
-            Some(c) => c.dispatch().backend,
-            None => Backend::Ell,
+        let (backend, dtype) = match plan.as_deref_mut() {
+            Some(c) => {
+                let d = c.dispatch();
+                (d.backend, d.dtype)
+            }
+            None => (Backend::Ell, quant.map_or(DType::F32, |q| q.dtype)),
         };
-        match backend {
-            Backend::Ell => {
+        match (backend, dtype) {
+            (Backend::Ell, DType::F32) => {
                 let adj = EllKernel::channel(mb, ch);
                 exec.dispatch(&adj, Rhs::PerSample(u), fout, y)?;
             }
-            other => anyhow::bail!("adjacency planned on unpacked backend {other}"),
+            (Backend::Ell, want) => {
+                let q = quant.filter(|q| q.dtype == want).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "dispatch wants {want} adjacency but no matching quantized batch \
+                         was provided"
+                    )
+                })?;
+                let adj = QuantEllKernel::channel(q, ch, cfg.channels);
+                exec.dispatch(&adj, Rhs::PerSample(u), fout, y)?;
+            }
+            (other, _) => anyhow::bail!("adjacency planned on unpacked backend {other}"),
         }
     }
     Ok(())
@@ -264,13 +286,22 @@ pub(crate) fn readout_into(
 pub(crate) const MODE_FORWARD: u32 = 1;
 pub(crate) const MODE_TRAIN: u32 = 2;
 
-/// The geometry a gcn plan depends on: mode, batch size, and every
-/// model dimension the slot table / dispatch list reads. Batch
-/// *contents* (adjacency values, features) are not part of the key —
-/// plans replay across minibatches of the same shape.
-pub(crate) fn geometry_key(cfg: &ModelConfig, mb: &ModelBatch, mode: u32) -> GeometryKey {
+/// The geometry a gcn plan depends on: mode, value precision, batch
+/// size, and every model dimension the slot table / dispatch list
+/// reads. Batch *contents* (adjacency values, features) are not part
+/// of the key — plans replay across minibatches of the same shape.
+/// The [`DType`] tag keeps an f32 plan from ever being replayed for a
+/// quantized request (and vice versa): the precisions produce
+/// different numbers, so they are different plans (DESIGN.md §16).
+pub(crate) fn geometry_key(
+    cfg: &ModelConfig,
+    mb: &ModelBatch,
+    mode: u32,
+    dtype: DType,
+) -> GeometryKey {
     let mut v = vec![
         mode,
+        dtype.key_tag(),
         mb.batch as u32,
         mb.max_nodes as u32,
         mb.feat_dim as u32,
@@ -282,9 +313,14 @@ pub(crate) fn geometry_key(cfg: &ModelConfig, mb: &ModelBatch, mode: u32) -> Geo
     GeometryKey(v)
 }
 
-/// Cache key for a forward plan of this batch shape.
+/// Cache key for an f32 forward plan of this batch shape.
 pub fn forward_plan_key(cfg: &ModelConfig, mb: &ModelBatch) -> GeometryKey {
-    geometry_key(cfg, mb, MODE_FORWARD)
+    forward_plan_key_dtype(cfg, mb, DType::F32)
+}
+
+/// Cache key for a forward plan at an explicit inference precision.
+pub fn forward_plan_key_dtype(cfg: &ModelConfig, mb: &ModelBatch, dtype: DType) -> GeometryKey {
+    geometry_key(cfg, mb, MODE_FORWARD, dtype)
 }
 
 // Parameter-reference indices into `StepPlan::params`, fixed by
@@ -344,6 +380,7 @@ pub(crate) fn plan_forward_into(
     cfg: &ModelConfig,
     mb: &ModelBatch,
     th: &AutoThresholds,
+    dtype: DType,
     plan: &mut StepPlan,
 ) -> anyhow::Result<FwdSlots> {
     check_batch(cfg, mb)?;
@@ -370,12 +407,15 @@ pub(crate) fn plan_forward_into(
 
     for (li, &fout) in cfg.hidden.iter().enumerate() {
         for ch in 0..cfg.channels {
+            // Dense dispatches stay f32 at every precision: only the
+            // adjacency values are quantized (DESIGN.md §16).
             plan.add_dispatch(DispatchDesc {
                 backend: Backend::Gemm,
                 transpose: false,
                 rhs: RhsKind::Shared,
                 n: fout as u32,
                 out: sl.u,
+                dtype: DType::F32,
             });
             plan.add_dispatch(DispatchDesc {
                 backend: adjacency_backend(mb, ch, th)?,
@@ -383,6 +423,7 @@ pub(crate) fn plan_forward_into(
                 rhs: RhsKind::PerSample,
                 n: fout as u32,
                 out: sl.act[li],
+                dtype,
             });
         }
     }
@@ -392,6 +433,7 @@ pub(crate) fn plan_forward_into(
         rhs: RhsKind::Shared,
         n: cfg.n_out as u32,
         out: sl.logits,
+        dtype: DType::F32,
     });
     Ok(sl)
 }
@@ -427,8 +469,21 @@ pub fn plan_forward(
     mb: &ModelBatch,
     th: &AutoThresholds,
 ) -> anyhow::Result<StepPlan> {
-    let mut plan = StepPlan::new(forward_plan_key(cfg, mb));
-    plan_forward_into(cfg, mb, th, &mut plan)?;
+    plan_forward_dtype(cfg, mb, th, DType::F32)
+}
+
+/// [`plan_forward`] at an explicit inference precision: the adjacency
+/// dispatch descriptors carry `dtype`, so replays resolve the
+/// dequantize-on-the-fly kernel without re-deriving anything, and the
+/// plan key separates the precision from its f32 twin (DESIGN.md §16).
+pub fn plan_forward_dtype(
+    cfg: &ModelConfig,
+    mb: &ModelBatch,
+    th: &AutoThresholds,
+    dtype: DType,
+) -> anyhow::Result<StepPlan> {
+    let mut plan = StepPlan::new(forward_plan_key_dtype(cfg, mb, dtype));
+    plan_forward_into(cfg, mb, th, dtype, &mut plan)?;
     Ok(plan)
 }
 
@@ -488,6 +543,7 @@ pub(crate) fn forward_planned_core(
     ws: &mut Workspace,
     cursor: &mut PlanCursor<'_>,
     ypre_slots: &[SlotId],
+    quant: Option<&QuantizedEllBatch>,
 ) -> anyhow::Result<PlannedFwd> {
     check_batch(cfg, mb)?;
     let b = mb.batch;
@@ -515,6 +571,7 @@ pub(crate) fn forward_planned_core(
             mb,
             exec,
             Some(&mut *cursor),
+            quant,
             &mut y,
             &mut u,
         )?;
@@ -563,11 +620,110 @@ pub fn forward_planned(
         "stale forward plan: geometry changed without a rebuild"
     );
     let mut cursor = PlanCursor::new(plan);
-    let f = forward_planned_core(cfg, ps, mb, exec, w_rep, plan, ws, &mut cursor, &[])?;
+    let f = forward_planned_core(cfg, ps, mb, exec, w_rep, plan, ws, &mut cursor, &[], None)?;
     cursor.finish();
     let out = f.logits.clone();
     restore_planned_fwd(cfg, ws, &[], f);
     Ok(out)
+}
+
+/// Replay a quantized-precision forward plan (from
+/// [`plan_forward_dtype`]): the adjacency dispatches run on the
+/// dequantize-on-the-fly kernel over `quant`, everything else is the
+/// planned f32 machinery. The caller supplies bf16-rounded parameters
+/// and a matching `w_rep` for the weight-storage half of the precision
+/// mode (DESIGN.md §16).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_planned_quant(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    quant: &QuantizedEllBatch,
+    exec: &Executor,
+    w_rep: &[f32],
+    plan: &StepPlan,
+    ws: &mut Workspace,
+) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        plan.key == forward_plan_key_dtype(cfg, mb, quant.dtype),
+        "stale {} forward plan: geometry changed without a rebuild",
+        quant.dtype
+    );
+    let mut cursor = PlanCursor::new(plan);
+    let f =
+        forward_planned_core(cfg, ps, mb, exec, w_rep, plan, ws, &mut cursor, &[], Some(quant))?;
+    cursor.finish();
+    let out = f.logits.clone();
+    restore_planned_fwd(cfg, ws, &[], f);
+    Ok(out)
+}
+
+/// Quantize a model batch's adjacency planes for an inference-only
+/// precision mode — the pack-time half of the quantized path
+/// ([`QuantizedEllBatch`], DESIGN.md §16). Planes are `[B, CH]` in the
+/// model batch's `[B, CH, M, R]` layout, so channel views line up with
+/// [`QuantEllKernel::channel`].
+pub fn quantize_batch(mb: &ModelBatch, dtype: DType) -> anyhow::Result<QuantizedEllBatch> {
+    QuantizedEllBatch::quantize(
+        &mb.ell_cols,
+        &mb.ell_vals,
+        mb.batch * mb.channels,
+        mb.max_nodes,
+        mb.ell_width,
+        dtype,
+    )
+}
+
+/// Direct (unplanned) reduced-precision forward: bf16-round the
+/// parameters, quantize the adjacency planes to `dtype`, and run the
+/// standard layer sequence with the quantized adjacency kernels. The
+/// convenience entry the accuracy-delta tests and one-shot users call;
+/// serving paths pre-quantize and replay plans instead.
+pub fn forward_quantized(
+    cfg: &ModelConfig,
+    ps: &ParamSet,
+    mb: &ModelBatch,
+    exec: &Executor,
+    dtype: DType,
+) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        dtype != DType::F32,
+        "f32 needs no quantized forward — call forward_with"
+    );
+    check_batch(cfg, mb)?;
+    let ps16 = ps.round_to_bf16();
+    let w_rep = build_w_rep(cfg, &ps16)?;
+    let quant = quantize_batch(mb, dtype)?;
+    let b = mb.batch;
+    let m = cfg.max_nodes;
+    let mut h = mb.x.clone();
+    let mut fin = cfg.feat_dim;
+    for (li, &fout) in cfg.hidden.iter().enumerate() {
+        let w = ps16.slice(cfg, &format!("conv{li}.w"))?;
+        let bias = ps16.slice(cfg, &format!("conv{li}.b"))?;
+        let gamma = ps16.slice(cfg, &format!("conv{li}.gamma"))?;
+        let beta = ps16.slice(cfg, &format!("conv{li}.beta"))?;
+        let mut y = vec![0f32; b * m * fout];
+        let mut u = vec![0f32; b * m * fout];
+        conv_layer_into(
+            cfg,
+            w,
+            bias,
+            fin,
+            fout,
+            &h,
+            mb,
+            exec,
+            None,
+            Some(&quant),
+            &mut y,
+            &mut u,
+        )?;
+        graph_norm_relu(&mut y, &mb.mask, gamma, beta, b, m, fout);
+        h = y;
+        fin = fout;
+    }
+    readout(cfg, &ps16, &h, fin, b, exec, &w_rep)
 }
 
 /// In-place per-graph masked normalization + affine + ReLU + re-mask —
@@ -679,6 +835,61 @@ fn argmax(xs: &[f32]) -> usize {
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .map(|(i, _)| i)
         .unwrap_or(0)
+}
+
+/// Rank-based (Mann–Whitney) ROC-AUC of one score column against
+/// binary labels (`> 0.5` is positive). Ties share the average rank.
+/// `None` when either class is absent — the task carries no ranking
+/// signal. Threshold-free, so it is the right metric for the
+/// reduced-precision accuracy-delta assertions: quantization shifts
+/// logits slightly, and AUC moves only when an ordering flips
+/// (DESIGN.md §16).
+pub fn auc(scores: &[f32], labels: &[f32]) -> Option<f64> {
+    assert_eq!(scores.len(), labels.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut rank_sum_pos = 0f64;
+    let mut n_pos = 0usize;
+    let mut i = 0usize;
+    while i < idx.len() {
+        // Tie group [i, j): every member takes the average rank.
+        let mut j = i + 1;
+        while j < idx.len() && scores[idx[j]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + 1 + j) as f64 / 2.0; // mean of ranks i+1 ..= j
+        for &k in &idx[i..j] {
+            if labels[k] > 0.5 {
+                rank_sum_pos += avg_rank;
+                n_pos += 1;
+            }
+        }
+        i = j;
+    }
+    let n_neg = scores.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return None;
+    }
+    Some((rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos * n_neg) as f64)
+}
+
+/// Macro-averaged AUC over the `n_out` tasks of a `[batch, n_out]`
+/// logit block, skipping single-class tasks; `None` if every task is
+/// degenerate.
+pub fn mean_auc(logits: &[f32], labels: &[f32], batch: usize, n_out: usize) -> Option<f64> {
+    assert_eq!(logits.len(), batch * n_out);
+    assert_eq!(labels.len(), batch * n_out);
+    let mut total = 0f64;
+    let mut tasks = 0usize;
+    for t in 0..n_out {
+        let s: Vec<f32> = (0..batch).map(|b| logits[b * n_out + t]).collect();
+        let l: Vec<f32> = (0..batch).map(|b| labels[b * n_out + t]).collect();
+        if let Some(a) = auc(&s, &l) {
+            total += a;
+            tasks += 1;
+        }
+    }
+    (tasks > 0).then(|| total / tasks as f64)
 }
 
 #[cfg(test)]
@@ -813,5 +1024,61 @@ mod tests {
         let l = loss(&cfg, &logits, &labels, 2);
         assert!((l - (100f32).ln()).abs() < 1e-4, "loss {l}");
         assert!(accuracy(&cfg, &logits, &labels, 2) <= 1.0);
+    }
+
+    #[test]
+    fn auc_ranks_ties_and_degenerate_cases() {
+        // Perfect ranking, inverted ranking, all-tied scores, and
+        // single-class columns.
+        assert_eq!(auc(&[0.1, 0.9, 0.2, 0.8], &[0.0, 1.0, 0.0, 1.0]), Some(1.0));
+        assert_eq!(auc(&[0.9, 0.1, 0.8, 0.2], &[0.0, 1.0, 0.0, 1.0]), Some(0.0));
+        assert_eq!(auc(&[0.5, 0.5, 0.5, 0.5], &[0.0, 1.0, 0.0, 1.0]), Some(0.5));
+        assert_eq!(auc(&[0.1, 0.2], &[1.0, 1.0]), None);
+        // One inversion among 2 pos * 2 neg pairs: AUC = 3/4.
+        assert_eq!(auc(&[0.4, 0.3, 0.2, 0.1], &[1.0, 0.0, 1.0, 0.0]), Some(0.75));
+        // mean_auc skips the degenerate task and averages the rest.
+        let logits = [0.1f32, 0.0, 0.9, 0.0, 0.2, 0.0, 0.8, 0.0];
+        let labels = [0f32, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0];
+        assert_eq!(mean_auc(&logits, &labels, 4, 2), Some(1.0));
+    }
+
+    #[test]
+    fn quantized_forward_tracks_f32_logits() {
+        // The reduced-precision forward (quantized adjacency +
+        // bf16-rounded weights) must track the f32 logits closely, and
+        // its planned replay must be bit-identical to the direct path.
+        let cfg = tox_like_cfg();
+        let ps = random_params(&cfg, 7);
+        let d = Dataset::generate(DatasetKind::Tox21, 10, 5);
+        let idx: Vec<usize> = (0..8).collect();
+        let mb = d.pack_batch(&idx, 50, 12).unwrap();
+        let exec = Executor::serial();
+        let f32_logits = forward(&cfg, &ps, &mb).unwrap();
+        for (dtype, tol) in [(DType::Bf16, 0.05f32), (DType::Int8, 0.25f32)] {
+            let got = forward_quantized(&cfg, &ps, &mb, &exec, dtype).unwrap();
+            assert_eq!(got.len(), f32_logits.len());
+            for (g, w) in got.iter().zip(&f32_logits) {
+                assert!((g - w).abs() <= tol, "{dtype}: {g} vs {w}");
+            }
+            // Planned replay: same numbers, bit for bit.
+            let th = AutoThresholds::default();
+            let plan = plan_forward_dtype(&cfg, &mb, &th, dtype).unwrap();
+            assert_ne!(plan.key, forward_plan_key(&cfg, &mb), "{dtype} shares the f32 key");
+            let ps16 = ps.round_to_bf16();
+            let w_rep = build_w_rep(&cfg, &ps16).unwrap();
+            let quant = quantize_batch(&mb, dtype).unwrap();
+            let mut ws = Workspace::default();
+            ws.prepare(&plan);
+            let planned =
+                forward_planned_quant(&cfg, &ps16, &mb, &quant, &exec, &w_rep, &plan, &mut ws)
+                    .unwrap();
+            assert_eq!(planned, got, "{dtype} planned vs direct");
+            // An f32 plan must refuse to replay a quantized request.
+            let f32_plan = plan_forward(&cfg, &mb, &th).unwrap();
+            assert!(forward_planned_quant(
+                &cfg, &ps16, &mb, &quant, &exec, &w_rep, &f32_plan, &mut ws
+            )
+            .is_err());
+        }
     }
 }

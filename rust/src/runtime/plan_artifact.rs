@@ -12,9 +12,9 @@
 //!
 //! ```json
 //! {"content_hash":"<fnv1a64 hex>",
-//!  "dispatches":[{"backend":"ell","n":64,"out":1,"rhs":"per_sample","transpose":false},...],
-//!  "format_version":1,
-//!  "key":[1,4,50,16,4,12,12,64,64],
+//!  "dispatches":[{"backend":"ell","dtype":"f32","n":64,"out":1,"rhs":"per_sample","transpose":false},...],
+//!  "format_version":2,
+//!  "key":[1,0,4,50,16,4,12,12,64,64],
 //!  "kind":"bspmm_step_plan",
 //!  "params":[{"len":4096,"offset":0},...],
 //!  "slots":[12800,...],
@@ -23,7 +23,10 @@
 //!
 //! * **Versioning** — [`FORMAT_VERSION`] is bumped on any schema or
 //!   canonical-encoding change; a mismatched version is rejected with
-//!   an error naming both versions, never reinterpreted.
+//!   an error naming both versions, never reinterpreted. Version 2
+//!   added the per-dispatch `dtype` field (the inference precision of
+//!   DESIGN.md §16) and the dtype tag in the geometry key — version-1
+//!   artifacts predate precision-aware plans and must be regenerated.
 //! * **Content hash** — FNV-1a 64 over the canonical encoding *without*
 //!   the `content_hash` field, stored as 16 lowercase hex digits.
 //!   [`decode`] recomputes and compares before trusting any field, so
@@ -49,14 +52,14 @@ use std::path::{Path, PathBuf};
 
 use crate::runtime::artifact::default_artifacts_dir;
 use crate::sparse::engine::{
-    AutoThresholds, Backend, DispatchDesc, GeometryKey, ParamRef, PlanCache, RhsKind, SlotId,
-    StepPlan,
+    AutoThresholds, Backend, DType, DispatchDesc, GeometryKey, ParamRef, PlanCache, RhsKind,
+    SlotId, StepPlan,
 };
 use crate::util::json::{arr, num, obj, parse, s, Json};
 
 /// Bumped on any schema or canonical-encoding change. Readers reject
-/// every other version.
-pub const FORMAT_VERSION: u32 = 1;
+/// every other version. 2 = per-dispatch `dtype` (DESIGN.md §16).
+pub const FORMAT_VERSION: u32 = 2;
 
 /// The `kind` tag distinguishing plan artifacts from the other JSON
 /// files under the artifact root (manifest, bench reports).
@@ -117,6 +120,7 @@ fn body(plan: &StepPlan, th: &AutoThresholds) -> Json {
                 .map(|d| {
                     obj(vec![
                         ("backend", s(d.backend.name())),
+                        ("dtype", s(d.dtype.name())),
                         ("n", num(d.n as f64)),
                         ("out", slot_json(d.out)),
                         ("rhs", s(d.rhs.name())),
@@ -242,8 +246,9 @@ pub fn decode(text: &str) -> anyhow::Result<PlanArtifact> {
     let version = req_u32(&j, "format_version")?;
     anyhow::ensure!(
         version == FORMAT_VERSION,
-        "plan artifact format_version {version} but this build reads {FORMAT_VERSION} — \
-         regenerate the artifact (examples/plan_aot.rs dump) with a matching build"
+        "plan artifact format_version {version} but this build reads {FORMAT_VERSION} \
+         (v2 added the per-dispatch 'dtype' precision field) — regenerate the artifact \
+         (examples/plan_aot.rs dump) with a matching build"
     );
     let stored_hash = j.req_str("content_hash")?.to_string();
     let mut without_hash = j.clone();
@@ -291,6 +296,7 @@ pub fn decode(text: &str) -> anyhow::Result<PlanArtifact> {
                         Some(Json::Null) | None => SlotId::NONE,
                         Some(v) => SlotId(as_u32(v, "out slot")?),
                     },
+                    dtype: DType::parse(d.req_str("dtype")?)?,
                 })
             })()
             .map_err(|e| anyhow::anyhow!("dispatch {i}: {e}"))
@@ -603,6 +609,7 @@ mod tests {
             rhs: RhsKind::Shared,
             n: 64,
             out: a,
+            dtype: DType::F32,
         });
         p.add_dispatch(DispatchDesc {
             backend: Backend::Ell,
@@ -610,6 +617,7 @@ mod tests {
             rhs: RhsKind::PerSample,
             n: 64,
             out: b,
+            dtype: DType::Bf16,
         });
         p.add_dispatch(DispatchDesc {
             backend: Backend::Csr,
@@ -617,6 +625,7 @@ mod tests {
             rhs: RhsKind::SharedTransposed,
             n: 12,
             out: SlotId::NONE,
+            dtype: DType::Int8,
         });
         p.add_dispatch(DispatchDesc {
             backend: Backend::St,
@@ -624,6 +633,7 @@ mod tests {
             rhs: RhsKind::Shared,
             n: 7,
             out: a,
+            dtype: DType::F32,
         });
         p.add_param(0, 4096);
         p.add_param(4096, 256);
@@ -695,6 +705,7 @@ mod tests {
                     } else {
                         SlotId(rng.below(n_slots as u64) as u32)
                     },
+                    dtype: DType::ALL[rng.range(0, 3)],
                 });
             }
             for _ in 0..rng.range(0, 5) {
@@ -738,17 +749,48 @@ mod tests {
 
     #[test]
     fn rejects_wrong_format_version_even_with_valid_hash() {
-        let text = encode(&sample_plan(), &AutoThresholds::default());
+        // Both a future version and the retired v1 (pre-dtype) layout
+        // must be rejected with an error naming both versions and what
+        // changed — never silently reinterpreted.
+        for wrong in [99.0, 1.0] {
+            let text = encode(&sample_plan(), &AutoThresholds::default());
+            let mut j = parse(&text).unwrap();
+            if let Json::Obj(m) = &mut j {
+                m.insert("format_version".into(), num(wrong));
+            }
+            let tampered = rehash(&j.to_string());
+            let e = decode(&tampered).unwrap_err().to_string();
+            assert!(
+                e.contains(&format!("format_version {wrong}")) && e.contains("reads 2"),
+                "unexpected error: {e}"
+            );
+            assert!(e.contains("dtype"), "v1→v2 hint missing: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_dispatch_without_dtype_and_unknown_dtype() {
+        let th = AutoThresholds::default();
+        // Drop one dispatch's dtype field (a v1-shaped dispatch inside
+        // a v2 envelope): the decode must name the missing field.
+        let text = encode(&sample_plan(), &th);
         let mut j = parse(&text).unwrap();
         if let Json::Obj(m) = &mut j {
-            m.insert("format_version".into(), num(2.0));
+            if let Some(Json::Arr(ds)) = m.get_mut("dispatches") {
+                if let Json::Obj(d0) = &mut ds[0] {
+                    d0.remove("dtype");
+                }
+            }
         }
-        let tampered = rehash(&j.to_string());
-        let e = decode(&tampered).unwrap_err().to_string();
+        let e = decode(&rehash(&j.to_string())).unwrap_err().to_string();
         assert!(
-            e.contains("format_version 2") && e.contains("reads 1"),
+            e.contains("dispatch 0") && e.contains("dtype"),
             "unexpected error: {e}"
         );
+        // Unknown precision names are named in the error.
+        let text = encode(&sample_plan(), &th).replacen("\"bf16\"", "\"fp4\"", 1);
+        let e = decode(&rehash(&text)).unwrap_err().to_string();
+        assert!(e.contains("fp4"), "unexpected error: {e}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! bench quantifies its cost.
 
 use super::coo::Coo;
+use super::engine::DType;
 use crate::util::rng::Rng;
 
 /// Batched, padded SparseTensor: matches artifact inputs
@@ -242,6 +243,166 @@ impl PaddedEllBatch {
     /// Padding fraction of slots (ablation metric).
     pub fn pad_fraction(&self) -> f64 {
         1.0 - self.real_nnz() as f64 / (self.batch * self.dim * self.width) as f64
+    }
+}
+
+/// f32 → bf16 by truncation: keep the sign, the full 8-bit exponent and
+/// the top 7 mantissa bits. Truncation (rather than round-to-nearest)
+/// keeps the conversion branch-free and preserves the padding contract
+/// exactly — `0.0` truncates to bits `0`, so quantized padding slots
+/// dequantize to exactly `0.0` and the ELL kernels' `val == 0.0` skip
+/// still fires. Relative error of any non-zero value is below `2^-7`
+/// (one ulp of the 8-bit significand), the bound the property tests pin
+/// (DESIGN.md §16).
+pub fn f32_to_bf16(v: f32) -> u16 {
+    (v.to_bits() >> 16) as u16
+}
+
+/// bf16 → f32: exact (bf16 is a prefix of the f32 bit pattern).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Quantized ELL adjacency planes for the inference-only reduced
+/// precision path ([`DType::Bf16`] / [`DType::Int8`], DESIGN.md §16).
+///
+/// The layout mirrors the f32 ELL planes (`[planes, rows, width]`, one
+/// plane per (sample, channel) adjacency matrix) with the value array
+/// quantized once at pack time; column ids stay i32. int8 uses a
+/// per-plane affine scheme `v ≈ scale · (q − zero_point)` fitted to the
+/// plane's value range (widened to include 0), so padding packs as
+/// `q = zero_point` and dequantizes to exactly `0.0` — the same skip
+/// contract as f32 padding. bf16 is truncation, so padding is bits `0`.
+///
+/// Error bounds, asserted by the property tests: bf16 per-value
+/// relative error < `2^-7`; int8 per-value absolute error ≤ `scale/2`
+/// (its plane's quantization step, half-up).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedEllBatch {
+    /// [`DType::Bf16`] or [`DType::Int8`] — never [`DType::F32`]
+    /// (dispatch the f32 planes directly instead of quantizing).
+    pub dtype: DType,
+    /// Number of adjacency planes (`batch * channels` when packed from
+    /// a model batch; one per sample for a plain ELL batch).
+    pub planes: usize,
+    pub rows: usize,
+    pub width: usize,
+    /// `[planes, rows, width]` column ids, copied from the f32 packing.
+    pub cols: Vec<i32>,
+    /// bf16 value planes (empty unless `dtype == Bf16`).
+    pub vals_bf16: Vec<u16>,
+    /// int8 value planes (empty unless `dtype == Int8`).
+    pub vals_i8: Vec<i8>,
+    /// Per-plane dequantization scale (`1.0` for bf16 planes, where it
+    /// is unused).
+    pub scale: Vec<f32>,
+    /// Per-plane zero point (`0` for bf16 planes, where it is unused).
+    pub zero_point: Vec<i8>,
+    /// Real (dequantizes-non-zero) slots per plane — the O(1)
+    /// cost-model source, counted once at quantization time. A real but
+    /// tiny value can quantize onto the zero point and scan as padding;
+    /// that loss is within the dtype's error bound.
+    pub nnz_per_plane: Vec<u32>,
+}
+
+impl QuantizedEllBatch {
+    /// Quantize raw ELL planes (`cols`/`vals` flattened
+    /// `[planes, rows, width]`) at pack time. Rejects [`DType::F32`]
+    /// with an actionable error.
+    pub fn quantize(
+        cols: &[i32],
+        vals: &[f32],
+        planes: usize,
+        rows: usize,
+        width: usize,
+        dtype: DType,
+    ) -> anyhow::Result<QuantizedEllBatch> {
+        let per = rows * width;
+        anyhow::ensure!(
+            cols.len() == planes * per && vals.len() == planes * per,
+            "ELL plane arrays have {} cols / {} vals, want {planes} planes * {rows} rows * {width} width",
+            cols.len(),
+            vals.len(),
+        );
+        let mut q = QuantizedEllBatch {
+            dtype,
+            planes,
+            rows,
+            width,
+            cols: cols.to_vec(),
+            vals_bf16: Vec::new(),
+            vals_i8: Vec::new(),
+            scale: vec![1.0; planes],
+            zero_point: vec![0i8; planes],
+            nnz_per_plane: vec![0u32; planes],
+        };
+        match dtype {
+            DType::F32 => anyhow::bail!(
+                "dtype f32 needs no quantized batch — dispatch the f32 ELL planes directly"
+            ),
+            DType::Bf16 => {
+                q.vals_bf16 = vals.iter().map(|v| f32_to_bf16(*v)).collect();
+                for p in 0..planes {
+                    q.nnz_per_plane[p] = q.vals_bf16[p * per..(p + 1) * per]
+                        .iter()
+                        .filter(|b| bf16_to_f32(**b) != 0.0)
+                        .count() as u32;
+                }
+            }
+            DType::Int8 => {
+                q.vals_i8 = vec![0i8; planes * per];
+                for p in 0..planes {
+                    let plane = &vals[p * per..(p + 1) * per];
+                    // Fit the affine range to the plane, widened to
+                    // include 0 so the zero point lands in [-128, 127]
+                    // and padding is exactly representable.
+                    let lo = plane.iter().fold(0f32, |a, &v| a.min(v));
+                    let hi = plane.iter().fold(0f32, |a, &v| a.max(v));
+                    let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+                    let zp = (-128i32 - (lo / scale).round() as i32).clamp(-128, 127);
+                    q.scale[p] = scale;
+                    q.zero_point[p] = zp as i8;
+                    let mut nnz = 0u32;
+                    for (slot, &v) in plane.iter().enumerate() {
+                        let qv = (zp + (v / scale).round() as i32).clamp(-128, 127) as i8;
+                        q.vals_i8[p * per + slot] = qv;
+                        nnz += u32::from(qv != zp as i8);
+                    }
+                    q.nnz_per_plane[p] = nnz;
+                }
+            }
+        }
+        Ok(q)
+    }
+
+    /// Quantize a packed f32 ELL batch (one plane per sample).
+    pub fn from_padded(ell: &PaddedEllBatch, dtype: DType) -> anyhow::Result<QuantizedEllBatch> {
+        QuantizedEllBatch::quantize(&ell.cols, &ell.vals, ell.batch, ell.dim, ell.width, dtype)
+    }
+
+    /// Dequantize one slot of one plane — the scalar reference the
+    /// kernels inline and the property tests check against.
+    #[inline]
+    pub fn dequant(&self, plane: usize, slot: usize) -> f32 {
+        let i = plane * self.rows * self.width + slot;
+        match self.dtype {
+            DType::F32 => unreachable!("quantized batch never holds f32"),
+            DType::Bf16 => bf16_to_f32(self.vals_bf16[i]),
+            DType::Int8 => {
+                self.scale[plane] * (self.vals_i8[i] as i32 - self.zero_point[plane] as i32) as f32
+            }
+        }
+    }
+
+    /// Bytes of quantized value storage — the "bytes moved per
+    /// dispatch" numerator the precision bench reports next to GFLOPS.
+    pub fn value_bytes(&self) -> usize {
+        self.planes * self.rows * self.width * self.dtype.value_bytes()
+    }
+
+    /// Total real (dequantizes-non-zero) slots across all planes.
+    pub fn real_nnz(&self) -> usize {
+        self.nnz_per_plane.iter().map(|&c| c as usize).sum()
     }
 }
 
@@ -517,6 +678,107 @@ mod tests {
         assert!(
             LargeGraphBatch::from_csr_parts(2, vec![0, 1, 2], vec![0, 5], vec![1.0; 2]).is_err()
         );
+    }
+
+    #[test]
+    fn bf16_round_trip_is_exact_and_truncation_bounds_relative_error() {
+        // bf16 is a prefix of the f32 bit pattern, so bf16 → f32 → bf16
+        // must be exact; f32 → bf16 truncation keeps every non-zero
+        // value within one 8-bit-significand ulp (relative < 2^-7).
+        let mut rng = Rng::new(0xBF16);
+        for _ in 0..2000 {
+            let v = rng.normal() * 10f32.powi(rng.range(0, 9) as i32 - 4);
+            let b = f32_to_bf16(v);
+            let back = bf16_to_f32(b);
+            assert_eq!(f32_to_bf16(back), b, "v={v}");
+            if v != 0.0 {
+                assert!(
+                    (back - v).abs() <= v.abs() / 128.0,
+                    "v={v} back={back}: relative error above 2^-7"
+                );
+            }
+        }
+        assert_eq!(f32_to_bf16(0.0), 0);
+        assert_eq!(bf16_to_f32(0), 0.0);
+    }
+
+    #[test]
+    fn quantized_ell_error_bounds_hold_per_plane() {
+        // The pack-time quantization contract (DESIGN.md §16): per
+        // plane, bf16 values stay within 2^-7 relative error, int8
+        // values within scale/2 absolute error, and every padding slot
+        // dequantizes to exactly 0.0 so the kernels' skip still fires.
+        let mut rng = Rng::new(0x0801);
+        for case in 0..8 {
+            let dim = rng.range(4, 20);
+            let mats = random_mixed_batch(&mut rng, (2, dim), (1, 3), rng.range(2, 7));
+            let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+            let per = ell.dim * ell.width;
+            for dtype in [DType::Bf16, DType::Int8] {
+                let q = QuantizedEllBatch::from_padded(&ell, dtype).unwrap();
+                assert_eq!(q.cols, ell.cols, "case {case} {dtype}: cols must be shared");
+                for p in 0..q.planes {
+                    for slot in 0..per {
+                        let v = ell.vals[p * per + slot];
+                        let d = q.dequant(p, slot);
+                        if v == 0.0 {
+                            assert_eq!(d, 0.0, "case {case} {dtype} plane {p} slot {slot}: padding");
+                            continue;
+                        }
+                        match dtype {
+                            DType::Bf16 => assert!(
+                                (d - v).abs() <= v.abs() / 128.0,
+                                "case {case} plane {p} slot {slot}: bf16 {d} vs {v}"
+                            ),
+                            DType::Int8 => assert!(
+                                (d - v).abs() <= q.scale[p] * 0.5 + q.scale[p] * 1e-4,
+                                "case {case} plane {p} slot {slot}: int8 {d} vs {v} (scale {})",
+                                q.scale[p]
+                            ),
+                            DType::F32 => unreachable!(),
+                        }
+                    }
+                    // The cached count matches a dequantizing rescan.
+                    let scan = (0..per).filter(|&s| q.dequant(p, s) != 0.0).count();
+                    assert_eq!(q.nnz_per_plane[p] as usize, scan, "case {case} {dtype} plane {p}");
+                }
+                assert_eq!(
+                    q.value_bytes(),
+                    q.planes * per * dtype.value_bytes(),
+                    "case {case} {dtype}"
+                );
+            }
+        }
+        // f32 is rejected with an actionable message.
+        let err = QuantizedEllBatch::quantize(&[0], &[0.0], 1, 1, 1, DType::F32)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("f32"), "got: {err}");
+    }
+
+    #[test]
+    fn int8_all_zero_and_one_sided_planes_quantize_sanely() {
+        // Degenerate planes: all-zero (scale falls back to 1.0, every
+        // slot is the zero point) and strictly-positive values (the
+        // range widens to include 0 so padding stays representable).
+        let cols = vec![0i32; 8];
+        let zeros = vec![0f32; 8];
+        let q = QuantizedEllBatch::quantize(&cols, &zeros, 1, 2, 4, DType::Int8).unwrap();
+        assert_eq!(q.scale[0], 1.0);
+        assert_eq!(q.real_nnz(), 0);
+        assert!((0..8).all(|s| q.dequant(0, s) == 0.0));
+
+        let pos = vec![3.0f32, 1.5, 0.0, 2.25, 4.5, 0.0, 0.75, 3.75];
+        let q = QuantizedEllBatch::quantize(&cols, &pos, 1, 2, 4, DType::Int8).unwrap();
+        assert_eq!(q.zero_point[0], -128, "range widened to [0, hi]");
+        for (s, &v) in pos.iter().enumerate() {
+            if v == 0.0 {
+                assert_eq!(q.dequant(0, s), 0.0);
+            } else {
+                assert!((q.dequant(0, s) - v).abs() <= q.scale[0] * 0.5 + 1e-6);
+            }
+        }
+        assert_eq!(q.real_nnz(), 6);
     }
 
     #[test]

@@ -79,15 +79,17 @@ pub mod exec;
 pub mod kernels;
 pub mod plan;
 pub mod pool;
+pub mod quant;
 
 pub use exec::Executor;
 pub use kernels::{CsrKernel, EllKernel, GemmKernel, LANES, StKernel};
 pub use plan::{
-    choose_backend, plan_budget_from_env, AutoThresholds, Backend, DispatchDesc, DispatchProfile,
-    GeometryKey, KernelBundle, ParamRef, PlanCache, PlanCursor, PlanStats, RhsKind, SlotId,
-    SlotInit, StepPlan, TenantPlanCaches, Workspace,
+    choose_backend, plan_budget_from_env, AutoThresholds, Backend, DType, DispatchDesc,
+    DispatchProfile, GeometryKey, KernelBundle, ParamRef, PlanCache, PlanCursor, PlanStats,
+    RhsKind, SlotId, SlotInit, StepPlan, TenantPlanCaches, Workspace,
 };
 pub use pool::{PoolStats, SchedPolicy, WorkerPool};
+pub use quant::QuantEllKernel;
 
 /// Which inner-loop implementation a dispatch runs (DESIGN.md §10).
 ///
@@ -121,6 +123,20 @@ pub enum KernelVariant {
     /// so output is bit-identical to the other variants for any tile
     /// width.
     Tiled,
+    /// Explicit-SIMD twin of [`KernelVariant::Vectorized`] (DESIGN.md
+    /// §16): dispatches run [`BatchedSpmm::spmm_sample_simd`] and its
+    /// transpose / row-blocked twins, whose inner loops call hand-vectorized
+    /// `axpy` primitives (AVX2 intrinsics behind the `simd` cargo
+    /// feature with runtime CPU detection) instead of trusting
+    /// autovectorization. The non-FMA SIMD path performs exactly the
+    /// scalar per-element operation sequence (round after multiply,
+    /// round after add, same accumulation order), so it stays under the
+    /// bit-identity contract; the fused-multiply-add fast path single-
+    /// rounds and is therefore opt-in via `BSPMM_ALLOW_FMA=1` with
+    /// error-bound tests instead of bit-parity. Without the feature (or
+    /// on CPUs without AVX2) the variant falls back to the vectorized
+    /// loops — selecting it is always safe.
+    Simd,
 }
 
 /// Right-hand-side operand layout for one engine dispatch.
@@ -323,6 +339,53 @@ pub trait BatchedSpmm: Sync {
         self.spmm_sample_t_rows(b, row0, rhs, n, out)
     }
 
+    /// Explicit-SIMD twin of [`spmm_sample`](BatchedSpmm::spmm_sample)
+    /// ([`KernelVariant::Simd`], DESIGN.md §16): the inner loop calls
+    /// the hand-vectorized `axpy` primitive (AVX2 behind the `simd`
+    /// feature, vectorized fallback otherwise). Must be bit-identical
+    /// to the scalar oracle whenever FMA is not enabled — the SIMD
+    /// lanes perform the same round-after-multiply / round-after-add
+    /// sequence per element, in the same accumulation order. The
+    /// default delegates to the vectorized kernel.
+    fn spmm_sample_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.spmm_sample(b, rhs, n, out)
+    }
+
+    /// Explicit-SIMD twin of
+    /// [`spmm_sample_t`](BatchedSpmm::spmm_sample_t) — the transpose
+    /// (scatter) form under [`KernelVariant::Simd`]. Same bit-identity
+    /// contract and vectorized default as
+    /// [`spmm_sample_simd`](BatchedSpmm::spmm_sample_simd).
+    fn spmm_sample_t_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.spmm_sample_t(b, rhs, n, out)
+    }
+
+    /// Explicit-SIMD twin of
+    /// [`spmm_sample_rows`](BatchedSpmm::spmm_sample_rows) — the
+    /// row-blocked form the pool's (sample, row-block) tasks run under
+    /// [`KernelVariant::Simd`]. Same bit-identity contract and
+    /// vectorized default as
+    /// [`spmm_sample_simd`](BatchedSpmm::spmm_sample_simd).
+    fn spmm_sample_rows_simd(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.spmm_sample_rows(b, row0, rhs, n, out)
+    }
+
+    /// Explicit-SIMD twin of
+    /// [`spmm_sample_t_rows`](BatchedSpmm::spmm_sample_t_rows) — the
+    /// row-blocked transpose form under [`KernelVariant::Simd`]. Same
+    /// bit-identity contract and vectorized default as
+    /// [`spmm_sample_simd`](BatchedSpmm::spmm_sample_simd).
+    fn spmm_sample_t_rows_simd(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        self.spmm_sample_t_rows(b, row0, rhs, n, out)
+    }
+
     /// Real non-zeros of sample `b` restricted to output rows
     /// `r0..r1`, in O(1), when the layout can answer that (CSR: a row
     /// pointer difference). `None` means the pool's planner falls back
@@ -437,6 +500,29 @@ impl<K: BatchedSpmm + ?Sized> BatchedSpmm for &K {
         out: &mut [f32],
     ) {
         (**self).spmm_sample_t_rows_tiled(b, row0, rhs, n, out)
+    }
+
+    fn spmm_sample_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_simd(b, rhs, n, out)
+    }
+
+    fn spmm_sample_t_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_t_simd(b, rhs, n, out)
+    }
+
+    fn spmm_sample_rows_simd(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        (**self).spmm_sample_rows_simd(b, row0, rhs, n, out)
+    }
+
+    fn spmm_sample_t_rows_simd(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        (**self).spmm_sample_t_rows_simd(b, row0, rhs, n, out)
     }
 
     fn rows_nnz(&self, b: usize, r0: usize, r1: usize) -> Option<usize> {

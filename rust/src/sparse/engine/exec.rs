@@ -72,6 +72,10 @@ impl Executor {
     /// comparison runs on (DESIGN.md §10). Output is bit-identical
     /// across variants; this is a pure perf/observability knob.
     pub fn with_variant(threads: usize, policy: SchedPolicy, variant: KernelVariant) -> Executor {
+        // Resolve the tile width once, up front: the first resolution may
+        // run the one-shot L2 probe (DESIGN.md §16), and construction is
+        // the right place to pay that millisecond — never a dispatch.
+        super::kernels::tile_cols_from_env();
         Executor {
             pool: Arc::new(WorkerPool::with_variant(threads, policy, variant)),
         }
@@ -333,6 +337,30 @@ mod tests {
             let tb = tiled.spmm_t(&k, Rhs::PerSample(&dense), nb).unwrap();
             assert_eq!(tf, vec_fwd, "threads={threads}");
             assert_eq!(tb, vec_bwd, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn simd_variant_is_bitwise_identical_to_vectorized() {
+        // KernelVariant::Simd through the full executor path. Without
+        // BSPMM_ALLOW_FMA the SIMD loops perform the same two roundings
+        // per element as the vectorized loops, so the results must match
+        // bit for bit on every thread count and both transpose forms
+        // (DESIGN.md §16) — with or without the `simd` cargo feature.
+        let (st, dense) = workload(9, 16, 11); // 11 = tail width 3
+        let k = StKernel::new(&st);
+        let vec_fwd = Executor::serial().spmm(&k, Rhs::PerSample(&dense), 11).unwrap();
+        let vec_bwd = Executor::serial()
+            .spmm_t(&k, Rhs::PerSample(&dense), 11)
+            .unwrap();
+        for threads in [1, 4] {
+            let simd =
+                Executor::with_variant(threads, SchedPolicy::WorkStealing, KernelVariant::Simd);
+            assert_eq!(simd.variant(), KernelVariant::Simd);
+            let sf = simd.spmm(&k, Rhs::PerSample(&dense), 11).unwrap();
+            let sb = simd.spmm_t(&k, Rhs::PerSample(&dense), 11).unwrap();
+            assert_eq!(sf, vec_fwd, "threads={threads}");
+            assert_eq!(sb, vec_bwd, "threads={threads}");
         }
     }
 

@@ -34,7 +34,22 @@
 //! pin against, and the microbench baseline the scalar-vs-vectorized
 //! GFLOPS comparison runs on.
 //!
+//! **Explicit SIMD (DESIGN.md §16).** The `*_simd` trait methods
+//! ([`KernelVariant::Simd`]) run the same loops through
+//! [`axpy_row_simd`], which hand-vectorizes the row update with AVX2
+//! intrinsics when the `simd` cargo feature is on and the CPU reports
+//! AVX2 (runtime detection; everything else falls back to the
+//! autovectorized [`axpy_row`]). The non-FMA SIMD lanes perform exactly
+//! the scalar round-after-multiply / round-after-add sequence per
+//! element in the same accumulation order, so they stay bit-identical
+//! to the scalar oracle. The fused-multiply-add path single-rounds
+//! (`_mm256_fmadd_ps` / `f32::mul_add`) and therefore breaks
+//! bit-identity by up to one product rounding per non-zero; it is
+//! opt-in via `BSPMM_ALLOW_FMA=1` ([`fma_allowed`]) and covered by
+//! error-bound tests instead of bit-parity.
+//!
 //! [`KernelVariant::Scalar`]: super::KernelVariant::Scalar
+//! [`KernelVariant::Simd`]: super::KernelVariant::Simd
 
 use super::BatchedSpmm;
 use crate::graph::dataset::ModelBatch;
@@ -60,10 +75,13 @@ pub const LANES: usize = 8;
 pub const DEFAULT_TILE_COLS: usize = 256;
 
 /// Resolve the process-wide column-tile width: `BSPMM_TILE_COLS` when
-/// set to a positive integer, else [`DEFAULT_TILE_COLS`]; either way
-/// clamped to at least [`LANES`] so a tile never degenerates below one
-/// vector block. Read once per process (the env var is a launch-time
-/// calibration knob, not a per-dispatch one).
+/// set to a positive integer (the env override always wins), else the
+/// one-shot L2 probe ([`probe_l2_tile_cols`]); either way clamped to at
+/// least [`LANES`] so a tile never degenerates below one vector block.
+/// Resolved once per process (a launch-time calibration, not a
+/// per-dispatch one) — [`Executor`](super::Executor) construction warms
+/// this cache so the probe's few milliseconds never land inside a timed
+/// dispatch.
 pub fn tile_cols_from_env() -> usize {
     static TILE_COLS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *TILE_COLS.get_or_init(|| {
@@ -71,8 +89,87 @@ pub fn tile_cols_from_env() -> usize {
             .ok()
             .and_then(|v| v.trim().parse::<usize>().ok())
             .filter(|&v| v > 0)
-            .unwrap_or(DEFAULT_TILE_COLS)
+            .unwrap_or_else(probe_l2_tile_cols)
             .max(LANES)
+    })
+}
+
+/// One-shot L2-size probe behind [`tile_cols_from_env`] (DESIGN.md
+/// §16): a timed strided sweep over geometrically growing buffers finds
+/// the largest working set that still runs at near-cache speed — the
+/// L2 knee — and sizes the column tile so that a tile's worth of
+/// gathered `rhs` rows fits it. The model is the one
+/// [`DEFAULT_TILE_COLS`] hardcodes: a tile of `tc` f32 columns keeps
+/// roughly `tc` dense rows of `4 * tc` bytes hot, so
+/// `tc = sqrt(l2_bytes / 4)` (256 KiB L2 → 256 columns, the old
+/// default). The result is rounded down to a [`LANES`] multiple and
+/// clamped to `[LANES, 1024]`; any timing weirdness (virtualized
+/// clocks, tiny machines) degrades to [`DEFAULT_TILE_COLS`], never to
+/// an error. Runs entirely on the calling thread, allocates only its
+/// probe buffer, and influences performance only — tiled output is
+/// bit-identical for every width.
+pub fn probe_l2_tile_cols() -> usize {
+    // Stride of one 64-byte cache line, in f32s: every access misses
+    // once the working set outgrows a cache level, which is what makes
+    // the knee visible.
+    const STRIDE: usize = 16;
+    // 64 KiB .. 8 MiB in doublings: below any L2, above most.
+    let sizes_kib = [64usize, 128, 256, 512, 1024, 2048, 4096, 8192];
+    let largest = sizes_kib[sizes_kib.len() - 1] * 1024 / 4;
+    let buf = vec![1u32; largest];
+    let mut per_elem_ns = [0f64; 8];
+    for (i, kib) in sizes_kib.iter().enumerate() {
+        let len = kib * 1024 / 4;
+        // Enough passes to dominate timer granularity, few enough to
+        // keep the whole probe in the low milliseconds.
+        let passes = (4 * 1024 * 1024 / len).clamp(2, 64);
+        let mut acc = 0u32;
+        let t0 = std::time::Instant::now();
+        for p in 0..passes {
+            let mut j = p % STRIDE;
+            while j < len {
+                acc = acc.wrapping_add(buf[j]);
+                j += STRIDE;
+            }
+        }
+        let dt = t0.elapsed().as_nanos() as f64;
+        std::hint::black_box(acc);
+        per_elem_ns[i] = dt / (passes * len.div_ceil(STRIDE)) as f64;
+    }
+    // The knee: the largest size still within 1.5x of the fastest
+    // per-access time. Sizes beyond the L2 pay main-memory latency and
+    // fall well outside that band.
+    let fastest = per_elem_ns.iter().cloned().fold(f64::INFINITY, f64::min);
+    if !(fastest.is_finite() && fastest > 0.0) {
+        return DEFAULT_TILE_COLS;
+    }
+    let mut l2_bytes = sizes_kib[0] * 1024;
+    for (i, kib) in sizes_kib.iter().enumerate() {
+        if per_elem_ns[i] <= fastest * 1.5 {
+            l2_bytes = kib * 1024;
+        }
+    }
+    let tc = ((l2_bytes as f64 / 4.0).sqrt() as usize) / LANES * LANES;
+    tc.clamp(LANES, 1024)
+}
+
+/// Whether the opt-in fused-multiply-add serving mode is enabled:
+/// `BSPMM_ALLOW_FMA=1` (or `true`), read once per process. FMA
+/// single-rounds `d + val * s`, dropping the product rounding the
+/// scalar oracle performs — faster and *more* accurate per element,
+/// but no longer bit-identical to the scalar/vectorized kernels, which
+/// is why it is never on by default (DESIGN.md §16). The error-bound
+/// tests cover [`axpy_row_fma`] directly, so flipping this env var is
+/// a deployment decision, not a correctness one.
+pub fn fma_allowed() -> bool {
+    static ALLOW: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ALLOW.get_or_init(|| {
+        std::env::var("BSPMM_ALLOW_FMA")
+            .map(|v| {
+                let v = v.trim();
+                v == "1" || v.eq_ignore_ascii_case("true")
+            })
+            .unwrap_or(false)
     })
 }
 
@@ -93,7 +190,7 @@ fn axpy_block(dst: &mut [f32; LANES], val: f32, src: &[f32; LANES]) {
 /// grouping of independent columns changes — so this is bit-identical
 /// to the scalar reference for any `n`.
 #[inline(always)]
-fn axpy_row(dst: &mut [f32], val: f32, src: &[f32]) {
+pub fn axpy_row(dst: &mut [f32], val: f32, src: &[f32]) {
     let mut d = dst.chunks_exact_mut(LANES);
     let mut s = src.chunks_exact(LANES);
     for (db, sb) in d.by_ref().zip(s.by_ref()) {
@@ -105,6 +202,117 @@ fn axpy_row(dst: &mut [f32], val: f32, src: &[f32]) {
     }
     for (dj, sj) in d.into_remainder().iter_mut().zip(s.remainder()) {
         *dj += val * *sj;
+    }
+}
+
+/// Explicit-SIMD `dst[j] += val * src[j]` — the primitive behind every
+/// `*_simd` kernel method ([`KernelVariant::Simd`], DESIGN.md §16).
+/// With the `simd` cargo feature on x86_64 CPUs reporting AVX2, the row
+/// runs through 256-bit intrinsics; everywhere else it falls back to
+/// the autovectorized [`axpy_row`]. The default (non-FMA) path performs
+/// the scalar two-rounding sequence per element — round after multiply,
+/// round after add, same accumulation order — so it is bit-identical to
+/// the scalar oracle on every input. When [`fma_allowed`] opts in, the
+/// row runs through [`axpy_row_fma`] instead (single rounding, error-
+/// bound tested, not bit-identical).
+///
+/// [`KernelVariant::Simd`]: super::KernelVariant::Simd
+#[inline]
+pub fn axpy_row_simd(dst: &mut [f32], val: f32, src: &[f32]) {
+    if fma_allowed() {
+        return axpy_row_fma(dst, val, src);
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // Safety: AVX2 availability just checked at runtime.
+        unsafe { avx2::axpy_row(dst, val, src) };
+        return;
+    }
+    axpy_row(dst, val, src);
+}
+
+/// Fused-multiply-add twin of [`axpy_row_simd`]: each element computes
+/// `fma(val, src[j], dst[j])` with a single rounding (hardware
+/// `_mm256_fmadd_ps` under the `simd` feature on FMA-capable x86_64,
+/// [`f32::mul_add`] otherwise — both round once, so the two agree
+/// bit-for-bit with each other). Relative to the two-rounding scalar
+/// oracle the per-element deviation is bounded by one ulp of the
+/// product `val * src[j]`; the error-bound tests pin that. Reached from
+/// the kernels only through the `BSPMM_ALLOW_FMA` opt-in
+/// ([`fma_allowed`]); callable directly so tests exercise it without
+/// racing on process-wide env state.
+pub fn axpy_row_fma(dst: &mut [f32], val: f32, src: &[f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma")
+    {
+        // Safety: AVX2 + FMA availability just checked at runtime.
+        unsafe { avx2::axpy_row_fma(dst, val, src) };
+        return;
+    }
+    for (dj, sj) in dst.iter_mut().zip(src) {
+        *dj = val.mul_add(*sj, *dj);
+    }
+}
+
+/// The AVX2 intrinsic bodies behind [`axpy_row_simd`] /
+/// [`axpy_row_fma`]. Compiled only under the `simd` cargo feature on
+/// x86_64; every entry point is `unsafe` because the caller must have
+/// verified the CPU features at runtime first.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// `dst[j] += val * src[j]` in 8-lane AVX2 blocks with a scalar
+    /// tail. Each lane performs the scalar two-rounding sequence
+    /// (`_mm256_mul_ps` then `_mm256_add_ps`), so output is
+    /// bit-identical to the scalar loop.
+    ///
+    /// # Safety
+    /// The caller must have verified `is_x86_feature_detected!("avx2")`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_row(dst: &mut [f32], val: f32, src: &[f32]) {
+        let n = dst.len().min(src.len());
+        let v = _mm256_set1_ps(val);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let s = _mm256_loadu_ps(src.as_ptr().add(j));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_add_ps(d, _mm256_mul_ps(v, s)));
+            j += 8;
+        }
+        while j < n {
+            *dst.get_unchecked_mut(j) += val * *src.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    /// Single-rounding `dst[j] = fma(val, src[j], dst[j])` in 8-lane
+    /// blocks; the tail uses [`f32::mul_add`], which rounds identically
+    /// to `_mm256_fmadd_ps`.
+    ///
+    /// # Safety
+    /// The caller must have verified `is_x86_feature_detected!("avx2")`
+    /// and `is_x86_feature_detected!("fma")`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy_row_fma(dst: &mut [f32], val: f32, src: &[f32]) {
+        let n = dst.len().min(src.len());
+        let v = _mm256_set1_ps(val);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let s = _mm256_loadu_ps(src.as_ptr().add(j));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(j));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(j), _mm256_fmadd_ps(v, s, d));
+            j += 8;
+        }
+        while j < n {
+            let d = dst.get_unchecked_mut(j);
+            *d = val.mul_add(*src.get_unchecked(j), *d);
+            j += 1;
+        }
     }
 }
 
@@ -315,6 +523,89 @@ impl BatchedSpmm for StKernel<'_> {
             for j in 0..n {
                 dst[j] += val * src[j];
             }
+        }
+    }
+
+    fn spmm_sample_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            axpy_row_simd(
+                &mut out[rid * n..(rid + 1) * n],
+                val,
+                &rhs[cid * n..(cid + 1) * n],
+            );
+        }
+    }
+
+    fn spmm_sample_t_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            axpy_row_simd(
+                &mut out[cid * n..(cid + 1) * n],
+                val,
+                &rhs[rid * n..(rid + 1) * n],
+            );
+        }
+    }
+
+    fn spmm_sample_rows_simd(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            if rid < row0 || rid >= row1 {
+                continue;
+            }
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            axpy_row_simd(
+                &mut out[(rid - row0) * n..(rid - row0 + 1) * n],
+                val,
+                &rhs[cid * n..(cid + 1) * n],
+            );
+        }
+    }
+
+    fn spmm_sample_t_rows_simd(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        let cap = self.st.nnz_cap;
+        for i in 0..cap {
+            let val = self.st.vals[b * cap + i];
+            if val == 0.0 {
+                continue; // padding slot
+            }
+            let cid = self.st.ids[(b * cap + i) * 2 + 1] as usize;
+            if cid < row0 || cid >= row1 {
+                continue;
+            }
+            let rid = self.st.ids[(b * cap + i) * 2] as usize;
+            axpy_row_simd(
+                &mut out[(cid - row0) * n..(cid - row0 + 1) * n],
+                val,
+                &rhs[rid * n..(rid + 1) * n],
+            );
         }
     }
 }
@@ -694,6 +985,74 @@ impl BatchedSpmm for CsrKernel<'_> {
             }
         }
     }
+
+    fn spmm_sample_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let dst = &mut out[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
+                axpy_row_simd(dst, val, &rhs[cid * n..(cid + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let src = &rhs[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
+                axpy_row_simd(&mut out[cid * n..(cid + 1) * n], val, src);
+            }
+        }
+    }
+
+    fn spmm_sample_rows_simd(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in row0..row1 {
+            let dst = &mut out[(r - row0) * n..(r - row0 + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let val = self.csr.vals[base + i];
+                let cid = self.csr.col_ids[base + i] as usize;
+                axpy_row_simd(dst, val, &rhs[cid * n..(cid + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows_simd(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        let m1 = self.csr.dim + 1;
+        let rpt = &self.csr.rpt[b * m1..(b + 1) * m1];
+        let base = b * self.csr.nnz_cap;
+        for r in 0..self.csr.dim {
+            let src = &rhs[r * n..(r + 1) * n];
+            for i in rpt[r] as usize..rpt[r + 1] as usize {
+                let cid = self.csr.col_ids[base + i] as usize;
+                if cid < row0 || cid >= row1 {
+                    continue;
+                }
+                let val = self.csr.vals[base + i];
+                axpy_row_simd(&mut out[(cid - row0) * n..(cid - row0 + 1) * n], val, src);
+            }
+        }
+    }
 }
 
 /// ELL backend: per-row padded slots (`val == 0` = padding), the layout
@@ -1012,6 +1371,82 @@ impl BatchedSpmm for EllKernel<'_> {
             }
         }
     }
+
+    fn spmm_sample_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let dst = &mut out[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                axpy_row_simd(dst, val, &rhs[cid * n..(cid + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let src = &rhs[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                axpy_row_simd(&mut out[cid * n..(cid + 1) * n], val, src);
+            }
+        }
+    }
+
+    fn spmm_sample_rows_simd(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in row0..row1 {
+            let dst = &mut out[(rid - row0) * n..(rid - row0 + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                axpy_row_simd(dst, val, &rhs[cid * n..(cid + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows_simd(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        let base = self.offset + b * self.stride;
+        let r = self.width;
+        for rid in 0..self.rows {
+            let src = &rhs[rid * n..(rid + 1) * n];
+            for slot in 0..r {
+                let val = self.vals[base + rid * r + slot];
+                if val == 0.0 {
+                    continue; // padding slot
+                }
+                let cid = self.cols[base + rid * r + slot] as usize;
+                if cid < row0 || cid >= row1 {
+                    continue;
+                }
+                axpy_row_simd(&mut out[(cid - row0) * n..(cid - row0 + 1) * n], val, src);
+            }
+        }
+    }
 }
 
 /// Dense backend: the batched-GEMM (cuBLAS) baseline over a densified
@@ -1209,6 +1644,74 @@ impl BatchedSpmm for GemmKernel<'_> {
                 for j in 0..n {
                     dst[j] += av * src[j];
                 }
+            }
+        }
+    }
+
+    fn spmm_sample_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let base = b * self.rows * self.inner;
+        for r in 0..self.rows {
+            let dst = &mut out[r * n..(r + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                axpy_row_simd(dst, av, &rhs[k * n..(k + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let base = b * self.rows * self.inner;
+        for r in 0..self.rows {
+            let src = &rhs[r * n..(r + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                axpy_row_simd(&mut out[k * n..(k + 1) * n], av, src);
+            }
+        }
+    }
+
+    fn spmm_sample_rows_simd(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        let base = b * self.rows * self.inner;
+        for r in row0..row1 {
+            let dst = &mut out[(r - row0) * n..(r - row0 + 1) * n];
+            for k in 0..self.inner {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                axpy_row_simd(dst, av, &rhs[k * n..(k + 1) * n]);
+            }
+        }
+    }
+
+    fn spmm_sample_t_rows_simd(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        // Same k-outer loop interchange as the vectorized form: each
+        // out[k] row accumulates in ascending-r order, so the SIMD twin
+        // stays bit-exact under row splitting too.
+        let row1 = row0 + out.len() / n;
+        let base = b * self.rows * self.inner;
+        for k in row0..row1 {
+            let dst = &mut out[(k - row0) * n..(k - row0 + 1) * n];
+            for r in 0..self.rows {
+                let av = self.a[base + r * self.inner + k];
+                if av == 0.0 {
+                    continue;
+                }
+                axpy_row_simd(dst, av, &rhs[r * n..(r + 1) * n]);
             }
         }
     }
@@ -1567,5 +2070,123 @@ mod tests {
             assert_eq!(raw.sample_nnz(b), ellk.sample_nnz(b), "raw ell sample {b}");
         }
         assert_eq!(stk.real_nnz(), mats.iter().map(crate::sparse::Coo::nnz).sum());
+    }
+
+    #[test]
+    fn axpy_row_simd_is_bit_identical_to_axpy_row_at_every_width() {
+        // The SIMD primitive performs the same two roundings per element
+        // (round after multiply, round after add) as the vectorized and
+        // scalar loops, so it must agree bit for bit — full 8-wide
+        // blocks, scalar tails, and sub-LANES widths alike. This holds
+        // with and without the `simd` cargo feature (without it the call
+        // degrades to `axpy_row`, making the assertion trivially true).
+        let mut rng = Rng::new(0xA10);
+        for n in [0usize, 1, 3, LANES - 1, LANES, LANES + 1, 2 * LANES, 65] {
+            let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let init: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let val = rng.normal();
+            let mut simd_out = init.clone();
+            axpy_row_simd(&mut simd_out, val, &src);
+            let mut ref_out = init;
+            for j in 0..n {
+                ref_out[j] += val * src[j];
+            }
+            assert_eq!(simd_out, ref_out, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_row_fma_stays_within_one_product_ulp_of_two_rounding() {
+        // FMA rounds once (after the add) where the default path rounds
+        // twice, so results may differ — but only by the rounding error
+        // of the intermediate product, i.e. at most half an ulp of
+        // `val * src[j]` per element (DESIGN.md §16). The hardware FMA
+        // and the `f32::mul_add` software fallback round identically,
+        // so one bound covers both builds.
+        let mut rng = Rng::new(0xF3A);
+        for n in [1usize, 7, LANES, LANES + 1, 65] {
+            let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let init: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let val = rng.normal();
+            let mut fma_out = init.clone();
+            axpy_row_fma(&mut fma_out, val, &src);
+            for j in 0..n {
+                let two_round = init[j] + val * src[j];
+                let prod_ulp = (val * src[j]).abs() * f32::EPSILON;
+                let tol = prod_ulp.max(f32::MIN_POSITIVE);
+                assert!(
+                    (fma_out[j] - two_round).abs() <= tol,
+                    "n={n} j={j}: fma {} vs two-rounding {two_round} (tol {tol:e})",
+                    fma_out[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l2_probe_returns_lane_multiple_in_range() {
+        // Whatever the machine (bare metal, CI container, VM with noisy
+        // timers), the probe must hand back a sane tile width: a LANES
+        // multiple within the clamp window. The env-resolved entry point
+        // shares the same floor.
+        let tc = probe_l2_tile_cols();
+        assert!(tc >= LANES && tc <= 1024, "probe gave {tc}");
+        assert_eq!(tc % LANES, 0, "probe gave non-lane-multiple {tc}");
+        assert!(tile_cols_from_env() >= LANES);
+    }
+
+    #[test]
+    fn simd_twins_are_bit_identical_to_vectorized_on_every_backend() {
+        // Serial, single-kernel check that every backend's four `_simd`
+        // dispatch forms reproduce the vectorized forms bit for bit —
+        // the engine-level (threaded) twin lives in engine_parity.rs.
+        let mut rng = Rng::new(0x51D);
+        let (dim, z, batch, nb) = (17usize, 3usize, 4usize, 13usize);
+        let mats = random_batch(&mut rng, &RandomSpec::new(dim, z), batch);
+        let st = PaddedStBatch::pack(&mats, dim, dim * z).unwrap();
+        let csr = PaddedCsrBatch::pack(&mats, dim, dim * z).unwrap();
+        let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+        let a_dense = densify_batch(&mats, dim);
+        let rhs: Vec<f32> = (0..dim * nb).map(|_| rng.normal()).collect();
+        let stk = StKernel::new(&st);
+        let csrk = CsrKernel::new(&csr);
+        let ellk = EllKernel::from_padded(&ell);
+        let gemk = GemmKernel::new(&a_dense, batch, dim, dim);
+        let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+        let cuts = [0usize, 2, 5, 11, dim];
+        for k in kernels {
+            for b in 0..batch {
+                let mut want = vec![0.25f32; dim * nb];
+                k.spmm_sample(b, &rhs, nb, &mut want);
+                let mut got = vec![0.25f32; dim * nb];
+                k.spmm_sample_simd(b, &rhs, nb, &mut got);
+                assert_eq!(want, got, "{} sample {b}", k.name());
+
+                let mut want_t = vec![0.25f32; dim * nb];
+                k.spmm_sample_t(b, &rhs, nb, &mut want_t);
+                let mut got_t = vec![0.25f32; dim * nb];
+                k.spmm_sample_t_simd(b, &rhs, nb, &mut got_t);
+                assert_eq!(want_t, got_t, "{} sample {b} transpose", k.name());
+
+                let mut blocked = vec![0.25f32; dim * nb];
+                let mut blocked_t = vec![0.25f32; dim * nb];
+                for w in cuts.windows(2) {
+                    k.spmm_sample_rows_simd(b, w[0], &rhs, nb, &mut blocked[w[0] * nb..w[1] * nb]);
+                    k.spmm_sample_t_rows_simd(
+                        b,
+                        w[0],
+                        &rhs,
+                        nb,
+                        &mut blocked_t[w[0] * nb..w[1] * nb],
+                    );
+                }
+                assert_eq!(want, blocked, "{} sample {b} row-blocked", k.name());
+                assert_eq!(
+                    want_t, blocked_t,
+                    "{} sample {b} transpose row-blocked",
+                    k.name()
+                );
+            }
+        }
     }
 }

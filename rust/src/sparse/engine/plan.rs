@@ -44,12 +44,16 @@
 //!   geometries can never evict another tenant's hot plan while the
 //!   budget has headroom.
 //!
-//! Plans describe *what* runs (backend, transpose form, shapes) —
-//! never *how* the executor runs it: the kernel variant
-//! (scalar / vectorized / cache-tiled, DESIGN.md §10/§12) is an
-//! executor-level setting, deliberately absent from [`DispatchDesc`]
-//! and [`GeometryKey`], so the same cached plan replays bit-identically
-//! under any variant.
+//! Plans describe *what* runs (backend, transpose form, shapes,
+//! [`DType`] precision) — never *how* the executor runs it: the kernel
+//! variant (scalar / vectorized / cache-tiled / explicit-SIMD,
+//! DESIGN.md §10/§12/§16) is an executor-level setting, deliberately
+//! absent from [`DispatchDesc`] and [`GeometryKey`], so the same
+//! cached plan replays bit-identically under any variant. The value
+//! *precision* ([`DType`]: f32, bf16, int8) is the opposite case — it
+//! changes the numbers a dispatch produces, so it lives on the
+//! descriptor and in the geometry key, and an f32 plan is never
+//! replayed for a quantized request (DESIGN.md §16).
 //!
 //! Determinism: planning changes where buffers live and which backend
 //! runs — never an element's accumulation order — so planned execution
@@ -105,6 +109,78 @@ impl Backend {
 }
 
 impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Value precision of a planned dispatch (DESIGN.md §16). `F32` is the
+/// training/default path; `Bf16` and `Int8` are inference-only modes
+/// that dequantize a [`QuantizedEllBatch`](crate::sparse::batch::QuantizedEllBatch)
+/// on the fly. Precision changes the produced numbers, so — unlike the
+/// kernel variant — it is part of [`DispatchDesc`] and of every
+/// geometry key, and it round-trips through AOT plan artifacts
+/// (`runtime::plan_artifact`, format_version 2).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// Full-precision f32 values — the only mode training supports.
+    #[default]
+    F32,
+    /// bfloat16 (truncated f32): adjacency values and weights carry 8
+    /// mantissa bits, dequantized to f32 in the inner loop. Relative
+    /// error per value ≤ 2⁻⁸.
+    Bf16,
+    /// Affine int8: per-plane scale/zero-point, dequantized to f32 in
+    /// the inner loop. Absolute error per value ≤ scale/2.
+    Int8,
+}
+
+impl DType {
+    /// All precisions, in bench legend order.
+    pub const ALL: [DType; 3] = [DType::F32, DType::Bf16, DType::Int8];
+
+    /// Stable artifact/CLI name (`f32|bf16|int8`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::Bf16 => "bf16",
+            DType::Int8 => "int8",
+        }
+    }
+
+    /// Parse an artifact/CLI name back ([`DType::name`] inverse).
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "bf16" => DType::Bf16,
+            "int8" => DType::Int8,
+            other => anyhow::bail!("unknown dtype '{other}' (f32|bf16|int8)"),
+        })
+    }
+
+    /// Bytes one packed value of this precision occupies — the
+    /// bytes-moved accounting the precision bench records alongside
+    /// GFLOPS (values only; index streams are unchanged).
+    pub fn value_bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::Bf16 => 2,
+            DType::Int8 => 1,
+        }
+    }
+
+    /// Stable tag for geometry keys: two batches that differ only in
+    /// precision must compile distinct plans.
+    pub fn key_tag(&self) -> u32 {
+        match self {
+            DType::F32 => 0,
+            DType::Bf16 => 1,
+            DType::Int8 => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
     }
@@ -507,6 +583,10 @@ pub struct DispatchDesc {
     pub n: u32,
     /// Workspace slot the dispatch accumulates into.
     pub out: SlotId,
+    /// Value precision the dispatch runs at ([`DType::F32`] for every
+    /// training dispatch; quantized inference plans record `Bf16` /
+    /// `Int8`). Carried by AOT artifacts (DESIGN.md §16).
+    pub dtype: DType,
 }
 
 /// Cached parameter-table entry: flat (offset, len) into the
@@ -728,6 +808,23 @@ impl PlanCache {
     /// Whether a plan for `key` is cached (warm-started or compiled).
     pub fn contains(&self, key: &GeometryKey) -> bool {
         self.entries.iter().any(|e| e.key == *key)
+    }
+
+    /// Drop the entry for `key` unless its plan satisfies `keep`. The
+    /// per-batch `Backend::Auto` re-resolution path
+    /// (`MultiDispatcher::forward`) re-runs the cost model on each
+    /// assembled batch's profile and discards a cached plan whose
+    /// frozen backend choices no longer match — the next
+    /// [`PlanCache::entry_with`] then recompiles for the observed
+    /// profile. Returns `true` when an entry was dropped.
+    pub fn retain_key(&mut self, key: &GeometryKey, keep: impl FnOnce(&StepPlan) -> bool) -> bool {
+        if let Some(pos) = self.entries.iter().position(|e| e.key == *key) {
+            if !keep(&self.entries[pos].plan) {
+                self.entries.remove(pos);
+                return true;
+            }
+        }
+        false
     }
 
     /// Iterate the cached plans (dump side of the AOT artifact flow —
@@ -1322,12 +1419,29 @@ mod tests {
                 rhs: RhsKind::PerSample,
                 n,
                 out: s,
+                dtype: DType::F32,
             });
         }
         let mut c = PlanCursor::new(&p);
         assert_eq!(c.dispatch().n, 3);
         assert_eq!(c.dispatch().n, 5);
         c.finish();
+    }
+
+    #[test]
+    fn dtype_parse_round_trips_and_tags_are_distinct() {
+        for d in DType::ALL {
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DType::parse("f64").is_err());
+        let tags: Vec<u32> = DType::ALL.iter().map(|d| d.key_tag()).collect();
+        let mut uniq = tags.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), tags.len(), "key tags must be distinct");
+        assert_eq!(DType::F32.value_bytes(), 4);
+        assert_eq!(DType::Bf16.value_bytes(), 2);
+        assert_eq!(DType::Int8.value_bytes(), 1);
     }
 
     #[test]

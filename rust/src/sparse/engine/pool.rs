@@ -551,6 +551,12 @@ impl WorkerPool {
                     (KernelVariant::Tiled, true) => {
                         kernel.spmm_sample_t_tiled(s, rhs_s, n, sample_out)
                     }
+                    (KernelVariant::Simd, false) => {
+                        kernel.spmm_sample_simd(s, rhs_s, n, sample_out)
+                    }
+                    (KernelVariant::Simd, true) => {
+                        kernel.spmm_sample_t_simd(s, rhs_s, n, sample_out)
+                    }
                 }
             }
             return;
@@ -739,7 +745,7 @@ fn run_job(job: &Job, me: usize, shared: &Shared) {
 /// construction in [`plan_tasks`]) and each task is claimed exactly
 /// once, so no two threads ever touch the same element.
 fn exec_task(job: &Job, task: &Task) {
-    use KernelVariant::{Scalar, Tiled, Vectorized};
+    use KernelVariant::{Scalar, Simd, Tiled, Vectorized};
     let n = job.n;
     let full = task.row0 == 0 && task.row1 as usize == job.out_rows;
     let row0 = task.row0 as usize;
@@ -762,6 +768,10 @@ fn exec_task(job: &Job, task: &Task) {
             (Tiled, false, false) => job.kernel.spmm_sample_rows_tiled(s, row0, rhs, n, out),
             (Tiled, true, true) => job.kernel.spmm_sample_t_tiled(s, rhs, n, out),
             (Tiled, true, false) => job.kernel.spmm_sample_t_rows_tiled(s, row0, rhs, n, out),
+            (Simd, false, true) => job.kernel.spmm_sample_simd(s, rhs, n, out),
+            (Simd, false, false) => job.kernel.spmm_sample_rows_simd(s, row0, rhs, n, out),
+            (Simd, true, true) => job.kernel.spmm_sample_t_simd(s, rhs, n, out),
+            (Simd, true, false) => job.kernel.spmm_sample_t_rows_simd(s, row0, rhs, n, out),
         }
     }
 }

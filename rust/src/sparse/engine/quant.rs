@@ -1,0 +1,426 @@
+//! Dequantize-on-the-fly ELL kernels for the reduced-precision
+//! inference path (DESIGN.md §16).
+//!
+//! [`QuantEllKernel`] is the quantized twin of
+//! [`EllKernel`](super::kernels::EllKernel): it walks the same
+//! `[planes, rows, width]` ELL layout, but reads its values from a
+//! [`QuantizedEllBatch`](crate::sparse::batch::QuantizedEllBatch)
+//! (bf16 or int8, [`DType`]) and dequantizes each value in the
+//! register, just before the same `axpy_row` primitives the f32
+//! kernels run. Nothing else changes: the output stays f32, the
+//! accumulation order is identical to the f32 ELL kernel's, and the
+//! engine's whole dispatch surface (serial, pooled, row-blocked,
+//! transpose, every [`KernelVariant`](super::KernelVariant)) works
+//! unchanged because the kernel implements the full
+//! [`BatchedSpmm`] contract, `_scalar` and `_simd` twins included.
+//!
+//! The padding contract carries over exactly: quantized padding slots
+//! dequantize to exactly `0.0` (bf16 packs padding as bits `0`; int8
+//! packs it as the zero point), so the `val == 0.0` skip — and for
+//! int8 the cheaper `q == zero_point` pre-dequant skip — fires just
+//! like in the f32 kernels, and the pack-time `nnz_per_plane` counts
+//! keep the cost model O(1).
+
+use super::kernels::{axpy_row, axpy_row_simd};
+use super::{BatchedSpmm, DType};
+use crate::sparse::batch::{bf16_to_f32, QuantizedEllBatch};
+
+/// Strided view over a [`QuantizedEllBatch`]: sample `b` of the view
+/// reads plane `plane0 + b * plane_stride` — the same channel-view
+/// shape as the f32 `EllKernel`, so a `[B, CH]` plane grid packs once
+/// and serves one kernel per channel.
+pub struct QuantEllKernel<'a> {
+    q: &'a QuantizedEllBatch,
+    batch: usize,
+    plane0: usize,
+    plane_stride: usize,
+}
+
+impl<'a> QuantEllKernel<'a> {
+    /// Contiguous view: one sample per plane.
+    pub fn from_batch(q: &'a QuantizedEllBatch) -> QuantEllKernel<'a> {
+        QuantEllKernel {
+            q,
+            batch: q.planes,
+            plane0: 0,
+            plane_stride: 1,
+        }
+    }
+
+    /// View of one adjacency channel of a `[B, CH]` plane grid (the
+    /// quantized twin of `EllKernel::channel`): sample `b` reads plane
+    /// `b * channels + ch`.
+    pub fn channel(q: &'a QuantizedEllBatch, ch: usize, channels: usize) -> QuantEllKernel<'a> {
+        assert!(channels > 0 && ch < channels, "channel {ch} out of {channels}");
+        assert_eq!(
+            q.planes % channels,
+            0,
+            "{} planes do not split into {channels} channels",
+            q.planes
+        );
+        QuantEllKernel {
+            q,
+            batch: q.planes / channels,
+            plane0: ch,
+            plane_stride: channels,
+        }
+    }
+
+    /// The precision this kernel dequantizes from.
+    pub fn dtype(&self) -> DType {
+        self.q.dtype
+    }
+
+    /// Quantized value bytes one full dispatch of this view reads —
+    /// the bytes-moved numerator the precision bench reports.
+    pub fn dispatch_value_bytes(&self) -> usize {
+        self.batch * self.q.rows * self.q.width * self.q.dtype.value_bytes()
+    }
+
+    #[inline]
+    fn plane(&self, b: usize) -> usize {
+        self.plane0 + b * self.plane_stride
+    }
+
+    /// Walk the real (non-padding) slots of rows `row0..row1` of sample
+    /// `b`, dequantizing each value once, in the same row-major
+    /// slot order as the f32 ELL kernel — the single traversal every
+    /// dispatch form below is a closure over, so the accumulation
+    /// order (and hence bit-identity across variants) is fixed in one
+    /// place.
+    #[inline]
+    fn for_each_nz<F: FnMut(usize, usize, f32)>(
+        &self,
+        b: usize,
+        row0: usize,
+        row1: usize,
+        mut f: F,
+    ) {
+        let p = self.plane(b);
+        let r = self.q.width;
+        let base = p * self.q.rows * r;
+        match self.q.dtype {
+            DType::F32 => unreachable!("quantized batch never holds f32"),
+            DType::Bf16 => {
+                for rid in row0..row1 {
+                    for slot in 0..r {
+                        let val = bf16_to_f32(self.q.vals_bf16[base + rid * r + slot]);
+                        if val == 0.0 {
+                            continue; // padding slot
+                        }
+                        let cid = self.q.cols[base + rid * r + slot] as usize;
+                        f(rid, cid, val);
+                    }
+                }
+            }
+            DType::Int8 => {
+                let scale = self.q.scale[p];
+                let zp = self.q.zero_point[p] as i32;
+                for rid in row0..row1 {
+                    for slot in 0..r {
+                        let qv = self.q.vals_i8[base + rid * r + slot] as i32;
+                        if qv == zp {
+                            continue; // padding (or a value on the zero point)
+                        }
+                        let cid = self.q.cols[base + rid * r + slot] as usize;
+                        f(rid, cid, scale * (qv - zp) as f32);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl BatchedSpmm for QuantEllKernel<'_> {
+    fn name(&self) -> &'static str {
+        match self.q.dtype {
+            DType::F32 => "engine-quant-ell",
+            DType::Bf16 => "engine-ell-bf16",
+            DType::Int8 => "engine-ell-int8",
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn out_rows(&self) -> usize {
+        self.q.rows
+    }
+
+    fn inner_dim(&self) -> usize {
+        self.q.rows
+    }
+
+    fn real_nnz(&self) -> usize {
+        (0..self.batch)
+            .map(|b| self.q.nnz_per_plane[self.plane(b)] as usize)
+            .sum()
+    }
+
+    fn sample_nnz(&self, b: usize) -> usize {
+        // O(1): counted once at quantization time (DESIGN.md §10).
+        self.q.nnz_per_plane[self.plane(b)] as usize
+    }
+
+    fn spmm_sample(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            axpy_row(&mut out[rid * n..(rid + 1) * n], val, &rhs[cid * n..(cid + 1) * n]);
+        });
+    }
+
+    fn spmm_sample_t(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            axpy_row(&mut out[cid * n..(cid + 1) * n], val, &rhs[rid * n..(rid + 1) * n]);
+        });
+    }
+
+    fn spmm_sample_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        self.for_each_nz(b, row0, row1, |rid, cid, val| {
+            axpy_row(
+                &mut out[(rid - row0) * n..(rid - row0 + 1) * n],
+                val,
+                &rhs[cid * n..(cid + 1) * n],
+            );
+        });
+    }
+
+    fn spmm_sample_t_rows(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            if cid >= row0 && cid < row1 {
+                axpy_row(
+                    &mut out[(cid - row0) * n..(cid - row0 + 1) * n],
+                    val,
+                    &rhs[rid * n..(rid + 1) * n],
+                );
+            }
+        });
+    }
+
+    fn spmm_sample_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            let dst = &mut out[rid * n..(rid + 1) * n];
+            let src = &rhs[cid * n..(cid + 1) * n];
+            for j in 0..n {
+                dst[j] += val * src[j];
+            }
+        });
+    }
+
+    fn spmm_sample_t_scalar(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            let dst = &mut out[cid * n..(cid + 1) * n];
+            let src = &rhs[rid * n..(rid + 1) * n];
+            for j in 0..n {
+                dst[j] += val * src[j];
+            }
+        });
+    }
+
+    fn spmm_sample_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        self.for_each_nz(b, row0, row1, |rid, cid, val| {
+            let dst = &mut out[(rid - row0) * n..(rid - row0 + 1) * n];
+            let src = &rhs[cid * n..(cid + 1) * n];
+            for j in 0..n {
+                dst[j] += val * src[j];
+            }
+        });
+    }
+
+    fn spmm_sample_t_rows_scalar(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            if cid >= row0 && cid < row1 {
+                let dst = &mut out[(cid - row0) * n..(cid - row0 + 1) * n];
+                let src = &rhs[rid * n..(rid + 1) * n];
+                for j in 0..n {
+                    dst[j] += val * src[j];
+                }
+            }
+        });
+    }
+
+    fn spmm_sample_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            axpy_row_simd(&mut out[rid * n..(rid + 1) * n], val, &rhs[cid * n..(cid + 1) * n]);
+        });
+    }
+
+    fn spmm_sample_t_simd(&self, b: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            axpy_row_simd(&mut out[cid * n..(cid + 1) * n], val, &rhs[rid * n..(rid + 1) * n]);
+        });
+    }
+
+    fn spmm_sample_rows_simd(&self, b: usize, row0: usize, rhs: &[f32], n: usize, out: &mut [f32]) {
+        let row1 = row0 + out.len() / n;
+        self.for_each_nz(b, row0, row1, |rid, cid, val| {
+            axpy_row_simd(
+                &mut out[(rid - row0) * n..(rid - row0 + 1) * n],
+                val,
+                &rhs[cid * n..(cid + 1) * n],
+            );
+        });
+    }
+
+    fn spmm_sample_t_rows_simd(
+        &self,
+        b: usize,
+        row0: usize,
+        rhs: &[f32],
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let row1 = row0 + out.len() / n;
+        self.for_each_nz(b, 0, self.q.rows, |rid, cid, val| {
+            if cid >= row0 && cid < row1 {
+                axpy_row_simd(
+                    &mut out[(cid - row0) * n..(cid - row0 + 1) * n],
+                    val,
+                    &rhs[rid * n..(rid + 1) * n],
+                );
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::batch::PaddedEllBatch;
+    use crate::sparse::engine::kernels::EllKernel;
+    use crate::sparse::engine::{Executor, KernelVariant, Rhs, SchedPolicy};
+    use crate::sparse::random::{random_mixed_batch, RandomSpec};
+    use crate::util::rng::Rng;
+
+    fn workload(seed: u64, dim: usize, batch: usize, nb: usize) -> (PaddedEllBatch, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mats = crate::sparse::random::random_batch(&mut rng, &RandomSpec::new(dim, 3), batch);
+        let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+        let rhs: Vec<f32> = (0..batch * dim * nb).map(|_| rng.normal()).collect();
+        (ell, rhs)
+    }
+
+    #[test]
+    fn quant_dispatch_tracks_f32_within_dtype_error_bound() {
+        // The quantized kernels run the exact f32 ELL traversal over
+        // values that are each within the dtype's quantization error of
+        // the original, so every output element stays within
+        // (per-row nnz) * bound of the f32 dispatch.
+        let (ell, rhs) = workload(0x0B16, 14, 5, 9);
+        let exec = Executor::serial();
+        let f32k = EllKernel::from_padded(&ell);
+        let want = exec.spmm(&f32k, Rhs::PerSample(&rhs), 9).unwrap();
+        let want_t = exec.spmm_t(&f32k, Rhs::PerSample(&rhs), 9).unwrap();
+        for dtype in [DType::Bf16, DType::Int8] {
+            let q = QuantizedEllBatch::from_padded(&ell, dtype).unwrap();
+            let k = QuantEllKernel::from_batch(&q);
+            assert_eq!((k.batch(), k.out_rows()), (5, 14));
+            let got = exec.spmm(&k, Rhs::PerSample(&rhs), 9).unwrap();
+            let got_t = exec.spmm_t(&k, Rhs::PerSample(&rhs), 9).unwrap();
+            let tol = match dtype {
+                // width * (value error bound) * max |rhs| with slack.
+                DType::Bf16 => 0.05,
+                DType::Int8 => 0.5,
+                DType::F32 => unreachable!(),
+            };
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= tol, "{dtype}: {g} vs {w}");
+            }
+            for (g, w) in got_t.iter().zip(&want_t) {
+                assert!((g - w).abs() <= tol, "{dtype} transpose: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_variants_and_thread_counts_are_bit_identical() {
+        // Within one dtype, every kernel variant, thread count and
+        // row-blocking must agree bit for bit — the same invariant the
+        // f32 engine pins, running over dequantized values.
+        let (ell, rhs) = workload(0x0B17, 13, 4, 11);
+        for dtype in [DType::Bf16, DType::Int8] {
+            let q = QuantizedEllBatch::from_padded(&ell, dtype).unwrap();
+            let k = QuantEllKernel::from_batch(&q);
+            let base = Executor::serial().spmm(&k, Rhs::PerSample(&rhs), 11).unwrap();
+            let base_t = Executor::serial().spmm_t(&k, Rhs::PerSample(&rhs), 11).unwrap();
+            for variant in [
+                KernelVariant::Scalar,
+                KernelVariant::Vectorized,
+                KernelVariant::Tiled,
+                KernelVariant::Simd,
+            ] {
+                for threads in [1usize, 2, 8] {
+                    let exec =
+                        Executor::with_variant(threads, SchedPolicy::WorkStealing, variant);
+                    let got = exec.spmm(&k, Rhs::PerSample(&rhs), 11).unwrap();
+                    let got_t = exec.spmm_t(&k, Rhs::PerSample(&rhs), 11).unwrap();
+                    assert_eq!(base, got, "{dtype} {variant:?} threads={threads}");
+                    assert_eq!(base_t, got_t, "{dtype} {variant:?} threads={threads} t");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn channel_views_split_the_plane_grid() {
+        // A [B, CH] plane grid served per channel must match running
+        // each channel's planes as a contiguous batch of its own.
+        let mut rng = Rng::new(0xC4);
+        let (dim, channels, batch, nb) = (8usize, 3usize, 4usize, 5usize);
+        let mats = random_mixed_batch(&mut rng, (3, dim), (1, 2), batch * channels);
+        let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+        let q = QuantizedEllBatch::from_padded(&ell, DType::Int8).unwrap();
+        let rhs: Vec<f32> = (0..batch * dim * nb).map(|_| rng.normal()).collect();
+        let exec = Executor::serial();
+        for ch in 0..channels {
+            let view = QuantEllKernel::channel(&q, ch, channels);
+            assert_eq!(view.batch(), batch);
+            assert_eq!(
+                view.dispatch_value_bytes(),
+                batch * q.rows * q.width * DType::Int8.value_bytes()
+            );
+            let got = exec.spmm(&view, Rhs::PerSample(&rhs), nb).unwrap();
+            for b in 0..batch {
+                // Plane b*CH+ch as a standalone single-plane batch.
+                let plane = b * channels + ch;
+                let per = q.rows * q.width;
+                let single = QuantizedEllBatch {
+                    dtype: q.dtype,
+                    planes: 1,
+                    rows: q.rows,
+                    width: q.width,
+                    cols: q.cols[plane * per..(plane + 1) * per].to_vec(),
+                    vals_bf16: Vec::new(),
+                    vals_i8: q.vals_i8[plane * per..(plane + 1) * per].to_vec(),
+                    scale: vec![q.scale[plane]],
+                    zero_point: vec![q.zero_point[plane]],
+                    nnz_per_plane: vec![q.nnz_per_plane[plane]],
+                };
+                let sk = QuantEllKernel::from_batch(&single);
+                assert_eq!(sk.sample_nnz(0), view.sample_nnz(b));
+                let want = exec
+                    .spmm(&sk, Rhs::PerSample(&rhs[b * dim * nb..(b + 1) * dim * nb]), nb)
+                    .unwrap();
+                assert_eq!(&got[b * dim * nb..(b + 1) * dim * nb], &want[..], "ch={ch} b={b}");
+            }
+        }
+    }
+}

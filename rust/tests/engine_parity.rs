@@ -260,7 +260,11 @@ fn check_scalar_vs_vectorized(mats: &[Coo], dim: usize, nb: usize, dense: &[f32]
     for kernel in kernels {
         let fwd = oracle.spmm(kernel, Rhs::PerSample(dense), nb).unwrap();
         let bwd = oracle.spmm_t(kernel, Rhs::PerSample(dense), nb).unwrap();
-        for variant in [KernelVariant::Scalar, KernelVariant::Vectorized] {
+        for variant in [
+            KernelVariant::Scalar,
+            KernelVariant::Vectorized,
+            KernelVariant::Simd,
+        ] {
             for threads in THREAD_COUNTS {
                 for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
                     let exec = Executor::with_variant(threads, policy, variant);
@@ -420,6 +424,76 @@ fn tail_widths_bit_identical_scalar_vs_vectorized_on_every_form() {
                         vec_blocked,
                         vec_full,
                         "{} n={n} sample {b} transpose={transpose} assembly",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// SIMD tentpole property (DESIGN.md §16): without `BSPMM_ALLOW_FMA`
+/// the explicit-SIMD kernels keep the scalar oracle's
+/// round-after-multiply, round-after-add order per element, so
+/// [`KernelVariant::Simd`] must be bit-identical to scalar — on every
+/// backend, both transpose forms, threads {1, 2, 8}, and tail widths
+/// {1, 7, 8, 9, 65} (sub-lane, lane-minus-one, exact lane,
+/// lane-plus-one, many-lanes-plus-one). Built with `--features simd`
+/// on an AVX2 host this exercises the intrinsics; otherwise the Simd
+/// variant is its vectorized fallback and the assertions pin that the
+/// fallback, too, matches scalar exactly.
+#[test]
+fn simd_bit_identical_to_scalar_across_backends_threads_and_tail_widths() {
+    let mut rng = Rng::new(0xEC);
+    let dim = 33;
+    let mats = random_mixed_batch(&mut rng, (3, dim), (1, 3), 6);
+    let cap = mats.iter().map(Coo::nnz).max().unwrap();
+    let st = PaddedStBatch::pack(&mats, dim, cap).unwrap();
+    let csr = PaddedCsrBatch::pack(&mats, dim, cap).unwrap();
+    let ell = PaddedEllBatch::pack_auto(&mats, dim).unwrap();
+    let a_dense = densify_batch(&mats, dim);
+    let stk = StKernel::new(&st);
+    let csrk = CsrKernel::new(&csr);
+    let ellk = EllKernel::from_padded(&ell);
+    let gemk = GemmKernel::new(&a_dense, mats.len(), dim, dim);
+    let kernels: [&dyn BatchedSpmm; 4] = [&stk, &csrk, &ellk, &gemk];
+    let scalar = Executor::with_variant(1, SchedPolicy::WorkStealing, KernelVariant::Scalar);
+    assert_eq!(LANES, 8, "tail widths below assume LANES == 8");
+    for n in [1usize, 7, 8, 9, 65] {
+        let dense = random_dense_batch(&mut rng, mats.len(), dim, n);
+        for kernel in kernels {
+            let fwd = scalar.spmm(kernel, Rhs::PerSample(&dense), n).unwrap();
+            let bwd = scalar.spmm_t(kernel, Rhs::PerSample(&dense), n).unwrap();
+            for threads in THREAD_COUNTS {
+                for policy in [SchedPolicy::Static, SchedPolicy::WorkStealing] {
+                    let exec = Executor::with_variant(threads, policy, KernelVariant::Simd);
+                    let pf = exec.spmm(kernel, Rhs::PerSample(&dense), n).unwrap();
+                    assert_eq!(pf, fwd, "{}/n{n}/t{threads}/{policy:?} fwd", kernel.name());
+                    let pb = exec.spmm_t(kernel, Rhs::PerSample(&dense), n).unwrap();
+                    assert_eq!(pb, bwd, "{}/n{n}/t{threads}/{policy:?} bwd", kernel.name());
+                }
+            }
+            // Row-blocked SIMD forms directly at the kernel-method
+            // level, with uneven cuts (the shapes stealing produces).
+            for b in 0..mats.len() {
+                let rhs = &dense[b * dim * n..(b + 1) * dim * n];
+                for transpose in [false, true] {
+                    let mut sc = vec![0.25f32; dim * n];
+                    let mut sd = sc.clone();
+                    for w in [0usize, 1, 9, dim].windows(2) {
+                        let (r0, r1) = (w[0], w[1]);
+                        if transpose {
+                            kernel.spmm_sample_t_rows_scalar(b, r0, rhs, n, &mut sc[r0 * n..r1 * n]);
+                            kernel.spmm_sample_t_rows_simd(b, r0, rhs, n, &mut sd[r0 * n..r1 * n]);
+                        } else {
+                            kernel.spmm_sample_rows_scalar(b, r0, rhs, n, &mut sc[r0 * n..r1 * n]);
+                            kernel.spmm_sample_rows_simd(b, r0, rhs, n, &mut sd[r0 * n..r1 * n]);
+                        }
+                    }
+                    assert_eq!(
+                        sd,
+                        sc,
+                        "{} n={n} sample {b} transpose={transpose} rows-simd",
                         kernel.name()
                     );
                 }

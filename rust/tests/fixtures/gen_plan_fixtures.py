@@ -17,7 +17,7 @@ hand-built single-backend engine plans from the golden suite.
 
 import os
 
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2  # v2: per-dispatch "dtype" + dtype tag in geometry keys
 KIND = "bspmm_step_plan"
 # AutoThresholds::default(), baked into every fixture.
 THRESHOLDS = {"ell_waste": 3.0, "gemm_density": 0.25}
@@ -56,8 +56,15 @@ def canon(v) -> str:
     raise TypeError(type(v))
 
 
-def dispatch(backend, transpose, rhs, n, out):
-    return {"backend": backend, "n": n, "out": out, "rhs": rhs, "transpose": transpose}
+def dispatch(backend, transpose, rhs, n, out, dtype="f32"):
+    return {
+        "backend": backend,
+        "dtype": dtype,
+        "n": n,
+        "out": out,
+        "rhs": rhs,
+        "transpose": transpose,
+    }
 
 
 def artifact(key, slots, dispatches, params):
@@ -118,10 +125,12 @@ for li in (1, 0):
         if li > 0:
             TRAIN_DISPATCHES.append(dispatch("gemm", False, "shared_transposed", 64, 10))
 
+# geometry_key layout since format v2: [mode, dtype_tag, ...shape]; the
+# f32 plans these fixtures pin carry dtype tag 0.
 FIXTURES = {
-    "tox21_fwd_b4.plan.json": artifact([1] + KEY_TAIL, FWD_SLOTS, FWD_DISPATCHES, FWD_PARAMS),
+    "tox21_fwd_b4.plan.json": artifact([1, 0] + KEY_TAIL, FWD_SLOTS, FWD_DISPATCHES, FWD_PARAMS),
     "tox21_train_b4.plan.json": artifact(
-        [2] + KEY_TAIL, TRAIN_SLOTS, TRAIN_DISPATCHES, FWD_PARAMS + [READOUT_W]
+        [2, 0] + KEY_TAIL, TRAIN_SLOTS, TRAIN_DISPATCHES, FWD_PARAMS + [READOUT_W]
     ),
 }
 
